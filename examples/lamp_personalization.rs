@@ -1,0 +1,99 @@
+//! LaMP-style personalization walkthrough (paper §4.1): warm-start the
+//! adapter bank from early authors, then personalize a brand-new author
+//! with mask tensors only — and compare against the random-bank setting.
+//!
+//!   make artifacts && cargo run --release --example lamp_personalization
+
+use anyhow::Result;
+use xpeft::adapters::AdapterBank;
+use xpeft::config::{Mode, TrainConfig};
+use xpeft::data::{lamp, Dataset, MetricKind};
+use xpeft::masks::accounting::Dims;
+use xpeft::runtime::Engine;
+use xpeft::train::{self, eval};
+
+const BANK_N: usize = 150;
+const WARM_AUTHORS: usize = 4;
+const STEPS: usize = 150;
+
+fn dataset_of(p: &lamp::ProfileData) -> Dataset {
+    Dataset {
+        name: format!("author{}", p.author_id),
+        train: p.train.clone(),
+        dev: p.dev.clone(),
+        num_classes: lamp::CATEGORIES,
+        metric: MetricKind::Acc,
+    }
+}
+
+fn main() -> Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let mc = engine.manifest.config.clone();
+    let corpus = lamp::generate(WARM_AUTHORS + 2, mc.seq, mc.vocab, 7, 40, 160);
+
+    // --- warm bank: conventional adapter tuning for the first authors,
+    //     their adapters installed into the shared bank.
+    let mut warm_bank = AdapterBank::random(mc.layers, BANK_N, mc.d, mc.bottleneck, 7);
+    println!("warm-starting bank from {WARM_AUTHORS} authors (single_adapter tuning)…");
+    for (i, p) in corpus.profiles.iter().take(WARM_AUTHORS).enumerate() {
+        let cfg = TrainConfig {
+            mode: Mode::SingleAdapter,
+            steps: STEPS,
+            seed: 7 + i as u64,
+            ..Default::default()
+        };
+        let (trainer, out) = train::train_profile(&engine, &cfg, &dataset_of(p), None, 7)?;
+        println!(
+            "  author {} tuned (final loss {:.3})",
+            p.author_id,
+            out.losses.last().unwrap()
+        );
+        let a = trainer.state.get("adapter_a")?.to_vec();
+        let b = trainer.state.get("adapter_b")?.to_vec();
+        let mut slot = i;
+        while slot < BANK_N {
+            warm_bank.install_trained(slot, &a, &b)?;
+            slot += WARM_AUTHORS;
+        }
+    }
+    let random_bank = AdapterBank::random(mc.layers, BANK_N, mc.d, mc.bottleneck, 7);
+
+    // --- a NEW author arrives: personalize with masks only.
+    let newbie = &corpus.profiles[WARM_AUTHORS];
+    println!(
+        "\nnew author {} ({} train / {} dev articles)",
+        newbie.author_id,
+        newbie.train.len(),
+        newbie.dev.len()
+    );
+    for (label, bank) in [("warm bank", &warm_bank), ("random bank", &random_bank)] {
+        let cfg = TrainConfig {
+            mode: Mode::XpeftHard,
+            n: BANK_N,
+            k: 50,
+            steps: STEPS,
+            seed: 99,
+            ..Default::default()
+        };
+        let ds = dataset_of(newbie);
+        let (trainer, out) = train::train_profile(&engine, &cfg, &ds, Some(bank), 7)?;
+        let scores = eval::evaluate(&engine, cfg.mode, &trainer, &ds, Some(bank), BANK_N, 50, 7)?;
+        let masks = trainer.profile_masks(cfg.mode, mc.layers, BANK_N, 50)?;
+        println!(
+            "  {label:<12} final loss {:.3}  dev acc {:.3}  profile bytes {}",
+            out.losses.last().unwrap(),
+            scores.acc.unwrap(),
+            masks.stored_bytes(),
+        );
+    }
+
+    // --- the memory story at paper scale
+    let paper = Dims::PAPER_TABLE1;
+    println!(
+        "\nat bert-base scale this profile would cost {} bytes instead of {} ({}x less)",
+        paper.xpeft_hard_bytes(BANK_N),
+        paper.adapter_bytes(),
+        paper.adapter_bytes() / paper.xpeft_hard_bytes(BANK_N),
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: tune one new profile with X-PEFT hard masks and evaluate it.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Walks the core API: load the AOT engine, build a shared random adapter
+//! bank, train the profile's mask tensors on a task, binarize to the
+//! byte-level profile state, and evaluate on the dev split.
+
+use anyhow::Result;
+use xpeft::adapters::AdapterBank;
+use xpeft::config::{Mode, TrainConfig};
+use xpeft::data::glue;
+use xpeft::masks::ProfileMasks;
+use xpeft::runtime::Engine;
+use xpeft::train::{self, eval};
+
+fn main() -> Result<()> {
+    // 1) the engine loads artifacts/manifest.json and compiles executables
+    //    on the PJRT CPU client (python was only used at build time).
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let mc = engine.manifest.config.clone();
+
+    // 2) a bank of N=100 frozen random adapters, shared by every profile
+    //    (the supermask setting of paper §3).
+    let n = 100;
+    let bank = AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42);
+
+    // 3) a task for the new profile (synthetic sst2; see DESIGN.md §3).
+    let dataset = glue::build("sst2", mc.seq, mc.vocab, 42);
+
+    // 4) tune ONLY the mask tensors + LN + head — 2(N+b)·L + head params.
+    let cfg = TrainConfig {
+        mode: Mode::XpeftHard,
+        n,
+        k: 50,
+        steps: 200,
+        seed: 42,
+        ..Default::default()
+    };
+    let (trainer, outcome) = train::train_profile(&engine, &cfg, &dataset, Some(&bank), 42)?;
+    println!(
+        "trained {} steps: loss {:.3} → {:.3}  ({:.1}s)",
+        outcome.steps,
+        outcome.losses.first().unwrap(),
+        outcome.losses.last().unwrap(),
+        outcome.wallclock_s,
+    );
+    println!("curve: {}", xpeft::analysis::sparkline(&outcome.losses, 60));
+
+    // 5) binarize to the persistent profile state: 2·⌈N/8⌉·L bytes.
+    let masks = trainer.profile_masks(cfg.mode, mc.layers, n, cfg.k)?;
+    if let ProfileMasks::Hard(h) = &masks {
+        println!(
+            "profile state: {} bytes bit-packed (vs {} bytes for a full adapter)",
+            h.stored_bytes(),
+            2 * mc.d * mc.bottleneck * mc.layers * 4,
+        );
+    }
+
+    // 6) evaluate on the dev split through the serving-path eval artifact.
+    let scores = eval::evaluate(
+        &engine, cfg.mode, &trainer, &dataset, Some(&bank), n, cfg.k, 42,
+    )?;
+    println!("dev accuracy: {:.3}", scores.acc.unwrap());
+    Ok(())
+}

@@ -1,0 +1,313 @@
+"""AOT driver: lower every (mode, program, head, N) variant to HLO text.
+
+``make artifacts`` runs this once; afterwards the rust binary is fully
+self-contained. Interchange is HLO **text** — the image's xla_extension
+0.5.1 rejects jax>=0.5 serialized HloModuleProtos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<name>.hlo.txt       one per executable
+  artifacts/manifest.json        config + exact input/output buffer layout
+                                 (names, shapes, dtypes, groups, order) the
+                                 rust runtime uses to wire literals.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.model import C_MAX, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+XPEFT_NS_CLS = (100, 150, 200, 400)
+XPEFT_NS_REG = (100, 200, 400)
+
+
+def _dtype_str(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+def _spec(name, shape, dtype, group):
+    return {
+        "name": name,
+        "shape": [int(s) for s in shape],
+        "dtype": _dtype_str(dtype),
+        "group": group,
+    }
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def plm_specs(cfg: ModelConfig):
+    """Ordered frozen-PLM tensor layout (must match model.init_plm keys)."""
+    sp = [
+        ("tok_emb", (cfg.vocab, cfg.d)),
+        ("pos_emb", (cfg.seq, cfg.d)),
+        ("emb_ln_scale", (cfg.d,)),
+        ("emb_ln_bias", (cfg.d,)),
+    ]
+    for l in range(cfg.layers):
+        sp += [
+            (f"b{l}_wq", (cfg.d, cfg.d)),
+            (f"b{l}_wk", (cfg.d, cfg.d)),
+            (f"b{l}_wv", (cfg.d, cfg.d)),
+            (f"b{l}_wo", (cfg.d, cfg.d)),
+            (f"b{l}_ln1_scale", (cfg.d,)),
+            (f"b{l}_ln1_bias", (cfg.d,)),
+            (f"b{l}_w1", (cfg.d, cfg.ffn)),
+            (f"b{l}_b1", (cfg.ffn,)),
+            (f"b{l}_w2", (cfg.ffn, cfg.d)),
+            (f"b{l}_b2", (cfg.d,)),
+            (f"b{l}_ln2_scale", (cfg.d,)),
+            (f"b{l}_ln2_bias", (cfg.d,)),
+        ]
+    return sp
+
+
+def trainable_specs(cfg: ModelConfig, mode: str, n: int, head: str):
+    out_w = C_MAX if head == "cls" else 1
+    sp = []
+    if mode == "xpeft":
+        sp += [
+            ("ln_bias", (cfg.layers, cfg.bottleneck)),
+            ("ln_scale", (cfg.layers, cfg.bottleneck)),
+            ("mask_a_logits", (cfg.layers, n)),
+            ("mask_b_logits", (cfg.layers, n)),
+        ]
+    elif mode == "single_adapter":
+        sp += [
+            ("adapter_a", (cfg.layers, cfg.d, cfg.bottleneck)),
+            ("adapter_b", (cfg.layers, cfg.bottleneck, cfg.d)),
+            ("ln_bias", (cfg.layers, cfg.bottleneck)),
+            ("ln_scale", (cfg.layers, cfg.bottleneck)),
+        ]
+    sp += [("head_b", (out_w,)), ("head_w", (cfg.d, out_w))]
+    return sorted(sp)  # deterministic order, mirrored by rust
+
+
+def eval_specs(cfg: ModelConfig, mode: str, n: int, head: str):
+    out_w = C_MAX if head == "cls" else 1
+    sp = []
+    if mode == "xpeft":
+        sp += [
+            ("ln_bias", (cfg.layers, cfg.bottleneck)),
+            ("ln_scale", (cfg.layers, cfg.bottleneck)),
+            ("mask_a_w", (cfg.layers, n)),
+            ("mask_b_w", (cfg.layers, n)),
+        ]
+    elif mode == "single_adapter":
+        sp += [
+            ("adapter_a", (cfg.layers, cfg.d, cfg.bottleneck)),
+            ("adapter_b", (cfg.layers, cfg.bottleneck, cfg.d)),
+            ("ln_bias", (cfg.layers, cfg.bottleneck)),
+            ("ln_scale", (cfg.layers, cfg.bottleneck)),
+        ]
+    sp += [("head_b", (out_w,)), ("head_w", (cfg.d, out_w))]
+    return sorted(sp)
+
+
+def bank_specs(cfg: ModelConfig, n: int):
+    return [
+        ("bank_a", (cfg.layers, n, cfg.d, cfg.bottleneck)),
+        ("bank_b", (cfg.layers, n, cfg.bottleneck, cfg.d)),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_train(cfg: ModelConfig, mode: str, head: str, n: int):
+    """Returns (flat_fn, input_specs, output_names)."""
+    tr_sp = trainable_specs(cfg, mode, n, head)
+    p_sp = plm_specs(cfg)
+    b_sp = bank_specs(cfg, n) if mode == "xpeft" else []
+    label_dt = jnp.int32 if head == "cls" else jnp.float32
+
+    inputs = []
+    for name, shape in tr_sp:
+        inputs.append(_spec(name, shape, jnp.float32, "trainable"))
+    for name, shape in tr_sp:
+        inputs.append(_spec("m_" + name, shape, jnp.float32, "opt_m"))
+    for name, shape in tr_sp:
+        inputs.append(_spec("v_" + name, shape, jnp.float32, "opt_v"))
+    for name, shape in p_sp:
+        inputs.append(_spec(name, shape, jnp.float32, "plm"))
+    for name, shape in b_sp:
+        inputs.append(_spec(name, shape, jnp.float32, "bank"))
+    inputs += [
+        _spec("tokens", (cfg.batch, cfg.seq), jnp.int32, "data"),
+        _spec("pad_mask", (cfg.batch, cfg.seq), jnp.float32, "data"),
+        _spec("labels", (cfg.batch,), label_dt, "data"),
+        _spec("example_w", (cfg.batch,), jnp.float32, "data"),
+        _spec("num_classes", (), jnp.int32, "scalar"),
+        _spec("step", (), jnp.int32, "scalar"),
+        _spec("total_steps", (), jnp.int32, "scalar"),
+        _spec("base_lr", (), jnp.float32, "scalar"),
+        _spec("seed", (), jnp.int32, "scalar"),
+        _spec("hard_flag", (), jnp.float32, "scalar"),
+        _spec("k", (), jnp.int32, "scalar"),
+        _spec("tau", (), jnp.float32, "scalar"),
+        _spec("nu", (), jnp.float32, "scalar"),
+        _spec("single_mask_flag", (), jnp.float32, "scalar"),
+    ]
+
+    tr_names = [s[0] for s in tr_sp]
+    nt = len(tr_names)
+    np_ = len(p_sp)
+    nb = len(b_sp)
+
+    def flat_fn(*args):
+        i = 0
+        trainable = dict(zip(tr_names, args[i : i + nt])); i += nt
+        opt_m = dict(zip(tr_names, args[i : i + nt])); i += nt
+        opt_v = dict(zip(tr_names, args[i : i + nt])); i += nt
+        plm = {name: a for (name, _), a in zip(p_sp, args[i : i + np_])}; i += np_
+        bank = {name: a for (name, _), a in zip(b_sp, args[i : i + nb])} or None; i += nb
+        (tokens, pad_mask, labels, example_w, num_classes, step, total_steps,
+         base_lr, seed, hard_flag, k, tau, nu, single_mask_flag) = args[i:]
+        new_tr, new_m, new_v, loss = M.train_step(
+            cfg, mode, head, trainable, opt_m, opt_v, plm, bank,
+            tokens, pad_mask, labels, example_w, num_classes, step,
+            total_steps, base_lr, seed, hard_flag, k, tau, nu,
+            single_mask_flag,
+        )
+        outs = [new_tr[k2] for k2 in tr_names]
+        outs += [new_m[k2] for k2 in tr_names]
+        outs += [new_v[k2] for k2 in tr_names]
+        outs.append(loss)
+        return tuple(outs)
+
+    out_names = (
+        [n2 for n2 in tr_names]
+        + ["m_" + n2 for n2 in tr_names]
+        + ["v_" + n2 for n2 in tr_names]
+        + ["loss"]
+    )
+    return flat_fn, inputs, out_names
+
+
+def build_eval(cfg: ModelConfig, mode: str, head: str, n: int):
+    ev_sp = eval_specs(cfg, mode, n, head)
+    p_sp = plm_specs(cfg)
+    b_sp = bank_specs(cfg, n) if mode == "xpeft" else []
+
+    inputs = []
+    for name, shape in ev_sp:
+        inputs.append(_spec(name, shape, jnp.float32, "trainable"))
+    for name, shape in p_sp:
+        inputs.append(_spec(name, shape, jnp.float32, "plm"))
+    for name, shape in b_sp:
+        inputs.append(_spec(name, shape, jnp.float32, "bank"))
+    inputs += [
+        _spec("tokens", (cfg.batch, cfg.seq), jnp.int32, "data"),
+        _spec("pad_mask", (cfg.batch, cfg.seq), jnp.float32, "data"),
+    ]
+
+    ev_names = [s[0] for s in ev_sp]
+    ne = len(ev_names)
+    np_ = len(p_sp)
+    nb = len(b_sp)
+
+    def flat_fn(*args):
+        i = 0
+        tr = dict(zip(ev_names, args[i : i + ne])); i += ne
+        plm = {name: a for (name, _), a in zip(p_sp, args[i : i + np_])}; i += np_
+        bank = {name: a for (name, _), a in zip(b_sp, args[i : i + nb])} or None; i += nb
+        tokens, pad_mask = args[i:]
+        logits = M.eval_step(cfg, mode, tr, plm, bank, tokens, pad_mask)
+        return (logits,)
+
+    out_w = C_MAX if head == "cls" else 1
+    return flat_fn, inputs, ["logits"], (cfg.batch, out_w)
+
+
+def lower_artifact(name, flat_fn, inputs, out_dir):
+    example = [
+        _sds(s["shape"], jnp.int32 if s["dtype"] == "i32" else jnp.float32)
+        for s in inputs
+    ]
+    lowered = jax.jit(flat_fn, keep_unused=True).lower(*example)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def artifact_plan(cfg: ModelConfig):
+    """The full artifact set (see DESIGN.md §5)."""
+    plan = []
+    for head, ns in (("cls", XPEFT_NS_CLS), ("reg", XPEFT_NS_REG)):
+        for n in ns:
+            plan.append(("xpeft", "train", head, n))
+            plan.append(("xpeft", "eval", head, n))
+        for mode in ("single_adapter", "head_only"):
+            plan.append((mode, "train", head, 0))
+            plan.append((mode, "eval", head, 0))
+    return plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = ModelConfig()
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab, "d": cfg.d, "layers": cfg.layers,
+            "heads": cfg.heads, "ffn": cfg.ffn, "seq": cfg.seq,
+            "batch": cfg.batch, "bottleneck": cfg.bottleneck, "c_max": C_MAX,
+        },
+        "artifacts": [],
+    }
+
+    for mode, program, head, n in artifact_plan(cfg):
+        name = f"{mode}_{program}_{head}" + (f"_n{n}" if n else "")
+        if args.only and args.only not in name:
+            continue
+        if program == "train":
+            flat_fn, inputs, out_names = build_train(cfg, mode, head, n)
+            out_shapes = None
+        else:
+            flat_fn, inputs, out_names, logits_shape = build_eval(cfg, mode, head, n)
+            out_shapes = [list(logits_shape)]
+        print(f"lowering {name} ({len(inputs)} inputs)", flush=True)
+        lower_artifact(name, flat_fn, inputs, args.out)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "mode": mode,
+            "program": program,
+            "head": head,
+            "n": n,
+            "inputs": inputs,
+            "outputs": out_names,
+            **({"output_shapes": out_shapes} if out_shapes else {}),
+        })
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

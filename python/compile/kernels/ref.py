@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every kernel in
+``xpeft_aggregate.py`` must match the corresponding function here to
+float32 tolerance (pytest + hypothesis sweeps in ``python/tests``).
+They are also used by ``model.py`` when ``use_pallas=False`` (the L2
+graph can be lowered against either implementation; artifact parity is
+itself a test).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def aggregate_adapters(mask: jax.Array, bank: jax.Array) -> jax.Array:
+    """``Σ_i mask[i] · bank[i]`` — mask ``[N]``, bank ``[N, d, b]`` → ``[d, b]``."""
+    return jnp.einsum(
+        "n,nij->ij", mask.astype(jnp.float32), bank.astype(jnp.float32)
+    ).astype(bank.dtype)
+
+
+def layer_norm(h: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    """LayerNorm over the last dim with affine params (paper inserts LN after Â)."""
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    return (h - mu) * jax.lax.rsqrt(var + LN_EPS) * scale + bias
+
+
+def xpeft_adapter_forward(
+    x: jax.Array,
+    mask_a: jax.Array,
+    mask_b: jax.Array,
+    bank_a: jax.Array,
+    bank_b: jax.Array,
+    ln_scale: jax.Array,
+    ln_bias: jax.Array,
+) -> jax.Array:
+    """Reference for the fused X-PEFT block: ``x + LN(x @ Â) @ B̂``."""
+    a_hat = aggregate_adapters(mask_a, bank_a).astype(jnp.float32)
+    b_hat = aggregate_adapters(mask_b, bank_b).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    h = layer_norm(xf @ a_hat, ln_scale.astype(jnp.float32), ln_bias.astype(jnp.float32))
+    return (xf + h @ b_hat).astype(x.dtype)
+
+
+def adapter_forward(
+    x: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    ln_scale: jax.Array,
+    ln_bias: jax.Array,
+) -> jax.Array:
+    """Reference for the plain Pfeiffer adapter block (single_adapter baseline)."""
+    xf = x.astype(jnp.float32)
+    h = layer_norm(
+        xf @ a.astype(jnp.float32),
+        ln_scale.astype(jnp.float32),
+        ln_bias.astype(jnp.float32),
+    )
+    return (xf + h @ b.astype(jnp.float32)).astype(x.dtype)

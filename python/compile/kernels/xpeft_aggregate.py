@@ -1,0 +1,251 @@
+"""L1 Pallas kernels for X-PEFT's compute hot-spot.
+
+The hot-spot of X-PEFT (paper §3) is, per PLM block ``l`` and per profile:
+
+    Â = Σ_i  M_A[l, i] · A_i        A_i: [d, b]   (down-projection bank)
+    B̂ = Σ_i  M_B[l, i] · B_i        B_i: [b, d]   (up-projection bank)
+    out = X + LN(X @ Â) @ B̂          X: [M, d]    (M = batch·seq tokens)
+
+with N in the hundreds (100..800). The naive schedule materializes the
+weighted sums by looping over N; this kernel reshapes the aggregation as a
+matmul so it runs on the MXU and streams the bank through VMEM once:
+
+    Â.reshape(d·b) = mask[1, N] @ bank_A.reshape(N, d·b)
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper trains on GPUs;
+instead of porting threadblock logic we tile the bank over N in TILE_N slabs
+(BlockSpec index_map over the grid), keep the [d, b] accumulator + masks
+resident in VMEM scratch across grid steps, and fuse the two thin bottleneck
+matmuls + LayerNorm + residual into the final grid step so the token block
+never leaves VMEM.
+
+All kernels run with ``interpret=True`` — real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default N-tile. N in the paper is 100..800; 50 divides the paper's grid
+# sizes (100/200/400/800 and the LaMP bank of 150) and keeps the slab
+# (TILE_N × d×b floats) comfortably inside VMEM at paper dims
+# (50·768·48·4B ≈ 7.4 MiB < 16 MiB VMEM).
+DEFAULT_TILE_N = 50
+
+LN_EPS = 1e-5
+
+
+def _pick_tile_n(n: int, tile_n: int | None) -> int:
+    """Largest divisor of ``n`` that is <= the requested tile."""
+    t = min(tile_n or DEFAULT_TILE_N, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: masked aggregation of a stacked adapter bank.
+# ---------------------------------------------------------------------------
+
+
+def _aggregate_kernel(mask_ref, bank_ref, out_ref, acc_ref, *, steps):
+    """One grid step: acc += mask_tile[1, TILE_N] @ bank_tile[TILE_N, d*b]."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Rank-1-weighted reduction as an MXU matmul: [1, TILE_N] x [TILE_N, db].
+    acc_ref[...] += jnp.dot(
+        mask_ref[...], bank_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(step == steps - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def aggregate_adapters(mask: jax.Array, bank: jax.Array, *, tile_n: int | None = None) -> jax.Array:
+    """Masked aggregation ``Σ_i mask[i] · bank[i]`` for one PLM block.
+
+    Args:
+      mask: ``[N]`` float weights (softmax'd soft mask or k-hot/k hard mask).
+      bank: ``[N, d, b]`` stacked adapter sub-modules.
+      tile_n: N-tile size (clamped to a divisor of N).
+
+    Returns:
+      ``[d, b]`` aggregated adapter, same dtype as ``bank``.
+    """
+    n, d, b = bank.shape
+    t = _pick_tile_n(n, tile_n)
+    steps = n // t
+    bank2d = bank.reshape(n, d * b)
+    mask2d = mask.reshape(1, n).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_aggregate_kernel, steps=steps),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (0, i)),      # mask tile
+            pl.BlockSpec((t, d * b), lambda i: (i, 0)),  # bank slab
+        ],
+        out_specs=pl.BlockSpec((1, d * b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, d * b), bank.dtype),
+        scratch_shapes=[
+            # f32 accumulator persists across grid steps (VMEM-resident).
+            pltpu.VMEM((1, d * b), jnp.float32)
+        ],
+        interpret=True,
+    )(mask2d, bank2d)
+    return out.reshape(d, b)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused X-PEFT adapter block forward.
+#   agg(A), agg(B) while streaming the banks, then
+#   out = x + LN(x @ Â) @ B̂   in the final grid step.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    mask_a_ref,
+    mask_b_ref,
+    bank_a_ref,
+    bank_b_ref,
+    x_ref,
+    ln_scale_ref,
+    ln_bias_ref,
+    out_ref,
+    acc_a_ref,
+    acc_b_ref,
+    *,
+    steps,
+    d,
+    b,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_a_ref[...] = jnp.zeros_like(acc_a_ref)
+        acc_b_ref[...] = jnp.zeros_like(acc_b_ref)
+
+    acc_a_ref[...] += jnp.dot(
+        mask_a_ref[...], bank_a_ref[...], preferred_element_type=jnp.float32
+    )
+    acc_b_ref[...] += jnp.dot(
+        mask_b_ref[...], bank_b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(step == steps - 1)
+    def _apply():
+        a_hat = acc_a_ref[...].reshape(d, b)
+        b_hat = acc_b_ref[...].reshape(b, d)
+        x = x_ref[...].astype(jnp.float32)
+        h = jnp.dot(x, a_hat, preferred_element_type=jnp.float32)
+        # LayerNorm over the bottleneck dim (paper fn. 1: LN after Â).
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + LN_EPS)
+        h = h * ln_scale_ref[...] + ln_bias_ref[...]
+        y = jnp.dot(h, b_hat, preferred_element_type=jnp.float32)
+        out_ref[...] = (x + y).astype(out_ref.dtype)
+
+
+def xpeft_adapter_forward(
+    x: jax.Array,
+    mask_a: jax.Array,
+    mask_b: jax.Array,
+    bank_a: jax.Array,
+    bank_b: jax.Array,
+    ln_scale: jax.Array,
+    ln_bias: jax.Array,
+    *,
+    tile_n: int | None = None,
+) -> jax.Array:
+    """Fused X-PEFT adapter block: ``x + LN(x @ Σ m_A A) @ Σ m_B B``.
+
+    Args:
+      x: ``[M, d]`` token activations (M = batch·seq).
+      mask_a / mask_b: ``[N]`` normalized mask weights for this PLM block.
+      bank_a: ``[N, d, b]`` down-projection bank; bank_b: ``[N, b, d]``.
+      ln_scale / ln_bias: ``[b]`` LayerNorm affine (trainable per profile).
+
+    Returns:
+      ``[M, d]`` activations, dtype of ``x``.
+    """
+    n, d, b = bank_a.shape
+    m = x.shape[0]
+    t = _pick_tile_n(n, tile_n)
+    steps = n // t
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, steps=steps, d=d, b=b),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (0, i)),
+            pl.BlockSpec((1, t), lambda i: (0, i)),
+            pl.BlockSpec((t, d * b), lambda i: (i, 0)),
+            pl.BlockSpec((t, b * d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d * b), jnp.float32),
+            pltpu.VMEM((1, b * d), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        mask_a.reshape(1, n).astype(jnp.float32),
+        mask_b.reshape(1, n).astype(jnp.float32),
+        bank_a.reshape(n, d * b),
+        bank_b.reshape(n, b * d),
+        x,
+        ln_scale.reshape(1, b),
+        ln_bias.reshape(1, b),
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: plain Pfeiffer adapter forward (single_adapter baseline), fused
+# matmul+LN+matmul+residual — keeps the baseline on the same code path class.
+# ---------------------------------------------------------------------------
+
+
+def _adapter_kernel(x_ref, a_ref, b_ref, ln_scale_ref, ln_bias_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = jnp.dot(x, a_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + LN_EPS)
+    h = h * ln_scale_ref[...] + ln_bias_ref[...]
+    y = jnp.dot(h, b_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32)
+    out_ref[...] = (x + y).astype(out_ref.dtype)
+
+
+def adapter_forward(
+    x: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    ln_scale: jax.Array,
+    ln_bias: jax.Array,
+) -> jax.Array:
+    """Pfeiffer adapter forward ``x + LN(x @ A) @ B`` for ``[M, d]`` tokens."""
+    m, d = x.shape
+    bdim = a.shape[1]
+    return pl.pallas_call(
+        _adapter_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, a, b, ln_scale.reshape(1, bdim), ln_bias.reshape(1, bdim))

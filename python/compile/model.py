@@ -1,0 +1,413 @@
+"""L2: the X-PEFT model family in JAX (build-time only; never on request path).
+
+A tiny BERT-like post-LN transformer encoder with Pfeiffer-adapter insertion
+points, plus the paper's four tuning modes:
+
+  * ``xpeft``          — mask tensors M_A/M_B over a frozen adapter bank
+                         (paper §3). One artifact serves soft masks, hard
+                         (gumbel top-k straight-through) masks, any k, and
+                         the Fig-5b single-mask ablation via runtime scalars
+                         (``hard_flag``, ``k``, ``tau``, ``nu``,
+                         ``single_mask_flag``) — no artifact explosion.
+  * ``single_adapter`` — conventional adapter tuning (paper baseline,
+                         also the warm-start trainer for the LaMP bank).
+  * ``head_only``      — classifier-head-only baseline.
+
+Trainables, AdamW state and frozen tensors are explicit function arguments
+so ``aot.py`` can lower ``train_step``/``eval_step`` to self-contained HLO
+executables driven from rust (see artifacts/manifest.json).
+
+The X-PEFT block's forward runs the L1 Pallas kernel
+(``kernels.xpeft_aggregate``); its backward is supplied by ``custom_vjp``
+against the jnp oracle (``kernels.ref``) — pallas_call has no autodiff rule,
+and the two implementations agree to float32 tolerance (python/tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as R
+from compile.kernels import xpeft_aggregate as K
+
+C_MAX = 16  # padded logit width shared by every classification head
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static (baked-at-lowering) dimensions of the tiny PLM."""
+
+    vocab: int = 1024
+    d: int = 64          # hidden width (paper: 768)
+    layers: int = 4      # PLM blocks L (paper: 12)
+    heads: int = 4
+    ffn: int = 128
+    seq: int = 32        # token sequence length (paper: 128)
+    batch: int = 32
+    bottleneck: int = 8  # adapter bottleneck b (paper: 48)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (init mirrors what rust regenerates from manifest).
+# ---------------------------------------------------------------------------
+
+
+def init_plm(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Frozen PLM parameters. Same layout the rust side materializes."""
+    ks = iter(jax.random.split(key, 6 + 12 * cfg.layers))
+
+    def dense(shape, scale=0.02):
+        return jax.random.normal(next(ks), shape) * scale
+
+    p = {
+        "tok_emb": dense((cfg.vocab, cfg.d)),
+        "pos_emb": dense((cfg.seq, cfg.d)),
+        "emb_ln_scale": jnp.ones((cfg.d,)),
+        "emb_ln_bias": jnp.zeros((cfg.d,)),
+    }
+    for l in range(cfg.layers):
+        p[f"b{l}_wq"] = dense((cfg.d, cfg.d))
+        p[f"b{l}_wk"] = dense((cfg.d, cfg.d))
+        p[f"b{l}_wv"] = dense((cfg.d, cfg.d))
+        p[f"b{l}_wo"] = dense((cfg.d, cfg.d))
+        p[f"b{l}_ln1_scale"] = jnp.ones((cfg.d,))
+        p[f"b{l}_ln1_bias"] = jnp.zeros((cfg.d,))
+        p[f"b{l}_w1"] = dense((cfg.d, cfg.ffn))
+        p[f"b{l}_b1"] = jnp.zeros((cfg.ffn,))
+        p[f"b{l}_w2"] = dense((cfg.ffn, cfg.d))
+        p[f"b{l}_b2"] = jnp.zeros((cfg.d,))
+        p[f"b{l}_ln2_scale"] = jnp.ones((cfg.d,))
+        p[f"b{l}_ln2_bias"] = jnp.zeros((cfg.d,))
+    return p
+
+
+def init_bank(cfg: ModelConfig, n: int, key: jax.Array) -> dict[str, jax.Array]:
+    """Random adapter bank: N Pfeiffer adapters per block, stacked."""
+    ka, kb = jax.random.split(key)
+    scale_a = 1.0 / jnp.sqrt(cfg.d)
+    scale_b = 0.3 / jnp.sqrt(cfg.bottleneck)
+    return {
+        # Both sub-modules genuinely random (supermask setting, §3): with
+        # near-zero up-projections every adapter would be a no-op and mask
+        # selection meaningless. Mirrors rust AdapterBank::random.
+        "bank_a": jax.random.normal(ka, (cfg.layers, n, cfg.d, cfg.bottleneck)) * scale_a,
+        "bank_b": jax.random.normal(kb, (cfg.layers, n, cfg.bottleneck, cfg.d)) * scale_b,
+    }
+
+
+def init_trainable(cfg: ModelConfig, mode: str, n: int, head: str, key: jax.Array) -> dict[str, jax.Array]:
+    """Per-profile trainable tensors for each tuning mode."""
+    ks = iter(jax.random.split(key, 8))
+    out_w = C_MAX if head == "cls" else 1
+    t: dict[str, jax.Array] = {
+        "head_w": jax.random.normal(next(ks), (cfg.d, out_w)) * 0.02,
+        "head_b": jnp.zeros((out_w,)),
+    }
+    if mode == "xpeft":
+        t["mask_a_logits"] = jax.random.normal(next(ks), (cfg.layers, n)) * 0.01
+        t["mask_b_logits"] = jax.random.normal(next(ks), (cfg.layers, n)) * 0.01
+        t["ln_scale"] = jnp.ones((cfg.layers, cfg.bottleneck))
+        t["ln_bias"] = jnp.zeros((cfg.layers, cfg.bottleneck))
+    elif mode == "single_adapter":
+        t["adapter_a"] = (
+            jax.random.normal(next(ks), (cfg.layers, cfg.d, cfg.bottleneck))
+            / jnp.sqrt(cfg.d)
+        )
+        t["adapter_b"] = jnp.zeros((cfg.layers, cfg.bottleneck, cfg.d))
+        t["ln_scale"] = jnp.ones((cfg.layers, cfg.bottleneck))
+        t["ln_bias"] = jnp.zeros((cfg.layers, cfg.bottleneck))
+    elif mode != "head_only":
+        raise ValueError(f"unknown mode {mode}")
+    return t
+
+
+# ---------------------------------------------------------------------------
+# X-PEFT block with Pallas forward / oracle backward.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _xpeft_block(x, wa, wb, bank_a, bank_b, ln_s, ln_b):
+    return K.xpeft_adapter_forward(x, wa, wb, bank_a, bank_b, ln_s, ln_b)
+
+
+def _xpeft_block_fwd(x, wa, wb, bank_a, bank_b, ln_s, ln_b):
+    args = (x, wa, wb, bank_a, bank_b, ln_s, ln_b)
+    return K.xpeft_adapter_forward(*args), args
+
+
+def _xpeft_block_bwd(args, g):
+    _, vjp = jax.vjp(R.xpeft_adapter_forward, *args)
+    return vjp(g)
+
+
+_xpeft_block.defvjp(_xpeft_block_fwd, _xpeft_block_bwd)
+
+
+@jax.custom_vjp
+def _plain_adapter_block(x, a, b, ln_s, ln_b):
+    return K.adapter_forward(x, a, b, ln_s, ln_b)
+
+
+def _plain_fwd(x, a, b, ln_s, ln_b):
+    args = (x, a, b, ln_s, ln_b)
+    return K.adapter_forward(*args), args
+
+
+def _plain_bwd(args, g):
+    _, vjp = jax.vjp(R.adapter_forward, *args)
+    return vjp(g)
+
+
+_plain_adapter_block.defvjp(_plain_fwd, _plain_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Mask activation: soft softmax / hard gumbel top-k straight-through.
+# ---------------------------------------------------------------------------
+
+
+def rank_khot(y_soft: jax.Array, k: jax.Array) -> jax.Array:
+    """k-hot of the top-k entries of ``y_soft`` with *dynamic* k.
+
+    Ranks via double argsort (rank[i] = position of i in descending order),
+    then compares rank < k — jittable with k as a traced scalar, unlike
+    ``jax.lax.top_k``. y_soft: [..., N].
+    """
+    order = jnp.argsort(-y_soft, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    return (ranks < k).astype(y_soft.dtype)
+
+
+def mask_weights(
+    logits: jax.Array,
+    *,
+    hard_flag: jax.Array,
+    k: jax.Array,
+    tau: jax.Array,
+    nu: jax.Array,
+    key: jax.Array,
+) -> jax.Array:
+    """Paper Algorithm 1 (hard top-k softmax, straight-through) + soft path.
+
+    logits: [L, N] mask tensor. Returns normalized weights [L, N]:
+    ``hard_flag``∈{0,1} selects between softmax(logits) and the ST k-hot/k.
+    """
+    gumbel = jax.random.gumbel(key, logits.shape)
+    noisy = logits + nu * gumbel
+    y_soft = jax.nn.softmax(noisy / tau, axis=-1)
+    # The k-hot is non-differentiable by construction (ST estimator routes
+    # gradients through y_soft), so cut autodiff explicitly — also avoids a
+    # sort-JVP path that this env's jaxlib cannot lower.
+    y_hard = rank_khot(jax.lax.stop_gradient(y_soft), k) / jnp.maximum(
+        jax.lax.stop_gradient(k).astype(y_soft.dtype), 1.0
+    )
+    y_st = y_hard - jax.lax.stop_gradient(y_soft) + y_soft
+    soft = jax.nn.softmax(logits, axis=-1)
+    return hard_flag * y_st + (1.0 - hard_flag) * soft
+
+
+# ---------------------------------------------------------------------------
+# Encoder forward.
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: ModelConfig, p, l, x, pad_mask):
+    """Standard multi-head self-attention. x: [B, T, d]; pad_mask: [B, T]."""
+    bsz, t, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    def split(y):
+        return y.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+
+    q = split(x @ p[f"b{l}_wq"])
+    kk = split(x @ p[f"b{l}_wk"])
+    v = split(x @ p[f"b{l}_wv"])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(float(hd))
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(pad_mask[:, None, None, :] > 0, scores, neg)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    return ctx @ p[f"b{l}_wo"]
+
+
+def encode(
+    cfg: ModelConfig,
+    plm: dict[str, jax.Array],
+    tokens: jax.Array,
+    pad_mask: jax.Array,
+    adapter_fn,
+) -> jax.Array:
+    """Run the encoder; ``adapter_fn(l, x2d) -> x2d`` is the per-block hook.
+
+    Returns [B, d] CLS representations.
+    """
+    bsz, t = tokens.shape
+    x = plm["tok_emb"][tokens] + plm["pos_emb"][None, :, :]
+    x = _ln(x, plm["emb_ln_scale"], plm["emb_ln_bias"])
+    for l in range(cfg.layers):
+        attn = _attention(cfg, plm, l, x, pad_mask)
+        x = _ln(x + attn, plm[f"b{l}_ln1_scale"], plm[f"b{l}_ln1_bias"])
+        ffn = jax.nn.gelu(x @ plm[f"b{l}_w1"] + plm[f"b{l}_b1"]) @ plm[f"b{l}_w2"] + plm[f"b{l}_b2"]
+        # Pfeiffer placement: adapter transforms the FFN output before the
+        # residual add + LN of the block.
+        ffn2d = adapter_fn(l, ffn.reshape(bsz * t, cfg.d))
+        ffn = ffn2d.reshape(bsz, t, cfg.d)
+        x = _ln(x + ffn, plm[f"b{l}_ln2_scale"], plm[f"b{l}_ln2_bias"])
+    return x[:, 0, :]
+
+
+def forward(
+    cfg: ModelConfig,
+    mode: str,
+    trainable: dict[str, jax.Array],
+    plm: dict[str, jax.Array],
+    bank: dict[str, jax.Array] | None,
+    tokens: jax.Array,
+    pad_mask: jax.Array,
+    *,
+    mask_w: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Logits ([B, C_MAX]) or regression scores ([B, 1]).
+
+    For xpeft, ``mask_w = (W_A, W_B)`` are the *normalized* [L, N] mask
+    weights (training computes them via ``mask_weights``; serving feeds
+    softmax/k-hot weights reconstructed by rust from the profile store).
+    """
+    if mode == "xpeft":
+        wa, wb = mask_w
+
+        def adapter_fn(l, x2d):
+            return _xpeft_block(
+                x2d, wa[l], wb[l], bank["bank_a"][l], bank["bank_b"][l],
+                trainable["ln_scale"][l], trainable["ln_bias"][l],
+            )
+    elif mode == "single_adapter":
+
+        def adapter_fn(l, x2d):
+            return _plain_adapter_block(
+                x2d, trainable["adapter_a"][l], trainable["adapter_b"][l],
+                trainable["ln_scale"][l], trainable["ln_bias"][l],
+            )
+    else:  # head_only
+
+        def adapter_fn(l, x2d):
+            return x2d
+
+    cls = encode(cfg, plm, tokens, pad_mask, adapter_fn)
+    return cls @ trainable["head_w"] + trainable["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+
+def cls_loss(logits, labels, num_classes, example_w):
+    """Masked softmax cross-entropy over the first ``num_classes`` logits."""
+    classes = jnp.arange(C_MAX)
+    invalid = classes[None, :] >= num_classes
+    logits = jnp.where(invalid, jnp.finfo(logits.dtype).min, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * example_w) / jnp.maximum(jnp.sum(example_w), 1.0)
+
+
+def reg_loss(preds, targets, example_w):
+    err = jnp.square(preds[:, 0] - targets)
+    return jnp.sum(err * example_w) / jnp.maximum(jnp.sum(example_w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# train / eval steps (the functions aot.py lowers).
+# ---------------------------------------------------------------------------
+
+
+def train_step(
+    cfg: ModelConfig,
+    mode: str,
+    head: str,
+    trainable: dict[str, jax.Array],
+    opt_m: dict[str, jax.Array],
+    opt_v: dict[str, jax.Array],
+    plm: dict[str, jax.Array],
+    bank: dict[str, jax.Array] | None,
+    tokens: jax.Array,
+    pad_mask: jax.Array,
+    labels: jax.Array,
+    example_w: jax.Array,
+    num_classes: jax.Array,
+    step: jax.Array,
+    total_steps: jax.Array,
+    base_lr: jax.Array,
+    seed: jax.Array,
+    hard_flag: jax.Array,
+    k: jax.Array,
+    tau: jax.Array,
+    nu: jax.Array,
+    single_mask_flag: jax.Array,
+) -> tuple[dict[str, jax.Array], dict[str, jax.Array], dict[str, jax.Array], jax.Array]:
+    """One AdamW step. Returns (trainable', m', v', loss).
+
+    All scalars are traced inputs, so a single lowered artifact covers the
+    full hyper-parameter grid (soft/hard, k-sweep, single-mask ablation,
+    LR schedule position).
+    """
+    from compile import optim
+
+    def loss_fn(tr):
+        if mode == "xpeft":
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+            ka, kb = jax.random.split(key)
+            n = tr["mask_a_logits"].shape[-1]
+            wa = mask_weights(tr["mask_a_logits"], hard_flag=hard_flag, k=k, tau=tau, nu=nu, key=ka)
+            wb = mask_weights(tr["mask_b_logits"], hard_flag=hard_flag, k=k, tau=tau, nu=nu, key=kb)
+            # Fig-5b ablation: collapse M_A to uniform (only M_B learned).
+            uniform = jnp.full_like(wa, 1.0 / n)
+            wa = single_mask_flag * uniform + (1.0 - single_mask_flag) * wa
+            logits = forward(cfg, mode, tr, plm, bank, tokens, pad_mask, mask_w=(wa, wb))
+        else:
+            logits = forward(cfg, mode, tr, plm, bank, tokens, pad_mask)
+        if head == "cls":
+            return cls_loss(logits, labels, num_classes, example_w)
+        return reg_loss(logits, labels, example_w)
+
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+    lr = optim.linear_decay(base_lr, step, total_steps)
+    new_tr, new_m, new_v = optim.adamw_update(trainable, grads, opt_m, opt_v, step, lr)
+    return new_tr, new_m, new_v, loss
+
+
+def eval_step(
+    cfg: ModelConfig,
+    mode: str,
+    trainable_eval: dict[str, jax.Array],
+    plm: dict[str, jax.Array],
+    bank: dict[str, jax.Array] | None,
+    tokens: jax.Array,
+    pad_mask: jax.Array,
+) -> jax.Array:
+    """Forward pass for evaluation/serving. For xpeft, ``trainable_eval``
+    carries ``mask_a_w``/``mask_b_w`` — already-normalized weights — so one
+    artifact serves soft (softmax'd) and hard (k-hot/k unpacked from the
+    bit-packed profile store) masks alike."""
+    if mode == "xpeft":
+        mask_w = (trainable_eval["mask_a_w"], trainable_eval["mask_b_w"])
+        tr = trainable_eval
+        return forward(cfg, mode, tr, plm, bank, tokens, pad_mask, mask_w=mask_w)
+    return forward(cfg, mode, trainable_eval, plm, bank, tokens, pad_mask)

@@ -1,0 +1,48 @@
+"""AdamW with linear LR decay, expressed over dict-of-arrays pytrees.
+
+Lives *inside* the lowered train_step HLO so the rust driver only shuttles
+(trainable, m, v) buffers between steps — python never touches training.
+Matches the paper's setup: AdamW, lr 1e-5 linearly decayed (we expose
+``base_lr`` as a runtime input), betas 0.9/0.999, eps 1e-8, decay 0.01.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+# Biases and LN affine params are conventionally exempt from weight decay.
+NO_DECAY_SUFFIXES = ("_b", "_bias", "ln_scale")
+
+
+def linear_decay(base_lr: jax.Array, step: jax.Array, total_steps: jax.Array) -> jax.Array:
+    frac = 1.0 - step.astype(jnp.float32) / jnp.maximum(total_steps.astype(jnp.float32), 1.0)
+    return base_lr * jnp.clip(frac, 0.0, 1.0)
+
+
+def _decayed(name: str) -> bool:
+    return not any(name.endswith(s) for s in NO_DECAY_SUFFIXES)
+
+
+def adamw_update(params, grads, m, v, step, lr):
+    """One AdamW step over dicts keyed by tensor name. step is 0-based."""
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - BETA1**t
+    bc2 = 1.0 - BETA2**t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = BETA1 * m[k] + (1.0 - BETA1) * g
+        v_k = BETA2 * v[k] + (1.0 - BETA2) * jnp.square(g)
+        update = (m_k / bc1) / (jnp.sqrt(v_k / bc2) + EPS)
+        if _decayed(k):
+            update = update + WEIGHT_DECAY * params[k]
+        new_p[k] = params[k] - lr * update
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v

@@ -1,0 +1,84 @@
+"""AOT contract tests: the manifest layout rust depends on."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import C_MAX, ModelConfig
+
+CFG = ModelConfig()
+
+
+def test_artifact_plan_covers_paper_grid():
+    plan = aot.artifact_plan(CFG)
+    names = {f"{m}_{p}_{h}" + (f"_n{n}" if n else "") for m, p, h, n in plan}
+    for n in (100, 150, 200, 400):
+        assert f"xpeft_train_cls_n{n}" in names
+        assert f"xpeft_eval_cls_n{n}" in names
+    for n in (100, 200, 400):
+        assert f"xpeft_train_reg_n{n}" in names
+    for mode in ("single_adapter", "head_only"):
+        for prog in ("train", "eval"):
+            for head in ("cls", "reg"):
+                assert f"{mode}_{prog}_{head}" in names
+
+
+def test_trainable_specs_sorted_and_complete():
+    sp = aot.trainable_specs(CFG, "xpeft", 100, "cls")
+    names = [s[0] for s in sp]
+    assert names == sorted(names), "rust mirrors sorted order"
+    assert set(names) == {
+        "ln_bias", "ln_scale", "mask_a_logits", "mask_b_logits", "head_b", "head_w",
+    }
+    shapes = dict(sp)
+    assert shapes["mask_a_logits"] == (CFG.layers, 100)
+    assert shapes["head_w"] == (CFG.d, C_MAX)
+
+
+def test_trainable_param_count_matches_table1_formula():
+    for n in (100, 200, 400):
+        sp = aot.trainable_specs(CFG, "xpeft", n, "cls")
+        total = sum(int(jnp.prod(jnp.array(shape))) for _, shape in sp)
+        formula = 2 * (n + CFG.bottleneck) * CFG.layers  # 2(N+b)L
+        head = CFG.d * C_MAX + C_MAX
+        assert total == formula + head
+
+
+def test_train_inputs_order_groups():
+    fn, inputs, out_names = aot.build_train(CFG, "xpeft", "cls", 100)
+    groups = [i["group"] for i in inputs]
+    # trainable block, then opt_m, opt_v, plm, bank, data, scalars
+    first_plm = groups.index("plm")
+    assert all(g in ("trainable", "opt_m", "opt_v") for g in groups[:first_plm])
+    assert groups[-1] == "scalar"
+    t = sum(1 for g in groups if g == "trainable")
+    assert out_names[:t] == [i["name"] for i in inputs[:t]]
+    assert out_names[-1] == "loss"
+
+
+def test_eval_specs_use_normalized_weights():
+    sp = aot.eval_specs(CFG, "xpeft", 100, "cls")
+    names = [s[0] for s in sp]
+    assert "mask_a_w" in names and "mask_b_w" in names
+    assert "mask_a_logits" not in names
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")),
+    reason="artifacts not built",
+)
+def test_written_manifest_matches_current_plan():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    m = json.load(open(path))
+    assert m["config"]["c_max"] == C_MAX
+    plan_names = {
+        f"{mo}_{p}_{h}" + (f"_n{n}" if n else "")
+        for mo, p, h, n in aot.artifact_plan(ModelConfig(**{
+            k: v for k, v in m["config"].items() if k != "c_max"
+        }))
+    }
+    built = {a["name"] for a in m["artifacts"]}
+    assert plan_names == built

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/dtypes/tilings; assert_allclose against ref — the
+CORE correctness signal for the compute hot-spot (see DESIGN.md §7).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+from compile.kernels import xpeft_aggregate as K
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# aggregate_adapters
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([4, 16, 50, 100, 150, 200]),
+    d=st.sampled_from([8, 16, 64]),
+    b=st.sampled_from([4, 8, 16]),
+    tile=st.sampled_from([None, 1, 7, 25, 50, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_aggregate_matches_ref(n, d, b, tile, seed):
+    ka, kb = keys(seed, 2)
+    mask = jax.nn.softmax(jax.random.normal(ka, (n,)))
+    bank = rand(kb, (n, d, b), scale=0.3)
+    got = K.aggregate_adapters(mask, bank, tile_n=tile)
+    want = R.aggregate_adapters(mask, bank)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_aggregate_khot_mask_selects_subset():
+    """A k-hot/k mask must equal the mean of the selected adapters."""
+    n, d, b, k = 40, 16, 8, 10
+    ka, kb = keys(0, 2)
+    bank = rand(kb, (n, d, b))
+    idx = jax.random.choice(ka, n, (k,), replace=False)
+    mask = jnp.zeros(n).at[idx].set(1.0 / k)
+    got = K.aggregate_adapters(mask, bank)
+    want = jnp.mean(bank[idx], axis=0)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_aggregate_one_hot_is_identity_selection():
+    n, d, b = 12, 8, 4
+    bank = rand(keys(1, 1)[0], (n, d, b))
+    for i in [0, 5, 11]:
+        mask = jnp.zeros(n).at[i].set(1.0)
+        np.testing.assert_allclose(
+            K.aggregate_adapters(mask, bank), bank[i], rtol=1e-6, atol=1e-6
+        )
+
+
+def test_aggregate_bf16_bank():
+    n, d, b = 50, 32, 8
+    ka, kb = keys(2, 2)
+    mask = jax.nn.softmax(jax.random.normal(ka, (n,)))
+    bank = rand(kb, (n, d, b), dtype=jnp.bfloat16)
+    got = K.aggregate_adapters(mask, bank)
+    want = R.aggregate_adapters(mask, bank)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused xpeft_adapter_forward
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([4, 50, 100, 150]),
+    d=st.sampled_from([8, 32, 64]),
+    b=st.sampled_from([4, 8]),
+    m=st.sampled_from([1, 7, 32, 128]),
+    tile=st.sampled_from([None, 2, 25, 50]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_forward_matches_ref(n, d, b, m, tile, seed):
+    ks = keys(seed, 6)
+    ma = jax.nn.softmax(jax.random.normal(ks[0], (n,)))
+    mb = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    bank_a = rand(ks[2], (n, d, b), scale=0.3)
+    bank_b = rand(ks[3], (n, b, d), scale=0.3)
+    x = rand(ks[4], (m, d))
+    ln_s = 1.0 + 0.1 * jax.random.normal(ks[5], (b,))
+    ln_b = 0.1 * jax.random.normal(ks[5], (b,))
+    got = K.xpeft_adapter_forward(x, ma, mb, bank_a, bank_b, ln_s, ln_b, tile_n=tile)
+    want = R.xpeft_adapter_forward(x, ma, mb, bank_a, bank_b, ln_s, ln_b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_fused_residual_path_zero_bank():
+    """With zero up-projection bank the block must be the identity."""
+    n, d, b, m = 10, 16, 4, 9
+    ks = keys(3, 4)
+    ma = jax.nn.softmax(jax.random.normal(ks[0], (n,)))
+    mb = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    bank_a = rand(ks[2], (n, d, b))
+    bank_b = jnp.zeros((n, b, d))
+    x = rand(ks[3], (m, d))
+    got = K.xpeft_adapter_forward(x, ma, mb, bank_a, bank_b, jnp.ones(b), jnp.zeros(b))
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_inside_jit_lowers():
+    """The kernel must lower inside jit (the AOT path requirement)."""
+    n, d, b, m = 20, 16, 4, 8
+    ks = keys(4, 5)
+    args = (
+        rand(ks[0], (m, d)),
+        jax.nn.softmax(jax.random.normal(ks[1], (n,))),
+        jax.nn.softmax(jax.random.normal(ks[2], (n,))),
+        rand(ks[3], (n, d, b), scale=0.3),
+        rand(ks[4], (n, b, d), scale=0.3),
+        jnp.ones(b),
+        jnp.zeros(b),
+    )
+    jitted = jax.jit(K.xpeft_adapter_forward)
+    got = jitted(*args)
+    want = R.xpeft_adapter_forward(*args)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# single-adapter baseline kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.sampled_from([8, 32, 64]),
+    b=st.sampled_from([4, 8, 16]),
+    m=st.sampled_from([1, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_adapter_forward_matches_ref(d, b, m, seed):
+    ks = keys(seed, 4)
+    a = rand(ks[0], (d, b), scale=0.3)
+    bb = rand(ks[1], (b, d), scale=0.3)
+    x = rand(ks[2], (m, d))
+    ln_s = 1.0 + 0.1 * jax.random.normal(ks[3], (b,))
+    ln_b = 0.05 * jax.random.normal(ks[3], (b,))
+    got = K.adapter_forward(x, a, bb, ln_s, ln_b)
+    want = R.adapter_forward(x, a, bb, ln_s, ln_b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_xpeft_uniform_mask_equals_mean_adapter():
+    """Uniform soft mask == applying the mean adapter (linearity check)."""
+    n, d, b, m = 30, 16, 8, 12
+    ks = keys(5, 3)
+    bank_a = rand(ks[0], (n, d, b), scale=0.3)
+    bank_b = rand(ks[1], (n, b, d), scale=0.3)
+    x = rand(ks[2], (m, d))
+    mask = jnp.full((n,), 1.0 / n)
+    got = K.xpeft_adapter_forward(x, mask, mask, bank_a, bank_b, jnp.ones(b), jnp.zeros(b))
+    want = K.adapter_forward(
+        x, jnp.mean(bank_a, 0), jnp.mean(bank_b, 0), jnp.ones(b), jnp.zeros(b)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

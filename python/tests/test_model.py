@@ -1,0 +1,220 @@
+"""L2 correctness: mask semantics, training dynamics, artifact layout."""
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import optim
+from compile.model import C_MAX, ModelConfig
+
+TINY = ModelConfig(vocab=64, d=16, layers=2, heads=2, ffn=32, seq=8, batch=4, bottleneck=4)
+
+
+def make_state(cfg, mode, n, head, seed=0):
+    key = jr.PRNGKey(seed)
+    plm = M.init_plm(cfg, key)
+    bank = M.init_bank(cfg, n, jr.fold_in(key, 1)) if mode == "xpeft" else None
+    tr = M.init_trainable(cfg, mode, n, head, jr.fold_in(key, 2))
+    m = {k: jnp.zeros_like(v) for k, v in tr.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in tr.items()}
+    return plm, bank, tr, m, v
+
+
+def make_batch(cfg, key, num_classes=3):
+    tokens = jr.randint(key, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    labels = (tokens[:, 1] % num_classes).astype(jnp.int32)
+    return tokens, jnp.ones((cfg.batch, cfg.seq)), labels, jnp.ones((cfg.batch,))
+
+
+# ---------------------------------------------------------------------------
+# mask semantics
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(4, 200),
+    k=st.integers(1, 50),
+    rows=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_rank_khot_exactly_k_bits(n, k, rows, seed):
+    k = min(k, n)
+    y = jax.nn.softmax(jr.normal(jr.PRNGKey(seed), (rows, n)))
+    kh = M.rank_khot(y, jnp.int32(k))
+    assert kh.shape == (rows, n)
+    np.testing.assert_array_equal(np.sum(np.asarray(kh), axis=-1), k)
+
+
+def test_rank_khot_selects_largest():
+    y = jnp.array([[0.1, 0.5, 0.2, 0.15, 0.05]])
+    kh = M.rank_khot(y, jnp.int32(2))
+    np.testing.assert_array_equal(kh[0], [0, 1, 1, 0, 0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 20))
+def test_hard_mask_weights_sum_to_one(seed, k):
+    logits = jr.normal(jr.PRNGKey(seed), (3, 40))
+    w = M.mask_weights(
+        logits, hard_flag=jnp.float32(1.0), k=jnp.int32(k),
+        tau=jnp.float32(1.0), nu=jnp.float32(1.0), key=jr.PRNGKey(seed + 1),
+    )
+    np.testing.assert_allclose(np.sum(np.asarray(w), -1), 1.0, rtol=1e-5)
+    # exactly k nonzero entries per row, all equal to 1/k
+    nz = np.count_nonzero(np.asarray(w), axis=-1)
+    np.testing.assert_array_equal(nz, k)
+
+
+def test_soft_mask_weights_are_softmax():
+    logits = jr.normal(jr.PRNGKey(3), (2, 10))
+    w = M.mask_weights(
+        logits, hard_flag=jnp.float32(0.0), k=jnp.int32(5),
+        tau=jnp.float32(1.0), nu=jnp.float32(1.0), key=jr.PRNGKey(4),
+    )
+    np.testing.assert_allclose(w, jax.nn.softmax(logits, -1), rtol=1e-6)
+
+
+def test_straight_through_gradient_flows():
+    """Hard masks are non-differentiable; ST must still deliver gradients."""
+    logits = jr.normal(jr.PRNGKey(5), (2, 12))
+
+    def f(lg):
+        w = M.mask_weights(
+            lg, hard_flag=jnp.float32(1.0), k=jnp.int32(4),
+            tau=jnp.float32(1.0), nu=jnp.float32(0.5), key=jr.PRNGKey(6),
+        )
+        return jnp.sum(w * jnp.arange(12.0))
+
+    g = jax.grad(f)(logits)
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_linear_decay_endpoints():
+    lr = optim.linear_decay(jnp.float32(1e-3), jnp.int32(0), jnp.int32(100))
+    np.testing.assert_allclose(lr, 1e-3, rtol=1e-6)
+    lr = optim.linear_decay(jnp.float32(1e-3), jnp.int32(100), jnp.int32(100))
+    np.testing.assert_allclose(lr, 0.0, atol=1e-9)
+
+
+def test_adamw_moves_params_against_gradient():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.ones((4,))}
+    m = {"w": jnp.zeros((4,))}
+    v = {"w": jnp.zeros((4,))}
+    new_p, new_m, new_v = optim.adamw_update(p, g, m, v, jnp.int32(0), jnp.float32(0.1))
+    assert np.all(np.asarray(new_p["w"]) < 1.0)
+    assert np.all(np.asarray(new_m["w"]) != 0.0)
+
+
+def test_adamw_no_decay_on_bias_names():
+    p = {"head_b": jnp.full((4,), 10.0)}
+    g = {"head_b": jnp.zeros((4,))}
+    m = {"head_b": jnp.zeros((4,))}
+    v = {"head_b": jnp.zeros((4,))}
+    new_p, _, _ = optim.adamw_update(p, g, m, v, jnp.int32(0), jnp.float32(0.1))
+    # zero grad + no weight decay => unchanged
+    np.testing.assert_allclose(new_p["head_b"], p["head_b"], rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# training dynamics (the paper's qualitative claims at tiny scale)
+# ---------------------------------------------------------------------------
+
+
+def run_steps(cfg, mode, head, steps=25, hard=0.0, n=10, single_mask=0.0, seed=0, lr=0.05):
+    plm, bank, tr, m, v = make_state(cfg, mode, n, head, seed)
+    tokens, pad, labels, w = make_batch(cfg, jr.PRNGKey(seed + 9))
+    if head == "reg":
+        labels = (labels.astype(jnp.float32) - 1.0) / 2.0
+    losses = []
+    for s in range(steps):
+        tr, m, v, loss = M.train_step(
+            cfg, mode, head, tr, m, v, plm, bank, tokens, pad, labels, w,
+            jnp.int32(3), jnp.int32(s), jnp.int32(steps), jnp.float32(lr),
+            jnp.int32(42), jnp.float32(hard), jnp.int32(5), jnp.float32(1.0),
+            jnp.float32(0.5), jnp.float32(single_mask),
+        )
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("mode,hard", [
+    ("xpeft", 0.0), ("xpeft", 1.0), ("single_adapter", 0.0), ("head_only", 0.0),
+])
+def test_modes_learn_cls(mode, hard):
+    losses = run_steps(TINY, mode, "cls", hard=hard)
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_xpeft_reg_learns():
+    losses = run_steps(TINY, "xpeft", "reg")
+    assert losses[-1] < losses[0]
+
+
+def test_single_mask_ablation_learns_but_weaker_capacity():
+    """Fig 5b: M_B-only still trains (and both-mask run exists)."""
+    both = run_steps(TINY, "xpeft", "cls", single_mask=0.0, steps=20)
+    single = run_steps(TINY, "xpeft", "cls", single_mask=1.0, steps=20)
+    assert single[-1] < single[0]  # still learns
+    assert both[-1] < both[0]
+
+
+def test_same_seed_reproducible():
+    """Fig 7: identical seeds give identical loss curves."""
+    a = run_steps(TINY, "xpeft", "cls", hard=1.0, seed=42)
+    b = run_steps(TINY, "xpeft", "cls", hard=1.0, seed=42)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_eval_step_matches_train_forward_soft():
+    """eval_step fed softmax'd logits == training-path soft forward."""
+    cfg = TINY
+    plm, bank, tr, _, _ = make_state(cfg, "xpeft", 10, "cls")
+    tokens, pad, labels, w = make_batch(cfg, jr.PRNGKey(1))
+    wa = jax.nn.softmax(tr["mask_a_logits"], -1)
+    wb = jax.nn.softmax(tr["mask_b_logits"], -1)
+    ev = {
+        "mask_a_w": wa, "mask_b_w": wb,
+        "ln_scale": tr["ln_scale"], "ln_bias": tr["ln_bias"],
+        "head_w": tr["head_w"], "head_b": tr["head_b"],
+    }
+    logits_eval = M.eval_step(cfg, "xpeft", ev, plm, bank, tokens, pad)
+    logits_fwd = M.forward(cfg, "xpeft", tr, plm, bank, tokens, pad, mask_w=(wa, wb))
+    np.testing.assert_allclose(logits_eval, logits_fwd, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# loss functions
+# ---------------------------------------------------------------------------
+
+
+def test_cls_loss_masks_invalid_classes():
+    logits = jnp.zeros((2, C_MAX)).at[:, 10].set(100.0)  # mass on an invalid class
+    labels = jnp.array([0, 1])
+    l3 = M.cls_loss(logits, labels, jnp.int32(3), jnp.ones(2))
+    # with only 3 valid classes the huge logit at 10 must not matter
+    np.testing.assert_allclose(float(l3), np.log(3.0), rtol=1e-5)
+
+
+def test_cls_loss_respects_example_weights():
+    logits = jnp.zeros((2, C_MAX))
+    labels = jnp.array([0, 1])
+    full = M.cls_loss(logits, labels, jnp.int32(2), jnp.ones(2))
+    half = M.cls_loss(logits, labels, jnp.int32(2), jnp.array([1.0, 0.0]))
+    np.testing.assert_allclose(float(full), float(half), rtol=1e-6)
+
+
+def test_reg_loss_zero_when_exact():
+    preds = jnp.array([[1.0], [2.0]])
+    t = jnp.array([1.0, 2.0])
+    assert float(M.reg_loss(preds, t, jnp.ones(2))) == 0.0

@@ -1,0 +1,133 @@
+//! `cargo bench --bench coordinator` — L3 hot-path micro benches: dynamic
+//! batcher ops, profile-store lookups at scale, mask pack/unpack, and the
+//! full service round-trip (when artifacts exist).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use xpeft::adapters::AdapterBank;
+use xpeft::bench::{Bench, Suite};
+use xpeft::config::ServeConfig;
+use xpeft::coordinator::batcher::{DynamicBatcher, Request};
+use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use xpeft::coordinator::Service;
+use xpeft::masks::{MaskLogits, ProfileMasks};
+use xpeft::runtime::Engine;
+use xpeft::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::default();
+    let mut rng = Rng::new(42);
+
+    println!("== dynamic batcher ==");
+    suite.add(Bench::default().with_items(1024).run("push+poll 1024 reqs, 32 profiles", || {
+        let mut b = DynamicBatcher::new(16, Duration::from_micros(500));
+        let t = Instant::now();
+        for i in 0..1024u64 {
+            b.push(Request {
+                id: i,
+                profile_id: i % 32,
+                tokens: vec![1; 32],
+                pad_mask: vec![1.0; 32],
+                submitted: t,
+            });
+        }
+        let later = t + Duration::from_millis(5);
+        let mut n = 0;
+        while let Some(pb) = b.poll(later) {
+            n += pb.requests.len();
+        }
+        n
+    }));
+
+    println!("\n== profile store ==");
+    let logits = MaskLogits {
+        layers: 12,
+        n: 400,
+        a: rng.normal_vec(12 * 400, 1.0),
+        b: rng.normal_vec(12 * 400, 1.0),
+    };
+    suite.add(Bench::default().run("binarize L=12 N=400 k=50", || logits.binarize(50)));
+    let hard = logits.binarize(50);
+    suite.add(Bench::default().run("unpack k-hot → weights", || hard.to_weights()));
+    for size in [1_000usize, 100_000] {
+        let mut store = ProfileStore::new(1024);
+        for pid in 0..size as u64 {
+            store.insert(pid, ProfileRecord {
+                masks: ProfileMasks::Hard(hard.clone()),
+                aux: None,
+            });
+        }
+        let mut i = 0u64;
+        suite.add(Bench::default().with_items(1).run(
+            &format!("store lookup ({size} profiles, LRU 1024)"),
+            || {
+                i = (i + 7919) % size as u64;
+                store.weights(i).unwrap()
+            },
+        ));
+    }
+
+    // full service round-trip (needs artifacts)
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("\n== service round-trip (real PJRT eval) ==");
+        let engine = Arc::new(Engine::new(&dir).unwrap());
+        let mc = engine.manifest.config.clone();
+        let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+        let mut store = ProfileStore::new(64);
+        for pid in 0..4u64 {
+            let mut r = Rng::new(pid);
+            let lg = MaskLogits {
+                layers: mc.layers,
+                n: 100,
+                a: r.normal_vec(mc.layers * 100, 1.0),
+                b: r.normal_vec(mc.layers * 100, 1.0),
+            };
+            store.insert(pid, ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None });
+        }
+        store.set_shared_aux(AuxParams {
+            ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+            ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+            head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+            head_b: vec![0.0; mc.c_max],
+        });
+        let svc = Service::start(
+            engine,
+            Arc::new(Mutex::new(store)),
+            bank,
+            ServeConfig { max_batch: 16, batch_deadline_us: 300, workers: 1, mask_cache: 16 },
+            15,
+            42,
+        )
+        .unwrap();
+        let reqs = 64usize;
+        suite.add(Bench { warmup: 1, iters: 8, items_per_iter: Some(reqs) }.run(
+            "service round-trip (64 reqs, 4 profiles)",
+            || {
+                for i in 0..reqs {
+                    svc.submit((i % 4) as u64, "s42t3w1 s42t2w5 s42fw0").unwrap();
+                }
+                let mut got = 0;
+                while got < reqs {
+                    if svc.recv_timeout(Duration::from_secs(5)).is_some() {
+                        got += 1;
+                    } else {
+                        panic!("timeout");
+                    }
+                }
+                got
+            },
+        ));
+        let snap = svc.shutdown();
+        println!(
+            "service telemetry: mean batch {:.1}, p50 {:.2}ms p99 {:.2}ms",
+            snap.mean_batch,
+            snap.p50_latency_us / 1e3,
+            snap.p99_latency_us / 1e3
+        );
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_coordinator.json", suite.to_json().to_string_pretty()).ok();
+}

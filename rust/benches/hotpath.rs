@@ -1,0 +1,77 @@
+//! `cargo bench --bench hotpath` — training hot-path breakdown used by the
+//! §Perf optimization loop (EXPERIMENTS.md): isolates literal construction,
+//! frozen-tensor upload and executable dispatch so regressions in each are
+//! visible independently.
+
+use xpeft::adapters::AdapterBank;
+use xpeft::bench::{Bench, Suite};
+use xpeft::config::{Mode, TrainConfig};
+use xpeft::data::batch::Batcher;
+use xpeft::data::glue;
+use xpeft::runtime::literal::{to_literal, Tensor};
+use xpeft::runtime::manifest::Group;
+use xpeft::runtime::Engine;
+use xpeft::train::{Hyper, Trainer};
+use xpeft::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(&dir).unwrap();
+    let mc = engine.manifest.config.clone();
+    let mut suite = Suite::default();
+
+    // literal construction costs (per-step CPU overhead candidates)
+    println!("== literal construction ==");
+    let spec_bank = engine
+        .manifest
+        .find("xpeft_train_cls_n400")
+        .unwrap()
+        .inputs_in(Group::Bank)
+        .next()
+        .unwrap()
+        .clone();
+    let bank_data = Tensor::F32(vec![0.1; spec_bank.elements()]);
+    suite.add(Bench::default().run(
+        &format!("to_literal bank_a N=400 ({} floats)", spec_bank.elements()),
+        || to_literal(&spec_bank, &bank_data).unwrap(),
+    ));
+    let spec_small = engine
+        .manifest
+        .find("xpeft_train_cls_n400")
+        .unwrap()
+        .inputs
+        .iter()
+        .find(|t| t.name == "mask_a_logits")
+        .unwrap()
+        .clone();
+    let small = Tensor::F32(vec![0.0; spec_small.elements()]);
+    suite.add(Bench::default().run("to_literal mask logits [L,400]", || {
+        to_literal(&spec_small, &small).unwrap()
+    }));
+
+    // end-to-end step latency per N (the number that must not regress)
+    println!("\n== train step dispatch ==");
+    let ds = glue::build("sst2", mc.seq, mc.vocab, 42);
+    let batcher = Batcher::new(mc.batch, mc.seq);
+    let mut rng = Rng::new(0);
+    let batch = batcher.epoch(&ds.train, &mut rng).remove(0);
+    for n in [100usize, 200, 400] {
+        let bank = AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42);
+        let mut trainer = Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
+        let cfg = TrainConfig { mode: Mode::XpeftHard, n, steps: 50, ..Default::default() };
+        let hp = Hyper::from_config(&cfg, 2, 50);
+        suite.add(
+            Bench { warmup: 3, iters: 15, items_per_iter: Some(mc.batch) }.run(
+                &format!("xpeft_hard train step N={n}"),
+                || trainer.step(&batch, &hp).unwrap(),
+            ),
+        );
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_hotpath.json", suite.to_json().to_string_pretty()).ok();
+}

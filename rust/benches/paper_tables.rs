@@ -1,0 +1,80 @@
+//! `cargo bench --bench paper_tables` — end-to-end benches mirroring the
+//! paper's cost tables: per-step training latency across modes and N
+//! (Tables 8/9 shape: x_peft cost grows with N, exceeds the baselines),
+//! eval-step latency, and the Table 1 / Fig 1 accounting ops.
+
+use xpeft::adapters::AdapterBank;
+use xpeft::bench::{Bench, Suite};
+use xpeft::config::{Mode, TrainConfig};
+use xpeft::data::batch::Batcher;
+use xpeft::data::glue;
+use xpeft::masks::accounting::Dims;
+use xpeft::runtime::Engine;
+use xpeft::train::{eval::Evaluator, Hyper, Trainer};
+use xpeft::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(&dir).unwrap();
+    let mc = engine.manifest.config.clone();
+    let ds = glue::build("sst2", mc.seq, mc.vocab, 42);
+    let batcher = Batcher::new(mc.batch, mc.seq);
+    let mut rng = Rng::new(0);
+    let batch = batcher.epoch(&ds.train, &mut rng).remove(0);
+    let mut suite = Suite::default();
+
+    println!("== per-step training latency (Tables 8/9 shape) ==");
+    for (mode, n) in [
+        (Mode::HeadOnly, 0usize),
+        (Mode::SingleAdapter, 0),
+        (Mode::XpeftSoft, 100),
+        (Mode::XpeftHard, 100),
+        (Mode::XpeftHard, 200),
+        (Mode::XpeftHard, 400),
+    ] {
+        let bank = (n > 0).then(|| AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+        let mut trainer =
+            Trainer::new(&engine, mode, "cls", n, bank.as_ref(), 42, 42).unwrap();
+        let cfg = TrainConfig { mode, n: n.max(100), steps: 50, ..Default::default() };
+        let hp = Hyper::from_config(&cfg, 2, 50);
+        let label = format!("train step {} N={n}", cfg.mode.label());
+        suite.add(
+            Bench { warmup: 3, iters: 15, items_per_iter: Some(mc.batch) }
+                .run(&label, || trainer.step(&batch, &hp).unwrap()),
+        );
+    }
+
+    println!("\n== eval-step latency (the serving inner loop) ==");
+    for n in [100usize, 400] {
+        let bank = AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42);
+        let trainer = Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
+        let ev = Evaluator::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42).unwrap();
+        let w = trainer.mask_weights(Mode::XpeftHard, mc.layers, n, 50).unwrap();
+        suite.add(
+            Bench { warmup: 3, iters: 20, items_per_iter: Some(mc.batch) }
+                .run(&format!("eval step N={n} (batch {})", mc.batch), || {
+                    ev.forward(&trainer.state, Some(&w), &batch).unwrap()
+                }),
+        );
+    }
+
+    println!("\n== accounting ops (Table 1 / Fig 1) ==");
+    let paper = Dims::PAPER_TABLE1;
+    suite.add(Bench::default().with_items(1_000_000).run(
+        "fig1 cumulative-bytes curve (1M profiles)",
+        || {
+            let mut total = 0u64;
+            for p in (0..1_000_000).step_by(1000) {
+                total = total.wrapping_add(paper.cumulative_bytes_xpeft_hard(p, 150));
+            }
+            total
+        },
+    ));
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_paper_tables.json", suite.to_json().to_string_pretty()).ok();
+}

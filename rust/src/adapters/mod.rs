@@ -1,0 +1,239 @@
+//! The shared adapter bank: N Pfeiffer adapters per PLM block, stacked as
+//! `bank_a [L, N, d, b]` / `bank_b [L, N, b, d]` (row-major), exactly the
+//! layout the AOT executables take as `bank` inputs.
+//!
+//! Banks are either **random** (the supermask / Lottery-Ticket reading of
+//! §3, used by the GLUE/SuperGLUE experiments) or **warm** (adapters trained
+//! conventionally for the first profiles, then frozen — the LaMP warm-start
+//! of §4.1). `install_trained` upgrades a random slot to a trained adapter.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterBank {
+    pub layers: usize,
+    pub n: usize,
+    pub d: usize,
+    pub b: usize,
+    /// [L, N, d, b] row-major
+    pub bank_a: Vec<f32>,
+    /// [L, N, b, d] row-major
+    pub bank_b: Vec<f32>,
+}
+
+const MAGIC: &[u8; 8] = b"XPFTBANK";
+
+impl AdapterBank {
+    /// Random bank (the supermask setting of §3): both sub-modules are
+    /// genuinely random — near-zero up-projections would make every adapter
+    /// a no-op and mask selection meaningless. Scales keep the block's
+    /// output O(0.1·x) so 4 stacked post-LN blocks stay stable.
+    pub fn random(layers: usize, n: usize, d: usize, b: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fold_in(0x8a17);
+        let scale_a = 1.0 / (d as f32).sqrt();
+        let scale_b = 0.3 / (b as f32).sqrt();
+        let bank_a = rng.normal_vec(layers * n * d * b, scale_a);
+        let bank_b = rng.normal_vec(layers * n * b * d, scale_b);
+        AdapterBank { layers, n, d, b, bank_a, bank_b }
+    }
+
+    fn adapter_len(&self) -> usize {
+        self.d * self.b
+    }
+
+    /// View of adapter i's A-submodule in layer l (d*b floats).
+    pub fn a_slice(&self, l: usize, i: usize) -> &[f32] {
+        let len = self.adapter_len();
+        let off = (l * self.n + i) * len;
+        &self.bank_a[off..off + len]
+    }
+
+    pub fn b_slice(&self, l: usize, i: usize) -> &[f32] {
+        let len = self.adapter_len();
+        let off = (l * self.n + i) * len;
+        &self.bank_b[off..off + len]
+    }
+
+    /// Install a trained adapter (from `single_adapter` tuning) into slot i.
+    /// `a` is [L, d, b] row-major, `bb` is [L, b, d] — the trainable layout
+    /// produced by the train executables.
+    pub fn install_trained(&mut self, i: usize, a: &[f32], bb: &[f32]) -> Result<()> {
+        let len = self.adapter_len();
+        if i >= self.n {
+            bail!("slot {i} out of range (N={})", self.n);
+        }
+        if a.len() != self.layers * len || bb.len() != self.layers * len {
+            bail!("trained adapter size mismatch");
+        }
+        for l in 0..self.layers {
+            let off = (l * self.n + i) * len;
+            self.bank_a[off..off + len].copy_from_slice(&a[l * len..(l + 1) * len]);
+            self.bank_b[off..off + len].copy_from_slice(&bb[l * len..(l + 1) * len]);
+        }
+        Ok(())
+    }
+
+    /// Reference masked aggregation (test oracle for the L1 kernel path):
+    /// returns `Σ_i w[i]·A_i^{(l)}` as a d*b vector.
+    pub fn aggregate_a(&self, l: usize, weights: &[f32]) -> Vec<f32> {
+        assert_eq!(weights.len(), self.n);
+        let len = self.adapter_len();
+        let mut out = vec![0.0f32; len];
+        for (i, &w) in weights.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, &x) in out.iter_mut().zip(self.a_slice(l, i)) {
+                *o += w * x;
+            }
+        }
+        out
+    }
+
+    /// Bank bytes if persisted (Fig 1 bookkeeping): all f32.
+    pub fn stored_bytes(&self) -> usize {
+        (self.bank_a.len() + self.bank_b.len()) * 4
+    }
+
+    // -- binary persistence (bank is shared across profiles; stored once) --
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        for v in [self.layers as u32, self.n as u32, self.d as u32, self.b as u32] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for x in self.bank_a.iter().chain(self.bank_b.iter()) {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<AdapterBank> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an adapter bank file", path.display());
+        }
+        let mut hdr = [0u8; 16];
+        f.read_exact(&mut hdr)?;
+        let rd = |i: usize| u32::from_le_bytes(hdr[i..i + 4].try_into().unwrap()) as usize;
+        let (layers, n, d, b) = (rd(0), rd(4), rd(8), rd(12));
+        let count = layers * n * d * b;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        if buf.len() != 2 * count * 4 {
+            bail!("bank payload size mismatch");
+        }
+        let floats: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(AdapterBank {
+            layers, n, d, b,
+            bank_a: floats[..count].to_vec(),
+            bank_b: floats[count..].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> AdapterBank {
+        AdapterBank::random(2, 5, 8, 4, 42)
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a, b);
+        assert_eq!(a.bank_a.len(), 2 * 5 * 8 * 4);
+        assert_eq!(a.bank_b.len(), 2 * 5 * 4 * 8);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(tiny(), AdapterBank::random(2, 5, 8, 4, 43));
+    }
+
+    #[test]
+    fn both_submodules_nontrivially_random() {
+        let bank = AdapterBank::random(2, 10, 16, 4, 7);
+        let max_b = bank.bank_b.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let max_a = bank.bank_a.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(max_b > 0.05, "random up-proj must be non-trivial, max={max_b}");
+        assert!(max_a > 0.05, "down-proj must be non-trivial, max={max_a}");
+    }
+
+    #[test]
+    fn install_trained_roundtrip() {
+        let mut bank = tiny();
+        let len = 2 * 8 * 4;
+        let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
+        let bb: Vec<f32> = (0..len).map(|i| -(i as f32)).collect();
+        bank.install_trained(3, &a, &bb).unwrap();
+        assert_eq!(bank.a_slice(0, 3), &a[..32]);
+        assert_eq!(bank.a_slice(1, 3), &a[32..]);
+        assert_eq!(bank.b_slice(1, 3), &bb[32..]);
+        // neighbours untouched
+        let fresh = tiny();
+        assert_eq!(bank.a_slice(0, 2), fresh.a_slice(0, 2));
+    }
+
+    #[test]
+    fn install_trained_bounds_checked() {
+        let mut bank = tiny();
+        assert!(bank.install_trained(9, &[], &[]).is_err());
+        assert!(bank.install_trained(0, &[0.0], &[0.0]).is_err());
+    }
+
+    #[test]
+    fn aggregate_one_hot_selects() {
+        let bank = tiny();
+        let mut w = vec![0.0f32; 5];
+        w[2] = 1.0;
+        assert_eq!(bank.aggregate_a(1, &w), bank.a_slice(1, 2));
+    }
+
+    #[test]
+    fn aggregate_linear_in_weights() {
+        let bank = tiny();
+        let w1 = vec![0.5, 0.0, 0.0, 0.0, 0.5];
+        let agg = bank.aggregate_a(0, &w1);
+        for (j, &v) in agg.iter().enumerate() {
+            let expect = 0.5 * bank.a_slice(0, 0)[j] + 0.5 * bank.a_slice(0, 4)[j];
+            assert!((v - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let bank = AdapterBank::random(3, 7, 8, 4, 11);
+        let dir = std::env::temp_dir().join("xpeft_test_bank");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bank.bin");
+        bank.save(&path).unwrap();
+        let back = AdapterBank::load(&path).unwrap();
+        assert_eq!(bank, back);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("xpeft_test_bank");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a bank").unwrap();
+        assert!(AdapterBank::load(&path).is_err());
+    }
+}

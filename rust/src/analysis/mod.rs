@@ -1,0 +1,143 @@
+//! Analysis utilities behind the paper's figures: t-SNE embedding (Fig 3),
+//! mask heatmaps + most-distant-pair selection (Fig 6), and training-curve
+//! export (Figs 5/7).
+
+pub mod tsne;
+
+use crate::masks::{euclidean, MaskWeights};
+use crate::util::json::Json;
+
+/// Flatten a profile's mask pair into one feature vector (t-SNE input).
+pub fn mask_features(w: &MaskWeights) -> Vec<f32> {
+    let mut v = Vec::with_capacity(w.a.len() + w.b.len());
+    v.extend_from_slice(&w.a);
+    v.extend_from_slice(&w.b);
+    v
+}
+
+/// The pair of profiles with maximal Euclidean mask distance (Fig 6).
+pub fn most_distant_pair(weights: &[MaskWeights]) -> Option<(usize, usize, f64)> {
+    let n = weights.len();
+    if n < 2 {
+        return None;
+    }
+    let mut best = (0, 1, -1.0f64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = euclidean(&weights[i], &weights[j]);
+            if d > best.2 {
+                best = (i, j, d);
+            }
+        }
+    }
+    Some(best)
+}
+
+/// Heatmap JSON for one mask tensor: rows = PLM blocks, cols = adapters.
+pub fn heatmap_json(w: &MaskWeights) -> Json {
+    let mut rows = Vec::with_capacity(w.layers);
+    for l in 0..w.layers {
+        rows.push(Json::from_f32s(&w.a[l * w.n..(l + 1) * w.n]));
+    }
+    let mut rows_b = Vec::with_capacity(w.layers);
+    for l in 0..w.layers {
+        rows_b.push(Json::from_f32s(&w.b[l * w.n..(l + 1) * w.n]));
+    }
+    let mut o = Json::obj();
+    o.set("mask_a", Json::Arr(rows));
+    o.set("mask_b", Json::Arr(rows_b));
+    o
+}
+
+/// Training-curve export: step → loss series keyed by label.
+pub fn curves_json(series: &[(String, Vec<f32>)]) -> Json {
+    let mut o = Json::obj();
+    for (label, losses) in series {
+        o.set(label, Json::from_f32s(losses));
+    }
+    o
+}
+
+/// ASCII sparkline of a loss curve for terminal output.
+pub fn sparkline(values: &[f32], width: usize) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let range = (hi - lo).max(1e-9);
+    let step = (values.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut pos = 0.0;
+    while (pos as usize) < values.len() && out.chars().count() < width {
+        let v = values[pos as usize];
+        let idx = (((v - lo) / range) * 7.0).round() as usize;
+        out.push(GLYPHS[idx.min(7)]);
+        pos += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::MaskLogits;
+    use crate::util::rng::Rng;
+
+    fn weights(seed: u64) -> MaskWeights {
+        let mut r = Rng::new(seed);
+        MaskLogits { layers: 3, n: 20, a: r.normal_vec(60, 1.0), b: r.normal_vec(60, 1.0) }
+            .soft_weights()
+    }
+
+    #[test]
+    fn features_concatenate_both_masks() {
+        let w = weights(1);
+        assert_eq!(mask_features(&w).len(), 120);
+    }
+
+    #[test]
+    fn most_distant_pair_finds_outlier() {
+        let mut ws = vec![weights(1), weights(1), weights(1)];
+        // an outlier: all mass on one adapter per row
+        let mut logits = MaskLogits::zeros(3, 20);
+        for l in 0..3 {
+            logits.a[l * 20] = 50.0;
+            logits.b[l * 20] = 50.0;
+        }
+        ws.push(logits.soft_weights());
+        let (i, j, d) = most_distant_pair(&ws).unwrap();
+        assert!(j == 3 || i == 3);
+        assert!(d > 0.0);
+        assert!(most_distant_pair(&ws[..1]).is_none());
+    }
+
+    #[test]
+    fn heatmap_shape() {
+        let w = weights(2);
+        let j = heatmap_json(&w);
+        assert_eq!(j.get("mask_a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("mask_a").unwrap().as_arr().unwrap()[0].as_arr().unwrap().len(),
+            20
+        );
+    }
+
+    #[test]
+    fn sparkline_monotone_curve() {
+        let vals: Vec<f32> = (0..100).map(|i| 1.0 - i as f32 / 100.0).collect();
+        let s = sparkline(&vals, 10);
+        assert_eq!(s.chars().count(), 10);
+        let first = s.chars().next().unwrap();
+        let last = s.chars().last().unwrap();
+        assert!(first > last, "{s}");
+    }
+
+    #[test]
+    fn curves_json_roundtrips() {
+        let j = curves_json(&[("a".into(), vec![1.0, 0.5]), ("b".into(), vec![0.9])]);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,203 @@
+//! Exact t-SNE (van der Maaten & Hinton 2008) — the Fig 3 visualization of
+//! per-profile mask tensors. Exact O(n²) gradients are fine at profile
+//! counts in the hundreds (paper: 173 points).
+
+use crate::util::rng::Rng;
+
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iters: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig { perplexity: 12.0, iters: 500, learning_rate: 100.0, seed: 42 }
+    }
+}
+
+/// Embed `points` (rows of equal dim) into 2-D. Returns (x, y) per row.
+pub fn tsne(points: &[Vec<f32>], cfg: &TsneConfig) -> Vec<(f64, f64)> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![(0.0, 0.0)];
+    }
+
+    // pairwise squared distances
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d: f64 = points[i]
+                .iter()
+                .zip(&points[j])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            d2[i * n + j] = d;
+            d2[j * n + i] = d;
+        }
+    }
+
+    // per-point sigma via binary search to match the target perplexity
+    let target_h = cfg.perplexity.min((n - 1) as f64).max(2.0).ln();
+    let mut p = vec![0.0f64; n * n];
+    for i in 0..n {
+        let (mut lo, mut hi) = (1e-12f64, 1e12f64);
+        let mut beta = 1.0f64;
+        for _ in 0..64 {
+            let mut sum = 0.0;
+            let mut h = 0.0;
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let pij = (-beta * d2[i * n + j]).exp();
+                sum += pij;
+            }
+            if sum <= 0.0 {
+                beta /= 2.0;
+                continue;
+            }
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let pij = (-beta * d2[i * n + j]).exp() / sum;
+                if pij > 1e-12 {
+                    h -= pij * pij.ln();
+                }
+            }
+            if (h - target_h).abs() < 1e-4 {
+                break;
+            }
+            if h > target_h {
+                lo = beta;
+                beta = if hi >= 1e12 { beta * 2.0 } else { (beta + hi) / 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let mut sum = 0.0;
+        for j in 0..n {
+            if j != i {
+                sum += (-beta * d2[i * n + j]).exp();
+            }
+        }
+        for j in 0..n {
+            if j != i {
+                p[i * n + j] = (-beta * d2[i * n + j]).exp() / sum.max(1e-300);
+            }
+        }
+    }
+    // symmetrize
+    let mut ps = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            ps[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+
+    // gradient descent with momentum + early exaggeration
+    let mut rng = Rng::new(cfg.seed);
+    let mut y: Vec<(f64, f64)> = (0..n)
+        .map(|_| (rng.normal() * 1e-2, rng.normal() * 1e-2))
+        .collect();
+    let mut vel = vec![(0.0f64, 0.0f64); n];
+    for it in 0..cfg.iters {
+        let exaggeration = if it < cfg.iters / 4 { 4.0 } else { 1.0 };
+        let momentum = if it < cfg.iters / 4 { 0.5 } else { 0.8 };
+        // q distribution (student-t)
+        let mut qnum = vec![0.0f64; n * n];
+        let mut qsum = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y[i].0 - y[j].0;
+                let dy = y[i].1 - y[j].1;
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                qnum[i * n + j] = q;
+                qnum[j * n + i] = q;
+                qsum += 2.0 * q;
+            }
+        }
+        for i in 0..n {
+            let mut gx = 0.0;
+            let mut gy = 0.0;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let q = qnum[i * n + j];
+                let qij = (q / qsum).max(1e-12);
+                let mult = (exaggeration * ps[i * n + j] - qij) * q;
+                gx += 4.0 * mult * (y[i].0 - y[j].0);
+                gy += 4.0 * mult * (y[i].1 - y[j].1);
+            }
+            vel[i].0 = momentum * vel[i].0 - cfg.learning_rate * gx;
+            vel[i].1 = momentum * vel[i].1 - cfg.learning_rate * gy;
+        }
+        for i in 0..n {
+            y[i].0 += vel[i].0;
+            y[i].1 += vel[i].1;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(rng: &mut Rng, center: f32, count: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..count)
+            .map(|_| (0..dim).map(|_| center + rng.normal_f32(0.0, 0.05)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn separates_two_clusters() {
+        let mut rng = Rng::new(1);
+        let mut pts = cluster(&mut rng, 0.0, 10, 8);
+        pts.extend(cluster(&mut rng, 3.0, 10, 8));
+        let emb = tsne(&pts, &TsneConfig { iters: 300, ..Default::default() });
+        // mean intra-cluster distance << inter-cluster distance
+        let dist = |a: (f64, f64), b: (f64, f64)| ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0.0;
+        let mut nx = 0.0;
+        for i in 0..20 {
+            for j in (i + 1)..20 {
+                if (i < 10) == (j < 10) {
+                    intra += dist(emb[i], emb[j]);
+                    ni += 1.0;
+                } else {
+                    inter += dist(emb[i], emb[j]);
+                    nx += 1.0;
+                }
+            }
+        }
+        assert!(inter / nx > 2.0 * intra / ni, "inter={} intra={}", inter / nx, intra / ni);
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        assert!(tsne(&[], &TsneConfig::default()).is_empty());
+        assert_eq!(tsne(&[vec![1.0, 2.0]], &TsneConfig::default()), vec![(0.0, 0.0)]);
+        // identical points should not NaN
+        let pts = vec![vec![1.0; 4]; 5];
+        let emb = tsne(&pts, &TsneConfig { iters: 50, ..Default::default() });
+        assert!(emb.iter().all(|(x, y)| x.is_finite() && y.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(2);
+        let pts = cluster(&mut rng, 0.0, 12, 6);
+        let cfg = TsneConfig { iters: 100, ..Default::default() };
+        assert_eq!(tsne(&pts, &cfg), tsne(&pts, &cfg));
+    }
+}

@@ -1,0 +1,157 @@
+//! Micro-benchmark framework (criterion is unavailable offline): warmup,
+//! timed iterations, median/p95 reporting, and a suite runner used by the
+//! `rust/benches/*` targets and `xpeft bench`.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    /// optional throughput units (items/sec) when `items_per_iter` is set
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let t = |ns: f64| {
+            if ns >= 1e9 {
+                format!("{:.2}s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.2}ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.2}µs", ns / 1e3)
+            } else {
+                format!("{ns:.0}ns")
+            }
+        };
+        let tp = self
+            .throughput
+            .map(|x| format!("  {:>10.0}/s", x))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10} median  {:>10} p95  ({} iters){}",
+            self.name,
+            t(self.median_ns),
+            t(self.p95_ns),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub items_per_iter: Option<usize>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 20, items_per_iter: None }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, iters: 5, items_per_iter: None }
+    }
+
+    pub fn with_items(mut self, items: usize) -> Self {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let median_ns = stats::median(&samples);
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            median_ns,
+            mean_ns: stats::mean(&samples),
+            p95_ns: stats::quantile(&samples, 0.95),
+            throughput: self.items_per_iter.map(|n| n as f64 / (median_ns / 1e9)),
+        }
+    }
+}
+
+/// Collects results and prints a suite summary.
+#[derive(Default)]
+pub struct Suite {
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn add(&mut self, r: BenchResult) {
+        println!("{}", r.report());
+        self.results.push(r);
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(r.name.clone()));
+            o.set("median_ns", Json::Num(r.median_ns));
+            o.set("p95_ns", Json::Num(r.p95_ns));
+            if let Some(tp) = r.throughput {
+                o.set("throughput_per_s", Json::Num(tp));
+            }
+            arr.push(o);
+        }
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = Bench::quick().run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = Bench::quick().with_items(100).run("items", || 1 + 1);
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            median_ns: 1500.0,
+            mean_ns: 1500.0,
+            p95_ns: 2500.0,
+            throughput: Some(1000.0),
+        };
+        let s = r.report();
+        assert!(s.contains("µs") && s.contains("1000"));
+    }
+}

@@ -1,0 +1,281 @@
+//! Typed configuration system: JSON config files + `--key value` CLI
+//! overrides, with validation. Presets mirror the paper's hyper-parameters
+//! (Appendix C) scaled to this testbed.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Model dimensions — must agree with `artifacts/manifest.json` (the
+/// runtime cross-checks at load).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub bottleneck: usize,
+    pub c_max: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            vocab: 1024, d: 64, layers: 4, heads: 4, ffn: 128,
+            seq: 32, batch: 32, bottleneck: 8, c_max: 16,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            vocab: j.usize_field("vocab")?,
+            d: j.usize_field("d")?,
+            layers: j.usize_field("layers")?,
+            heads: j.usize_field("heads")?,
+            ffn: j.usize_field("ffn")?,
+            seq: j.usize_field("seq")?,
+            batch: j.usize_field("batch")?,
+            bottleneck: j.usize_field("bottleneck")?,
+            c_max: j.usize_field("c_max")?,
+        })
+    }
+}
+
+/// Tuning mode (paper §4 baselines + ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    XpeftSoft,
+    XpeftHard,
+    SingleAdapter,
+    HeadOnly,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "xpeft_soft" | "soft" => Mode::XpeftSoft,
+            "xpeft_hard" | "hard" => Mode::XpeftHard,
+            "single_adapter" | "sa" => Mode::SingleAdapter,
+            "head_only" | "ho" => Mode::HeadOnly,
+            _ => bail!("unknown mode '{s}' (xpeft_soft|xpeft_hard|single_adapter|head_only)"),
+        })
+    }
+
+    /// Artifact mode string (soft/hard share the `xpeft` artifacts).
+    pub fn artifact_mode(&self) -> &'static str {
+        match self {
+            Mode::XpeftSoft | Mode::XpeftHard => "xpeft",
+            Mode::SingleAdapter => "single_adapter",
+            Mode::HeadOnly => "head_only",
+        }
+    }
+
+    pub fn is_xpeft(&self) -> bool {
+        matches!(self, Mode::XpeftSoft | Mode::XpeftHard)
+    }
+
+    pub fn is_hard(&self) -> bool {
+        matches!(self, Mode::XpeftHard)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mode::XpeftSoft => "xpeft_soft",
+            Mode::XpeftHard => "xpeft_hard",
+            Mode::SingleAdapter => "single_adapter",
+            Mode::HeadOnly => "head_only",
+        }
+    }
+}
+
+/// Training hyper-parameters (paper Appendix C; lr scaled for the tiny PLM —
+/// the paper's 1e-5 is tuned for bert-base).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub mode: Mode,
+    /// number of bank adapters N (xpeft modes)
+    pub n: usize,
+    /// top-k for hard masks
+    pub k: usize,
+    /// gumbel temperature τ
+    pub tau: f32,
+    /// gumbel noise level ν
+    pub nu: f32,
+    pub base_lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+    /// Fig-5b ablation: learn only M_B
+    pub single_mask: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            mode: Mode::XpeftSoft,
+            n: 100,
+            k: 50,
+            tau: 1.0,
+            nu: 0.5,
+            base_lr: 0.02,
+            steps: 300,
+            seed: 42,
+            single_mask: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self, available_ns: &[usize]) -> Result<()> {
+        if self.mode.is_xpeft() && !available_ns.contains(&self.n) {
+            bail!("N={} has no lowered artifact (available: {available_ns:?})", self.n);
+        }
+        if self.k == 0 || (self.mode.is_xpeft() && self.k > self.n) {
+            bail!("k={} must be in 1..=N({})", self.k, self.n);
+        }
+        if self.base_lr <= 0.0 {
+            bail!("base_lr must be positive");
+        }
+        if self.steps == 0 {
+            bail!("steps must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn override_from_args(mut self, args: &Args) -> Result<TrainConfig> {
+        if let Some(m) = args.get("mode") {
+            self.mode = Mode::parse(m)?;
+        }
+        self.n = args.get_usize("n", self.n)?;
+        self.k = args.get_usize("k", self.k)?;
+        self.tau = args.get_f64("tau", self.tau as f64)? as f32;
+        self.nu = args.get_f64("nu", self.nu as f64)? as f32;
+        self.base_lr = args.get_f64("lr", self.base_lr as f64)? as f32;
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        if args.flag("single-mask") {
+            self.single_mask = true;
+        }
+        Ok(self)
+    }
+}
+
+/// Serving-side configuration for the coordinator.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// max requests aggregated into one executor batch
+    pub max_batch: usize,
+    /// deadline before a partial batch is flushed (µs)
+    pub batch_deadline_us: u64,
+    /// worker executor threads
+    pub workers: usize,
+    /// profile-mask LRU cache capacity (entries)
+    pub mask_cache: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 32, batch_deadline_us: 2_000, workers: 1, mask_cache: 4096 }
+    }
+}
+
+impl ServeConfig {
+    pub fn override_from_args(mut self, args: &Args) -> Result<ServeConfig> {
+        self.max_batch = args.get_usize("max-batch", self.max_batch)?;
+        self.batch_deadline_us = args.get_u64("deadline-us", self.batch_deadline_us)?;
+        self.workers = args.get_usize("workers", self.workers)?;
+        self.mask_cache = args.get_usize("mask-cache", self.mask_cache)?;
+        if self.max_batch == 0 || self.workers == 0 {
+            bail!("max-batch and workers must be positive");
+        }
+        Ok(self)
+    }
+}
+
+/// Load a JSON config file if `--config path` was given.
+pub fn load_file(args: &Args) -> Result<Option<Json>> {
+    match args.get("config") {
+        None => Ok(None),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config file {path}"))?;
+            Ok(Some(Json::parse(&text).with_context(|| format!("parsing {path}"))?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(Mode::parse("soft").unwrap(), Mode::XpeftSoft);
+        assert_eq!(Mode::parse("xpeft_hard").unwrap(), Mode::XpeftHard);
+        assert_eq!(Mode::parse("sa").unwrap(), Mode::SingleAdapter);
+        assert!(Mode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn artifact_mode_mapping() {
+        assert_eq!(Mode::XpeftSoft.artifact_mode(), "xpeft");
+        assert_eq!(Mode::XpeftHard.artifact_mode(), "xpeft");
+        assert_eq!(Mode::HeadOnly.artifact_mode(), "head_only");
+    }
+
+    #[test]
+    fn train_overrides() {
+        let tc = TrainConfig::default()
+            .override_from_args(&args("train --mode hard --n 200 --k 30 --lr 0.05 --seed 7"))
+            .unwrap();
+        assert_eq!(tc.mode, Mode::XpeftHard);
+        assert_eq!(tc.n, 200);
+        assert_eq!(tc.k, 30);
+        assert_eq!(tc.seed, 7);
+        assert!((tc.base_lr - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rules() {
+        let mut tc = TrainConfig::default();
+        tc.n = 123;
+        assert!(tc.validate(&[100, 200]).is_err());
+        tc.n = 100;
+        assert!(tc.validate(&[100, 200]).is_ok());
+        tc.k = 0;
+        assert!(tc.validate(&[100]).is_err());
+        tc.k = 101;
+        assert!(tc.validate(&[100]).is_err());
+    }
+
+    #[test]
+    fn serve_overrides_and_validation() {
+        let sc = ServeConfig::default()
+            .override_from_args(&args("serve --max-batch 8 --workers 2"))
+            .unwrap();
+        assert_eq!(sc.max_batch, 8);
+        assert_eq!(sc.workers, 2);
+        assert!(ServeConfig::default()
+            .override_from_args(&args("serve --max-batch 0"))
+            .is_err());
+    }
+
+    #[test]
+    fn model_config_from_json() {
+        let j = Json::parse(
+            r#"{"vocab":1024,"d":64,"layers":4,"heads":4,"ffn":128,"seq":32,"batch":32,"bottleneck":8,"c_max":16}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), ModelConfig::default());
+    }
+}

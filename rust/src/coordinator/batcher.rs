@@ -1,0 +1,231 @@
+//! Dynamic per-profile batcher. The eval executable applies ONE profile's
+//! masks to a whole `[B, T]` batch, so the batcher groups pending requests
+//! by profile and flushes a group when it reaches `max_batch` or its oldest
+//! request exceeds the deadline — the core serving-efficiency trade-off of
+//! the multi-profile scenario.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// A tokenized inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub profile_id: u64,
+    pub tokens: Vec<u32>,
+    pub pad_mask: Vec<f32>,
+    pub submitted: Instant,
+}
+
+/// A flushed group: all requests share one profile.
+#[derive(Debug)]
+pub struct ProfileBatch {
+    pub profile_id: u64,
+    pub requests: Vec<Request>,
+}
+
+pub struct DynamicBatcher {
+    max_batch: usize,
+    deadline: Duration,
+    queues: HashMap<u64, VecDeque<Request>>,
+    /// FIFO of profiles with pending work (approximate arrival order).
+    pending: VecDeque<u64>,
+    queued: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        DynamicBatcher {
+            max_batch: max_batch.max(1),
+            deadline,
+            queues: HashMap::new(),
+            pending: VecDeque::new(),
+            queued: 0,
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    pub fn push(&mut self, req: Request) {
+        let q = self.queues.entry(req.profile_id).or_default();
+        if q.is_empty() {
+            self.pending.push_back(req.profile_id);
+        }
+        q.push_back(req);
+        self.queued += 1;
+    }
+
+    /// Next batch ready at `now`: either a full group or an expired one.
+    /// Returns None when nothing is ready yet.
+    pub fn poll(&mut self, now: Instant) -> Option<ProfileBatch> {
+        // full group first (throughput), then deadline (latency)
+        let mut ready: Option<u64> = None;
+        for &pid in &self.pending {
+            let q = &self.queues[&pid];
+            if q.len() >= self.max_batch {
+                ready = Some(pid);
+                break;
+            }
+            if let Some(front) = q.front() {
+                if now.duration_since(front.submitted) >= self.deadline && ready.is_none() {
+                    ready = Some(pid);
+                }
+            }
+        }
+        let pid = ready?;
+        Some(self.flush(pid))
+    }
+
+    /// Force-flush a profile's queue (used at shutdown/drain).
+    pub fn flush(&mut self, profile_id: u64) -> ProfileBatch {
+        let q = self.queues.get_mut(&profile_id).expect("profile has a queue");
+        let take = q.len().min(self.max_batch);
+        let requests: Vec<Request> = q.drain(..take).collect();
+        self.queued -= requests.len();
+        if q.is_empty() {
+            self.queues.remove(&profile_id);
+            self.pending.retain(|&p| p != profile_id);
+        }
+        ProfileBatch { profile_id, requests }
+    }
+
+    /// Drain everything (shutdown).
+    pub fn drain(&mut self) -> Vec<ProfileBatch> {
+        let mut out = Vec::new();
+        let pids: Vec<u64> = self.pending.iter().copied().collect();
+        for pid in pids {
+            while self.queues.contains_key(&pid) {
+                out.push(self.flush(pid));
+            }
+        }
+        out
+    }
+
+    /// Time until the oldest pending request expires (for sleep control).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .iter()
+            .filter_map(|pid| self.queues[pid].front())
+            .map(|r| {
+                self.deadline
+                    .checked_sub(now.duration_since(r.submitted))
+                    .unwrap_or(Duration::ZERO)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, pid: u64, at: Instant) -> Request {
+        Request { id, profile_id: pid, tokens: vec![1], pad_mask: vec![1.0], submitted: at }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        b.push(req(1, 7, t));
+        assert!(b.poll(t).is_none());
+        b.push(req(2, 7, t));
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.profile_id, 7);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b = DynamicBatcher::new(32, Duration::from_millis(5));
+        let t = Instant::now();
+        b.push(req(1, 3, t));
+        assert!(b.poll(t).is_none());
+        let later = t + Duration::from_millis(6);
+        let batch = b.poll(later).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn profiles_batched_separately() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        b.push(req(1, 1, t));
+        b.push(req(2, 2, t));
+        b.push(req(3, 1, t));
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.profile_id, 1);
+        assert!(batch.requests.iter().all(|r| r.profile_id == 1));
+        assert!(b.poll(t).is_none()); // profile 2 not full, not expired
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn oversized_queue_flushes_in_chunks() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, 9, t));
+        }
+        assert_eq!(b.poll(t).unwrap().requests.len(), 2);
+        assert_eq!(b.poll(t).unwrap().requests.len(), 2);
+        assert!(b.poll(t).is_none()); // 1 left, below max, not expired
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(10));
+        let t = Instant::now();
+        for i in 0..7 {
+            b.push(req(i, i % 3, t));
+        }
+        let batches = b.drain();
+        let total: usize = batches.iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 7);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn routing_property_every_request_exactly_once() {
+        // property sweep: random arrival patterns, every id appears in
+        // exactly one flushed batch with matching profile.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(33);
+        for trial in 0..25 {
+            let mut b = DynamicBatcher::new(1 + rng.below(5), Duration::from_millis(1));
+            let t = Instant::now();
+            let n = 1 + rng.below(40);
+            let mut expect: Vec<(u64, u64)> = Vec::new();
+            for i in 0..n {
+                let pid = rng.below(4) as u64;
+                expect.push((i as u64, pid));
+                b.push(req(i as u64, pid, t));
+            }
+            let mut seen: Vec<(u64, u64)> = Vec::new();
+            let later = t + Duration::from_millis(5);
+            while let Some(batch) = b.poll(later) {
+                for r in batch.requests {
+                    assert_eq!(r.profile_id, batch.profile_id, "trial {trial}");
+                    seen.push((r.id, r.profile_id));
+                }
+            }
+            seen.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(seen, expect, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn next_deadline_decreases() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(10));
+        let t = Instant::now();
+        b.push(req(1, 1, t));
+        let d1 = b.next_deadline(t).unwrap();
+        let d2 = b.next_deadline(t + Duration::from_millis(4)).unwrap();
+        assert!(d2 < d1);
+    }
+}

@@ -1,0 +1,17 @@
+//! The multi-profile coordinator — the systems side of X-PEFT's "extreme
+//! multi-profile scenario": a profile store holding byte-level mask state
+//! for arbitrarily many profiles over one shared PLM + adapter bank, a
+//! per-profile dynamic batcher feeding the PJRT executables, a training
+//! scheduler that tunes masks for newly-arriving profiles, and telemetry.
+
+pub mod batcher;
+pub mod profile_store;
+pub mod scheduler;
+pub mod service;
+pub mod telemetry;
+
+pub use batcher::{DynamicBatcher, ProfileBatch, Request};
+pub use profile_store::{AuxParams, ProfileRecord, ProfileStore};
+pub use scheduler::{JobStatus, Scheduler, TrainJob};
+pub use service::{Response, Service};
+pub use telemetry::{Snapshot, Telemetry};

@@ -1,0 +1,408 @@
+//! Profile store: the byte-level per-profile state of the multi-profile
+//! system (Table 1 / Fig 1). Hard-mask profiles cost `2·⌈N/8⌉·L` bytes plus
+//! (optional) per-profile aux tensors; the adapter bank and PLM are shared
+//! and counted once. An LRU cache keeps the hottest profiles' *unpacked*
+//! mask weights ready for the serving path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::masks::{MaskWeights, ProfileMasks};
+
+/// Per-profile auxiliary trainables (LN affine + head). The LaMP warm
+/// setting shares one head across profiles (paper §4.1), in which case
+/// profiles carry masks only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuxParams {
+    pub ln_scale: Vec<f32>,
+    pub ln_bias: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl AuxParams {
+    pub fn stored_bytes(&self) -> usize {
+        (self.ln_scale.len() + self.ln_bias.len() + self.head_w.len() + self.head_b.len()) * 4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProfileRecord {
+    pub masks: ProfileMasks,
+    /// None ⇒ profile uses the store's shared aux (warm-start setting).
+    pub aux: Option<AuxParams>,
+}
+
+impl ProfileRecord {
+    /// Bytes attributable to this profile (the Fig 1 quantity).
+    pub fn stored_bytes(&self) -> usize {
+        self.masks.stored_bytes() + self.aux.as_ref().map_or(0, |a| a.stored_bytes())
+    }
+}
+
+/// Simple LRU over unpacked mask weights.
+struct LruCache {
+    capacity: usize,
+    map: HashMap<u64, (MaskWeights, u64)>,
+    clock: u64,
+}
+
+impl LruCache {
+    fn new(capacity: usize) -> Self {
+        LruCache { capacity, map: HashMap::new(), clock: 0 }
+    }
+
+    fn get(&mut self, id: u64) -> Option<MaskWeights> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(&id).map(|(w, t)| {
+            *t = clock;
+            w.clone()
+        })
+    }
+
+    fn put(&mut self, id: u64, w: MaskWeights) {
+        self.clock += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&id) {
+            if let Some((&evict, _)) = self.map.iter().min_by_key(|(_, (_, t))| *t) {
+                self.map.remove(&evict);
+            }
+        }
+        self.map.insert(id, (w, self.clock));
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+pub struct ProfileStore {
+    profiles: HashMap<u64, ProfileRecord>,
+    shared_aux: Option<AuxParams>,
+    cache: LruCache,
+    hits: u64,
+    misses: u64,
+}
+
+impl ProfileStore {
+    pub fn new(cache_capacity: usize) -> Self {
+        ProfileStore {
+            profiles: HashMap::new(),
+            shared_aux: None,
+            cache: LruCache::new(cache_capacity.max(1)),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn set_shared_aux(&mut self, aux: AuxParams) {
+        self.shared_aux = Some(aux);
+    }
+
+    pub fn shared_aux(&self) -> Option<&AuxParams> {
+        self.shared_aux.as_ref()
+    }
+
+    pub fn insert(&mut self, profile_id: u64, record: ProfileRecord) {
+        self.profiles.insert(profile_id, record);
+    }
+
+    pub fn contains(&self, profile_id: u64) -> bool {
+        self.profiles.contains_key(&profile_id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn ids(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.profiles.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn record(&self, profile_id: u64) -> Result<&ProfileRecord> {
+        self.profiles
+            .get(&profile_id)
+            .with_context(|| format!("unknown profile {profile_id}"))
+    }
+
+    /// Mask weights for serving, via the LRU cache.
+    pub fn weights(&mut self, profile_id: u64) -> Result<MaskWeights> {
+        if let Some(w) = self.cache.get(profile_id) {
+            self.hits += 1;
+            return Ok(w);
+        }
+        self.misses += 1;
+        let rec = self
+            .profiles
+            .get(&profile_id)
+            .with_context(|| format!("unknown profile {profile_id}"))?;
+        let w = rec.masks.to_weights();
+        self.cache.put(profile_id, w.clone());
+        Ok(w)
+    }
+
+    /// Aux params for a profile (its own, or the shared set).
+    pub fn aux(&self, profile_id: u64) -> Result<&AuxParams> {
+        let rec = self.record(profile_id)?;
+        if let Some(a) = &rec.aux {
+            return Ok(a);
+        }
+        self.shared_aux
+            .as_ref()
+            .with_context(|| format!("profile {profile_id} has no aux and no shared aux is set"))
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64, usize) {
+        (self.hits, self.misses, self.cache.len())
+    }
+
+    /// Total per-profile bytes (the Fig 1 measured series).
+    pub fn total_profile_bytes(&self) -> u64 {
+        self.profiles.values().map(|r| r.stored_bytes() as u64).sum()
+    }
+
+    pub fn mean_profile_bytes(&self) -> f64 {
+        if self.profiles.is_empty() {
+            return 0.0;
+        }
+        self.total_profile_bytes() as f64 / self.profiles.len() as f64
+    }
+
+    // -- persistence -------------------------------------------------------
+
+    /// Binary format: u32 count, then per profile: u64 id, u8 kind
+    /// (0=hard,1=soft), u32 blob_len, blob; soft blobs are (layers,n) + f32s;
+    /// aux omitted (serving with shared aux) — aux-bearing profiles persist
+    /// an extra f32 section.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"XPFTPROF");
+        out.extend_from_slice(&(self.profiles.len() as u32).to_le_bytes());
+        for id in self.ids() {
+            let rec = &self.profiles[&id];
+            out.extend_from_slice(&id.to_le_bytes());
+            let blob = match &rec.masks {
+                ProfileMasks::Hard(h) => {
+                    out.push(0);
+                    h.to_bytes()
+                }
+                ProfileMasks::Soft(w) => {
+                    out.push(1);
+                    let mut b = Vec::with_capacity(8 + 4 * (w.a.len() + w.b.len()));
+                    b.extend_from_slice(&(w.layers as u32).to_le_bytes());
+                    b.extend_from_slice(&(w.n as u32).to_le_bytes());
+                    for x in w.a.iter().chain(&w.b) {
+                        b.extend_from_slice(&x.to_le_bytes());
+                    }
+                    b
+                }
+            };
+            out.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+            out.extend_from_slice(&blob);
+            match &rec.aux {
+                None => out.push(0),
+                Some(a) => {
+                    out.push(1);
+                    for sect in [&a.ln_scale, &a.ln_bias, &a.head_w, &a.head_b] {
+                        out.extend_from_slice(&(sect.len() as u32).to_le_bytes());
+                        for x in sect.iter() {
+                            out.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path, cache_capacity: usize) -> Result<ProfileStore> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let mut store = ProfileStore::new(cache_capacity);
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > bytes.len() {
+                bail!("truncated profile store");
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != b"XPFTPROF" {
+            bail!("not a profile store file");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        for _ in 0..count {
+            let id = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            let kind = take(&mut pos, 1)?[0];
+            let blob_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let blob = take(&mut pos, blob_len)?.to_vec();
+            let masks = match kind {
+                0 => ProfileMasks::Hard(crate::masks::HardMask::from_bytes(&blob)?),
+                1 => {
+                    let layers = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+                    let n = u32::from_le_bytes(blob[4..8].try_into().unwrap()) as usize;
+                    let floats: Vec<f32> = blob[8..]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    if floats.len() != 2 * layers * n {
+                        bail!("soft mask blob size mismatch");
+                    }
+                    ProfileMasks::Soft(MaskWeights {
+                        layers,
+                        n,
+                        a: floats[..layers * n].to_vec(),
+                        b: floats[layers * n..].to_vec(),
+                    })
+                }
+                k => bail!("unknown mask kind {k}"),
+            };
+            let has_aux = take(&mut pos, 1)?[0] == 1;
+            let aux = if has_aux {
+                let mut sections = Vec::new();
+                for _ in 0..4 {
+                    let len =
+                        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+                    let raw = take(&mut pos, len * 4)?;
+                    sections.push(
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect::<Vec<f32>>(),
+                    );
+                }
+                let head_b = sections.pop().unwrap();
+                let head_w = sections.pop().unwrap();
+                let ln_bias = sections.pop().unwrap();
+                let ln_scale = sections.pop().unwrap();
+                Some(AuxParams { ln_scale, ln_bias, head_w, head_b })
+            } else {
+                None
+            };
+            store.insert(id, ProfileRecord { masks, aux });
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::MaskLogits;
+    use crate::util::rng::Rng;
+
+    fn logits(layers: usize, n: usize, seed: u64) -> MaskLogits {
+        let mut r = Rng::new(seed);
+        MaskLogits { layers, n, a: r.normal_vec(layers * n, 1.0), b: r.normal_vec(layers * n, 1.0) }
+    }
+
+    fn hard_rec(seed: u64) -> ProfileRecord {
+        ProfileRecord { masks: ProfileMasks::Hard(logits(4, 100, seed).binarize(50)), aux: None }
+    }
+
+    fn aux() -> AuxParams {
+        AuxParams {
+            ln_scale: vec![1.0; 32],
+            ln_bias: vec![0.0; 32],
+            head_w: vec![0.1; 64],
+            head_b: vec![0.0; 16],
+        }
+    }
+
+    #[test]
+    fn insert_lookup_weights() {
+        let mut s = ProfileStore::new(8);
+        s.insert(7, hard_rec(1));
+        assert!(s.contains(7));
+        let w = s.weights(7).unwrap();
+        assert_eq!(w.n, 100);
+        assert!(s.weights(99).is_err());
+    }
+
+    #[test]
+    fn cache_hits_after_first_access() {
+        let mut s = ProfileStore::new(8);
+        s.insert(1, hard_rec(1));
+        s.weights(1).unwrap();
+        s.weights(1).unwrap();
+        let (hits, misses, len) = s.cache_stats();
+        assert_eq!((hits, misses, len), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut s = ProfileStore::new(2);
+        for id in 0..3 {
+            s.insert(id, hard_rec(id));
+            s.weights(id).unwrap();
+        }
+        // 0 was evicted: re-access misses
+        s.weights(0).unwrap();
+        let (_, misses, len) = s.cache_stats();
+        assert_eq!(misses, 4);
+        assert_eq!(len, 2);
+    }
+
+    #[test]
+    fn byte_accounting_matches_table1() {
+        let mut s = ProfileStore::new(4);
+        for id in 0..10 {
+            s.insert(id, hard_rec(id));
+        }
+        // 2·⌈100/8⌉·4 = 104 bytes per profile
+        assert_eq!(s.total_profile_bytes(), 10 * 104);
+        assert_eq!(s.mean_profile_bytes(), 104.0);
+        // soft costs 4·2·N·L bytes
+        s.insert(100, ProfileRecord {
+            masks: ProfileMasks::Soft(logits(4, 100, 5).soft_weights()),
+            aux: None,
+        });
+        assert_eq!(s.record(100).unwrap().stored_bytes(), 2 * 100 * 4 * 4);
+    }
+
+    #[test]
+    fn shared_vs_private_aux() {
+        let mut s = ProfileStore::new(4);
+        s.insert(1, hard_rec(1));
+        s.insert(2, ProfileRecord { masks: hard_rec(2).masks, aux: Some(aux()) });
+        assert!(s.aux(1).is_err()); // no shared yet
+        s.set_shared_aux(aux());
+        assert!(s.aux(1).is_ok());
+        assert_eq!(s.aux(2).unwrap(), &aux());
+    }
+
+    #[test]
+    fn save_load_roundtrip_mixed() {
+        let mut s = ProfileStore::new(4);
+        s.insert(1, hard_rec(1));
+        s.insert(2, ProfileRecord {
+            masks: ProfileMasks::Soft(logits(4, 100, 9).soft_weights()),
+            aux: Some(aux()),
+        });
+        let dir = std::env::temp_dir().join("xpeft_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.bin");
+        s.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path, 4).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.record(1).unwrap().masks, s.record(1).unwrap().masks);
+        assert_eq!(loaded.record(2).unwrap().masks, s.record(2).unwrap().masks);
+        assert_eq!(loaded.record(2).unwrap().aux, s.record(2).unwrap().aux);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("xpeft_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"XPFTPROF\xff\xff\xff\xff").unwrap();
+        assert!(ProfileStore::load(&path, 4).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Training-job scheduler: each *new profile* entering the system gets a
+//! mask-tuning job against the shared frozen bank (paper §3: "each new
+//! incoming profile is designed to reuse and adaptively select them").
+//! Jobs run on a dedicated worker thread; finished masks land in the
+//! profile store, byte-level and ready to serve.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::adapters::AdapterBank;
+use crate::config::TrainConfig;
+use crate::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use crate::data::Dataset;
+use crate::info;
+use crate::runtime::Engine;
+use crate::train;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done { final_loss: f32, steps: usize, wallclock_s: f64 },
+    Failed(String),
+}
+
+pub struct TrainJob {
+    pub profile_id: u64,
+    pub dataset: Dataset,
+    pub cfg: TrainConfig,
+    /// Store per-profile aux (false ⇒ rely on the store's shared aux).
+    pub keep_aux: bool,
+}
+
+enum Msg {
+    Job(TrainJob),
+    Shutdown,
+}
+
+pub struct Scheduler {
+    tx: mpsc::Sender<Msg>,
+    statuses: Arc<Mutex<HashMap<u64, JobStatus>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub fn start(
+        engine: Arc<Engine>,
+        bank: Arc<AdapterBank>,
+        store: Arc<Mutex<ProfileStore>>,
+        plm_seed: u64,
+    ) -> Scheduler {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let statuses: Arc<Mutex<HashMap<u64, JobStatus>>> = Arc::default();
+        let st = statuses.clone();
+        let handle = std::thread::spawn(move || {
+            while let Ok(Msg::Job(job)) = rx.recv() {
+                let pid = job.profile_id;
+                st.lock().unwrap().insert(pid, JobStatus::Running);
+                match run_job(&engine, &bank, &store, &job, plm_seed) {
+                    Ok((final_loss, steps, wallclock_s)) => {
+                        st.lock().unwrap().insert(
+                            pid,
+                            JobStatus::Done { final_loss, steps, wallclock_s },
+                        );
+                    }
+                    Err(e) => {
+                        st.lock().unwrap().insert(pid, JobStatus::Failed(format!("{e:#}")));
+                    }
+                }
+            }
+        });
+        Scheduler { tx, statuses, handle: Some(handle) }
+    }
+
+    pub fn submit(&self, job: TrainJob) -> Result<()> {
+        self.statuses.lock().unwrap().insert(job.profile_id, JobStatus::Queued);
+        self.tx.send(Msg::Job(job)).context("scheduler worker gone")
+    }
+
+    pub fn status(&self, profile_id: u64) -> Option<JobStatus> {
+        self.statuses.lock().unwrap().get(&profile_id).cloned()
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_all(&self) {
+        loop {
+            {
+                let st = self.statuses.lock().unwrap();
+                if st.values().all(|s| matches!(s, JobStatus::Done { .. } | JobStatus::Failed(_))) {
+                    return;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Synchronous job execution (also used directly by experiments).
+pub fn run_job(
+    engine: &Engine,
+    bank: &AdapterBank,
+    store: &Mutex<ProfileStore>,
+    job: &TrainJob,
+    plm_seed: u64,
+) -> Result<(f32, usize, f64)> {
+    let mc = engine.manifest.config.clone();
+    let (trainer, outcome) =
+        train::train_profile(engine, &job.cfg, &job.dataset, Some(bank), plm_seed)?;
+    let masks = trainer.profile_masks(job.cfg.mode, mc.layers, job.cfg.n, job.cfg.k)?;
+    let aux = if job.keep_aux {
+        Some(AuxParams {
+            ln_scale: trainer.state.get("ln_scale")?.to_vec(),
+            ln_bias: trainer.state.get("ln_bias")?.to_vec(),
+            head_w: trainer.state.get("head_w")?.to_vec(),
+            head_b: trainer.state.get("head_b")?.to_vec(),
+        })
+    } else {
+        None
+    };
+    store
+        .lock()
+        .unwrap()
+        .insert(job.profile_id, ProfileRecord { masks, aux });
+    let final_loss = *outcome.losses.last().unwrap_or(&f32::NAN);
+    info!(
+        "scheduler",
+        "profile {} tuned: {} steps, final loss {:.4}, {:.1}s",
+        job.profile_id, outcome.steps, final_loss, outcome.wallclock_s
+    );
+    Ok((final_loss, outcome.steps, outcome.wallclock_s))
+}

@@ -1,0 +1,247 @@
+//! The serving service: ingress → per-profile dynamic batching → PJRT
+//! execution → responses, on plain threads + channels (tokio is not
+//! available offline; the request path is allocation-light and lock scope
+//! is one profile-store lookup per batch).
+//!
+//! Request path (never touches python):
+//!   submit(text) → tokenize → DynamicBatcher (group by profile)
+//!   → executor: profile-store weight lookup (LRU) + eval executable
+//!   → Response {prediction, latency}
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::adapters::AdapterBank;
+use crate::config::{Mode, ServeConfig};
+use crate::coordinator::batcher::{DynamicBatcher, ProfileBatch, Request};
+use crate::coordinator::profile_store::ProfileStore;
+use crate::coordinator::telemetry::{Snapshot, Telemetry};
+use crate::data::batch::Batch;
+use crate::data::tokenizer::{Tokenizer, CLS};
+use crate::runtime::Engine;
+use crate::train::eval::{argmax, Evaluator};
+use crate::train::TrainState;
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub request_id: u64,
+    pub profile_id: u64,
+    pub prediction: usize,
+    pub latency: Duration,
+}
+
+enum Ingress {
+    Req(Request),
+    Shutdown,
+}
+
+pub struct Service {
+    tx: mpsc::Sender<Ingress>,
+    rx_out: Mutex<mpsc::Receiver<Response>>,
+    telemetry: Arc<Telemetry>,
+    tokenizer: Tokenizer,
+    seq: usize,
+    next_id: Mutex<u64>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the serving loop for one (head, N) deployment.
+    pub fn start(
+        engine: Arc<Engine>,
+        store: Arc<Mutex<ProfileStore>>,
+        bank: Arc<AdapterBank>,
+        cfg: ServeConfig,
+        num_classes: usize,
+        plm_seed: u64,
+    ) -> Result<Service> {
+        let mc = engine.manifest.config.clone();
+        let n = bank.n;
+        let evaluator = Evaluator::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), plm_seed)?;
+        let telemetry = Arc::new(Telemetry::new());
+        let (tx, rx_in) = mpsc::channel::<Ingress>();
+        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let tel = telemetry.clone();
+        let batch_cap = cfg.max_batch.min(mc.batch);
+        let deadline = Duration::from_micros(cfg.batch_deadline_us);
+        let seq = mc.seq;
+        let bsz = mc.batch;
+
+        let worker = std::thread::spawn(move || {
+            let mut batcher = DynamicBatcher::new(batch_cap, deadline);
+            let mut open = true;
+            while open || batcher.queued() > 0 {
+                // ingest with a bounded wait so deadlines fire
+                let wait = batcher
+                    .next_deadline(Instant::now())
+                    .unwrap_or(Duration::from_millis(5))
+                    .min(Duration::from_millis(5));
+                match rx_in.recv_timeout(wait) {
+                    Ok(Ingress::Req(r)) => {
+                        tel.record_request();
+                        batcher.push(r);
+                        // opportunistically drain the channel
+                        while let Ok(msg) = rx_in.try_recv() {
+                            match msg {
+                                Ingress::Req(r) => {
+                                    tel.record_request();
+                                    batcher.push(r);
+                                }
+                                Ingress::Shutdown => open = false,
+                            }
+                        }
+                    }
+                    Ok(Ingress::Shutdown) => open = false,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+                let now = Instant::now();
+                while let Some(pb) = batcher.poll(now) {
+                    Self::execute(&evaluator, &store, &tel, &tx_out, pb, bsz, seq, num_classes);
+                }
+                if !open {
+                    for pb in batcher.drain() {
+                        Self::execute(&evaluator, &store, &tel, &tx_out, pb, bsz, seq, num_classes);
+                    }
+                }
+            }
+        });
+
+        Ok(Service {
+            tx,
+            rx_out: Mutex::new(rx_out),
+            telemetry,
+            tokenizer: Tokenizer::new(mc.vocab),
+            seq,
+            next_id: Mutex::new(0),
+            worker: Some(worker),
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn execute(
+        evaluator: &Evaluator,
+        store: &Mutex<ProfileStore>,
+        tel: &Telemetry,
+        tx_out: &mpsc::Sender<Response>,
+        pb: ProfileBatch,
+        bsz: usize,
+        seq: usize,
+        num_classes: usize,
+    ) {
+        tel.record_batch(pb.requests.len());
+        // profile state lookup (one lock scope)
+        let (weights, state) = {
+            let mut st = store.lock().unwrap();
+            let w = match st.weights(pb.profile_id) {
+                Ok(w) => w,
+                Err(_) => return, // unknown profile: drop (responses time out)
+            };
+            let aux = match st.aux(pb.profile_id) {
+                Ok(a) => a.clone(),
+                Err(_) => return,
+            };
+            let state = TrainState {
+                names: vec![
+                    "head_b".into(),
+                    "head_w".into(),
+                    "ln_bias".into(),
+                    "ln_scale".into(),
+                ],
+                trainable: vec![aux.head_b, aux.head_w, aux.ln_bias, aux.ln_scale],
+                opt_m: vec![],
+                opt_v: vec![],
+            };
+            (w, state)
+        };
+        // assemble the fixed-shape executor batch
+        let mut batch = Batch {
+            tokens: vec![0; bsz * seq],
+            pad_mask: vec![0.0; bsz * seq],
+            labels_i: vec![0; bsz],
+            labels_f: vec![0.0; bsz],
+            example_w: vec![0.0; bsz],
+            size: pb.requests.len(),
+        };
+        for (row, r) in pb.requests.iter().enumerate() {
+            for (j, (&t, &m)) in r.tokens.iter().zip(&r.pad_mask).enumerate().take(seq) {
+                batch.tokens[row * seq + j] = t as i32;
+                batch.pad_mask[row * seq + j] = m;
+            }
+            batch.example_w[row] = 1.0;
+        }
+        for row in pb.requests.len()..bsz {
+            batch.tokens[row * seq] = CLS as i32;
+            batch.pad_mask[row * seq] = 1.0;
+        }
+        let logits = match evaluator.forward(&state, Some(&weights), &batch) {
+            Ok(l) => l,
+            Err(e) => {
+                crate::warn_log!("service", "eval failed for profile {}: {e:#}", pb.profile_id);
+                return;
+            }
+        };
+        let now = Instant::now();
+        for (row, r) in pb.requests.iter().enumerate() {
+            let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + num_classes];
+            let resp = Response {
+                request_id: r.id,
+                profile_id: r.profile_id,
+                prediction: argmax(slice),
+                latency: now.duration_since(r.submitted),
+            };
+            tel.record_response(resp.latency);
+            let _ = tx_out.send(resp);
+        }
+    }
+
+    /// Submit raw text for a profile; returns the request id.
+    pub fn submit(&self, profile_id: u64, text: &str) -> Result<u64> {
+        let (tokens, pad_mask) = self.tokenizer.encode(text, self.seq);
+        let id = {
+            let mut next = self.next_id.lock().unwrap();
+            *next += 1;
+            *next
+        };
+        self.tx
+            .send(Ingress::Req(Request {
+                id,
+                profile_id,
+                tokens,
+                pad_mask,
+                submitted: Instant::now(),
+            }))
+            .context("service worker gone")?;
+        Ok(id)
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.rx_out.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    pub fn telemetry(&self) -> Snapshot {
+        self.telemetry.snapshot()
+    }
+
+    /// Drain and stop. Returns final telemetry.
+    pub fn shutdown(mut self) -> Snapshot {
+        let _ = self.tx.send(Ingress::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.telemetry.snapshot()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Ingress::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}

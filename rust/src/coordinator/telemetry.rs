@@ -1,0 +1,99 @@
+//! Serving telemetry: atomic counters + latency histogram, reported by the
+//! service and the benches (criterion is unavailable offline).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats;
+
+#[derive(Default)]
+pub struct Telemetry {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub train_jobs: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub train_jobs: u64,
+    pub mean_batch: f64,
+    pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    pub fn record_response(&self, latency: Duration) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_train_job(&self) {
+        self.train_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let lat = self.latencies_us.lock().unwrap();
+        let sizes = self.batch_sizes.lock().unwrap();
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            train_jobs: self.train_jobs.load(Ordering::Relaxed),
+            mean_batch: stats::mean(&sizes),
+            p50_latency_us: stats::quantile(&lat, 0.5),
+            p95_latency_us: stats::quantile(&lat, 0.95),
+            p99_latency_us: stats::quantile(&lat, 0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_quantiles() {
+        let t = Telemetry::new();
+        for i in 0..100 {
+            t.record_request();
+            t.record_response(Duration::from_micros(i + 1));
+        }
+        t.record_batch(4);
+        t.record_batch(8);
+        let s = t.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.responses, 100);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch, 6.0);
+        assert!(s.p50_latency_us > 40.0 && s.p50_latency_us < 60.0);
+        assert!(s.p99_latency_us >= s.p95_latency_us);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Telemetry::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_latency_us, 0.0);
+    }
+}

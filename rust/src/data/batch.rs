@@ -1,0 +1,166 @@
+//! Fixed-shape batcher: the AOT executables take `[batch, seq]` tensors, so
+//! variable-size datasets are padded with zero-weight rows and shuffled
+//! per-epoch with the seeded PRNG (paper: equal updates across modes).
+
+use crate::data::{Example, Label};
+use crate::util::rng::Rng;
+
+/// One executor-ready batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,     // [B*T]
+    pub pad_mask: Vec<f32>,   // [B*T]
+    pub labels_i: Vec<i32>,   // [B] (classification)
+    pub labels_f: Vec<f32>,   // [B] (regression)
+    pub example_w: Vec<f32>,  // [B] — 0.0 marks padding rows
+    pub size: usize,          // real examples in this batch
+}
+
+/// Deterministic epoch iterator over examples.
+pub struct Batcher {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        Batcher { batch, seq }
+    }
+
+    /// All batches of one (shuffled) epoch.
+    pub fn epoch(&self, examples: &[Example], rng: &mut Rng) -> Vec<Batch> {
+        let mut order: Vec<usize> = (0..examples.len()).collect();
+        rng.shuffle(&mut order);
+        order
+            .chunks(self.batch)
+            .map(|chunk| self.assemble(examples, chunk))
+            .collect()
+    }
+
+    /// Unshuffled batches (evaluation order matters for pair metrics).
+    pub fn sequential(&self, examples: &[Example]) -> Vec<Batch> {
+        let order: Vec<usize> = (0..examples.len()).collect();
+        order
+            .chunks(self.batch)
+            .map(|chunk| self.assemble(examples, chunk))
+            .collect()
+    }
+
+    fn assemble(&self, examples: &[Example], idx: &[usize]) -> Batch {
+        let b = self.batch;
+        let t = self.seq;
+        let mut out = Batch {
+            tokens: vec![0; b * t],
+            pad_mask: vec![0.0; b * t],
+            labels_i: vec![0; b],
+            labels_f: vec![0.0; b],
+            example_w: vec![0.0; b],
+            size: idx.len(),
+        };
+        for (row, &i) in idx.iter().enumerate() {
+            let ex = &examples[i];
+            for (j, (&tok, &m)) in ex.tokens.iter().zip(&ex.pad_mask).enumerate() {
+                out.tokens[row * t + j] = tok as i32;
+                out.pad_mask[row * t + j] = m;
+            }
+            // padding rows keep pad_mask all-zero; give them one live token
+            // position so attention softmax stays finite — weight stays 0.
+            match ex.label {
+                Label::Class(c) => out.labels_i[row] = c as i32,
+                Label::Reg(r) => out.labels_f[row] = r,
+            }
+            out.example_w[row] = 1.0;
+        }
+        // fully-padded rows: set CLS live so softmax has support
+        for row in idx.len()..b {
+            out.pad_mask[row * t] = 1.0;
+            out.tokens[row * t] = super::tokenizer::CLS as i32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Label;
+
+    fn ex(tok: u32, label: Label) -> Example {
+        Example {
+            tokens: vec![1, tok, 0, 0],
+            pad_mask: vec![1.0, 1.0, 0.0, 0.0],
+            label,
+            pair_id: None,
+        }
+    }
+
+    fn examples(n: usize) -> Vec<Example> {
+        (0..n).map(|i| ex(10 + i as u32, Label::Class(i % 3))).collect()
+    }
+
+    #[test]
+    fn epoch_covers_every_example_once() {
+        let b = Batcher::new(4, 4);
+        let exs = examples(10);
+        let mut rng = Rng::new(1);
+        let batches = b.epoch(&exs, &mut rng);
+        assert_eq!(batches.len(), 3);
+        let total: usize = batches.iter().map(|x| x.size).sum();
+        assert_eq!(total, 10);
+        // every token id appears exactly once
+        let mut seen: Vec<i32> = batches
+            .iter()
+            .flat_map(|bt| {
+                (0..bt.size).map(move |r| bt.tokens[r * 4 + 1])
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (10..20).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn last_batch_padded_with_zero_weight() {
+        let b = Batcher::new(4, 4);
+        let exs = examples(5);
+        let batches = b.sequential(&exs);
+        let last = &batches[1];
+        assert_eq!(last.size, 1);
+        assert_eq!(last.example_w, vec![1.0, 0.0, 0.0, 0.0]);
+        // padded rows keep one live position for attention support
+        assert_eq!(last.pad_mask[1 * 4], 1.0);
+    }
+
+    #[test]
+    fn shuffle_depends_on_seed() {
+        let b = Batcher::new(4, 4);
+        let exs = examples(12);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let e1 = b.epoch(&exs, &mut r1);
+        let e2 = b.epoch(&exs, &mut r2);
+        assert_ne!(
+            e1[0].tokens, e2[0].tokens,
+            "different seeds should shuffle differently"
+        );
+        let mut r1b = Rng::new(1);
+        assert_eq!(e1[0].tokens, b.epoch(&exs, &mut r1b)[0].tokens);
+    }
+
+    #[test]
+    fn regression_labels_flow() {
+        let b = Batcher::new(2, 4);
+        let exs = vec![ex(5, Label::Reg(2.5)), ex(6, Label::Reg(4.0))];
+        let batches = b.sequential(&exs);
+        assert_eq!(batches[0].labels_f, vec![2.5, 4.0]);
+    }
+
+    #[test]
+    fn sequential_preserves_order() {
+        let b = Batcher::new(4, 4);
+        let exs = examples(6);
+        let batches = b.sequential(&exs);
+        assert_eq!(batches[0].tokens[1], 10);
+        assert_eq!(batches[0].tokens[4 + 1], 11);
+        assert_eq!(batches[1].tokens[1], 14);
+    }
+}

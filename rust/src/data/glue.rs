@@ -1,0 +1,244 @@
+//! Synthetic GLUE task family (paper Table 2 workloads).
+//!
+//! Each generator plants task-appropriate latent structure in topic space
+//! (see `textgen`) with a per-task difficulty profile — label noise and
+//! train-set size are tuned so the *relative* paper shape reproduces:
+//! cola is hardest (MCC ~0.4), sst2 easiest (acc ~0.9), wnli near-chance.
+
+use crate::data::textgen::{TopicWorld, TOPICS};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::{Dataset, Example, Label, MetricKind};
+use crate::util::rng::Rng;
+
+pub const GLUE_TASKS: [&str; 9] =
+    ["cola", "sst2", "mrpc", "qqp", "stsb", "mnli", "qnli", "rte", "wnli"];
+
+/// Generation knobs per task.
+struct Gen {
+    train: usize,
+    dev: usize,
+    noise: f64,
+    classes: usize,
+    metric: MetricKind,
+}
+
+fn spec(task: &str) -> Gen {
+    match task {
+        // (sizes scaled from the real GLUE proportions; noise sets the
+        // ceiling so relative difficulty matches Table 2)
+        "cola" => Gen { train: 1200, dev: 320, noise: 0.22, classes: 2, metric: MetricKind::Mcc },
+        "sst2" => Gen { train: 2000, dev: 320, noise: 0.04, classes: 2, metric: MetricKind::Acc },
+        "mrpc" => Gen { train: 800, dev: 256, noise: 0.12, classes: 2, metric: MetricKind::AccAndF1 },
+        "qqp" => Gen { train: 2400, dev: 320, noise: 0.10, classes: 2, metric: MetricKind::AccAndF1 },
+        "stsb" => Gen { train: 1200, dev: 256, noise: 0.10, classes: 0, metric: MetricKind::PearsonSpearman },
+        "mnli" => Gen { train: 2400, dev: 320, noise: 0.14, classes: 3, metric: MetricKind::AccMatchedMismatched },
+        "qnli" => Gen { train: 2000, dev: 320, noise: 0.08, classes: 2, metric: MetricKind::Acc },
+        "rte" => Gen { train: 500, dev: 224, noise: 0.25, classes: 2, metric: MetricKind::Acc },
+        "wnli" => Gen { train: 120, dev: 64, noise: 0.45, classes: 2, metric: MetricKind::Acc },
+        _ => panic!("unknown GLUE task {task}"),
+    }
+}
+
+/// Build a synthetic GLUE task. `seq` must match the artifact batch shape.
+pub fn build(task: &str, seq: usize, vocab: usize, seed: u64) -> Dataset {
+    let g = spec(task);
+    let world = TopicWorld::new(seed ^ 0x91u64);
+    let tok = Tokenizer::new(vocab);
+    let mut rng = Rng::new(seed).fold_in(fnv(task));
+    let make = |rng: &mut Rng, n: usize| -> Vec<Example> {
+        (0..n).map(|_| gen_example(task, &g, &world, &tok, seq, rng)).collect()
+    };
+    let train = make(&mut rng, g.train);
+    let dev = make(&mut rng, g.dev);
+    Dataset { name: task.to_string(), train, dev, num_classes: g.classes, metric: g.metric }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn flip(rng: &mut Rng, label: usize, classes: usize, noise: f64) -> usize {
+    if rng.uniform() < noise {
+        (label + 1 + rng.below(classes - 1)) % classes
+    } else {
+        label
+    }
+}
+
+fn gen_example(
+    task: &str,
+    g: &Gen,
+    world: &TopicWorld,
+    tok: &Tokenizer,
+    seq: usize,
+    rng: &mut Rng,
+) -> Example {
+    let len = seq - 2;
+    match task {
+        // single sentence, sentiment-like: two topic groups = polarity
+        "sst2" | "cola" => {
+            let label = rng.below(2);
+            // cola additionally keys on a word-order marker, making the
+            // task harder through a frozen encoder (lower ceiling).
+            let topic = if label == 1 { rng.below(TOPICS / 2) } else { TOPICS / 2 + rng.below(TOPICS / 2) };
+            let purity = if task == "cola" { 0.62 } else { 0.9 };
+            let text = world.topical_sentence(rng, topic, purity, len);
+            let (tokens, pad_mask) = tok.encode(&text, seq);
+            Example {
+                tokens,
+                pad_mask,
+                label: Label::Class(flip(rng, label, 2, g.noise)),
+                pair_id: None,
+            }
+        }
+        // paraphrase pairs
+        "mrpc" | "qqp" => {
+            let label = rng.below(2);
+            let topic = rng.below(TOPICS);
+            let (a, b) = if label == 1 {
+                world.paraphrase(rng, topic, len / 2)
+            } else {
+                let other = (topic + 1 + rng.below(TOPICS - 1)) % TOPICS;
+                (
+                    world.topical_sentence(rng, topic, 0.9, len / 2),
+                    world.topical_sentence(rng, other, 0.9, len / 2),
+                )
+            };
+            let (tokens, pad_mask) = tok.encode_pair(&a, &b, seq);
+            Example {
+                tokens,
+                pad_mask,
+                label: Label::Class(flip(rng, label, 2, g.noise)),
+                pair_id: None,
+            }
+        }
+        // similarity regression in [0, 5]
+        "stsb" => {
+            let sim = rng.uniform();
+            let topic = rng.below(TOPICS);
+            let other = (topic + 1 + rng.below(TOPICS - 1)) % TOPICS;
+            let a = world.topical_sentence(rng, topic, 0.95, len / 2);
+            let b = world.sentence(rng, &[(topic, sim), (other, 1.0 - sim)], len / 2);
+            let (tokens, pad_mask) = tok.encode_pair(&a, &b, seq);
+            let noisy = (sim + g.noise * rng.normal()).clamp(0.0, 1.0);
+            Example {
+                tokens,
+                pad_mask,
+                label: Label::Reg((noisy * 5.0) as f32),
+                pair_id: None,
+            }
+        }
+        // NLI: entail / neutral / contradict from topic relations
+        "mnli" | "qnli" | "rte" | "wnli" => {
+            let classes = g.classes;
+            let label = rng.below(classes);
+            let p_topic = rng.below(TOPICS);
+            let premise = world.topical_sentence(rng, p_topic, 0.9, len / 2);
+            let hypothesis = match label {
+                0 => world.topical_sentence(rng, p_topic, 0.85, len / 2), // entail: same topic
+                1 => {
+                    let far = (p_topic + TOPICS / 2) % TOPICS; // contradict: opposite
+                    world.topical_sentence(rng, far, 0.9, len / 2)
+                }
+                _ => {
+                    let near = (p_topic + 1) % TOPICS; // neutral: adjacent
+                    world.topical_sentence(rng, near, 0.9, len / 2)
+                }
+            };
+            let (tokens, pad_mask) = tok.encode_pair(&premise, &hypothesis, seq);
+            Example {
+                tokens,
+                pad_mask,
+                label: Label::Class(flip(rng, label, classes, g.noise)),
+                pair_id: None,
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_build_with_expected_shapes() {
+        for task in GLUE_TASKS {
+            let ds = build(task, 32, 1024, 42);
+            assert!(!ds.train.is_empty() && !ds.dev.is_empty(), "{task}");
+            for ex in ds.train.iter().take(5) {
+                assert_eq!(ex.tokens.len(), 32);
+                assert_eq!(ex.pad_mask.len(), 32);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = build("sst2", 32, 1024, 7);
+        let b = build("sst2", 32, 1024, 7);
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        let c = build("sst2", 32, 1024, 8);
+        assert_ne!(a.train[0].tokens, c.train[0].tokens);
+    }
+
+    #[test]
+    fn stsb_is_regression_in_range() {
+        let ds = build("stsb", 32, 1024, 1);
+        assert!(ds.is_regression());
+        for ex in &ds.train {
+            let v = ex.label.reg();
+            assert!((0.0..=5.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn mnli_has_three_classes() {
+        let ds = build("mnli", 32, 1024, 2);
+        let mut seen = [false; 3];
+        for ex in &ds.train {
+            seen[ex.label.class()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn labels_balanced_roughly() {
+        let ds = build("sst2", 32, 1024, 3);
+        let pos = ds.train.iter().filter(|e| e.label.class() == 1).count();
+        let frac = pos as f64 / ds.train.len() as f64;
+        assert!((0.4..0.6).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn wnli_small_and_noisy() {
+        let ds = build("wnli", 32, 1024, 4);
+        assert!(ds.train.len() <= 150);
+    }
+
+    #[test]
+    fn sst2_linearly_separable_signal_exists() {
+        // sanity: positive and negative examples use different topic halves,
+        // so mean token id distributions must differ measurably.
+        let ds = build("sst2", 32, 1024, 5);
+        let mean_tok = |class: usize| -> f64 {
+            let mut sum = 0.0;
+            let mut count = 0.0;
+            for e in ds.train.iter().filter(|e| e.label.class() == class) {
+                for (&t, &m) in e.tokens.iter().zip(&e.pad_mask) {
+                    if m > 0.0 && t > 8 {
+                        sum += t as f64;
+                        count += 1.0;
+                    }
+                }
+            }
+            sum / count
+        };
+        assert!((mean_tok(0) - mean_tok(1)).abs() > 1.0);
+    }
+}

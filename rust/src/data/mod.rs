@@ -1,0 +1,70 @@
+//! Data substrate: tokenizer, topic-world text generation, synthetic
+//! GLUE/SuperGLUE task family, the LaMP-like multi-profile corpus and the
+//! fixed-shape batcher feeding the AOT executables.
+
+pub mod batch;
+pub mod glue;
+pub mod lamp;
+pub mod superglue;
+pub mod textgen;
+pub mod tokenizer;
+
+/// Task label: classification index or regression target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Label {
+    Class(usize),
+    Reg(f32),
+}
+
+impl Label {
+    pub fn class(&self) -> usize {
+        match self {
+            Label::Class(c) => *c,
+            Label::Reg(_) => panic!("regression label used as class"),
+        }
+    }
+
+    pub fn reg(&self) -> f32 {
+        match self {
+            Label::Reg(r) => *r,
+            Label::Class(_) => panic!("class label used as regression"),
+        }
+    }
+}
+
+/// One tokenized example (fixed seq length, ready for the executables).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<u32>,
+    pub pad_mask: Vec<f32>,
+    pub label: Label,
+    /// Minimal-pair id for GPS (axg): both members share the id.
+    pub pair_id: Option<usize>,
+}
+
+/// Which official metrics a task reports (paper Tables 2/3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Acc,
+    Mcc,
+    AccAndF1,
+    PearsonSpearman,
+    AccMatchedMismatched,
+    AccAndGps,
+}
+
+/// A complete synthetic task: train/dev splits + metric spec.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Vec<Example>,
+    pub dev: Vec<Example>,
+    pub num_classes: usize, // 0 ⇒ regression
+    pub metric: MetricKind,
+}
+
+impl Dataset {
+    pub fn is_regression(&self) -> bool {
+        self.num_classes == 0
+    }
+}

@@ -1,0 +1,134 @@
+//! Topic-world text generator: the synthetic corpus substrate standing in
+//! for GLUE/SuperGLUE/LaMP text (DESIGN.md §3 substitution table).
+//!
+//! The world has `TOPICS` latent topics, each with its own word inventory
+//! plus a shared pool of function words. A sentence is emitted from a topic
+//! mixture; downstream tasks define labels as functions of the latent
+//! topics, which makes them learnable through a frozen random encoder while
+//! leaving headroom for adapter tuning — the property the paper's
+//! comparisons (head_only < x_peft ≤ single_adapter) exercise.
+
+use crate::util::rng::Rng;
+
+pub const TOPICS: usize = 15; // = LaMP news category count
+pub const WORDS_PER_TOPIC: usize = 48;
+pub const FUNCTION_WORDS: usize = 32;
+
+#[derive(Debug, Clone)]
+pub struct TopicWorld {
+    seed: u64,
+}
+
+impl TopicWorld {
+    pub fn new(seed: u64) -> Self {
+        TopicWorld { seed }
+    }
+
+    /// Deterministic word string for (topic, slot).
+    pub fn topic_word(&self, topic: usize, slot: usize) -> String {
+        format!("s{}t{topic}w{slot}", self.seed % 97)
+    }
+
+    pub fn function_word(&self, slot: usize) -> String {
+        format!("s{}fw{slot}", self.seed % 97)
+    }
+
+    /// Gendered marker words for axg minimal pairs.
+    pub fn gender_word(&self, female: bool) -> String {
+        format!("s{}g{}", self.seed % 97, if female { "f" } else { "m" })
+    }
+
+    /// Emit a sentence of `len` words from a topic mixture (weights need not
+    /// be normalized). ~25% function words.
+    pub fn sentence(&self, rng: &mut Rng, mixture: &[(usize, f64)], len: usize) -> String {
+        let mut words = Vec::with_capacity(len);
+        let weights: Vec<f64> = mixture.iter().map(|&(_, w)| w).collect();
+        for _ in 0..len {
+            if rng.uniform() < 0.25 {
+                words.push(self.function_word(rng.below(FUNCTION_WORDS)));
+            } else {
+                let t = mixture[rng.weighted(&weights)].0;
+                words.push(self.topic_word(t, rng.below(WORDS_PER_TOPIC)));
+            }
+        }
+        words.join(" ")
+    }
+
+    /// Single-topic sentence (purity in [0,1]: rest is a random other topic).
+    pub fn topical_sentence(&self, rng: &mut Rng, topic: usize, purity: f64, len: usize) -> String {
+        let other = (topic + 1 + rng.below(TOPICS - 1)) % TOPICS;
+        self.sentence(rng, &[(topic, purity), (other, 1.0 - purity)], len)
+    }
+
+    /// A paraphrase of a sentence: same topic mixture, some word overlap.
+    pub fn paraphrase(&self, rng: &mut Rng, topic: usize, len: usize) -> (String, String) {
+        let a = self.topical_sentence(rng, topic, 0.9, len);
+        let mut b_words: Vec<String> = Vec::with_capacity(len);
+        let a_words: Vec<&str> = a.split_whitespace().collect();
+        for w in &a_words {
+            if rng.uniform() < 0.5 {
+                b_words.push((*w).to_string()); // copy ~half the words
+            } else {
+                b_words.push(self.topic_word(topic, rng.below(WORDS_PER_TOPIC)));
+            }
+        }
+        rng.shuffle(&mut b_words);
+        (a, b_words.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_deterministic_and_topic_scoped() {
+        let w = TopicWorld::new(42);
+        assert_eq!(w.topic_word(3, 7), w.topic_word(3, 7));
+        assert_ne!(w.topic_word(3, 7), w.topic_word(4, 7));
+        assert_ne!(w.topic_word(3, 7), w.topic_word(3, 8));
+    }
+
+    #[test]
+    fn different_world_seeds_disjoint_vocab() {
+        let a = TopicWorld::new(1);
+        let b = TopicWorld::new(2);
+        assert_ne!(a.topic_word(0, 0), b.topic_word(0, 0));
+    }
+
+    #[test]
+    fn sentence_len_and_topic_dominance() {
+        let w = TopicWorld::new(7);
+        let mut rng = Rng::new(1);
+        let s = w.sentence(&mut rng, &[(2, 1.0)], 40);
+        let words: Vec<&str> = s.split_whitespace().collect();
+        assert_eq!(words.len(), 40);
+        let topical = words.iter().filter(|x| x.contains("t2w")).count();
+        assert!(topical > 20, "topic words should dominate: {topical}/40");
+    }
+
+    #[test]
+    fn purity_controls_mixture() {
+        let w = TopicWorld::new(7);
+        let mut rng = Rng::new(2);
+        let pure = w.topical_sentence(&mut rng, 5, 1.0, 60);
+        let t5 = pure.split_whitespace().filter(|x| x.contains("t5w")).count();
+        assert!(t5 >= 35, "pure sentence should be mostly t5: {t5}");
+    }
+
+    #[test]
+    fn paraphrase_shares_words() {
+        let w = TopicWorld::new(9);
+        let mut rng = Rng::new(3);
+        let (a, b) = w.paraphrase(&mut rng, 4, 20);
+        let set_a: std::collections::HashSet<&str> = a.split_whitespace().collect();
+        let shared = b.split_whitespace().filter(|x| set_a.contains(x)).count();
+        assert!(shared >= 5, "paraphrase should overlap: {shared}");
+    }
+
+    #[test]
+    fn gender_words_form_minimal_pair() {
+        let w = TopicWorld::new(5);
+        assert_ne!(w.gender_word(true), w.gender_word(false));
+    }
+}

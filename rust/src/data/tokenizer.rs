@@ -1,0 +1,212 @@
+//! Tokenizer: deterministic word → id mapping into the tiny PLM's
+//! vocabulary. The serving path receives *text* (the LaMP schema is
+//! `(news_text, news_category, author_id)`), so the coordinator tokenizes
+//! exactly like the data generators did at training time.
+//!
+//! Vocabulary layout: the synthetic topic-world words get dedicated id
+//! ranges per topic (`[TOPIC_BASE + t*WORDS_PER_TOPIC, ...)`), mirroring how
+//! a *pretrained* embedding space clusters semantically related words —
+//! bert-base gives the paper that structure for free; our frozen tiny PLM
+//! gets it from `runtime::params`' topic-clustered embedding init (see
+//! DESIGN.md §3). Unknown words fall back to FNV hashing into a tail range.
+
+/// Special token ids (reserved at the bottom of the vocab).
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const UNK: u32 = 3;
+pub const FIRST_WORD_ID: u32 = 8;
+
+/// Topic-word region: TOPICS blocks of WORDS_PER_TOPIC ids.
+pub const TOPIC_BASE: u32 = FIRST_WORD_ID;
+pub const TOPIC_COUNT: u32 = crate::data::textgen::TOPICS as u32;
+pub const TOPIC_WORDS: u32 = crate::data::textgen::WORDS_PER_TOPIC as u32;
+/// Function-word region.
+pub const FUNC_BASE: u32 = TOPIC_BASE + TOPIC_COUNT * TOPIC_WORDS;
+pub const FUNC_COUNT: u32 = crate::data::textgen::FUNCTION_WORDS as u32;
+/// Gender-marker ids (axg minimal pairs).
+pub const GENDER_M: u32 = FUNC_BASE + FUNC_COUNT;
+pub const GENDER_F: u32 = GENDER_M + 1;
+/// Everything else hashes into [HASH_BASE, vocab).
+pub const HASH_BASE: u32 = GENDER_F + 1;
+
+/// Topic block of a token id, if it is a topic word.
+pub fn token_topic(id: u32) -> Option<usize> {
+    if (TOPIC_BASE..FUNC_BASE).contains(&id) {
+        Some(((id - TOPIC_BASE) / TOPIC_WORDS) as usize)
+    } else {
+        None
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab as u32 > HASH_BASE + 8, "vocab too small for layout");
+        Tokenizer { vocab: vocab as u32 }
+    }
+
+    /// Structured id for topic-world words; FNV-1a tail hash otherwise.
+    pub fn word_id(&self, word: &str) -> u32 {
+        if let Some(id) = Self::structured_id(word) {
+            return id;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in word.bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        HASH_BASE + (h % (self.vocab - HASH_BASE) as u64) as u32
+    }
+
+    /// Parse the synthetic word grammar `s<seed>(t<T>w<S> | fw<S> | g[mf])`.
+    fn structured_id(word: &str) -> Option<u32> {
+        let rest = word.strip_prefix('s')?;
+        let non_digit = rest.find(|c: char| !c.is_ascii_digit())?;
+        let rest = &rest[non_digit..];
+        if let Some(g) = rest.strip_prefix('g') {
+            return match g {
+                "m" => Some(GENDER_M),
+                "f" => Some(GENDER_F),
+                _ => None,
+            };
+        }
+        if let Some(fw) = rest.strip_prefix("fw") {
+            let slot: u32 = fw.parse().ok()?;
+            return Some(FUNC_BASE + slot % FUNC_COUNT);
+        }
+        if let Some(tw) = rest.strip_prefix('t') {
+            let wpos = tw.find('w')?;
+            let topic: u32 = tw[..wpos].parse().ok()?;
+            let slot: u32 = tw[wpos + 1..].parse().ok()?;
+            if topic < TOPIC_COUNT {
+                return Some(TOPIC_BASE + topic * TOPIC_WORDS + slot % TOPIC_WORDS);
+            }
+        }
+        None
+    }
+
+    /// Encode one sentence: `[CLS] w1 w2 ...` truncated/padded to `seq`.
+    pub fn encode(&self, text: &str, seq: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut ids = vec![CLS];
+        for w in text.split_whitespace() {
+            if ids.len() >= seq {
+                break;
+            }
+            ids.push(self.word_id(w));
+        }
+        self.finish(ids, seq)
+    }
+
+    /// Encode a sentence pair: `[CLS] a... [SEP] b...`.
+    pub fn encode_pair(&self, a: &str, b: &str, seq: usize) -> (Vec<u32>, Vec<f32>) {
+        let budget = seq.saturating_sub(2); // CLS + SEP
+        let half = budget / 2;
+        let mut ids = vec![CLS];
+        for w in a.split_whitespace().take(half) {
+            ids.push(self.word_id(w));
+        }
+        ids.push(SEP);
+        for w in b.split_whitespace() {
+            if ids.len() >= seq {
+                break;
+            }
+            ids.push(self.word_id(w));
+        }
+        self.finish(ids, seq)
+    }
+
+    fn finish(&self, mut ids: Vec<u32>, seq: usize) -> (Vec<u32>, Vec<f32>) {
+        ids.truncate(seq);
+        let used = ids.len();
+        ids.resize(seq, PAD);
+        let mut mask = vec![0.0f32; seq];
+        for m in mask.iter_mut().take(used) {
+            *m = 1.0;
+        }
+        (ids, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_ids_in_range() {
+        let t = Tokenizer::new(1024);
+        for w in ["hello", "world", "économie", "s42t3w17", "s1fw3"] {
+            let id = t.word_id(w);
+            assert_eq!(id, t.word_id(w));
+            assert!((FIRST_WORD_ID..1024).contains(&id));
+        }
+    }
+
+    #[test]
+    fn topic_words_map_to_topic_blocks() {
+        let t = Tokenizer::new(1024);
+        // same (topic, slot) across world seeds → same id (shared language)
+        assert_eq!(t.word_id("s42t3w17"), t.word_id("s7t3w17"));
+        let id = t.word_id("s42t3w17");
+        assert_eq!(token_topic(id), Some(3));
+        assert_eq!(token_topic(t.word_id("s42t14w0")), Some(14));
+        // function and gender words are outside topic blocks
+        assert_eq!(token_topic(t.word_id("s42fw5")), None);
+        assert_eq!(token_topic(GENDER_M), None);
+        assert_ne!(t.word_id("s42gm"), t.word_id("s42gf"));
+    }
+
+    #[test]
+    fn distinct_hash_words_mostly_distinct_ids() {
+        let t = Tokenizer::new(1024);
+        let ids: std::collections::HashSet<u32> =
+            (0..100).map(|i| t.word_id(&format!("w{i}"))).collect();
+        assert!(ids.len() > 70, "too many collisions: {}", ids.len());
+        for i in 0..100 {
+            assert!(t.word_id(&format!("w{i}")) >= HASH_BASE);
+        }
+    }
+
+    #[test]
+    fn encode_shape_and_mask() {
+        let t = Tokenizer::new(1024);
+        let (ids, mask) = t.encode("a b c", 8);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], CLS);
+        assert_eq!(&mask[..4], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(&mask[4..], &[0.0, 0.0, 0.0, 0.0]);
+        assert!(ids[4..].iter().all(|&i| i == PAD));
+    }
+
+    #[test]
+    fn encode_truncates_long_input() {
+        let t = Tokenizer::new(1024);
+        let long: String = (0..50).map(|i| format!("w{i} ")).collect();
+        let (ids, mask) = t.encode(&long, 8);
+        assert_eq!(ids.len(), 8);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn encode_pair_has_sep() {
+        let t = Tokenizer::new(1024);
+        let (ids, _) = t.encode_pair("a b", "c d", 16);
+        assert_eq!(ids[0], CLS);
+        assert!(ids.contains(&SEP));
+    }
+
+    #[test]
+    fn pair_budget_respected() {
+        let t = Tokenizer::new(1024);
+        let long: String = (0..40).map(|i| format!("x{i} ")).collect();
+        let (ids, _) = t.encode_pair(&long, &long, 16);
+        assert_eq!(ids.len(), 16);
+        // second segment must still be present
+        let sep_pos = ids.iter().position(|&i| i == SEP).unwrap();
+        assert!(sep_pos < 15, "sep at {sep_pos}");
+    }
+}

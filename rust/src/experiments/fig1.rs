@@ -1,0 +1,82 @@
+//! Figure 1: memory requirements vs number of profiles. Analytic curves at
+//! paper dims (adapter tuning vs X-PEFT hard with a 150-adapter warm bank)
+//! plus a *measured* series from an actual `ProfileStore` populated with
+//! bit-packed masks.
+
+use anyhow::Result;
+
+use crate::coordinator::profile_store::{ProfileRecord, ProfileStore};
+use crate::masks::accounting::Dims;
+use crate::masks::{MaskLogits, ProfileMasks};
+use crate::util::cli::Args;
+use crate::util::human_bytes;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub fn run(args: &Args) -> Result<()> {
+    let paper = Dims::PAPER_TABLE1;
+    let bank_n = args.get_usize("bank-n", 150)?;
+    let points: Vec<usize> = vec![1, 10, 100, 150, 323, 1_000, 10_000, 100_000, 1_000_000];
+
+    println!("Figure 1 — cumulative profile-state memory vs #profiles (paper dims, bank N={bank_n})\n");
+    println!("{:>10} {:>16} {:>16} {:>10}", "#profiles", "adapter tuning", "x_peft (hard)", "ratio");
+    let mut rows = Vec::new();
+    for &p in &points {
+        let ad = paper.cumulative_bytes_adapter(p);
+        let xp = paper.cumulative_bytes_xpeft_hard(p, bank_n);
+        println!(
+            "{:>10} {:>16} {:>16} {:>9.0}x",
+            p,
+            human_bytes(ad as f64),
+            human_bytes(xp as f64),
+            ad as f64 / xp as f64
+        );
+        let mut row = Json::obj();
+        row.set("profiles", Json::Num(p as f64));
+        row.set("adapter_bytes", Json::Num(ad as f64));
+        row.set("xpeft_bytes", Json::Num(xp as f64));
+        rows.push(row);
+    }
+
+    // measured series from a live profile store (tiny dims, N=150, k=50)
+    let tiny = Dims { d: 64, b: 8, layers: 4 };
+    let mut store = ProfileStore::new(16);
+    let mut measured = Vec::new();
+    let mut rng = Rng::new(7);
+    for pid in 0..1000u64 {
+        let logits = MaskLogits {
+            layers: tiny.layers,
+            n: bank_n,
+            a: rng.normal_vec(tiny.layers * bank_n, 1.0),
+            b: rng.normal_vec(tiny.layers * bank_n, 1.0),
+        };
+        store.insert(pid, ProfileRecord {
+            masks: ProfileMasks::Hard(logits.binarize(50)),
+            aux: None,
+        });
+        if [1, 10, 100, 1000].contains(&(pid + 1)) {
+            let mut row = Json::obj();
+            row.set("profiles", Json::Num((pid + 1) as f64));
+            row.set("measured_bytes", Json::Num(store.total_profile_bytes() as f64));
+            measured.push(row);
+        }
+    }
+    println!(
+        "\nmeasured (tiny dims, live ProfileStore): 1000 profiles → {} total, {:.0} B/profile",
+        human_bytes(store.total_profile_bytes() as f64),
+        store.mean_profile_bytes()
+    );
+    // cross-check against the formula
+    assert_eq!(
+        store.total_profile_bytes(),
+        1000 * tiny.xpeft_hard_bytes(bank_n) as u64
+    );
+
+    let mut out = Json::obj();
+    out.set("analytic", Json::Arr(rows));
+    out.set("measured", Json::Arr(measured));
+    let env_out = std::path::PathBuf::from(args.get_str("out", "results"));
+    std::fs::create_dir_all(&env_out)?;
+    std::fs::write(env_out.join("fig1.json"), out.to_string_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Figure 3: t-SNE of the per-profile mask tensors from the LaMP run
+//! (Fig 4 must run first — it persists the profile stores). Each point is
+//! an author; color = majority assigned category, size = majority ratio.
+
+use anyhow::{Context, Result};
+
+use crate::analysis::mask_features;
+use crate::analysis::tsne::{tsne, TsneConfig};
+use crate::coordinator::profile_store::ProfileStore;
+use crate::experiments::Env;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let store_path = env.out_dir.join("lamp_store_x_peft_warm_hard_.bin");
+    let store = ProfileStore::load(&store_path, 16).with_context(|| {
+        format!("{} missing — run `xpeft repro fig4` first", store_path.display())
+    })?;
+    let meta = Json::parse(
+        &std::fs::read_to_string(env.out_dir.join("fig4.json"))
+            .context("results/fig4.json missing — run fig4 first")?,
+    )?;
+
+    let ids = store.ids();
+    let feats: Vec<Vec<f32>> = ids
+        .iter()
+        .map(|&id| Ok(mask_features(&store.record(id)?.masks.to_weights())))
+        .collect::<Result<_>>()?;
+    println!("Figure 3 — t-SNE over {} profiles' mask tensors", feats.len());
+    let emb = tsne(&feats, &TsneConfig::default());
+
+    // attach author metadata
+    let profs = meta.get("warm_hard_profiles")?.as_arr()?;
+    let mut points = Vec::new();
+    for (i, &id) in ids.iter().enumerate() {
+        let mut o = Json::obj();
+        o.set("author_id", Json::Num(id as f64));
+        o.set("x", Json::Num(emb[i].0));
+        o.set("y", Json::Num(emb[i].1));
+        if let Some(p) = profs
+            .iter()
+            .find(|p| p.f64_field("author_id").map(|a| a as u64).ok() == Some(id))
+        {
+            o.set("majority_category", p.get("majority_category")?.clone());
+            o.set("majority_ratio", p.get("majority_ratio")?.clone());
+        }
+        points.push(o);
+    }
+
+    // terminal scatter (coarse 48x16 grid)
+    let (w, h) = (48usize, 16usize);
+    let xs: Vec<f64> = emb.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = emb.iter().map(|p| p.1).collect();
+    let (xmin, xmax) = (xs.iter().cloned().fold(f64::MAX, f64::min), xs.iter().cloned().fold(f64::MIN, f64::max));
+    let (ymin, ymax) = (ys.iter().cloned().fold(f64::MAX, f64::min), ys.iter().cloned().fold(f64::MIN, f64::max));
+    let mut grid = vec![vec![' '; w]; h];
+    for (i, p) in emb.iter().enumerate() {
+        let cx = (((p.0 - xmin) / (xmax - xmin).max(1e-9)) * (w - 1) as f64) as usize;
+        let cy = (((p.1 - ymin) / (ymax - ymin).max(1e-9)) * (h - 1) as f64) as usize;
+        let cat = profs
+            .iter()
+            .find(|q| q.f64_field("author_id").map(|a| a as u64).ok() == Some(ids[i]))
+            .and_then(|q| q.f64_field("majority_category").ok())
+            .unwrap_or(0.0) as u32;
+        grid[cy][cx] = char::from_u32('A' as u32 + (cat % 15)).unwrap_or('*');
+    }
+    for row in &grid {
+        println!("{}", row.iter().collect::<String>());
+    }
+    println!("(letters = majority category per author)");
+
+    let mut out = Json::obj();
+    out.set("points", Json::Arr(points));
+    env.write_json("fig3", &out)?;
+    println!("wrote results/fig3.json");
+    Ok(())
+}

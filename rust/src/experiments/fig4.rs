@@ -1,0 +1,194 @@
+//! Figure 4: the LaMP 'Personalized News Categorization' multi-profile
+//! experiment. Four X-PEFT settings (random/warm × soft/hard) against
+//! per-profile single_adapter tuning; reports accuracy and macro-F1
+//! averaged over all authors' 30% holdouts, and persists every profile's
+//! masks into a ProfileStore (reused by Fig 3's t-SNE and Fig 6's
+//! heatmaps, and loadable by `xpeft serve`).
+//!
+//! Scaling note (DESIGN.md §3): the paper uses 323 authors and a bank of
+//! 150 warm adapters trained by the first 150 authors. Defaults here are
+//! `--profiles 24 --bank-n 150 --warm-profiles 12` so the full figure runs
+//! in minutes on one CPU core; pass paper-scale values to go bigger.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::adapters::AdapterBank;
+use crate::config::{Mode, TrainConfig};
+use crate::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use crate::data::lamp::{self, CATEGORIES};
+use crate::experiments::Env;
+use crate::metrics;
+use crate::train::{self, eval};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let profiles_n = args.get_usize("profiles", 24)?;
+    let bank_n = args.get_usize("bank-n", 150)?;
+    let warm_n = args.get_usize("warm-profiles", 12)?;
+    let k = args.get_usize("k", 50)?;
+
+    let corpus = lamp::generate(profiles_n, mc.seq, mc.vocab, env.seed, 12, 160);
+    println!(
+        "Figure 4 — LaMP-sim: {} authors, {} articles, bank N={bank_n} (warm from {warm_n} authors)\n",
+        profiles_n,
+        corpus.articles.len()
+    );
+
+    // ---- warm bank: train single_adapter on the first warm_n authors and
+    // install their adapters into bank slots (cycled to fill all N).
+    let random_bank = env.bank(bank_n, env.seed);
+    let mut warm_bank = (*random_bank).clone();
+    let mut sa_scores: Vec<(f64, f64)> = Vec::new();
+    for (i, p) in corpus.profiles.iter().take(warm_n).enumerate() {
+        let ds = profile_dataset(p);
+        let cfg = TrainConfig {
+            mode: Mode::SingleAdapter,
+            steps: env.steps,
+            seed: env.seed + i as u64,
+            ..Default::default()
+        };
+        let (trainer, _) = train::train_profile(&env.engine, &cfg, &ds, None, env.plm_seed)?;
+        let a = trainer.state.get("adapter_a")?.to_vec();
+        let b = trainer.state.get("adapter_b")?.to_vec();
+        // fill every congruent slot so the whole bank is warm
+        let mut slot = i;
+        while slot < bank_n {
+            warm_bank.install_trained(slot, &a, &b)?;
+            slot += warm_n;
+        }
+        let s = eval::evaluate(&env.engine, cfg.mode, &trainer, &ds, None, 0, k, env.plm_seed)?;
+        sa_scores.push((s.acc.unwrap_or(0.0), 0.0));
+    }
+
+    // ---- per-profile runs for each setting
+    let settings: Vec<(&str, Mode, &AdapterBank)> = vec![
+        ("x_peft random (soft)", Mode::XpeftSoft, &random_bank),
+        ("x_peft random (hard)", Mode::XpeftHard, &random_bank),
+        ("x_peft warm (soft)", Mode::XpeftSoft, &warm_bank),
+        ("x_peft warm (hard)", Mode::XpeftHard, &warm_bank),
+    ];
+
+    let mut out = Json::obj();
+    let mut summary_rows = Vec::new();
+    println!("{:<24} {:>8} {:>8}", "setting", "acc", "f1");
+
+    for (label, mode, bank) in settings {
+        let store = Mutex::new(ProfileStore::new(1024));
+        let mut accs = Vec::new();
+        let mut f1s = Vec::new();
+        // warm settings tune masks only for the remaining authors (paper:
+        // 173 of 323); random settings tune all authors.
+        let eval_profiles: Vec<&lamp::ProfileData> = if label.contains("warm") {
+            corpus.profiles.iter().skip(warm_n).collect()
+        } else {
+            corpus.profiles.iter().collect()
+        };
+        for p in &eval_profiles {
+            let ds = profile_dataset(p);
+            let cfg = TrainConfig {
+                mode,
+                n: bank_n,
+                k,
+                steps: env.steps,
+                seed: env.seed + 1000 + p.author_id as u64,
+                ..Default::default()
+            };
+            let (trainer, _) = train::train_profile(&env.engine, &cfg, &ds, Some(bank), env.plm_seed)?;
+            let preds = eval::Evaluator::new(&env.engine, mode, "cls", bank_n, Some(bank), env.plm_seed)?
+                .predict_split(
+                    &trainer.state,
+                    Some(&trainer.mask_weights(mode, mc.layers, bank_n, k)?),
+                    &ds.dev,
+                    CATEGORIES,
+                    (mc.batch, mc.seq),
+                )?;
+            let pv: Vec<usize> = preds
+                .iter()
+                .map(|p| match p {
+                    eval::Pred::Class(c) => *c,
+                    _ => 0,
+                })
+                .collect();
+            let lv: Vec<usize> = ds.dev.iter().map(|e| e.label.class()).collect();
+            accs.push(metrics::accuracy(&pv, &lv));
+            f1s.push(metrics::f1_macro(&pv, &lv, CATEGORIES));
+            // persist the profile into the store (masks + its aux)
+            store.lock().unwrap().insert(
+                p.author_id as u64,
+                ProfileRecord {
+                    masks: trainer.profile_masks(mode, mc.layers, bank_n, k)?,
+                    aux: Some(AuxParams {
+                        ln_scale: trainer.state.get("ln_scale")?.to_vec(),
+                        ln_bias: trainer.state.get("ln_bias")?.to_vec(),
+                        head_w: trainer.state.get("head_w")?.to_vec(),
+                        head_b: trainer.state.get("head_b")?.to_vec(),
+                    }),
+                },
+            );
+        }
+        let acc = stats::mean(&accs);
+        let f1 = stats::mean(&f1s);
+        println!("{label:<24} {acc:>8.3} {f1:>8.3}");
+        let mut row = Json::obj();
+        row.set("setting", Json::Str(label.into()));
+        row.set("acc", Json::Num(acc));
+        row.set("f1", Json::Num(f1));
+        row.set("profiles", Json::Num(eval_profiles.len() as f64));
+        summary_rows.push(row);
+
+        // persist the store for fig3/fig6/serving
+        let store = store.into_inner().unwrap();
+        let fname = format!(
+            "lamp_store_{}.bin",
+            label.replace([' ', '(', ')'], "_").replace("__", "_")
+        );
+        store.save(&env.out_dir.join(&fname))?;
+        // majority metadata for fig3 coloring
+        if label == "x_peft warm (hard)" {
+            let meta: Vec<Json> = corpus
+                .profiles
+                .iter()
+                .skip(warm_n)
+                .map(|p| {
+                    let mut m = Json::obj();
+                    m.set("author_id", Json::Num(p.author_id as f64));
+                    m.set("majority_category", Json::Num(p.majority_category as f64));
+                    m.set("majority_ratio", Json::Num(p.majority_ratio));
+                    m
+                })
+                .collect();
+            out.set("warm_hard_profiles", Json::Arr(meta));
+        }
+    }
+
+    // single_adapter baseline averaged over the warm authors
+    let sa_acc = stats::mean(&sa_scores.iter().map(|x| x.0).collect::<Vec<_>>());
+    println!("{:<24} {:>8.3} {:>8}", "single_adapter", sa_acc, "-");
+    let mut row = Json::obj();
+    row.set("setting", Json::Str("single_adapter".into()));
+    row.set("acc", Json::Num(sa_acc));
+    summary_rows.push(row);
+
+    out.set("rows", Json::Arr(summary_rows));
+    out.set("bank_n", Json::Num(bank_n as f64));
+    out.set("profiles", Json::Num(profiles_n as f64));
+    env.write_json("fig4", &out)?;
+    println!("\nwrote results/fig4.json + per-setting profile stores");
+    Ok(())
+}
+
+fn profile_dataset(p: &lamp::ProfileData) -> crate::data::Dataset {
+    crate::data::Dataset {
+        name: format!("lamp_author_{}", p.author_id),
+        train: p.train.clone(),
+        dev: p.dev.clone(),
+        num_classes: CATEGORIES,
+        metric: crate::data::MetricKind::Acc,
+    }
+}

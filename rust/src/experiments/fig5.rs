@@ -1,0 +1,83 @@
+//! Figure 5: sst2 training-curve ablations.
+//!   (a) number of adapters N × soft/hard masks
+//!   (b) separate mask tensors M_A+M_B vs single mask (M_B only)
+//!   (c) top-k sweep for hard masks
+//! Each prints sparkline curves and writes the full series to results/.
+
+use anyhow::Result;
+
+use crate::analysis::{curves_json, sparkline};
+use crate::config::{Mode, TrainConfig};
+use crate::data::glue;
+use crate::experiments::Env;
+use crate::util::cli::Args;
+
+fn sst2_curve(env: &Env, cfg: &TrainConfig) -> Result<Vec<f32>> {
+    let mc = &env.engine.manifest.config;
+    let ds = glue::build("sst2", mc.seq, mc.vocab, env.seed);
+    let (_, outcome, _) = env.run_config(&ds, cfg)?;
+    Ok(outcome.losses)
+}
+
+fn emit(env: &Env, name: &str, series: Vec<(String, Vec<f32>)>) -> Result<()> {
+    for (label, losses) in &series {
+        let final5 = losses.iter().rev().take(5).sum::<f32>() / 5.0_f32.min(losses.len() as f32);
+        println!("{label:<28} {} final≈{final5:.3}", sparkline(losses, 40));
+    }
+    env.write_json(name, &curves_json(&series))?;
+    println!("wrote results/{name}.json");
+    Ok(())
+}
+
+/// (a) N ∈ {100, 200, 400} × soft/hard.
+pub fn run_a(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let ns = args.get_usize_list("ns", &[100, 200, 400])?;
+    println!("Figure 5a — sst2 curves: N sweep × mask type\n");
+    let mut series = Vec::new();
+    for &n in &ns {
+        for mode in [Mode::XpeftSoft, Mode::XpeftHard] {
+            let cfg = TrainConfig { mode, n, steps: env.steps, seed: env.seed, ..Default::default() };
+            let label = format!("N={n} ({})", if mode.is_hard() { "hard" } else { "soft" });
+            series.push((label, sst2_curve(&env, &cfg)?));
+        }
+    }
+    emit(&env, "fig5a", series)
+}
+
+/// (b) both masks vs single mask (M_B only), N=100 soft.
+pub fn run_b(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let n = args.get_usize("n", 100)?;
+    println!("Figure 5b — sst2 curves: separate mask tensors vs single mask (N={n})\n");
+    let both = TrainConfig {
+        mode: Mode::XpeftSoft, n, steps: env.steps, seed: env.seed, ..Default::default()
+    };
+    let single = TrainConfig { single_mask: true, ..both.clone() };
+    let series = vec![
+        ("M_A + M_B".to_string(), sst2_curve(&env, &both)?),
+        ("M_B only".to_string(), sst2_curve(&env, &single)?),
+    ];
+    emit(&env, "fig5b", series)
+}
+
+/// (c) k sweep for hard masks.
+pub fn run_c(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let ns = args.get_usize_list("ns", &[100, 200])?;
+    let ks = args.get_usize_list("ks", &[10, 30, 50, 70, 100])?;
+    println!("Figure 5c — sst2 curves: top-k sweep for hard masks\n");
+    let mut series = Vec::new();
+    for &n in &ns {
+        for &k in &ks {
+            if k > n {
+                continue;
+            }
+            let cfg = TrainConfig {
+                mode: Mode::XpeftHard, n, k, steps: env.steps, seed: env.seed, ..Default::default()
+            };
+            series.push((format!("N={n} k={k}"), sst2_curve(&env, &cfg)?));
+        }
+    }
+    emit(&env, "fig5c", series)
+}

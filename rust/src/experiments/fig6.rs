@@ -1,0 +1,64 @@
+//! Figure 6: heatmaps of the mask tensors of the two most (Euclidean)
+//! distant authors from the LaMP run — the per-author "signature" claim.
+
+use anyhow::{Context, Result};
+
+use crate::analysis::{heatmap_json, most_distant_pair};
+use crate::coordinator::profile_store::ProfileStore;
+use crate::experiments::Env;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let store_path = env.out_dir.join("lamp_store_x_peft_warm_hard_.bin");
+    let store = ProfileStore::load(&store_path, 16).with_context(|| {
+        format!("{} missing — run `xpeft repro fig4` first", store_path.display())
+    })?;
+    let ids = store.ids();
+    let weights: Vec<_> = ids
+        .iter()
+        .map(|&id| Ok(store.record(id)?.masks.to_weights()))
+        .collect::<Result<Vec<_>>>()?;
+    let (i, j, d) = most_distant_pair(&weights).context("need ≥2 profiles")?;
+    println!(
+        "Figure 6 — most distant authors: {} vs {} (euclidean {:.3})\n",
+        ids[i], ids[j], d
+    );
+
+    // terminal render: block rows × adapter columns (downsampled)
+    for (who, w) in [(ids[i], &weights[i]), (ids[j], &weights[j])] {
+        println!("author {who} — M_A (rows = PLM blocks, cols = adapters, '#' = selected)");
+        let step = (w.n / 64).max(1);
+        for l in 0..w.layers {
+            let row: String = (0..w.n)
+                .step_by(step)
+                .map(|c| if w.a[l * w.n + c] > 0.0 { '#' } else { '·' })
+                .collect();
+            println!("  {row}");
+        }
+        println!();
+    }
+    let hamming = match (&store.record(ids[i])?.masks, &store.record(ids[j])?.masks) {
+        (crate::masks::ProfileMasks::Hard(a), crate::masks::ProfileMasks::Hard(b)) => {
+            Some(a.hamming(b)?)
+        }
+        _ => None,
+    };
+    if let Some(h) = hamming {
+        println!("hamming distance between packed masks: {h} bits");
+    }
+
+    let mut out = Json::obj();
+    out.set("author_i", Json::Num(ids[i] as f64));
+    out.set("author_j", Json::Num(ids[j] as f64));
+    out.set("euclidean", Json::Num(d));
+    if let Some(h) = hamming {
+        out.set("hamming_bits", Json::Num(h as f64));
+    }
+    out.set("heatmap_i", heatmap_json(&weights[i]));
+    out.set("heatmap_j", heatmap_json(&weights[j]));
+    env.write_json("fig6", &out)?;
+    println!("wrote results/fig6.json");
+    Ok(())
+}

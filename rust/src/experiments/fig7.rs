@@ -1,0 +1,47 @@
+//! Figure 7: reproducibility — sst2 (N=100, soft) loss curves across random
+//! seeds; two runs with the same seed must be bit-identical.
+
+use anyhow::Result;
+
+use crate::analysis::{curves_json, sparkline};
+use crate::config::{Mode, TrainConfig};
+use crate::data::glue;
+use crate::experiments::Env;
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let seeds: Vec<usize> = args.get_usize_list("seeds", &[42, 42, 0, 1, 7])?;
+    println!("Figure 7 — sst2 (N=100, soft) across seeds\n");
+
+    let ds = glue::build("sst2", mc.seq, mc.vocab, env.seed);
+    let mut series: Vec<(String, Vec<f32>)> = Vec::new();
+    for (i, &seed) in seeds.iter().enumerate() {
+        let cfg = TrainConfig {
+            mode: Mode::XpeftSoft,
+            n: 100,
+            steps: env.steps,
+            seed: seed as u64,
+            ..Default::default()
+        };
+        let (_, outcome, _) = env.run_config(&ds, &cfg)?;
+        println!("run {i} seed={seed:<4} {}", sparkline(&outcome.losses, 40));
+        series.push((format!("run{i}_seed{seed}"), outcome.losses));
+    }
+
+    // identical-seed runs must coincide exactly (paper's overlap claim)
+    let same: Vec<&(String, Vec<f32>)> =
+        series.iter().filter(|(l, _)| l.contains(&format!("seed{}", seeds[0]))).collect();
+    if same.len() >= 2 {
+        let identical = same[0].1 == same[1].1;
+        println!(
+            "\nsame-seed runs identical: {} (paper: 'completely overlapped')",
+            identical
+        );
+        anyhow::ensure!(identical, "same-seed runs diverged — nondeterminism bug");
+    }
+    env.write_json("fig7", &curves_json(&series))?;
+    println!("wrote results/fig7.json");
+    Ok(())
+}

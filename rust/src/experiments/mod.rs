@@ -1,0 +1,170 @@
+//! Experiment harnesses: one module per paper table/figure (DESIGN.md §6).
+//! Each writes `results/<exp>.json` and prints the paper-style rows.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table8;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::AdapterBank;
+use crate::config::{Mode, TrainConfig};
+use crate::data::Dataset;
+use crate::metrics::Scores;
+use crate::runtime::Engine;
+use crate::train::{self, TrainOutcome, Trainer};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Shared experiment environment.
+pub struct Env {
+    pub engine: Engine,
+    pub out_dir: PathBuf,
+    pub plm_seed: u64,
+    pub seed: u64,
+    /// step budget per training run (paper: 10 epochs; scaled default)
+    pub steps: usize,
+    banks: std::sync::Mutex<HashMap<(usize, u64), std::sync::Arc<AdapterBank>>>,
+}
+
+impl Env {
+    pub fn new(args: &Args) -> Result<Env> {
+        let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+        let out_dir = PathBuf::from(args.get_str("out", "results"));
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Env {
+            engine: Engine::new(&artifacts)?,
+            out_dir,
+            plm_seed: args.get_u64("plm-seed", 42)?,
+            seed: args.get_u64("seed", 42)?,
+            steps: args.get_usize("steps", 150)?,
+            banks: std::sync::Mutex::default(),
+        })
+    }
+
+    /// Shared random bank for (n, seed) — one per experiment run, like the
+    /// paper's frozen bank shared across profiles.
+    pub fn bank(&self, n: usize, seed: u64) -> std::sync::Arc<AdapterBank> {
+        let mc = &self.engine.manifest.config;
+        self.banks
+            .lock()
+            .unwrap()
+            .entry((n, seed))
+            .or_insert_with(|| {
+                std::sync::Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, seed))
+            })
+            .clone()
+    }
+
+    /// Train + evaluate one configuration on one dataset.
+    pub fn run_config(
+        &self,
+        dataset: &Dataset,
+        cfg: &TrainConfig,
+    ) -> Result<(Scores, TrainOutcome, Trainer<'_>)> {
+        let bank = if cfg.mode.is_xpeft() { Some(self.bank(cfg.n, self.seed)) } else { None };
+        let bank_ref = bank.as_deref();
+        let (trainer, outcome) =
+            train::train_profile(&self.engine, cfg, dataset, bank_ref, self.plm_seed)?;
+        let scores = train::eval::evaluate(
+            &self.engine,
+            cfg.mode,
+            &trainer,
+            dataset,
+            bank_ref,
+            cfg.n,
+            cfg.k,
+            self.plm_seed,
+        )?;
+        Ok((scores, outcome, trainer))
+    }
+
+    pub fn write_json(&self, name: &str, json: &Json) -> Result<PathBuf> {
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, json.to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// The standard Table 2/3 configuration grid: xp (soft|hard) × N, plus
+/// head_only and single_adapter baselines.
+pub fn config_grid(ns: &[usize], k: usize, steps: usize, seed: u64) -> Vec<TrainConfig> {
+    let mut grid = Vec::new();
+    for &n in ns {
+        for mode in [Mode::XpeftSoft, Mode::XpeftHard] {
+            grid.push(TrainConfig { mode, n, k, steps, seed, ..Default::default() });
+        }
+    }
+    grid.push(TrainConfig { mode: Mode::HeadOnly, steps, seed, ..Default::default() });
+    grid.push(TrainConfig { mode: Mode::SingleAdapter, steps, seed, ..Default::default() });
+    grid
+}
+
+/// Row label in the paper's format, e.g. "x_peft 200 (hard)".
+pub fn config_label(cfg: &TrainConfig) -> String {
+    match cfg.mode {
+        Mode::XpeftSoft => format!("x_peft {} (soft)", cfg.n),
+        Mode::XpeftHard => format!("x_peft {} (hard)", cfg.n),
+        Mode::HeadOnly => "head_only".into(),
+        Mode::SingleAdapter => "single_adapter".into(),
+    }
+}
+
+/// Dispatch an experiment by name.
+pub fn run(name: &str, args: &Args) -> Result<()> {
+    match name {
+        "table1" => table1::run(args),
+        "fig1" => fig1::run(args),
+        "table2" => table2::run(args),
+        "table3" => table3::run(args),
+        "table4" => table4::run(args),
+        "fig3" => fig3::run(args),
+        "fig4" => fig4::run(args),
+        "fig5a" => fig5::run_a(args),
+        "fig5b" => fig5::run_b(args),
+        "fig5c" => fig5::run_c(args),
+        "fig6" => fig6::run(args),
+        "fig7" => fig7::run(args),
+        "table8" => table8::run(args),
+        "all" => {
+            for exp in [
+                "table1", "fig1", "table4", "fig7", "fig5a", "fig5b", "fig5c", "table2",
+                "table3", "fig4", "fig3", "fig6", "table8",
+            ] {
+                crate::info!("repro", "=== {exp} ===");
+                run(exp, args)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment '{other}' (table1|table2|table3|table4|table8|fig1|fig3|fig4|fig5a|fig5b|fig5c|fig6|fig7|all)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_expected_rows() {
+        let g = config_grid(&[100, 200], 50, 10, 42);
+        assert_eq!(g.len(), 2 * 2 + 2);
+        assert_eq!(config_label(&g[0]), "x_peft 100 (soft)");
+        assert_eq!(config_label(&g[1]), "x_peft 100 (hard)");
+        assert_eq!(config_label(&g[4]), "head_only");
+        assert_eq!(config_label(&g[5]), "single_adapter");
+    }
+}

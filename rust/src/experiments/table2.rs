@@ -1,0 +1,92 @@
+//! Table 2 (+ Appendix Tables 5/6): GLUE evaluation across the full
+//! configuration grid. Also records per-config wallclock for Table 8.
+
+use anyhow::Result;
+
+use crate::data::glue;
+use crate::data::MetricKind;
+use crate::experiments::{config_grid, config_label, Env};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let ns = args.get_usize_list("ns", &[100, 200, 400])?;
+    let k = args.get_usize("k", 50)?;
+    let tasks: Vec<String> = match args.get("tasks") {
+        Some(t) => t.split(',').map(|s| s.trim().to_string()).collect(),
+        None => glue::GLUE_TASKS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let grid = config_grid(&ns, k, env.steps, env.seed);
+    println!("Table 2 — GLUE ({} tasks × {} configs, {} steps each)\n", tasks.len(), grid.len(), env.steps);
+
+    let mut out_rows = Vec::new();
+    // header
+    print!("{:<20}", "mode");
+    for t in &tasks {
+        print!(" {:>7}", t);
+    }
+    println!();
+
+    let mut results: Vec<Vec<f64>> = vec![Vec::new(); grid.len()];
+    let mut times: Vec<Vec<f64>> = vec![Vec::new(); grid.len()];
+    for task in &tasks {
+        let dataset = glue::build(task, mc.seq, mc.vocab, env.seed);
+        // mnli: a "mismatched" dev from a different topic-world seed
+        let mismatched = (task == "mnli")
+            .then(|| glue::build("mnli", mc.seq, mc.vocab, env.seed ^ 0x4d31));
+        let head = if dataset.is_regression() { "reg" } else { "cls" };
+        let available = env.engine.manifest.available_ns(head);
+        for (ci, cfg) in grid.iter().enumerate() {
+            let cfg = cfg.clone();
+            if cfg.mode.is_xpeft() && !available.contains(&cfg.n) {
+                results[ci].push(f64::NAN); // no artifact for this (head, N)
+                times[ci].push(f64::NAN);
+                continue;
+            }
+            let (mut scores, outcome, trainer) = env.run_config(&dataset, &cfg)?;
+            if let (Some(mm), MetricKind::AccMatchedMismatched) = (&mismatched, dataset.metric) {
+                let bank = cfg.mode.is_xpeft().then(|| env.bank(cfg.n, env.seed));
+                let s2 = crate::train::eval::evaluate(
+                    &env.engine, cfg.mode, &trainer, mm, bank.as_deref(), cfg.n, cfg.k, env.plm_seed,
+                )?;
+                scores.acc_mm = s2.acc;
+            }
+            results[ci].push(scores.combined());
+            times[ci].push(outcome.wallclock_s);
+
+            let mut row = Json::obj();
+            row.set("task", Json::Str(task.clone()));
+            row.set("config", Json::Str(config_label(&cfg)));
+            row.set("combined", Json::Num(scores.combined()));
+            for (name, v) in [
+                ("acc", scores.acc), ("f1", scores.f1), ("mcc", scores.mcc),
+                ("pcc", scores.pcc), ("src", scores.src), ("acc_mm", scores.acc_mm),
+            ] {
+                if let Some(v) = v {
+                    row.set(name, Json::Num(v));
+                }
+            }
+            row.set("train_seconds", Json::Num(outcome.wallclock_s));
+            row.set("final_loss", Json::Num(*outcome.losses.last().unwrap() as f64));
+            out_rows.push(row);
+        }
+    }
+
+    for (ci, cfg) in grid.iter().enumerate() {
+        print!("{:<20}", config_label(cfg));
+        for v in &results[ci] {
+            print!(" {:>7.2}", v);
+        }
+        println!();
+    }
+
+    let mut out = Json::obj();
+    out.set("rows", Json::Arr(out_rows));
+    out.set("steps", Json::Num(env.steps as f64));
+    env.write_json("table2", &out)?;
+    println!("\nwrote results/table2.json (per-metric detail = Tables 5/6)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Table 3 (+ Appendix Table 7): SuperGLUE — cb, boolq, and the diagnostic
+//! axb/axg (trained on rte-like data; axg additionally reports the Gender
+//! Parity Score over minimal pairs).
+
+use anyhow::Result;
+
+use crate::data::superglue;
+use crate::experiments::{config_grid, config_label, Env};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let ns = args.get_usize_list("ns", &[100, 200, 400])?;
+    let k = args.get_usize("k", 50)?;
+    let tasks: Vec<String> = match args.get("tasks") {
+        Some(t) => t.split(',').map(|s| s.trim().to_string()).collect(),
+        None => superglue::SUPERGLUE_TASKS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let grid = config_grid(&ns, k, env.steps, env.seed);
+    println!("Table 3 — SuperGLUE ({} tasks × {} configs)\n", tasks.len(), grid.len());
+    print!("{:<20}", "mode");
+    for t in &tasks {
+        print!(" {:>7}", t);
+        if t == "axg" {
+            print!(" {:>7}", "gps");
+        }
+    }
+    println!();
+
+    let mut out_rows = Vec::new();
+    let mut table: Vec<Vec<String>> = vec![Vec::new(); grid.len()];
+    for task in &tasks {
+        let dataset = superglue::build(task, mc.seq, mc.vocab, env.seed);
+        for (ci, cfg) in grid.iter().enumerate() {
+            let (scores, outcome, _) = env.run_config(&dataset, cfg)?;
+            table[ci].push(format!("{:>7.2}", scores.combined()));
+            if task == "axg" {
+                table[ci].push(format!("{:>7.1}", scores.gps.unwrap_or(f64::NAN)));
+            }
+            let mut row = Json::obj();
+            row.set("task", Json::Str(task.clone()));
+            row.set("config", Json::Str(config_label(cfg)));
+            row.set("combined", Json::Num(scores.combined()));
+            if let Some(g) = scores.gps {
+                row.set("gps", Json::Num(g));
+            }
+            if let Some(m) = scores.mcc {
+                row.set("mcc", Json::Num(m));
+            }
+            if let Some(a) = scores.acc {
+                row.set("acc", Json::Num(a));
+            }
+            row.set("train_seconds", Json::Num(outcome.wallclock_s));
+            out_rows.push(row);
+        }
+    }
+    for (ci, cfg) in grid.iter().enumerate() {
+        println!("{:<20} {}", config_label(cfg), table[ci].join(" "));
+    }
+
+    let mut out = Json::obj();
+    out.set("rows", Json::Arr(out_rows));
+    env.write_json("table3", &out)?;
+    println!("\nwrote results/table3.json (per-metric detail = Table 7)");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Table 4: trained parameter counts including/excluding the downstream
+//! head, at paper dims (formulas) and cross-checked against the *actual*
+//! trainable tensor sizes in the lowered artifacts.
+
+use anyhow::Result;
+
+use crate::masks::accounting::Dims;
+use crate::runtime::{Group, Manifest};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let paper = Dims::PAPER_EXPERIMENTS;
+    println!("Table 4 — trained parameters per profile (paper dims d=768 b=48 L=12)\n");
+    println!("{:>5} {:>12} {:>12} {:>12} {:>14}", "N", "c=2", "c=3", "c=15", "excl. head");
+    let mut rows = Vec::new();
+    for n in [100usize, 150, 200, 400, 800] {
+        let (incl2, excl) = paper.trained_params(n, 2);
+        let (incl3, _) = paper.trained_params(n, 3);
+        let (incl15, _) = paper.trained_params(n, 15);
+        println!(
+            "{:>5} {:>11.3}M {:>11.3}M {:>11.3}M {:>13.3}M",
+            n,
+            incl2 as f64 / 1e6,
+            incl3 as f64 / 1e6,
+            incl15 as f64 / 1e6,
+            excl as f64 / 1e6
+        );
+        let mut row = Json::obj();
+        row.set("n", Json::Num(n as f64));
+        row.set("incl_c2", Json::Num(incl2 as f64));
+        row.set("incl_c3", Json::Num(incl3 as f64));
+        row.set("incl_c15", Json::Num(incl15 as f64));
+        row.set("excl", Json::Num(excl as f64));
+        rows.push(row);
+    }
+
+    // cross-check against the real artifacts (tiny dims)
+    let artifacts = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    if let Ok(manifest) = Manifest::load(&artifacts) {
+        let mc = &manifest.config;
+        let tiny = Dims { d: mc.d, b: mc.bottleneck, layers: mc.layers };
+        println!("\nartifact cross-check (tiny dims d={} b={} L={}):", mc.d, mc.bottleneck, mc.layers);
+        for n in manifest.available_ns("cls") {
+            let a = manifest.find(&Manifest::artifact_name("xpeft", "train", "cls", n))?;
+            let actual: usize = a.inputs_in(Group::Trainable).map(|t| t.elements()).sum();
+            // formula counts masks + LN; artifact trainables add the padded head
+            let expect = tiny.xpeft_trainable_params(n) + tiny.head_params(mc.c_max);
+            println!("  N={n}: artifact trainables {actual}, formula (+{}-wide head) {expect}", mc.c_max);
+            assert_eq!(actual, expect, "manifest vs formula");
+        }
+    }
+
+    let mut out = Json::obj();
+    out.set("rows", Json::Arr(rows));
+    let env_out = std::path::PathBuf::from(args.get_str("out", "results"));
+    std::fs::create_dir_all(&env_out)?;
+    std::fs::write(env_out.join("table4.json"), out.to_string_pretty())?;
+    println!("\nwrote results/table4.json");
+    Ok(())
+}

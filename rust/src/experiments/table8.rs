@@ -1,0 +1,65 @@
+//! Tables 8/9: computation cost (training time). We report measured
+//! seconds per configuration on this testbed plus the *ratio* vs
+//! single_adapter — the paper's shape is that x_peft cost grows ~linearly
+//! with N and exceeds the baselines' (absolute hours are testbed-specific).
+
+use anyhow::Result;
+
+use crate::config::{Mode, TrainConfig};
+use crate::data::{glue, superglue};
+use crate::experiments::{config_label, Env};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let env = Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let steps = args.get_usize("bench-steps", 30)?;
+    let ns = args.get_usize_list("ns", &[100, 200, 400])?;
+    let tasks: Vec<String> = match args.get("tasks") {
+        Some(t) => t.split(',').map(|s| s.trim().to_string()).collect(),
+        None => vec!["sst2".into(), "cb".into()],
+    };
+
+    println!("Tables 8/9 — training time ({} steps per config, seconds + ratio vs single_adapter)\n", steps);
+    let mut out_rows = Vec::new();
+    for task in &tasks {
+        let ds = if glue::GLUE_TASKS.contains(&task.as_str()) {
+            glue::build(task, mc.seq, mc.vocab, env.seed)
+        } else {
+            superglue::build(task, mc.seq, mc.vocab, env.seed)
+        };
+        // baseline first
+        let sa_cfg = TrainConfig { mode: Mode::SingleAdapter, steps, seed: env.seed, ..Default::default() };
+        let (_, sa_out, _) = env.run_config(&ds, &sa_cfg)?;
+        let ho_cfg = TrainConfig { mode: Mode::HeadOnly, steps, seed: env.seed, ..Default::default() };
+        let (_, ho_out, _) = env.run_config(&ds, &ho_cfg)?;
+
+        println!("task {task}:");
+        let mut emit = |label: String, secs: f64| {
+            println!("  {:<22} {:>8.2}s {:>6.2}x", label, secs, secs / sa_out.wallclock_s);
+            let mut row = Json::obj();
+            row.set("task", Json::Str(task.clone()));
+            row.set("config", Json::Str(label));
+            row.set("seconds", Json::Num(secs));
+            row.set("ratio_vs_single_adapter", Json::Num(secs / sa_out.wallclock_s));
+            out_rows.push(row);
+        };
+        for &n in &ns {
+            for mode in [Mode::XpeftSoft, Mode::XpeftHard] {
+                let cfg = TrainConfig { mode, n, steps, seed: env.seed, ..Default::default() };
+                let (_, out, _) = env.run_config(&ds, &cfg)?;
+                emit(config_label(&cfg), out.wallclock_s);
+            }
+        }
+        emit("head_only".into(), ho_out.wallclock_s);
+        emit("single_adapter".into(), sa_out.wallclock_s);
+    }
+
+    let mut out = Json::obj();
+    out.set("rows", Json::Arr(out_rows));
+    out.set("steps", Json::Num(steps as f64));
+    env.write_json("table8", &out)?;
+    println!("\nwrote results/table8.json");
+    Ok(())
+}

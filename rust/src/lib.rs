@@ -1,0 +1,30 @@
+//! # X-PEFT — eXtremely Parameter-Efficient Fine-Tuning for extreme
+//! multi-profile scenarios
+//!
+//! Production-shaped reproduction of Kwak & Kim (2024): a rust coordinator
+//! serving/tuning hundreds of profiles whose per-profile state is two
+//! bit-packed mask tensors over a shared frozen adapter bank, with all
+//! numerics AOT-compiled from JAX/Pallas to PJRT executables (see
+//! DESIGN.md for the full architecture and experiment index).
+//!
+//! Layering:
+//! * [`runtime`] loads `artifacts/*.hlo.txt` via the PJRT C API and owns
+//!   every `train_step` / `eval_step` execution.
+//! * [`coordinator`] is the multi-profile system: profile store, router,
+//!   dynamic batcher, training scheduler, telemetry.
+//! * [`masks`], [`adapters`], [`data`], [`metrics`], [`train`],
+//!   [`analysis`] are the substrates the paper's evaluation needs.
+//! * [`experiments`] regenerates every table and figure.
+
+pub mod adapters;
+pub mod analysis;
+pub mod bench;
+pub mod experiments;
+pub mod coordinator;
+pub mod config;
+pub mod data;
+pub mod masks;
+pub mod runtime;
+pub mod train;
+pub mod metrics;
+pub mod util;

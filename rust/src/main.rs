@@ -1,0 +1,279 @@
+//! `xpeft` — CLI launcher for the X-PEFT multi-profile system.
+//!
+//! Commands:
+//!   repro <exp>        regenerate a paper table/figure (or `all`)
+//!   train-profile      tune masks for one profile on a synthetic task
+//!   serve              run the multi-profile serving demo
+//!   bench              quick micro-bench suite (full suites: cargo bench)
+//!   info               show artifact/manifest inventory
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use xpeft::adapters::AdapterBank;
+use xpeft::config::{Mode, ServeConfig, TrainConfig};
+use xpeft::coordinator::profile_store::ProfileStore;
+use xpeft::coordinator::scheduler::{Scheduler, TrainJob};
+use xpeft::coordinator::Service;
+use xpeft::data::{glue, lamp, superglue};
+use xpeft::experiments;
+use xpeft::info;
+use xpeft::runtime::Engine;
+use xpeft::util::cli::Args;
+use xpeft::util::log;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    log::set_level(log::level_from_str(&args.get_str("log", "info")));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "repro" => {
+            let exp = args.positional.first().map(String::as_str).unwrap_or("all");
+            experiments::run(exp, args)
+        }
+        "train-profile" => train_profile(args),
+        "serve" => serve(args),
+        "info" => show_info(args),
+        "bench" => quick_bench(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `xpeft help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "xpeft — eXtremely Parameter-Efficient Fine-Tuning, multi-profile system
+
+USAGE: xpeft <command> [options]
+
+COMMANDS
+  repro <exp>       regenerate paper results: table1 table2 table3 table4
+                    table8 fig1 fig3 fig4 fig5a fig5b fig5c fig6 fig7 | all
+  train-profile     tune one profile: --task sst2 --mode soft|hard|sa|ho
+                    --n 100 --k 50 --steps 300 --lr 0.02 --seed 42
+  serve             multi-profile serving demo: --profiles 8 --requests 256
+                    --max-batch 16 --deadline-us 2000
+  info              artifact inventory from artifacts/manifest.json
+  bench             quick micro-bench suite (full: cargo bench)
+
+COMMON OPTIONS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --out DIR         results directory (default: results)
+  --steps N         train steps per run for repro (default: 150)
+  --seed N          master seed (default: 42)
+  --log LEVEL       debug|info|warn|error"
+    );
+}
+
+fn show_info(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let engine = Engine::new(&dir)?;
+    let mc = &engine.manifest.config;
+    println!(
+        "model: d={} L={} heads={} ffn={} seq={} batch={} b={} vocab={}",
+        mc.d, mc.layers, mc.heads, mc.ffn, mc.seq, mc.batch, mc.bottleneck, mc.vocab
+    );
+    println!("artifacts ({}):", engine.manifest.artifacts.len());
+    for a in &engine.manifest.artifacts {
+        println!(
+            "  {:<28} inputs={:<3} mode={} head={} n={}",
+            a.name,
+            a.inputs.len(),
+            a.mode,
+            a.head,
+            a.n
+        );
+    }
+    Ok(())
+}
+
+fn train_profile(args: &Args) -> Result<()> {
+    let env = experiments::Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let task = args.get_str("task", "sst2");
+    let dataset = if glue::GLUE_TASKS.contains(&task.as_str()) {
+        glue::build(&task, mc.seq, mc.vocab, env.seed)
+    } else if superglue::SUPERGLUE_TASKS.contains(&task.as_str()) {
+        superglue::build(&task, mc.seq, mc.vocab, env.seed)
+    } else {
+        bail!("unknown task '{task}'");
+    };
+    let cfg = TrainConfig { steps: 300, ..Default::default() }.override_from_args(args)?;
+    let head = if dataset.is_regression() { "reg" } else { "cls" };
+    cfg.validate(&env.engine.manifest.available_ns(head))?;
+
+    info!("train", "task={task} mode={} n={} steps={}", cfg.mode.label(), cfg.n, cfg.steps);
+    let (scores, outcome, trainer) = env.run_config(&dataset, &cfg)?;
+    println!("loss: {}", xpeft::analysis::sparkline(&outcome.losses, 50));
+    println!(
+        "first loss {:.4} → final loss {:.4} ({} steps, {:.1}s)",
+        outcome.losses.first().unwrap(),
+        outcome.losses.last().unwrap(),
+        outcome.steps,
+        outcome.wallclock_s
+    );
+    println!("dev scores: {scores:?}  (combined {:.4})", scores.combined());
+    if cfg.mode.is_xpeft() {
+        let masks = trainer.profile_masks(cfg.mode, mc.layers, cfg.n, cfg.k)?;
+        println!(
+            "profile state: {} bytes ({})",
+            masks.stored_bytes(),
+            if cfg.mode.is_hard() { "bit-packed k-hot" } else { "f32 soft weights" }
+        );
+    }
+    Ok(())
+}
+
+/// Multi-profile serving demo: tune a few profiles via the scheduler, then
+/// serve a request stream and report latency/throughput.
+fn serve(args: &Args) -> Result<()> {
+    let env = experiments::Env::new(args)?;
+    let mc = env.engine.manifest.config.clone();
+    let profiles = args.get_usize("profiles", 8)?;
+    let requests = args.get_usize("requests", 256)?;
+    let n = args.get_usize("n", 150)?;
+    let steps = args.get_usize("tune-steps", 60)?;
+    let serve_cfg = ServeConfig::default().override_from_args(args)?;
+
+    let engine = Arc::new(Engine::new(&std::path::PathBuf::from(
+        args.get_str("artifacts", "artifacts"),
+    ))?);
+    let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, env.seed));
+    let store = Arc::new(Mutex::new(ProfileStore::new(serve_cfg.mask_cache)));
+
+    // 1) tune profiles through the scheduler (the "new profile" path)
+    let corpus = lamp::generate(profiles, mc.seq, mc.vocab, env.seed, 12, 80);
+    let scheduler = Scheduler::start(engine.clone(), bank.clone(), store.clone(), env.plm_seed);
+    for p in &corpus.profiles {
+        scheduler.submit(TrainJob {
+            profile_id: p.author_id as u64,
+            dataset: xpeft::data::Dataset {
+                name: format!("author{}", p.author_id),
+                train: p.train.clone(),
+                dev: p.dev.clone(),
+                num_classes: lamp::CATEGORIES,
+                metric: xpeft::data::MetricKind::Acc,
+            },
+            cfg: TrainConfig {
+                mode: Mode::XpeftHard,
+                n,
+                steps,
+                seed: env.seed + p.author_id as u64,
+                ..Default::default()
+            },
+            keep_aux: true,
+        })?;
+    }
+    info!("serve", "tuning {profiles} profiles ({steps} steps each)…");
+    scheduler.wait_all();
+    {
+        let st = store.lock().unwrap();
+        info!(
+            "serve",
+            "profile store ready: {} profiles, {:.0} B/profile (masks)",
+            st.len(),
+            st.mean_profile_bytes()
+        );
+    }
+
+    // 2) serve a request stream drawn from the corpus
+    let svc = Service::start(engine, store, bank, serve_cfg, lamp::CATEGORIES, env.plm_seed)?;
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    let mut correct = 0usize;
+    let mut received = 0usize;
+    let mut expected: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    'outer: loop {
+        for art in &corpus.articles {
+            if submitted >= requests {
+                break 'outer;
+            }
+            let id = svc.submit(art.author_id as u64, &art.news_text)?;
+            expected.insert(id, art.news_category);
+            submitted += 1;
+            if let Some(resp) = svc.recv_timeout(std::time::Duration::from_micros(10)) {
+                received += 1;
+                if expected.get(&resp.request_id) == Some(&resp.prediction) {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    while received < submitted {
+        match svc.recv_timeout(std::time::Duration::from_secs(10)) {
+            Some(resp) => {
+                received += 1;
+                if expected.get(&resp.request_id) == Some(&resp.prediction) {
+                    correct += 1;
+                }
+            }
+            None => bail!("timed out waiting for responses ({received}/{submitted})"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = svc.shutdown();
+    println!("\nserving summary:");
+    println!("  requests        {submitted}");
+    println!("  wallclock       {wall:.2}s  ({:.1} req/s)", submitted as f64 / wall);
+    println!("  mean batch      {:.2}", snap.mean_batch);
+    println!("  latency p50     {:.1} ms", snap.p50_latency_us / 1e3);
+    println!("  latency p95     {:.1} ms", snap.p95_latency_us / 1e3);
+    println!("  latency p99     {:.1} ms", snap.p99_latency_us / 1e3);
+    println!("  online accuracy {:.3}", correct as f64 / received as f64);
+    Ok(())
+}
+
+fn quick_bench(args: &Args) -> Result<()> {
+    use xpeft::bench::{Bench, Suite};
+    use xpeft::masks::MaskLogits;
+    use xpeft::util::rng::Rng;
+
+    let mut suite = Suite::default();
+    let mut rng = Rng::new(args.get_u64("seed", 42)?);
+
+    // mask binarize + pack/unpack (the serving-path hot ops)
+    let logits = MaskLogits {
+        layers: 12,
+        n: 400,
+        a: rng.normal_vec(12 * 400, 1.0),
+        b: rng.normal_vec(12 * 400, 1.0),
+    };
+    suite.add(Bench::default().run("binarize L=12 N=400 k=50", || logits.binarize(50)));
+    let hard = logits.binarize(50);
+    suite.add(Bench::default().run("unpack to weights L=12 N=400", || hard.to_weights()));
+    suite.add(Bench::default().run("pack to bytes", || hard.to_bytes()));
+
+    // store lookup at scale
+    let mut store = ProfileStore::new(1024);
+    for pid in 0..10_000u64 {
+        store.insert(
+            pid,
+            xpeft::coordinator::profile_store::ProfileRecord {
+                masks: xpeft::masks::ProfileMasks::Hard(logits.binarize(50)),
+                aux: None,
+            },
+        );
+    }
+    let mut i = 0u64;
+    suite.add(Bench::default().with_items(1).run("profile store lookup (10k profiles)", || {
+        i = (i + 7919) % 10_000;
+        store.weights(i).unwrap()
+    }));
+    Ok(())
+}

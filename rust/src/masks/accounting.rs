@@ -1,0 +1,155 @@
+//! Parameter/memory accounting — the closed forms behind Table 1, Table 4
+//! and Figure 1, parameterized over model dims so we can report both the
+//! paper's bert-base numbers and this repo's tiny-PLM numbers.
+
+/// Dimensions entering the Table 1 formulas.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dims {
+    /// adapter layer input dimension d (bert-base: 768)
+    pub d: usize,
+    /// bottleneck dimension b
+    pub b: usize,
+    /// number of PLM blocks L (bert-base: 12)
+    pub layers: usize,
+}
+
+impl Dims {
+    /// The configuration behind the paper's printed Table 1 counts.
+    /// (The caption says b=64, but the printed numbers — 3.5K/5.9K/10.7K
+    /// trainable, 884.7K adapter — all solve for b=48, the experimental
+    /// reduction-factor-16 bottleneck; we match the printed numbers.)
+    pub const PAPER_TABLE1: Dims = Dims { d: 768, b: 48, layers: 12 };
+    /// The paper's experimental configuration (r=16 → b=48).
+    pub const PAPER_EXPERIMENTS: Dims = Dims { d: 768, b: 48, layers: 12 };
+
+    /// X-PEFT trainable parameters per profile: `2(N+b)·L`
+    /// (two mask rows of width N + LN affine of width b, per block).
+    pub fn xpeft_trainable_params(&self, n: usize) -> usize {
+        2 * (n + self.b) * self.layers
+    }
+
+    /// Adapter-tuning trainable parameters per profile: `2(d·b)·L`.
+    pub fn adapter_trainable_params(&self) -> usize {
+        2 * self.d * self.b * self.layers
+    }
+
+    /// X-PEFT hard-mask stored bytes per profile: `2·⌈N/8⌉·L`.
+    pub fn xpeft_hard_bytes(&self, n: usize) -> usize {
+        2 * n.div_ceil(8) * self.layers
+    }
+
+    /// X-PEFT soft-mask stored bytes per profile: `2·N·L·4`.
+    pub fn xpeft_soft_bytes(&self, n: usize) -> usize {
+        2 * n * self.layers * 4
+    }
+
+    /// Adapter-tuning stored bytes per profile: `2(d·b)·L·4`.
+    pub fn adapter_bytes(&self) -> usize {
+        self.adapter_trainable_params() * 4
+    }
+
+    /// Classification-head parameters (`d·c + c`).
+    pub fn head_params(&self, c: usize) -> usize {
+        self.d * c + c
+    }
+
+    /// Table 4: trained params per profile including / excluding head.
+    /// Excluding-head = masks + LN affine = `2(N+b)·L`.
+    pub fn trained_params(&self, n: usize, c: usize) -> (usize, usize) {
+        let excl = self.xpeft_trainable_params(n);
+        (excl + self.head_params(c), excl)
+    }
+
+    /// Figure 1: cumulative profile-state bytes after P profiles.
+    /// `bank_n` adapters are trained conventionally first (warm start) and
+    /// shared; each subsequent profile stores only its mask bytes.
+    pub fn cumulative_bytes_xpeft_hard(&self, p: usize, bank_n: usize) -> u64 {
+        let warm = p.min(bank_n) as u64 * self.adapter_bytes() as u64;
+        let rest = p.saturating_sub(bank_n) as u64 * self.xpeft_hard_bytes(bank_n) as u64;
+        warm + rest
+    }
+
+    /// Figure 1 baseline: every profile trains its own adapter.
+    pub fn cumulative_bytes_adapter(&self, p: usize) -> u64 {
+        p as u64 * self.adapter_bytes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T1: Dims = Dims::PAPER_TABLE1;
+
+    #[test]
+    fn table1_trainable_counts() {
+        // Paper Table 1: N=100 → "3.5K", N=200 → "5.9K", N=400 → "10.7K".
+        assert_eq!(T1.xpeft_trainable_params(100), 3552);
+        assert_eq!(T1.xpeft_trainable_params(200), 5952);
+        assert_eq!(T1.xpeft_trainable_params(400), 10752);
+        assert_eq!(T1.adapter_trainable_params(), 884736); // "884.7K"
+        // memory: 884736·4 = 3538944 ≈ "3.5M"
+    }
+
+    #[test]
+    fn table1_memory_bytes() {
+        assert_eq!(T1.xpeft_hard_bytes(100), 312); // "0.3K"
+        assert_eq!(T1.xpeft_hard_bytes(200), 600); // "0.6K"
+        assert_eq!(T1.xpeft_hard_bytes(400), 1200); // "1.2K"
+        assert_eq!(T1.xpeft_soft_bytes(100), 9600); // "10K"
+        assert_eq!(T1.xpeft_soft_bytes(200), 19200); // "20K"
+        assert_eq!(T1.xpeft_soft_bytes(400), 38400); // "40K"
+        assert_eq!(T1.adapter_bytes(), 3538944); // "3.5M"
+    }
+
+    #[test]
+    fn headline_ratios() {
+        // ~1/100 trainable params, ~1/10,000 memory (paper abstract).
+        let params_ratio =
+            T1.adapter_trainable_params() as f64 / T1.xpeft_trainable_params(400) as f64;
+        assert!(params_ratio > 75.0, "{params_ratio}");
+        let mem_ratio = T1.adapter_bytes() as f64 / T1.xpeft_hard_bytes(100) as f64;
+        assert!(mem_ratio > 10_000.0, "{mem_ratio}");
+    }
+
+    #[test]
+    fn table4_param_counts() {
+        // Paper Table 4 at experiment dims (b=48): excluding head —
+        // N=100→0.004M, N=800→0.020M.
+        let d = Dims::PAPER_EXPERIMENTS;
+        let (_, excl100) = d.trained_params(100, 2);
+        let (_, excl800) = d.trained_params(800, 2);
+        assert_eq!(excl100, 3552); // ≈ 0.004M
+        assert_eq!(excl800, 20352); // ≈ 0.020M
+    }
+
+    #[test]
+    fn fig1_crossover_shape() {
+        // After the warm bank (150 adapters), cumulative X-PEFT storage grows
+        // by ~0.4KB/profile while adapter tuning grows by 3.5MB/profile.
+        let bank = 150;
+        let p = 10_000;
+        let xp = T1.cumulative_bytes_xpeft_hard(p, bank);
+        let ad = T1.cumulative_bytes_adapter(p);
+        assert!(ad > 50 * xp, "ad={ad} xp={xp}");
+        // At P <= bank they match (warm start trains real adapters).
+        assert_eq!(
+            T1.cumulative_bytes_xpeft_hard(bank, bank),
+            T1.cumulative_bytes_adapter(bank)
+        );
+    }
+
+    #[test]
+    fn monotone_in_n_and_p() {
+        for n in [100, 200, 400, 800] {
+            assert!(T1.xpeft_hard_bytes(n) < T1.xpeft_soft_bytes(n));
+            assert!(T1.xpeft_soft_bytes(n) < T1.adapter_bytes());
+        }
+        let mut last = 0;
+        for p in [1usize, 10, 100, 1000] {
+            let c = T1.cumulative_bytes_xpeft_hard(p, 150);
+            assert!(c >= last);
+            last = c;
+        }
+    }
+}

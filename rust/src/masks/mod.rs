@@ -1,0 +1,391 @@
+//! Mask tensors — the paper's per-profile state (§3).
+//!
+//! A profile is personalized by two mask tensors `M_A, M_B ∈ R^{L×N}`.
+//! Soft masks are stored as f32 rows (softmax applied at use time); hard
+//! masks are binarized to k-hot rows after training and stored **bit-packed**
+//! (`2·⌈N/8⌉·L` bytes per profile — the 10,000× memory headline of Table 1 /
+//! Figure 1).
+
+pub mod accounting;
+
+use anyhow::{bail, Result};
+
+/// One profile's mask pair in trainable (logit) form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskLogits {
+    pub layers: usize,
+    pub n: usize,
+    /// Row-major [L, N].
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl MaskLogits {
+    pub fn zeros(layers: usize, n: usize) -> Self {
+        MaskLogits { layers, n, a: vec![0.0; layers * n], b: vec![0.0; layers * n] }
+    }
+
+    pub fn row_a(&self, l: usize) -> &[f32] {
+        &self.a[l * self.n..(l + 1) * self.n]
+    }
+
+    pub fn row_b(&self, l: usize) -> &[f32] {
+        &self.b[l * self.n..(l + 1) * self.n]
+    }
+
+    /// Softmax each row → normalized soft weights [L, N].
+    pub fn soft_weights(&self) -> MaskWeights {
+        MaskWeights {
+            layers: self.layers,
+            n: self.n,
+            a: softmax_rows(&self.a, self.layers, self.n),
+            b: softmax_rows(&self.b, self.layers, self.n),
+        }
+    }
+
+    /// Binarize each row to its top-k entries → a packed hard mask.
+    pub fn binarize(&self, k: usize) -> HardMask {
+        HardMask {
+            layers: self.layers,
+            n: self.n,
+            k,
+            a: pack_topk_rows(&self.a, self.layers, self.n, k),
+            b: pack_topk_rows(&self.b, self.layers, self.n, k),
+        }
+    }
+}
+
+/// Normalized per-row weights fed to the eval/serve executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskWeights {
+    pub layers: usize,
+    pub n: usize,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Bit-packed k-hot masks — the byte-level profile state of Table 1.
+///
+/// Layout: rows are packed independently, `⌈N/8⌉` bytes per row, LSB-first
+/// within each byte; `a` then `b`, `layers` rows each.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HardMask {
+    pub layers: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a: Vec<u8>,
+    pub b: Vec<u8>,
+}
+
+impl HardMask {
+    pub fn row_bytes(&self) -> usize {
+        self.n.div_ceil(8)
+    }
+
+    /// Total stored bytes for this profile's masks (`2·⌈N/8⌉·L`).
+    pub fn stored_bytes(&self) -> usize {
+        self.a.len() + self.b.len()
+    }
+
+    /// Expand back to normalized weights (each set bit → 1/k) for the eval
+    /// executable. Exact inverse of the training-side k-hot/k convention.
+    pub fn to_weights(&self) -> MaskWeights {
+        MaskWeights {
+            layers: self.layers,
+            n: self.n,
+            a: unpack_rows(&self.a, self.layers, self.n, 1.0 / self.k as f32),
+            b: unpack_rows(&self.b, self.layers, self.n, 1.0 / self.k as f32),
+        }
+    }
+
+    /// Indices of selected adapters in a layer's A-row (analysis/heatmaps).
+    pub fn selected_a(&self, layer: usize) -> Vec<usize> {
+        selected_in_row(&self.a, layer, self.n)
+    }
+
+    pub fn selected_b(&self, layer: usize) -> Vec<usize> {
+        selected_in_row(&self.b, layer, self.n)
+    }
+
+    /// Hamming distance between two profiles' packed masks.
+    pub fn hamming(&self, other: &HardMask) -> Result<u32> {
+        if self.n != other.n || self.layers != other.layers {
+            bail!("mask shape mismatch");
+        }
+        let d = |x: &[u8], y: &[u8]| -> u32 {
+            x.iter().zip(y).map(|(a, b)| (a ^ b).count_ones()).sum()
+        };
+        Ok(d(&self.a, &other.a) + d(&self.b, &other.b))
+    }
+
+    /// Serialize: 4 u32 header (layers, n, k, reserved) + packed bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.a.len() + self.b.len());
+        for v in [self.layers as u32, self.n as u32, self.k as u32, 0u32] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.a);
+        out.extend_from_slice(&self.b);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<HardMask> {
+        if bytes.len() < 16 {
+            bail!("hard mask blob too short");
+        }
+        let rd = |i: usize| u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+        let (layers, n, k) = (rd(0), rd(4), rd(8));
+        let row = n.div_ceil(8);
+        let need = 16 + 2 * layers * row;
+        if bytes.len() != need {
+            bail!("hard mask blob size {} != expected {need}", bytes.len());
+        }
+        Ok(HardMask {
+            layers,
+            n,
+            k,
+            a: bytes[16..16 + layers * row].to_vec(),
+            b: bytes[16 + layers * row..].to_vec(),
+        })
+    }
+}
+
+/// A profile's persisted mask state: the two storage classes of Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProfileMasks {
+    /// `2NL` f32 = `2·N·L·4` bytes.
+    Soft(MaskWeights),
+    /// `2·⌈N/8⌉·L` bytes.
+    Hard(HardMask),
+}
+
+impl ProfileMasks {
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            ProfileMasks::Soft(w) => (w.a.len() + w.b.len()) * 4,
+            ProfileMasks::Hard(h) => h.stored_bytes(),
+        }
+    }
+
+    pub fn to_weights(&self) -> MaskWeights {
+        match self {
+            ProfileMasks::Soft(w) => w.clone(),
+            ProfileMasks::Hard(h) => h.to_weights(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            ProfileMasks::Soft(w) => w.n,
+            ProfileMasks::Hard(h) => h.n,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// row helpers
+// ---------------------------------------------------------------------------
+
+fn softmax_rows(logits: &[f32], layers: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; layers * n];
+    for l in 0..layers {
+        let row = &logits[l * n..(l + 1) * n];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &x) in out[l * n..(l + 1) * n].iter_mut().zip(row) {
+            *o = (x - max).exp();
+            sum += *o;
+        }
+        for o in &mut out[l * n..(l + 1) * n] {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+/// Top-k indices of a row (ties resolved by lower index, matching a stable
+/// descending sort — same convention as jnp.argsort(-x) in the L2 model).
+pub fn topk_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&i, &j| row[j].partial_cmp(&row[i]).unwrap().then(i.cmp(&j)));
+    idx.truncate(k.min(row.len()));
+    idx
+}
+
+fn pack_topk_rows(logits: &[f32], layers: usize, n: usize, k: usize) -> Vec<u8> {
+    let row_bytes = n.div_ceil(8);
+    let mut out = vec![0u8; layers * row_bytes];
+    for l in 0..layers {
+        for i in topk_indices(&logits[l * n..(l + 1) * n], k) {
+            out[l * row_bytes + i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+fn unpack_rows(packed: &[u8], layers: usize, n: usize, value: f32) -> Vec<f32> {
+    let row_bytes = n.div_ceil(8);
+    let mut out = vec![0.0f32; layers * n];
+    for l in 0..layers {
+        for i in 0..n {
+            if packed[l * row_bytes + i / 8] & (1 << (i % 8)) != 0 {
+                out[l * n + i] = value;
+            }
+        }
+    }
+    out
+}
+
+fn selected_in_row(packed: &[u8], layer: usize, n: usize) -> Vec<usize> {
+    let row_bytes = n.div_ceil(8);
+    (0..n)
+        .filter(|&i| packed[layer * row_bytes + i / 8] & (1 << (i % 8)) != 0)
+        .collect()
+}
+
+/// Euclidean distance between two profiles' flattened mask weights
+/// (used by the Fig 3 t-SNE input and the Fig 6 most-distant pair).
+pub fn euclidean(a: &MaskWeights, b: &MaskWeights) -> f64 {
+    let d = |x: &[f32], y: &[f32]| -> f64 {
+        x.iter().zip(y).map(|(p, q)| ((p - q) as f64).powi(2)).sum::<f64>()
+    };
+    (d(&a.a, &b.a) + d(&a.b, &b.b)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_logits(layers: usize, n: usize, seed: u64) -> MaskLogits {
+        let mut r = Rng::new(seed);
+        MaskLogits {
+            layers,
+            n,
+            a: r.normal_vec(layers * n, 1.0),
+            b: r.normal_vec(layers * n, 1.0),
+        }
+    }
+
+    #[test]
+    fn soft_rows_sum_to_one() {
+        let m = random_logits(4, 100, 1).soft_weights();
+        for l in 0..4 {
+            let s: f32 = m.a[l * 100..(l + 1) * 100].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn binarize_sets_exactly_k_bits_per_row() {
+        for (n, k) in [(100, 50), (150, 50), (37, 5), (8, 8)] {
+            let h = random_logits(3, n, n as u64).binarize(k);
+            for l in 0..3 {
+                assert_eq!(h.selected_a(l).len(), k, "n={n} k={k}");
+                assert_eq!(h.selected_b(l).len(), k);
+            }
+        }
+    }
+
+    #[test]
+    fn binarize_picks_largest_logits() {
+        let mut m = MaskLogits::zeros(1, 6);
+        m.a = vec![0.1, 0.9, 0.3, 0.8, 0.2, 0.0];
+        m.b = m.a.clone();
+        let h = m.binarize(2);
+        assert_eq!(h.selected_a(0), vec![1, 3]);
+    }
+
+    #[test]
+    fn hard_roundtrip_bytes() {
+        let h = random_logits(12, 400, 2).binarize(50);
+        let back = HardMask::from_bytes(&h.to_bytes()).unwrap();
+        assert_eq!(h, back);
+    }
+
+    #[test]
+    fn hard_blob_size_matches_table1_formula() {
+        // Table 1: memory = 2·⌈N/8⌉·L bytes (+16B header in our format).
+        for (n, l) in [(100usize, 12usize), (200, 12), (400, 12)] {
+            let h = random_logits(l, n, 3).binarize(50);
+            assert_eq!(h.stored_bytes(), 2 * n.div_ceil(8) * l);
+            assert_eq!(h.to_bytes().len(), 16 + 2 * n.div_ceil(8) * l);
+        }
+    }
+
+    #[test]
+    fn to_weights_is_khot_over_k() {
+        let h = random_logits(2, 40, 4).binarize(10);
+        let w = h.to_weights();
+        for l in 0..2 {
+            let row = &w.a[l * 40..(l + 1) * 40];
+            let nz = row.iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(nz, 10);
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_property_sweep() {
+        // hand-rolled property test: random shapes/k, pack→unpack→repack.
+        let mut r = Rng::new(99);
+        for trial in 0..50 {
+            let n = 1 + r.below(512);
+            let layers = 1 + r.below(13);
+            let k = 1 + r.below(n);
+            let m = random_logits(layers, n, trial);
+            let h = m.binarize(k);
+            let w = h.to_weights();
+            // repack from weights: nonzero positions == set bits
+            for l in 0..layers {
+                let sel = h.selected_a(l);
+                let from_w: Vec<usize> = (0..n)
+                    .filter(|&i| w.a[l * n + i] > 0.0)
+                    .collect();
+                assert_eq!(sel, from_w);
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_zero_for_identical() {
+        let h = random_logits(4, 64, 5).binarize(16);
+        assert_eq!(h.hamming(&h).unwrap(), 0);
+    }
+
+    #[test]
+    fn hamming_detects_single_bit() {
+        let h = random_logits(4, 64, 6).binarize(16);
+        let mut h2 = h.clone();
+        h2.a[0] ^= 1;
+        assert_eq!(h.hamming(&h2).unwrap(), 1);
+    }
+
+    #[test]
+    fn euclidean_zero_and_symmetry() {
+        let a = random_logits(2, 50, 7).soft_weights();
+        let b = random_logits(2, 50, 8).soft_weights();
+        assert_eq!(euclidean(&a, &a), 0.0);
+        assert!((euclidean(&a, &b) - euclidean(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_masks_stored_bytes() {
+        let m = random_logits(12, 100, 9);
+        let soft = ProfileMasks::Soft(m.soft_weights());
+        let hard = ProfileMasks::Hard(m.binarize(50));
+        // Table 1, N=100, L=12: soft 2·100·12·4 = 9.6KB; hard 2·13·12 = 312B.
+        assert_eq!(soft.stored_bytes(), 9600);
+        assert_eq!(hard.stored_bytes(), 312);
+    }
+
+    #[test]
+    fn from_bytes_rejects_corrupt() {
+        assert!(HardMask::from_bytes(&[0u8; 3]).is_err());
+        let h = random_logits(2, 16, 10).binarize(4);
+        let mut blob = h.to_bytes();
+        blob.pop();
+        assert!(HardMask::from_bytes(&blob).is_err());
+    }
+}

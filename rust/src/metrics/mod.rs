@@ -1,0 +1,203 @@
+//! Evaluation metrics — the official GLUE/SuperGLUE metric set the paper
+//! reports (Tables 2/3/5/6/7): accuracy, F1 (binary + macro), Matthews
+//! correlation, Pearson/Spearman, Gender Parity Score, and the 'Comb'
+//! combination rule (mean of a task's official metrics).
+
+use crate::util::stats;
+
+/// Classification accuracy.
+pub fn accuracy(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hit = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hit as f64 / preds.len() as f64
+}
+
+/// Binary F1 of the positive class (GLUE convention for mrpc/qqp).
+pub fn f1_binary(preds: &[usize], labels: &[usize], positive: usize) -> f64 {
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fun = 0.0;
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p == positive, l == positive) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fun += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fun);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Macro-averaged F1 over `classes` labels (LaMP Fig 4 reports macro-F1).
+pub fn f1_macro(preds: &[usize], labels: &[usize], classes: usize) -> f64 {
+    if classes == 0 {
+        return 0.0;
+    }
+    let per: Vec<f64> = (0..classes).map(|c| f1_binary(preds, labels, c)).collect();
+    stats::mean(&per)
+}
+
+/// Matthews correlation coefficient, binary (cola) via the phi formula and
+/// multiclass (axb reuses binary) via the generalized R_k statistic.
+pub fn mcc(preds: &[usize], labels: &[usize], classes: usize) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let n = preds.len();
+    if n == 0 {
+        return 0.0;
+    }
+    // confusion matrix c[l][p]
+    let mut c = vec![vec![0.0f64; classes]; classes];
+    for (&p, &l) in preds.iter().zip(labels) {
+        c[l][p] += 1.0;
+    }
+    let total = n as f64;
+    let mut correct = 0.0;
+    for k in 0..classes {
+        correct += c[k][k];
+    }
+    let pred_tot: Vec<f64> = (0..classes).map(|p| (0..classes).map(|l| c[l][p]).sum()).collect();
+    let label_tot: Vec<f64> = (0..classes).map(|l| c[l].iter().sum()).collect();
+    let cov_xy = correct * total
+        - label_tot.iter().zip(&pred_tot).map(|(a, b)| a * b).sum::<f64>();
+    let cov_xx = total * total - pred_tot.iter().map(|x| x * x).sum::<f64>();
+    let cov_yy = total * total - label_tot.iter().map(|x| x * x).sum::<f64>();
+    if cov_xx == 0.0 || cov_yy == 0.0 {
+        return 0.0;
+    }
+    cov_xy / (cov_xx.sqrt() * cov_yy.sqrt())
+}
+
+/// Pearson correlation (stsb).
+pub fn pearson(preds: &[f64], targets: &[f64]) -> f64 {
+    stats::pearson(preds, targets)
+}
+
+/// Spearman rank correlation (stsb).
+pub fn spearman(preds: &[f64], targets: &[f64]) -> f64 {
+    stats::spearman(preds, targets)
+}
+
+/// Gender Parity Score (axg, Winogender): percentage of minimal pairs on
+/// which the model's prediction is identical across the gender swap.
+pub fn gender_parity(pair_preds: &[(usize, usize)]) -> f64 {
+    if pair_preds.is_empty() {
+        return 0.0;
+    }
+    let same = pair_preds.iter().filter(|(a, b)| a == b).count();
+    100.0 * same as f64 / pair_preds.len() as f64
+}
+
+/// The score bundle for one evaluation run.
+#[derive(Debug, Clone, Default)]
+pub struct Scores {
+    pub acc: Option<f64>,
+    pub f1: Option<f64>,
+    pub mcc: Option<f64>,
+    pub pcc: Option<f64>,
+    pub src: Option<f64>,
+    pub acc_mm: Option<f64>,
+    pub gps: Option<f64>,
+}
+
+impl Scores {
+    /// GLUE 'Comb' rule: mean of the task's official metrics (Table 2).
+    pub fn combined(&self) -> f64 {
+        let parts: Vec<f64> = [self.acc, self.f1, self.mcc, self.pcc, self.src, self.acc_mm]
+            .iter()
+            .flatten()
+            .copied()
+            .collect();
+        stats::mean(&parts)
+    }
+
+    /// Single headline number for ranking (combined, or GPS/100 if only GPS).
+    pub fn headline(&self) -> f64 {
+        let c = self.combined();
+        if c != 0.0 || self.gps.is_none() {
+            c
+        } else {
+            self.gps.unwrap() / 100.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_zero() {
+        assert_eq!(f1_binary(&[1, 1, 0], &[1, 1, 0], 1), 1.0);
+        assert_eq!(f1_binary(&[0, 0, 0], &[1, 1, 1], 1), 0.0);
+    }
+
+    #[test]
+    fn f1_known_value() {
+        // tp=1, fp=1, fn=1 → p=r=0.5 → f1=0.5
+        assert!((f1_binary(&[1, 1, 0], &[1, 0, 1], 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_macro_averages_classes() {
+        let preds = [0, 0, 1, 1];
+        let labels = [0, 0, 1, 1];
+        assert_eq!(f1_macro(&preds, &labels, 2), 1.0);
+        // class 2 never appears → f1 0 pulls macro down
+        assert!((f1_macro(&preds, &labels, 3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mcc_perfect_inverse_random() {
+        let l = [0, 1, 0, 1, 0, 1];
+        assert!((mcc(&l, &l, 2) - 1.0).abs() < 1e-12);
+        let inv: Vec<usize> = l.iter().map(|&x| 1 - x).collect();
+        assert!((mcc(&inv, &l, 2) + 1.0).abs() < 1e-12);
+        // constant predictions → 0
+        assert_eq!(mcc(&[1, 1, 1, 1, 1, 1], &l, 2), 0.0);
+    }
+
+    #[test]
+    fn mcc_binary_matches_phi_formula() {
+        // tp=3 tn=2 fp=1 fn=1 → phi = (3*2-1*1)/sqrt(4*4*3*3) = 5/12
+        let labels = [1, 1, 1, 1, 0, 0, 0];
+        let preds = [1, 1, 1, 0, 1, 0, 0];
+        assert!((mcc(&preds, &labels, 2) - 5.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gps_counts_matched_pairs() {
+        let pairs = [(0, 0), (1, 1), (0, 1), (1, 0)];
+        assert_eq!(gender_parity(&pairs), 50.0);
+        assert_eq!(gender_parity(&[]), 0.0);
+    }
+
+    #[test]
+    fn combined_means_available_metrics() {
+        let s = Scores { acc: Some(0.8), f1: Some(0.6), ..Default::default() };
+        assert!((s.combined() - 0.7).abs() < 1e-12);
+        let only_gps = Scores { gps: Some(90.0), ..Default::default() };
+        assert!((only_gps.headline() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlations_reexported() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [1.1, 2.1, 2.9, 4.2];
+        assert!(pearson(&x, &y) > 0.99);
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+}

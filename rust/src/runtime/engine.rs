@@ -1,0 +1,163 @@
+//! The PJRT engine: loads HLO-text artifacts, compiles them once on the CPU
+//! client and executes them from the request/training path. This is the
+//! only module that touches the `xla` crate FFI at execution time.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::literal::{from_literal, Tensor};
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::info;
+
+/// One compiled executable plus its manifest spec.
+pub struct Program {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the wrapped pointers come from the PJRT C API, which guarantees
+// thread-safe clients/executables (PJRT_Client and PJRT_LoadedExecutable are
+// documented as thread-safe; the CPU plugin serializes internally). The
+// `xla` crate merely forgot the markers. We never hand out mutable aliases
+// to the underlying objects.
+unsafe impl Send for Program {}
+unsafe impl Sync for Program {}
+
+impl Program {
+    /// Execute with fully-materialized input literals (manifest order).
+    /// Returns named outputs in manifest order.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unpack the root tuple.
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts.iter().map(from_literal).collect()
+    }
+
+    /// Execute with borrowed literals (hot path: frozen PLM/bank literals
+    /// are cached by the caller and passed by reference, so no multi-MB
+    /// clone happens per step). Outputs come back as host tensors.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts.iter().map(from_literal).collect()
+    }
+
+    /// Execute with device-resident buffers. NOTE: unused on this image —
+    /// xla_extension 0.5.1's pjrt_buffer_from_host_literal trips a fatal
+    /// `pointer_size > 0` CHECK (see EXPERIMENTS.md §Perf); kept for
+    /// environments with a healthy PJRT buffer path.
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} buffer inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing (buffers) {}", self.spec.name))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+/// Loads artifacts on demand and caches compiled executables.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    programs: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+}
+
+// SAFETY: see `Program` above — PJRT clients are thread-safe by contract.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        info!(
+            "engine",
+            "PJRT client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine { manifest, client, programs: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch cached) a program by artifact name.
+    pub fn program(&self, name: &str) -> Result<std::sync::Arc<Program>> {
+        if let Some(p) = self.programs.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let (program, secs) = crate::util::timed(|| -> Result<Program> {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            Ok(Program { spec, exe })
+        });
+        let program = std::sync::Arc::new(program?);
+        info!("engine", "compiled {name} in {secs:.2}s");
+        self.programs.lock().unwrap().insert(name.to_string(), program.clone());
+        Ok(program)
+    }
+
+    /// Upload a literal to the default device (for frozen groups).
+    pub fn to_device(&self, literal: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, literal)
+            .context("uploading literal to device")
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.programs.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,149 @@
+//! Literal/tensor conversion helpers between rust vectors and the PJRT
+//! `xla::Literal` representation, driven by manifest `TensorSpec`s.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// Host-side tensor value matching a `TensorSpec`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn zeros_like(spec: &TensorSpec) -> Tensor {
+        match spec.dtype {
+            DType::F32 => Tensor::F32(vec![0.0; spec.elements()]),
+            DType::I32 => Tensor::I32(vec![0; spec.elements()]),
+        }
+    }
+}
+
+/// Build an `xla::Literal` with the spec's shape from host data.
+pub fn to_literal(spec: &TensorSpec, t: &Tensor) -> Result<xla::Literal> {
+    if t.len() != spec.elements() {
+        bail!(
+            "tensor '{}' has {} elements, spec wants {:?} = {}",
+            spec.name,
+            t.len(),
+            spec.shape,
+            spec.elements()
+        );
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (spec.dtype, t) {
+        (DType::F32, Tensor::F32(v)) => {
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims).context("reshape f32")?
+            }
+        }
+        (DType::I32, Tensor::I32(v)) => {
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims).context("reshape i32")?
+            }
+        }
+        _ => bail!("dtype mismatch for '{}'", spec.name),
+    };
+    Ok(lit)
+}
+
+/// Read a literal back to a host tensor (dtype from the literal itself).
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    match lit.ty()? {
+        xla::ElementType::F32 => Ok(Tensor::F32(lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::I32(lit.to_vec::<i32>()?)),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// Scalar convenience constructors.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Group;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype, group: Group::Data }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let s = spec("x", &[2, 3], DType::F32);
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = to_literal(&s, &t).unwrap();
+        assert_eq!(from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let s = spec("t", &[4], DType::I32);
+        let t = Tensor::I32(vec![1, -2, 3, 4]);
+        let lit = to_literal(&s, &t).unwrap();
+        assert_eq!(from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn scalar_specs() {
+        let s = spec("k", &[], DType::I32);
+        let t = Tensor::I32(vec![50]);
+        let lit = to_literal(&s, &t).unwrap();
+        assert_eq!(lit.element_count(), 1);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let s = spec("x", &[2, 2], DType::F32);
+        assert!(to_literal(&s, &Tensor::F32(vec![1.0; 3])).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let s = spec("x", &[2], DType::F32);
+        assert!(to_literal(&s, &Tensor::I32(vec![1, 2])).is_err());
+    }
+
+    #[test]
+    fn zeros_like_matches_spec() {
+        let s = spec("x", &[3, 4], DType::F32);
+        assert_eq!(Tensor::zeros_like(&s).len(), 12);
+    }
+}

@@ -1,0 +1,231 @@
+//! `artifacts/manifest.json` — the contract between the L2 AOT compiler
+//! (python/compile/aot.py) and this runtime: exact input/output buffer
+//! names, shapes, dtypes and order for every lowered executable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+}
+
+/// Which logical bundle an input belongs to (drives buffer caching).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    Trainable,
+    OptM,
+    OptV,
+    Plm,
+    Bank,
+    Data,
+    Scalar,
+}
+
+impl Group {
+    fn parse(s: &str) -> Result<Group> {
+        Ok(match s {
+            "trainable" => Group::Trainable,
+            "opt_m" => Group::OptM,
+            "opt_v" => Group::OptV,
+            "plm" => Group::Plm,
+            "bank" => Group::Bank,
+            "data" => Group::Data,
+            "scalar" => Group::Scalar,
+            _ => bail!("unknown input group '{s}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub group: Group,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub mode: String,
+    pub program: String,
+    pub head: String,
+    pub n: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn inputs_in(&self, group: Group) -> impl Iterator<Item = &TensorSpec> {
+        self.inputs.iter().filter(move |s| s.group == group)
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.name))
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let config = ModelConfig::from_json(j.get("config")?)?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let mut inputs = Vec::new();
+            for i in a.get("inputs")?.as_arr()? {
+                inputs.push(TensorSpec {
+                    name: i.str_field("name")?,
+                    shape: i
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|s| s.as_usize())
+                        .collect::<Result<_>>()?,
+                    dtype: DType::parse(i.get("dtype")?.as_str()?)?,
+                    group: Group::parse(i.get("group")?.as_str()?)?,
+                });
+            }
+            let outputs = a
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<_>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a.str_field("name")?,
+                file: dir.join(a.str_field("file")?),
+                mode: a.str_field("mode")?,
+                program: a.str_field("program")?,
+                head: a.str_field("head")?,
+                n: a.usize_field("n")?,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { config, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("no artifact named '{name}' in manifest"))
+    }
+
+    /// Canonical artifact name for (mode, program, head, n).
+    pub fn artifact_name(mode: &str, program: &str, head: &str, n: usize) -> String {
+        if n > 0 {
+            format!("{mode}_{program}_{head}_n{n}")
+        } else {
+            format!("{mode}_{program}_{head}")
+        }
+    }
+
+    /// N values with lowered xpeft artifacts for a given head.
+    pub fn available_ns(&self, head: &str) -> Vec<usize> {
+        let mut ns: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.mode == "xpeft" && a.program == "train" && a.head == head)
+            .map(|a| a.n)
+            .collect();
+        ns.sort_unstable();
+        ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = repo_artifacts() else { return };
+        assert!(!m.artifacts.is_empty());
+        assert_eq!(m.config.c_max, 16);
+        // every artifact's HLO file must exist
+        for a in &m.artifacts {
+            assert!(a.file.exists(), "{:?} missing", a.file);
+        }
+    }
+
+    #[test]
+    fn real_manifest_has_expected_families() {
+        let Some(m) = repo_artifacts() else { return };
+        for n in [100usize, 200, 400] {
+            m.find(&Manifest::artifact_name("xpeft", "train", "cls", n)).unwrap();
+            m.find(&Manifest::artifact_name("xpeft", "eval", "cls", n)).unwrap();
+        }
+        m.find("single_adapter_train_cls").unwrap();
+        m.find("head_only_eval_reg").unwrap();
+        assert!(m.available_ns("cls").contains(&150)); // LaMP bank
+    }
+
+    #[test]
+    fn input_groups_ordered_and_complete() {
+        let Some(m) = repo_artifacts() else { return };
+        let a = m.find("xpeft_train_cls_n100").unwrap();
+        // trainable block comes first, then opt_m, opt_v (same layout)
+        let t: Vec<&TensorSpec> = a.inputs_in(Group::Trainable).collect();
+        let om: Vec<&TensorSpec> = a.inputs_in(Group::OptM).collect();
+        assert_eq!(t.len(), om.len());
+        for (x, y) in t.iter().zip(&om) {
+            assert_eq!(y.name, format!("m_{}", x.name));
+            assert_eq!(x.shape, y.shape);
+        }
+        // mask rows sized [L, N]
+        let ma = &a.inputs[a.input_index("mask_a_logits").unwrap()];
+        assert_eq!(ma.shape, vec![m.config.layers, 100]);
+        // scalars present
+        for s in ["k", "tau", "nu", "hard_flag", "single_mask_flag"] {
+            a.input_index(s).unwrap();
+        }
+    }
+
+    #[test]
+    fn artifact_name_formatting() {
+        assert_eq!(Manifest::artifact_name("xpeft", "train", "cls", 100), "xpeft_train_cls_n100");
+        assert_eq!(Manifest::artifact_name("head_only", "eval", "reg", 0), "head_only_eval_reg");
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper (`engine`), the artifact contract
+//! (`manifest`), literal conversion (`literal`) and parameter
+//! materialization (`params`). Everything above this module is pure rust;
+//! everything below is the AOT-compiled XLA executable.
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{Engine, Program};
+pub use literal::Tensor;
+pub use manifest::{ArtifactSpec, DType, Group, Manifest, TensorSpec};

@@ -1,0 +1,159 @@
+//! Frozen-PLM parameter materialization and trainable initialization.
+//!
+//! The AOT executables take every tensor as an input, so the rust side owns
+//! parameter *values*: the frozen PLM is generated once from a seed (shared
+//! by all profiles, like the pre-trained checkpoint in the paper), and each
+//! new profile's trainable tensors are initialized here. Initialization
+//! rules are name-based and mirror `python/compile/model.py`'s
+//! `init_plm` / `init_trainable` conventions.
+
+use crate::data::tokenizer;
+use crate::runtime::literal::Tensor;
+use crate::runtime::manifest::TensorSpec;
+use crate::util::rng::Rng;
+
+/// Init rule for one frozen-PLM tensor (by manifest name).
+///
+/// `tok_emb` is *topic-clustered*: rows inside a topic's id block share a
+/// random topic centroid plus idiosyncratic noise. This stands in for the
+/// semantic structure a pretrained bert-base embedding table has (the
+/// paper's frozen PLM is pretrained; a purely random table would carry no
+/// linearly-recoverable topical signal — see DESIGN.md §3).
+pub fn init_plm_tensor(spec: &TensorSpec, rng: &mut Rng) -> Tensor {
+    let n = spec.elements();
+    let name = spec.name.as_str();
+    let v = if name == "tok_emb" {
+        let d = spec.shape[1];
+        let vocab = spec.shape[0];
+        let mut cent_rng = rng.fold_in(0xCE17);
+        let centroids: Vec<Vec<f32>> = (0..tokenizer::TOPIC_COUNT as usize)
+            .map(|_| cent_rng.normal_vec(d, 0.02))
+            .collect();
+        let mut v = rng.normal_vec(n, 0.012);
+        for row in 0..vocab {
+            if let Some(t) = tokenizer::token_topic(row as u32) {
+                for (x, c) in v[row * d..(row + 1) * d].iter_mut().zip(&centroids[t]) {
+                    *x += 1.6 * c;
+                }
+            }
+        }
+        v
+    } else if name.ends_with("_scale") {
+        vec![1.0; n] // LayerNorm scales
+    } else if name.ends_with("_bias") || name.ends_with("_b1") || name.ends_with("_b2") {
+        vec![0.0; n] // biases
+    } else if name == "pos_emb" {
+        rng.normal_vec(n, 0.02)
+    } else {
+        // Dense weights with 1/sqrt(fan_in) scale: a *trained* transformer
+        // has O(1) singular values, so the frozen stand-in must too —
+        // BERT's init std (0.02) would make attention/FFN contributions
+        // negligible against the residual stream and CLS (a constant
+        // token) would never see the input (DESIGN.md §3).
+        let fan_in = spec.shape[0] as f32;
+        rng.normal_vec(n, 1.0 / fan_in.sqrt())
+    };
+    Tensor::F32(v)
+}
+
+/// Init rule for one per-profile trainable tensor (by manifest name).
+pub fn init_trainable_tensor(spec: &TensorSpec, d_model: usize, rng: &mut Rng) -> Tensor {
+    let n = spec.elements();
+    let name = spec.name.as_str();
+    let v = if name == "ln_scale" {
+        vec![1.0; n]
+    } else if name == "ln_bias" || name == "head_b" || name == "adapter_b" {
+        vec![0.0; n] // up-projection starts at zero → near-identity adapter
+    } else if name.starts_with("mask_") {
+        rng.normal_vec(n, 0.01) // near-uniform initial mask distribution
+    } else if name == "adapter_a" {
+        rng.normal_vec(n, 1.0 / (d_model as f32).sqrt())
+    } else if name == "head_w" {
+        rng.normal_vec(n, 0.02)
+    } else {
+        rng.normal_vec(n, 0.02)
+    };
+    Tensor::F32(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, Group, TensorSpec};
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            group: Group::Plm,
+        }
+    }
+
+    #[test]
+    fn scales_are_ones_biases_zero() {
+        let mut rng = Rng::new(1);
+        let s = init_plm_tensor(&spec("b0_ln1_scale", &[8]), &mut rng);
+        assert_eq!(s.f32s().unwrap(), &[1.0; 8]);
+        let b = init_plm_tensor(&spec("b0_ln1_bias", &[8]), &mut rng);
+        assert_eq!(b.f32s().unwrap(), &[0.0; 8]);
+        let b1 = init_plm_tensor(&spec("b2_b1", &[4]), &mut rng);
+        assert_eq!(b1.f32s().unwrap(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn tok_emb_topic_rows_cluster() {
+        let mut rng = Rng::new(7);
+        let s = spec("tok_emb", &[1024, 64]);
+        let t = init_plm_tensor(&s, &mut rng);
+        let v = t.f32s().unwrap();
+        let row = |i: usize| &v[i * 64..(i + 1) * 64];
+        let cos = |a: &[f32], b: &[f32]| {
+            let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+            dot / (na * nb)
+        };
+        let base = crate::data::tokenizer::TOPIC_BASE as usize;
+        let w = crate::data::tokenizer::TOPIC_WORDS as usize;
+        // two words of the same topic: high cosine; different topics: low
+        let same = cos(row(base), row(base + 1));
+        let diff = cos(row(base), row(base + w));
+        assert!(same > 0.5, "same-topic cosine {same}");
+        assert!(diff < 0.5, "cross-topic cosine {diff}");
+    }
+
+    #[test]
+    fn weights_are_small_nonzero() {
+        let mut rng = Rng::new(2);
+        let w = init_plm_tensor(&spec("b0_wq", &[64, 64]), &mut rng);
+        let v = w.f32s().unwrap();
+        assert!(v.iter().any(|&x| x != 0.0));
+        // 1/sqrt(64) = 0.125 scale: values should be O(0.1), not O(1)
+        let max = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(max < 1.0 && max > 0.1, "fan-in scaled weights, max={max}");
+    }
+
+    #[test]
+    fn deterministic_per_seed_stream() {
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        let s = spec("tok_emb", &[16, 8]);
+        assert_eq!(init_plm_tensor(&s, &mut a), init_plm_tensor(&s, &mut b));
+    }
+
+    #[test]
+    fn trainable_rules() {
+        let mut rng = Rng::new(4);
+        let ln = init_trainable_tensor(&spec("ln_scale", &[4, 8]), 64, &mut rng);
+        assert_eq!(ln.f32s().unwrap(), &[1.0; 32]);
+        let hb = init_trainable_tensor(&spec("head_b", &[16]), 64, &mut rng);
+        assert_eq!(hb.f32s().unwrap(), &[0.0; 16]);
+        let ab = init_trainable_tensor(&spec("adapter_b", &[4, 8, 64]), 64, &mut rng);
+        assert!(ab.f32s().unwrap().iter().all(|&x| x == 0.0));
+        let masks = init_trainable_tensor(&spec("mask_a_logits", &[4, 100]), 64, &mut rng);
+        let mv = masks.f32s().unwrap();
+        assert!(mv.iter().any(|&x| x != 0.0));
+        assert!(mv.iter().all(|&x| x.abs() < 0.1));
+    }
+}

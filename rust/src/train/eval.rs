@@ -1,0 +1,331 @@
+//! Evaluation: runs the `eval` artifacts (shared by soft and hard masks —
+//! rust feeds already-normalized weights) and computes the paper's metrics.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::AdapterBank;
+use crate::config::Mode;
+use crate::data::batch::{Batch, Batcher};
+use crate::data::{Dataset, Label, MetricKind};
+use crate::masks::MaskWeights;
+use crate::metrics;
+use crate::metrics::Scores;
+use crate::runtime::literal::{to_literal, Tensor};
+use crate::runtime::manifest::{DType, Group, Manifest};
+use crate::runtime::params;
+use crate::runtime::{Engine, Program};
+use crate::train::TrainState;
+use crate::util::rng::Rng;
+
+/// Prediction for one example.
+#[derive(Debug, Clone, Copy)]
+pub enum Pred {
+    Class(usize),
+    Reg(f32),
+}
+
+pub struct Evaluator {
+    program: Arc<Program>,
+    plm: Vec<(usize, xla::Literal)>,
+    bank: Vec<(usize, xla::Literal)>,
+    pub out_w: usize,
+}
+
+// SAFETY: the cached literals are host buffers uniquely owned by this
+// Evaluator and only read; XLA literals have no thread affinity. The `xla`
+// crate simply lacks the auto-markers because of its raw pointers.
+unsafe impl Send for Evaluator {}
+unsafe impl Sync for Evaluator {}
+
+impl Evaluator {
+    pub fn new(
+        engine: &Engine,
+        mode: Mode,
+        head: &str,
+        n: usize,
+        bank: Option<&AdapterBank>,
+        plm_seed: u64,
+    ) -> Result<Evaluator> {
+        let name = Manifest::artifact_name(
+            mode.artifact_mode(),
+            "eval",
+            head,
+            if mode.is_xpeft() { n } else { 0 },
+        );
+        let program = engine.program(&name)?;
+        let spec = &program.spec;
+
+        let mut plm_rng = Rng::new(plm_seed).fold_in(0x504c4d);
+        let mut plm = Vec::new();
+        for (i, ts) in spec.inputs.iter().enumerate() {
+            if ts.group == Group::Plm {
+                let t = params::init_plm_tensor(ts, &mut plm_rng);
+                plm.push((i, to_literal(ts, &t)?));
+            }
+        }
+        let mut bank_lits = Vec::new();
+        if mode.is_xpeft() {
+            let bank = bank.context("xpeft eval needs the adapter bank")?;
+            for (i, ts) in spec.inputs.iter().enumerate() {
+                if ts.group == Group::Bank {
+                    let data = match ts.name.as_str() {
+                        "bank_a" => &bank.bank_a,
+                        "bank_b" => &bank.bank_b,
+                        other => bail!("unexpected bank tensor '{other}'"),
+                    };
+                    bank_lits.push((i, to_literal(ts, &Tensor::F32(data.clone()))?));
+                }
+            }
+        }
+        let out_w = if head == "cls" { engine.manifest.config.c_max } else { 1 };
+        Ok(Evaluator { program, plm, bank: bank_lits, out_w })
+    }
+
+    /// Forward one batch → logits `[B, out_w]` (row-major).
+    ///
+    /// `state` provides ln/adapter/head tensors by name; `weights` provides
+    /// the normalized mask rows (xpeft artifacts only).
+    pub fn forward(
+        &self,
+        state: &TrainState,
+        weights: Option<&MaskWeights>,
+        batch: &Batch,
+    ) -> Result<Vec<f32>> {
+        let spec = &self.program.spec;
+        let mut owned: Vec<Option<xla::Literal>> = (0..spec.inputs.len()).map(|_| None).collect();
+        for (i, ts) in spec.inputs.iter().enumerate() {
+            let lit = match ts.group {
+                Group::Plm | Group::Bank => continue,
+                Group::Trainable => match ts.name.as_str() {
+                    "mask_a_w" => {
+                        let w = weights.context("xpeft eval needs mask weights")?;
+                        to_literal(ts, &Tensor::F32(w.a.clone()))?
+                    }
+                    "mask_b_w" => {
+                        let w = weights.context("xpeft eval needs mask weights")?;
+                        to_literal(ts, &Tensor::F32(w.b.clone()))?
+                    }
+                    name => to_literal(ts, &Tensor::F32(state.get(name)?.to_vec()))?,
+                },
+                Group::Data => match (ts.name.as_str(), ts.dtype) {
+                    ("tokens", DType::I32) => to_literal(ts, &Tensor::I32(batch.tokens.clone()))?,
+                    ("pad_mask", DType::F32) => {
+                        to_literal(ts, &Tensor::F32(batch.pad_mask.clone()))?
+                    }
+                    (other, _) => bail!("unexpected eval data tensor '{other}'"),
+                },
+                g => bail!("unexpected eval input group {g:?}"),
+            };
+            owned[i] = Some(lit);
+        }
+        let inputs: Vec<&xla::Literal> = {
+            let mut refs: Vec<Option<&xla::Literal>> =
+                owned.iter().map(|o| o.as_ref()).collect();
+            for (i, l) in &self.plm {
+                refs[*i] = Some(l);
+            }
+            for (i, l) in &self.bank {
+                refs[*i] = Some(l);
+            }
+            refs.into_iter().map(Option::unwrap).collect()
+        };
+        let mut out = self.program.run_refs(&inputs)?;
+        out.pop().context("eval artifact returned nothing")?.into_f32s()
+    }
+
+    /// Predictions over a whole dataset split (sequential order).
+    pub fn predict_split(
+        &self,
+        state: &TrainState,
+        weights: Option<&MaskWeights>,
+        examples: &[crate::data::Example],
+        num_classes: usize,
+        batch_shape: (usize, usize),
+    ) -> Result<Vec<Pred>> {
+        let (b, t) = batch_shape;
+        let batcher = Batcher::new(b, t);
+        let mut preds = Vec::with_capacity(examples.len());
+        for batch in batcher.sequential(examples) {
+            let logits = self.forward(state, weights, &batch)?;
+            for row in 0..batch.size {
+                let slice = &logits[row * self.out_w..(row + 1) * self.out_w];
+                if num_classes == 0 {
+                    preds.push(Pred::Reg(slice[0]));
+                } else {
+                    let c = argmax(&slice[..num_classes]);
+                    preds.push(Pred::Class(c));
+                }
+            }
+        }
+        Ok(preds)
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Compute the paper's metric bundle from predictions.
+pub fn score(dataset_metric: MetricKind, num_classes: usize, preds: &[Pred], examples: &[crate::data::Example]) -> Scores {
+    let mut s = Scores::default();
+    match dataset_metric {
+        MetricKind::PearsonSpearman => {
+            let p: Vec<f64> = preds
+                .iter()
+                .map(|p| match p {
+                    Pred::Reg(r) => *r as f64,
+                    Pred::Class(c) => *c as f64,
+                })
+                .collect();
+            let t: Vec<f64> = examples.iter().map(|e| e.label.reg() as f64).collect();
+            s.pcc = Some(metrics::pearson(&p, &t));
+            s.src = Some(metrics::spearman(&p, &t));
+        }
+        _ => {
+            let p: Vec<usize> = preds
+                .iter()
+                .map(|p| match p {
+                    Pred::Class(c) => *c,
+                    Pred::Reg(_) => 0,
+                })
+                .collect();
+            let l: Vec<usize> = examples
+                .iter()
+                .map(|e| match e.label {
+                    Label::Class(c) => c,
+                    Label::Reg(_) => 0,
+                })
+                .collect();
+            match dataset_metric {
+                MetricKind::Acc => s.acc = Some(metrics::accuracy(&p, &l)),
+                MetricKind::Mcc => s.mcc = Some(metrics::mcc(&p, &l, num_classes)),
+                MetricKind::AccAndF1 => {
+                    s.acc = Some(metrics::accuracy(&p, &l));
+                    s.f1 = Some(metrics::f1_binary(&p, &l, 1));
+                }
+                MetricKind::AccMatchedMismatched => {
+                    // matched here; experiments fill acc_mm from a second split
+                    s.acc = Some(metrics::accuracy(&p, &l));
+                }
+                MetricKind::AccAndGps => {
+                    s.acc = Some(metrics::accuracy(&p, &l));
+                    // group by pair_id for GPS
+                    let mut pairs: std::collections::BTreeMap<usize, Vec<usize>> =
+                        std::collections::BTreeMap::new();
+                    for (pred, ex) in p.iter().zip(examples) {
+                        if let Some(id) = ex.pair_id {
+                            pairs.entry(id).or_default().push(*pred);
+                        }
+                    }
+                    let pp: Vec<(usize, usize)> = pairs
+                        .values()
+                        .filter(|v| v.len() == 2)
+                        .map(|v| (v[0], v[1]))
+                        .collect();
+                    s.gps = Some(metrics::gender_parity(&pp));
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+    s
+}
+
+/// Full dev-set evaluation of a trained profile.
+pub fn evaluate(
+    engine: &Engine,
+    mode: Mode,
+    trainer: &crate::train::Trainer<'_>,
+    dataset: &Dataset,
+    bank: Option<&AdapterBank>,
+    n: usize,
+    k: usize,
+    plm_seed: u64,
+) -> Result<Scores> {
+    let mc = &engine.manifest.config;
+    let head = if dataset.is_regression() { "reg" } else { "cls" };
+    let ev = Evaluator::new(engine, mode, head, n, bank, plm_seed)?;
+    let weights = if mode.is_xpeft() {
+        Some(trainer.mask_weights(mode, mc.layers, n, k)?)
+    } else {
+        None
+    };
+    let preds = ev.predict_split(
+        &trainer.state,
+        weights.as_ref(),
+        &dataset.dev,
+        dataset.num_classes,
+        (mc.batch, mc.seq),
+    )?;
+    Ok(score(dataset.metric, dataset.num_classes.max(2), &preds, &dataset.dev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Example;
+
+    fn ex_class(c: usize, pair: Option<usize>) -> Example {
+        Example { tokens: vec![1], pad_mask: vec![1.0], label: Label::Class(c), pair_id: pair }
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn score_acc() {
+        let exs = vec![ex_class(0, None), ex_class(1, None)];
+        let preds = vec![Pred::Class(0), Pred::Class(0)];
+        let s = score(MetricKind::Acc, 2, &preds, &exs);
+        assert_eq!(s.acc, Some(0.5));
+    }
+
+    #[test]
+    fn score_acc_and_f1() {
+        let exs = vec![ex_class(1, None), ex_class(1, None), ex_class(0, None)];
+        let preds = vec![Pred::Class(1), Pred::Class(0), Pred::Class(0)];
+        let s = score(MetricKind::AccAndF1, 2, &preds, &exs);
+        assert!(s.acc.is_some() && s.f1.is_some());
+    }
+
+    #[test]
+    fn score_gps_pairs() {
+        let exs = vec![
+            ex_class(0, Some(0)),
+            ex_class(0, Some(0)),
+            ex_class(1, Some(1)),
+            ex_class(1, Some(1)),
+        ];
+        let preds = vec![Pred::Class(0), Pred::Class(0), Pred::Class(1), Pred::Class(0)];
+        let s = score(MetricKind::AccAndGps, 2, &preds, &exs);
+        assert_eq!(s.gps, Some(50.0));
+    }
+
+    #[test]
+    fn score_regression_correlations() {
+        let exs: Vec<Example> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .map(|&r| Example {
+                tokens: vec![1],
+                pad_mask: vec![1.0],
+                label: Label::Reg(r),
+                pair_id: None,
+            })
+            .collect();
+        let preds: Vec<Pred> = [1.1f32, 2.2, 2.9, 4.1].iter().map(|&r| Pred::Reg(r)).collect();
+        let s = score(MetricKind::PearsonSpearman, 0, &preds, &exs);
+        assert!(s.pcc.unwrap() > 0.99);
+        assert!((s.src.unwrap() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,360 @@
+//! Training driver: executes AOT `train_step` artifacts from rust. AdamW
+//! and the LR schedule live *inside* the HLO — this module only shuttles
+//! buffers, so python is never on the training path.
+
+pub mod eval;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::AdapterBank;
+use crate::config::{Mode, TrainConfig};
+use crate::data::batch::{Batch, Batcher};
+use crate::data::Dataset;
+use crate::masks::{MaskLogits, MaskWeights, ProfileMasks};
+use crate::runtime::literal::{to_literal, Tensor};
+use crate::runtime::manifest::{DType, Group, Manifest, TensorSpec};
+use crate::runtime::params;
+use crate::runtime::{Engine, Program};
+use crate::util::rng::Rng;
+
+/// Trainable + optimizer state, ordered like the artifact's trainable specs.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub names: Vec<String>,
+    pub trainable: Vec<Vec<f32>>,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+}
+
+impl TrainState {
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let i = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("no trainable tensor '{name}'"))?;
+        Ok(&self.trainable[i])
+    }
+}
+
+/// Result of tuning one profile.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub losses: Vec<f32>,
+    pub state: TrainState,
+    pub steps: usize,
+    pub wallclock_s: f64,
+}
+
+/// Per-step hyper scalars (the runtime-tunable grid; see aot.py).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub num_classes: i32,
+    pub total_steps: i32,
+    pub base_lr: f32,
+    pub seed: i32,
+    pub hard_flag: f32,
+    pub k: i32,
+    pub tau: f32,
+    pub nu: f32,
+    pub single_mask_flag: f32,
+}
+
+impl Hyper {
+    pub fn from_config(cfg: &TrainConfig, num_classes: usize, total_steps: usize) -> Hyper {
+        Hyper {
+            num_classes: num_classes as i32,
+            total_steps: total_steps as i32,
+            base_lr: cfg.base_lr,
+            seed: cfg.seed as i32,
+            hard_flag: if cfg.mode.is_hard() { 1.0 } else { 0.0 },
+            k: cfg.k as i32,
+            tau: cfg.tau,
+            nu: cfg.nu,
+            single_mask_flag: if cfg.single_mask { 1.0 } else { 0.0 },
+        }
+    }
+}
+
+/// Drives one profile's tuning against a train artifact.
+///
+/// Frozen tensors (PLM + adapter bank) are materialized as literals ONCE
+/// at construction and passed *by reference* to every step — the §Perf
+/// optimization that removes a multi-MB literal clone per step
+/// (EXPERIMENTS.md §Perf records the before/after; the device-buffer
+/// variant is blocked by a fatal CHECK in this image's xla_extension).
+pub struct Trainer<'e> {
+    #[allow(dead_code)]
+    engine: &'e Engine,
+    program: Arc<Program>,
+    /// frozen PLM literals, keyed by artifact input index
+    plm: Vec<(usize, xla::Literal)>,
+    /// frozen bank literals (xpeft modes), keyed by artifact input index
+    bank: Vec<(usize, xla::Literal)>,
+    pub state: TrainState,
+    pub step: usize,
+    head: String,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer: compiles/fetches the artifact, materializes the
+    /// frozen PLM (from `plm_seed`) and uploads the shared bank.
+    pub fn new(
+        engine: &'e Engine,
+        mode: Mode,
+        head: &str,
+        n: usize,
+        bank: Option<&AdapterBank>,
+        plm_seed: u64,
+        init_seed: u64,
+    ) -> Result<Trainer<'e>> {
+        let name = Manifest::artifact_name(
+            mode.artifact_mode(),
+            "train",
+            head,
+            if mode.is_xpeft() { n } else { 0 },
+        );
+        let program = engine.program(&name)?;
+        let spec = &program.spec;
+
+        // Frozen PLM: one deterministic stream, in spec order.
+        let mut plm_rng = Rng::new(plm_seed).fold_in(0x504c4d);
+        let mut plm = Vec::new();
+        for (i, ts) in spec.inputs.iter().enumerate() {
+            if ts.group == Group::Plm {
+                let t = params::init_plm_tensor(ts, &mut plm_rng);
+                plm.push((i, to_literal(ts, &t)?));
+            }
+        }
+
+        // Shared adapter bank (xpeft only).
+        let mut bank_lits = Vec::new();
+        if mode.is_xpeft() {
+            let bank = bank.context("xpeft modes need an adapter bank")?;
+            if bank.n != n {
+                bail!("bank has N={} but artifact wants N={n}", bank.n);
+            }
+            for (i, ts) in spec.inputs.iter().enumerate() {
+                if ts.group == Group::Bank {
+                    let data = match ts.name.as_str() {
+                        "bank_a" => &bank.bank_a,
+                        "bank_b" => &bank.bank_b,
+                        other => bail!("unexpected bank tensor '{other}'"),
+                    };
+                    bank_lits.push((i, to_literal(ts, &Tensor::F32(data.clone()))?));
+                }
+            }
+        }
+
+        // Trainable init + zero optimizer state.
+        let d_model = engine.manifest.config.d;
+        let mut init_rng = Rng::new(init_seed).fold_in(0x7261);
+        let mut names = Vec::new();
+        let mut trainable = Vec::new();
+        for ts in spec.inputs_in(Group::Trainable) {
+            names.push(ts.name.clone());
+            trainable.push(
+                params::init_trainable_tensor(ts, d_model, &mut init_rng).into_f32s()?,
+            );
+        }
+        let opt_m: Vec<Vec<f32>> = trainable.iter().map(|t| vec![0.0; t.len()]).collect();
+        let opt_v = opt_m.clone();
+
+        Ok(Trainer {
+            engine,
+            program,
+            plm,
+            bank: bank_lits,
+            state: TrainState { names, trainable, opt_m, opt_v },
+            step: 0,
+            head: head.to_string(),
+        })
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ArtifactSpec {
+        &self.program.spec
+    }
+
+    /// One optimizer step on a batch. Returns the loss.
+    ///
+    /// Variable inputs (trainable/opt state/data/scalars — all small) are
+    /// rebuilt per step; frozen PLM + bank literals are passed by reference.
+    pub fn step(&mut self, batch: &Batch, hp: &Hyper) -> Result<f32> {
+        let spec = self.program.spec.clone();
+        let mut owned: Vec<Option<xla::Literal>> =
+            (0..spec.inputs.len()).map(|_| None).collect();
+
+        let mut t_i = 0usize;
+        let mut m_i = 0usize;
+        let mut v_i = 0usize;
+        for (i, ts) in spec.inputs.iter().enumerate() {
+            let lit = match ts.group {
+                Group::Plm | Group::Bank => continue, // device-resident
+                Group::Trainable => {
+                    let l = to_literal(ts, &Tensor::F32(self.state.trainable[t_i].clone()))?;
+                    t_i += 1;
+                    l
+                }
+                Group::OptM => {
+                    let l = to_literal(ts, &Tensor::F32(self.state.opt_m[m_i].clone()))?;
+                    m_i += 1;
+                    l
+                }
+                Group::OptV => {
+                    let l = to_literal(ts, &Tensor::F32(self.state.opt_v[v_i].clone()))?;
+                    v_i += 1;
+                    l
+                }
+                Group::Data => self.data_literal(ts, batch)?,
+                Group::Scalar => self.scalar_literal(ts, hp)?,
+            };
+            owned[i] = Some(lit);
+        }
+        let inputs: Vec<&xla::Literal> = {
+            let mut refs: Vec<Option<&xla::Literal>> =
+                owned.iter().map(|o| o.as_ref()).collect();
+            for (i, l) in &self.plm {
+                refs[*i] = Some(l);
+            }
+            for (i, l) in &self.bank {
+                refs[*i] = Some(l);
+            }
+            refs.into_iter().map(Option::unwrap).collect()
+        };
+
+        let outputs = self.program.run_refs(&inputs)?;
+        // outputs: trainable' x T, m' x T, v' x T, loss
+        let t = self.state.names.len();
+        anyhow::ensure!(outputs.len() == 3 * t + 1, "unexpected output count");
+        let mut it = outputs.into_iter();
+        for i in 0..t {
+            self.state.trainable[i] = it.next().unwrap().into_f32s()?;
+        }
+        for i in 0..t {
+            self.state.opt_m[i] = it.next().unwrap().into_f32s()?;
+        }
+        for i in 0..t {
+            self.state.opt_v[i] = it.next().unwrap().into_f32s()?;
+        }
+        let loss = it.next().unwrap().into_f32s()?[0];
+        self.step += 1;
+        Ok(loss)
+    }
+
+    fn data_literal(&self, ts: &TensorSpec, batch: &Batch) -> Result<xla::Literal> {
+        let t = match (ts.name.as_str(), ts.dtype) {
+            ("tokens", DType::I32) => Tensor::I32(batch.tokens.clone()),
+            ("pad_mask", DType::F32) => Tensor::F32(batch.pad_mask.clone()),
+            ("labels", DType::I32) => Tensor::I32(batch.labels_i.clone()),
+            ("labels", DType::F32) => Tensor::F32(batch.labels_f.clone()),
+            ("example_w", DType::F32) => Tensor::F32(batch.example_w.clone()),
+            (other, _) => bail!("unexpected data tensor '{other}'"),
+        };
+        to_literal(ts, &t)
+    }
+
+    fn scalar_literal(&self, ts: &TensorSpec, hp: &Hyper) -> Result<xla::Literal> {
+        let t = match ts.name.as_str() {
+            "num_classes" => Tensor::I32(vec![hp.num_classes]),
+            "step" => Tensor::I32(vec![self.step as i32]),
+            "total_steps" => Tensor::I32(vec![hp.total_steps]),
+            "base_lr" => Tensor::F32(vec![hp.base_lr]),
+            "seed" => Tensor::I32(vec![hp.seed]),
+            "hard_flag" => Tensor::F32(vec![hp.hard_flag]),
+            "k" => Tensor::I32(vec![hp.k]),
+            "tau" => Tensor::F32(vec![hp.tau]),
+            "nu" => Tensor::F32(vec![hp.nu]),
+            "single_mask_flag" => Tensor::F32(vec![hp.single_mask_flag]),
+            other => bail!("unexpected scalar '{other}'"),
+        };
+        to_literal(ts, &t)
+    }
+
+    /// The profile's mask logits (xpeft modes).
+    pub fn mask_logits(&self, layers: usize, n: usize) -> Result<MaskLogits> {
+        Ok(MaskLogits {
+            layers,
+            n,
+            a: self.state.get("mask_a_logits")?.to_vec(),
+            b: self.state.get("mask_b_logits")?.to_vec(),
+        })
+    }
+
+    /// Persistable per-profile masks (§3: soft = f32 rows, hard = bit-packed
+    /// k-hot after training).
+    pub fn profile_masks(&self, mode: Mode, layers: usize, n: usize, k: usize) -> Result<ProfileMasks> {
+        let logits = self.mask_logits(layers, n)?;
+        Ok(if mode.is_hard() {
+            ProfileMasks::Hard(logits.binarize(k))
+        } else {
+            ProfileMasks::Soft(logits.soft_weights())
+        })
+    }
+
+    /// Current normalized mask weights for evaluation.
+    pub fn mask_weights(&self, mode: Mode, layers: usize, n: usize, k: usize) -> Result<MaskWeights> {
+        Ok(self.profile_masks(mode, layers, n, k)?.to_weights())
+    }
+
+    pub fn head_name(&self) -> &str {
+        &self.head
+    }
+}
+
+/// `xla::Literal` has no public Clone; round-trip through shape+data.
+/// Used by the Evaluator's cached frozen tensors (the eval path runs once
+/// per dev split, not per step, so the clone cost is immaterial there).
+pub(crate) fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty()? {
+        xla::ElementType::F32 => {
+            Ok(xla::Literal::vec1(&l.to_vec::<f32>()?).reshape(&dims)?)
+        }
+        xla::ElementType::S32 => {
+            Ok(xla::Literal::vec1(&l.to_vec::<i32>()?).reshape(&dims)?)
+        }
+        other => bail!("cannot clone literal of type {other:?}"),
+    }
+}
+
+/// Train a profile for `cfg.steps` steps (epoch-cycling the dataset) and
+/// report the loss curve.
+pub fn train_profile<'e>(
+    engine: &'e Engine,
+    cfg: &TrainConfig,
+    dataset: &Dataset,
+    bank: Option<&AdapterBank>,
+    plm_seed: u64,
+) -> Result<(Trainer<'e>, TrainOutcome)> {
+    let mc = &engine.manifest.config;
+    let head = if dataset.is_regression() { "reg" } else { "cls" };
+    let mut trainer = Trainer::new(engine, cfg.mode, head, cfg.n, bank, plm_seed, cfg.seed)?;
+    let hp = Hyper::from_config(cfg, dataset.num_classes.max(1), cfg.steps);
+    let batcher = Batcher::new(mc.batch, mc.seq);
+    let mut rng = Rng::new(cfg.seed).fold_in(0xBA7C);
+
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    'outer: loop {
+        let epoch = batcher.epoch(&dataset.train, &mut rng);
+        for batch in &epoch {
+            if losses.len() >= cfg.steps {
+                break 'outer;
+            }
+            losses.push(trainer.step(batch, &hp)?);
+        }
+        if dataset.train.is_empty() {
+            bail!("empty training set");
+        }
+    }
+    let outcome = TrainOutcome {
+        steps: losses.len(),
+        losses,
+        state: trainer.state.clone(),
+        wallclock_s: t0.elapsed().as_secs_f64(),
+    };
+    Ok((trainer, outcome))
+}

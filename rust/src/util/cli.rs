@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `xpeft <command> [positional...] [--key value | --key=value | --flag]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated usize list, e.g. `--ns 100,200,400`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| anyhow!("--{name}: bad entry '{s}'")))
+                .collect(),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn expect_command(&self) -> Result<&str> {
+        if self.command.is_empty() {
+            bail!("no command given");
+        }
+        Ok(&self.command)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn command_and_positional() {
+        let a = parse("repro table2 extra");
+        assert_eq!(a.command, "repro");
+        assert_eq!(a.positional, vec!["table2", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse("serve --port 8080 --mode=hard");
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("mode"), Some("hard"));
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("train --fast --n 100 --verbose");
+        assert!(a.flag("fast"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse("x --ns 100,200,400");
+        assert_eq!(a.get_usize_list("ns", &[]).unwrap(), vec![100, 200, 400]);
+        assert_eq!(a.get_usize_list("other", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn defaults_and_requires() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 5).unwrap(), 5);
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Leveled stderr logging with wallclock-since-start stamps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Level {
+    match s {
+        "debug" => Level::Debug,
+        "warn" => Level::Warn,
+        "error" => Level::Error,
+        _ => Level::Info,
+    }
+}
+
+pub fn log(level: Level, module: &str, msg: &str) {
+    if (level as u8) < LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{t:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $module, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $module, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $module, &format!($($arg)*))
+    };
+}

@@ -1,0 +1,43 @@
+//! Cross-cutting substrates built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, logging and statistics.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Measure wallclock of a closure in seconds.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Human-readable byte count (Table 1 / Fig 1 output formatting).
+pub fn human_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.1}G", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1}M", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1}K", b / 1e3)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512B");
+        assert_eq!(human_bytes(3_500.0), "3.5K");
+        assert_eq!(human_bytes(3_500_000.0), "3.5M");
+        assert_eq!(human_bytes(2_100_000_000.0), "2.1G");
+    }
+}

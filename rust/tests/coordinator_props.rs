@@ -1,0 +1,185 @@
+//! Property-style tests on coordinator invariants (hand-rolled sweeps with
+//! the seeded PRNG — proptest is unavailable offline): routing, batching
+//! bounds, profile-store round-trips and accounting, plus a live
+//! service smoke test over real artifacts when they are present.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use xpeft::adapters::AdapterBank;
+use xpeft::config::ServeConfig;
+use xpeft::coordinator::batcher::{DynamicBatcher, Request};
+use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use xpeft::coordinator::Service;
+use xpeft::masks::{MaskLogits, ProfileMasks};
+use xpeft::masks::accounting::Dims;
+use xpeft::runtime::Engine;
+use xpeft::util::rng::Rng;
+
+fn req(id: u64, pid: u64, at: Instant) -> Request {
+    Request { id, profile_id: pid, tokens: vec![1, 9, 9], pad_mask: vec![1.0; 3], submitted: at }
+}
+
+fn random_masks(layers: usize, n: usize, k: usize, seed: u64) -> ProfileMasks {
+    let mut r = Rng::new(seed);
+    let logits = MaskLogits {
+        layers,
+        n,
+        a: r.normal_vec(layers * n, 1.0),
+        b: r.normal_vec(layers * n, 1.0),
+    };
+    ProfileMasks::Hard(logits.binarize(k))
+}
+
+#[test]
+fn batching_bounds_property() {
+    // every flushed batch obeys 1 <= len <= max_batch and is profile-pure
+    let mut rng = Rng::new(1);
+    for trial in 0..50 {
+        let max_batch = 1 + rng.below(8);
+        let mut b = DynamicBatcher::new(max_batch, Duration::from_millis(1));
+        let t = Instant::now();
+        let n = 1 + rng.below(64);
+        for i in 0..n {
+            b.push(req(i as u64, rng.below(6) as u64, t));
+        }
+        let later = t + Duration::from_millis(10);
+        let mut seen = 0;
+        while let Some(pb) = b.poll(later) {
+            assert!(!pb.requests.is_empty() && pb.requests.len() <= max_batch, "trial {trial}");
+            assert!(pb.requests.iter().all(|r| r.profile_id == pb.profile_id));
+            seen += pb.requests.len();
+        }
+        assert_eq!(seen, n, "trial {trial}: all requests delivered");
+    }
+}
+
+#[test]
+fn store_roundtrip_property() {
+    // pack(unpack(x)) == x across random shapes; byte counts match Table 1
+    let mut rng = Rng::new(2);
+    let dir = std::env::temp_dir().join("xpeft_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    for trial in 0..20 {
+        let layers = 1 + rng.below(12);
+        let n = 8 + rng.below(400);
+        let k = 1 + rng.below(n);
+        let mut store = ProfileStore::new(4);
+        let profiles = 1 + rng.below(20);
+        for pid in 0..profiles {
+            store.insert(
+                pid as u64,
+                ProfileRecord { masks: random_masks(layers, n, k, trial * 100 + pid as u64), aux: None },
+            );
+        }
+        let dims = Dims { d: 64, b: 8, layers };
+        assert_eq!(
+            store.total_profile_bytes(),
+            (profiles * dims.xpeft_hard_bytes(n)) as u64,
+            "trial {trial}"
+        );
+        let path = dir.join(format!("s{trial}.bin"));
+        store.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path, 4).unwrap();
+        assert_eq!(loaded.len(), store.len());
+        for pid in store.ids() {
+            assert_eq!(
+                loaded.record(pid).unwrap().masks,
+                store.record(pid).unwrap().masks
+            );
+        }
+    }
+}
+
+#[test]
+fn mask_binarization_always_k_bits_property() {
+    let mut rng = Rng::new(3);
+    for trial in 0..40 {
+        let layers = 1 + rng.below(12);
+        let n = 2 + rng.below(512);
+        let k = 1 + rng.below(n);
+        match random_masks(layers, n, k, trial) {
+            ProfileMasks::Hard(h) => {
+                for l in 0..layers {
+                    assert_eq!(h.selected_a(l).len(), k, "trial {trial} l={l}");
+                    assert_eq!(h.selected_b(l).len(), k);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn lru_cache_never_exceeds_capacity() {
+    let mut rng = Rng::new(4);
+    for _ in 0..10 {
+        let cap = 1 + rng.below(16);
+        let mut store = ProfileStore::new(cap);
+        for pid in 0..50u64 {
+            store.insert(pid, ProfileRecord { masks: random_masks(2, 32, 8, pid), aux: None });
+        }
+        for _ in 0..200 {
+            let pid = rng.below(50) as u64;
+            store.weights(pid).unwrap();
+            let (_, _, len) = store.cache_stats();
+            assert!(len <= cap);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// live service over real artifacts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn service_end_to_end_smoke() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&dir).unwrap());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+
+    // two profiles with distinct random hard masks + shared aux
+    let mut store = ProfileStore::new(64);
+    for pid in [1u64, 2] {
+        store.insert(pid, ProfileRecord { masks: random_masks(mc.layers, 100, 50, pid), aux: None });
+    }
+    store.set_shared_aux(AuxParams {
+        ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+        ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+        head_w: {
+            let mut r = Rng::new(5);
+            r.normal_vec(mc.d * mc.c_max, 0.05)
+        },
+        head_b: vec![0.0; mc.c_max],
+    });
+    let store = Arc::new(Mutex::new(store));
+
+    let cfg = ServeConfig { max_batch: 4, batch_deadline_us: 500, workers: 1, mask_cache: 16 };
+    let svc = Service::start(engine, store, bank, cfg, 15, 42).unwrap();
+
+    let total = 24;
+    for i in 0..total {
+        let pid = 1 + (i % 2) as u64;
+        svc.submit(pid, "s42t3w1 s42t3w2 s42fw1 s42t3w7").unwrap();
+    }
+    let mut got = 0;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while got < total && Instant::now() < deadline {
+        if let Some(resp) = svc.recv_timeout(Duration::from_millis(200)) {
+            assert!(resp.prediction < 15);
+            assert!(resp.latency < Duration::from_secs(10));
+            got += 1;
+        }
+    }
+    assert_eq!(got, total, "all requests answered");
+    let snap = svc.shutdown();
+    assert_eq!(snap.requests, total as u64);
+    assert_eq!(snap.responses, total as u64);
+    assert!(snap.mean_batch >= 1.0);
+    assert!(snap.p99_latency_us > 0.0);
+}

@@ -1,0 +1,167 @@
+//! End-to-end integration: real artifacts loaded through PJRT, trained and
+//! evaluated from rust. These tests are the proof that all three layers
+//! compose (L1 Pallas kernel inside the L2 HLO, driven by the L3 runtime).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use xpeft::adapters::AdapterBank;
+use xpeft::config::{Mode, TrainConfig};
+use xpeft::data::glue;
+use xpeft::runtime::Engine;
+use xpeft::train::{self, eval, Hyper};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| Engine::new(&artifacts_dir()).expect("run `make artifacts` first"))
+}
+
+fn tiny_bank(engine: &Engine, n: usize) -> AdapterBank {
+    let mc = &engine.manifest.config;
+    AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42)
+}
+
+#[test]
+fn xpeft_soft_trains_and_loss_decreases() {
+    let eng = engine();
+    let ds = glue::build("sst2", eng.manifest.config.seq, eng.manifest.config.vocab, 42);
+    let bank = tiny_bank(eng, 100);
+    let cfg = TrainConfig {
+        mode: Mode::XpeftSoft,
+        n: 100,
+        steps: 30,
+        base_lr: 0.02,
+        ..Default::default()
+    };
+    let (_, outcome) = train::train_profile(eng, &cfg, &ds, Some(&bank), 42).unwrap();
+    assert_eq!(outcome.losses.len(), 30);
+    let first: f32 = outcome.losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = outcome.losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first * 0.95,
+        "loss should decrease: first5={first:.4} last5={last:.4}"
+    );
+    assert!(outcome.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn xpeft_hard_trains_with_khot_masks() {
+    let eng = engine();
+    let mc = &eng.manifest.config;
+    let ds = glue::build("sst2", mc.seq, mc.vocab, 7);
+    let bank = tiny_bank(eng, 100);
+    let cfg = TrainConfig {
+        mode: Mode::XpeftHard,
+        n: 100,
+        k: 50,
+        steps: 25,
+        base_lr: 0.02,
+        ..Default::default()
+    };
+    let (trainer, outcome) = train::train_profile(eng, &cfg, &ds, Some(&bank), 42).unwrap();
+    assert!(outcome.losses.last().unwrap() < outcome.losses.first().unwrap());
+    // binarized profile state: exactly k bits per row, byte-level size
+    let masks = trainer.profile_masks(Mode::XpeftHard, mc.layers, 100, 50).unwrap();
+    match &masks {
+        xpeft::masks::ProfileMasks::Hard(h) => {
+            for l in 0..mc.layers {
+                assert_eq!(h.selected_a(l).len(), 50);
+            }
+            assert_eq!(h.stored_bytes(), 2 * 100usize.div_ceil(8) * mc.layers);
+        }
+        _ => panic!("expected hard masks"),
+    }
+}
+
+#[test]
+fn baselines_train() {
+    let eng = engine();
+    let mc = &eng.manifest.config;
+    let ds = glue::build("sst2", mc.seq, mc.vocab, 9);
+    for mode in [Mode::SingleAdapter, Mode::HeadOnly] {
+        let cfg = TrainConfig { mode, steps: 20, base_lr: 0.02, ..Default::default() };
+        let (_, outcome) = train::train_profile(eng, &cfg, &ds, None, 42).unwrap();
+        assert!(
+            outcome.losses.last().unwrap() < outcome.losses.first().unwrap(),
+            "{mode:?} should learn"
+        );
+    }
+}
+
+#[test]
+fn eval_after_training_beats_chance() {
+    let eng = engine();
+    let mc = &eng.manifest.config;
+    let ds = glue::build("sst2", mc.seq, mc.vocab, 11);
+    let bank = tiny_bank(eng, 100);
+    let cfg = TrainConfig {
+        mode: Mode::XpeftSoft,
+        n: 100,
+        steps: 60,
+        base_lr: 0.02,
+        ..Default::default()
+    };
+    let (trainer, _) = train::train_profile(eng, &cfg, &ds, Some(&bank), 42).unwrap();
+    let scores =
+        eval::evaluate(eng, Mode::XpeftSoft, &trainer, &ds, Some(&bank), 100, 50, 42).unwrap();
+    let acc = scores.acc.unwrap();
+    assert!(acc > 0.6, "sst2 acc after 60 steps should beat chance: {acc}");
+}
+
+#[test]
+fn regression_head_runs() {
+    let eng = engine();
+    let mc = &eng.manifest.config;
+    let ds = glue::build("stsb", mc.seq, mc.vocab, 13);
+    let bank = tiny_bank(eng, 100);
+    let cfg = TrainConfig {
+        mode: Mode::XpeftSoft,
+        n: 100,
+        steps: 15,
+        base_lr: 0.02,
+        ..Default::default()
+    };
+    let (_, outcome) = train::train_profile(eng, &cfg, &ds, Some(&bank), 42).unwrap();
+    assert!(outcome.losses.iter().all(|l| l.is_finite()));
+    assert!(outcome.losses.last().unwrap() < outcome.losses.first().unwrap());
+}
+
+#[test]
+fn same_seed_same_losses() {
+    // Fig 7's reproducibility claim, through the whole stack.
+    let eng = engine();
+    let mc = &eng.manifest.config;
+    let ds = glue::build("sst2", mc.seq, mc.vocab, 21);
+    let bank = tiny_bank(eng, 100);
+    let cfg = TrainConfig {
+        mode: Mode::XpeftHard,
+        n: 100,
+        steps: 8,
+        base_lr: 0.02,
+        ..Default::default()
+    };
+    let (_, a) = train::train_profile(eng, &cfg, &ds, Some(&bank), 42).unwrap();
+    let (_, b) = train::train_profile(eng, &cfg, &ds, Some(&bank), 42).unwrap();
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn hyper_from_config_maps_fields() {
+    let cfg = TrainConfig {
+        mode: Mode::XpeftHard,
+        k: 30,
+        tau: 0.7,
+        nu: 0.2,
+        single_mask: true,
+        ..Default::default()
+    };
+    let hp = Hyper::from_config(&cfg, 3, 100);
+    assert_eq!(hp.hard_flag, 1.0);
+    assert_eq!(hp.k, 30);
+    assert_eq!(hp.num_classes, 3);
+    assert_eq!(hp.single_mask_flag, 1.0);
+}
