@@ -2,7 +2,7 @@
 //! adapter bank from early authors, then personalize a brand-new author
 //! with mask tensors only — and compare against the random-bank setting.
 //!
-//!   make artifacts && cargo run --release --example lamp_personalization
+//!   cargo run --release --example lamp_personalization
 
 use anyhow::Result;
 use xpeft::adapters::AdapterBank;

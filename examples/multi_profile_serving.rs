@@ -1,9 +1,9 @@
-//! END-TO-END DRIVER (EXPERIMENTS.md §End-to-end): the full multi-profile
-//! system on a real small workload, proving all layers compose —
-//! L1 Pallas kernel (inside the AOT HLO) ← L2 JAX model ← L3 rust
-//! coordinator (scheduler → profile store → router/batcher → PJRT).
+//! END-TO-END DRIVER: the full multi-profile system on a real small
+//! workload, proving all layers compose — gather-GEMM kernels inside the
+//! encoder ← backend-generic runtime ← rust coordinator (scheduler →
+//! profile store → router/batcher → executor).
 //!
-//!   make artifacts && cargo run --release --example multi_profile_serving
+//!   cargo run --release --example multi_profile_serving
 //!
 //! Pipeline: generate a LaMP-like multi-profile corpus → tune byte-level
 //! mask profiles for every author through the training scheduler → serve a

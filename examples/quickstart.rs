@@ -1,10 +1,11 @@
 //! Quickstart: tune one new profile with X-PEFT hard masks and evaluate it.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 //!
-//! Walks the core API: load the AOT engine, build a shared random adapter
-//! bank, train the profile's mask tensors on a task, binarize to the
-//! byte-level profile state, and evaluate on the dev split.
+//! Walks the core API: start the engine (NativeBackend — no artifacts or
+//! build step needed), build a shared random adapter bank, train the
+//! profile's mask tensors on a task, binarize to the byte-level profile
+//! state, and evaluate on the dev split.
 
 use anyhow::Result;
 use xpeft::adapters::AdapterBank;
@@ -15,8 +16,9 @@ use xpeft::runtime::Engine;
 use xpeft::train::{self, eval};
 
 fn main() -> Result<()> {
-    // 1) the engine loads artifacts/manifest.json and compiles executables
-    //    on the PJRT CPU client (python was only used at build time).
+    // 1) the engine synthesizes the executable contract and compiles
+    //    programs on the native backend (an artifacts/manifest.json, if
+    //    present, is honored instead; see the `pjrt` feature for AOT HLO).
     let engine = Engine::new(std::path::Path::new("artifacts"))?;
     let mc = engine.manifest.config.clone();
 

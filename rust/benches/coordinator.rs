@@ -1,6 +1,6 @@
 //! `cargo bench --bench coordinator` — L3 hot-path micro benches: dynamic
 //! batcher ops, profile-store lookups at scale, mask pack/unpack, and the
-//! full service round-trip (when artifacts exist).
+//! full service round-trip over the native backend.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -68,11 +68,10 @@ fn main() {
         ));
     }
 
-    // full service round-trip (needs artifacts)
-    let dir = std::path::PathBuf::from("artifacts");
-    if dir.join("manifest.json").exists() {
-        println!("\n== service round-trip (real PJRT eval) ==");
-        let engine = Arc::new(Engine::new(&dir).unwrap());
+    // full service round-trip over the native backend
+    {
+        println!("\n== service round-trip (native eval) ==");
+        let engine = Arc::new(Engine::native());
         let mc = engine.manifest.config.clone();
         let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
         let mut store = ProfileStore::new(64);

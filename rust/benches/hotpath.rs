@@ -1,77 +1,90 @@
-//! `cargo bench --bench hotpath` — training hot-path breakdown used by the
-//! §Perf optimization loop (EXPERIMENTS.md): isolates literal construction,
-//! frozen-tensor upload and executable dispatch so regressions in each are
-//! visible independently.
+//! `cargo bench --bench hotpath` — training/serving hot-path breakdown on
+//! the NativeBackend: the gather-GEMM mask aggregation kernel in isolation
+//! (soft dense vs hard k-sparse), end-to-end train-step latency per bank
+//! size N, and the eval forward the serving path runs.
+//!
+//! Writes `BENCH_hotpath.json` (first datapoint of the benchmark
+//! trajectory; see CHANGES.md for the entry format).
 
 use xpeft::adapters::AdapterBank;
 use xpeft::bench::{Bench, Suite};
 use xpeft::config::{Mode, TrainConfig};
 use xpeft::data::batch::Batcher;
 use xpeft::data::glue;
-use xpeft::runtime::literal::{to_literal, Tensor};
-use xpeft::runtime::manifest::Group;
+use xpeft::runtime::native::kernels;
 use xpeft::runtime::Engine;
-use xpeft::train::{Hyper, Trainer};
+use xpeft::train::{eval::Evaluator, Hyper, Trainer};
 use xpeft::util::rng::Rng;
 
 fn main() {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::new(&dir).unwrap();
+    let engine = Engine::native();
     let mc = engine.manifest.config.clone();
     let mut suite = Suite::default();
 
-    // literal construction costs (per-step CPU overhead candidates)
-    println!("== literal construction ==");
-    let spec_bank = engine
-        .manifest
-        .find("xpeft_train_cls_n400")
-        .unwrap()
-        .inputs_in(Group::Bank)
-        .next()
-        .unwrap()
-        .clone();
-    let bank_data = Tensor::F32(vec![0.1; spec_bank.elements()]);
-    suite.add(Bench::default().run(
-        &format!("to_literal bank_a N=400 ({} floats)", spec_bank.elements()),
-        || to_literal(&spec_bank, &bank_data).unwrap(),
-    ));
-    let spec_small = engine
-        .manifest
-        .find("xpeft_train_cls_n400")
-        .unwrap()
-        .inputs
-        .iter()
-        .find(|t| t.name == "mask_a_logits")
-        .unwrap()
-        .clone();
-    let small = Tensor::F32(vec![0.0; spec_small.elements()]);
-    suite.add(Bench::default().run("to_literal mask logits [L,400]", || {
-        to_literal(&spec_small, &small).unwrap()
-    }));
+    // the L1 kernel in isolation: Â = Σ_i w_i·A_i over [N, d·b] slabs
+    println!("== gather-GEMM aggregation (d={} b={}) ==", mc.d, mc.bottleneck);
+    let slab = mc.d * mc.bottleneck;
+    let mut rng = Rng::new(42);
+    for n in [100usize, 400] {
+        let bank = rng.normal_vec(n * slab, 0.1);
+        let soft: Vec<f32> = vec![1.0 / n as f32; n];
+        suite.add(Bench::default().with_items(n).run(
+            &format!("aggregate soft N={n} (dense)"),
+            || kernels::aggregate_bank(&soft, &bank, slab),
+        ));
+        let mut hard = vec![0.0f32; n];
+        for i in 0..50 {
+            hard[(i * n) / 50] = 1.0 / 50.0;
+        }
+        suite.add(Bench::default().with_items(50).run(
+            &format!("aggregate hard N={n} k=50 (zero-skip)"),
+            || kernels::aggregate_bank(&hard, &bank, slab),
+        ));
+    }
 
     // end-to-end step latency per N (the number that must not regress)
-    println!("\n== train step dispatch ==");
+    println!("\n== train step (NativeBackend) ==");
     let ds = glue::build("sst2", mc.seq, mc.vocab, 42);
     let batcher = Batcher::new(mc.batch, mc.seq);
-    let mut rng = Rng::new(0);
-    let batch = batcher.epoch(&ds.train, &mut rng).remove(0);
+    let mut shuffle_rng = Rng::new(0);
+    let batch = batcher.epoch(&ds.train, &mut shuffle_rng).remove(0);
     for n in [100usize, 200, 400] {
         let bank = AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42);
-        let mut trainer = Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
+        let mut trainer =
+            Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
         let cfg = TrainConfig { mode: Mode::XpeftHard, n, steps: 50, ..Default::default() };
         let hp = Hyper::from_config(&cfg, 2, 50);
         suite.add(
-            Bench { warmup: 3, iters: 15, items_per_iter: Some(mc.batch) }.run(
+            Bench { warmup: 2, iters: 10, items_per_iter: Some(mc.batch) }.run(
                 &format!("xpeft_hard train step N={n}"),
                 || trainer.step(&batch, &hp).unwrap(),
             ),
         );
     }
 
+    // the serving inner loop: one batched eval forward
+    println!("\n== eval step (serving inner loop) ==");
+    for n in [100usize, 400] {
+        let bank = AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42);
+        let trainer =
+            Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
+        let ev = Evaluator::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42).unwrap();
+        let w = trainer.mask_weights(Mode::XpeftHard, mc.layers, n, 50).unwrap();
+        suite.add(
+            Bench { warmup: 2, iters: 10, items_per_iter: Some(mc.batch) }.run(
+                &format!("eval step N={n} (batch {})", mc.batch),
+                || ev.forward(&trainer.state, Some(&w), &batch).unwrap(),
+            ),
+        );
+    }
+
+    let json = suite.to_json().to_string_pretty();
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} entries)", suite.results.len()),
+        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+    }
     std::fs::create_dir_all("results").ok();
-    std::fs::write("results/bench_hotpath.json", suite.to_json().to_string_pretty()).ok();
+    if let Err(e) = std::fs::write("results/bench_hotpath.json", &json) {
+        eprintln!("failed to write results/bench_hotpath.json: {e}");
+    }
 }

@@ -14,12 +14,7 @@ use xpeft::train::{eval::Evaluator, Hyper, Trainer};
 use xpeft::util::rng::Rng;
 
 fn main() {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::new(&dir).unwrap();
+    let engine = Engine::native();
     let mc = engine.manifest.config.clone();
     let ds = glue::build("sst2", mc.seq, mc.vocab, 42);
     let batcher = Batcher::new(mc.batch, mc.seq);

@@ -32,8 +32,13 @@ impl Default for ModelConfig {
 }
 
 impl ModelConfig {
+    /// Per-head width of the attention projections (`d / heads`).
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
     pub fn from_json(j: &Json) -> Result<ModelConfig> {
-        Ok(ModelConfig {
+        let mc = ModelConfig {
             vocab: j.usize_field("vocab")?,
             d: j.usize_field("d")?,
             layers: j.usize_field("layers")?,
@@ -43,7 +48,13 @@ impl ModelConfig {
             batch: j.usize_field("batch")?,
             bottleneck: j.usize_field("bottleneck")?,
             c_max: j.usize_field("c_max")?,
-        })
+        };
+        // The attention kernels split d into `heads` equal slices; a
+        // non-divisible width would silently drop trailing dims.
+        if mc.heads == 0 || mc.d % mc.heads != 0 {
+            bail!("d={} must be a positive multiple of heads={}", mc.d, mc.heads);
+        }
+        Ok(mc)
     }
 }
 

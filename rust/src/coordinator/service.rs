@@ -1,11 +1,13 @@
-//! The serving service: ingress → per-profile dynamic batching → PJRT
-//! execution → responses, on plain threads + channels (tokio is not
-//! available offline; the request path is allocation-light and lock scope
-//! is one profile-store lookup per batch).
+//! The serving service: ingress → per-profile dynamic batching →
+//! backend-generic eval execution → responses, on plain threads + channels
+//! (tokio is not available offline; the request path is allocation-light
+//! and lock scope is one profile-store lookup per batch). Which backend
+//! runs the forward (native gather-GEMM kernels by default, PJRT under the
+//! `pjrt` feature) is the engine's concern — this module never sees it.
 //!
 //! Request path (never touches python):
 //!   submit(text) → tokenize → DynamicBatcher (group by profile)
-//!   → executor: profile-store weight lookup (LRU) + eval executable
+//!   → executor: profile-store weight lookup (LRU) + eval program
 //!   → Response {prediction, latency}
 
 use std::sync::mpsc;

@@ -1,30 +1,60 @@
 //! # X-PEFT — eXtremely Parameter-Efficient Fine-Tuning for extreme
 //! multi-profile scenarios
 //!
-//! Production-shaped reproduction of Kwak & Kim (2024): a rust coordinator
-//! serving/tuning hundreds of profiles whose per-profile state is two
-//! bit-packed mask tensors over a shared frozen adapter bank, with all
-//! numerics AOT-compiled from JAX/Pallas to PJRT executables (see
-//! DESIGN.md for the full architecture and experiment index).
+//! Production-shaped reproduction of Kwak & Kim (2024, arXiv 2401.16137):
+//! a rust coordinator serving/tuning hundreds of profiles whose entire
+//! per-profile state is two bit-packed mask tensors (`2·⌈N/8⌉·L` bytes)
+//! over a shared frozen adapter bank. See `rust/README.md` for the full
+//! architecture walkthrough and the Table-1 memory accounting.
 //!
-//! Layering:
-//! * [`runtime`] loads `artifacts/*.hlo.txt` via the PJRT C API and owns
-//!   every `train_step` / `eval_step` execution.
-//! * [`coordinator`] is the multi-profile system: profile store, router,
-//!   dynamic batcher, training scheduler, telemetry.
+//! ## Layering
+//!
+//! * [`runtime`] owns execution. Numerics plug in behind
+//!   [`runtime::Backend`] / [`runtime::Program`] — host-tensor in, host
+//!   tensor out, input/output order fixed by [`runtime::manifest`]. Two
+//!   implementations exist:
+//!   * [`runtime::NativeBackend`] (default): pure-rust gather-GEMM kernels
+//!     + hand-written encoder backward; builds and runs offline on stock
+//!     `cargo`, no artifacts directory needed.
+//!   * `runtime::pjrt` (cargo feature `pjrt`, off by default): compiles
+//!     AOT-lowered HLO text through the PJRT C API. Requires the `xla` FFI
+//!     crate (commented out in `Cargo.toml` because it cannot be fetched
+//!     offline) plus `make artifacts`.
+//! * [`coordinator`] is the multi-profile system: profile store, dynamic
+//!   batcher, training scheduler, serving service, telemetry.
 //! * [`masks`], [`adapters`], [`data`], [`metrics`], [`train`],
 //!   [`analysis`] are the substrates the paper's evaluation needs.
 //! * [`experiments`] regenerates every table and figure.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use xpeft::adapters::AdapterBank;
+//! use xpeft::config::{Mode, TrainConfig};
+//! use xpeft::runtime::Engine;
+//! use xpeft::{data::glue, train};
+//!
+//! let engine = Engine::native();
+//! let mc = engine.manifest.config.clone();
+//! let bank = AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42);
+//! let dataset = glue::build("sst2", mc.seq, mc.vocab, 42);
+//! let cfg = TrainConfig { mode: Mode::XpeftHard, n: 100, steps: 50, ..Default::default() };
+//! let (trainer, outcome) =
+//!     train::train_profile(&engine, &cfg, &dataset, Some(&bank), 42).unwrap();
+//! let masks = trainer.profile_masks(cfg.mode, mc.layers, cfg.n, cfg.k).unwrap();
+//! println!("final loss {:.3}, profile = {} bytes", outcome.losses.last().unwrap(),
+//!          masks.stored_bytes());
+//! ```
 
 pub mod adapters;
 pub mod analysis;
 pub mod bench;
-pub mod experiments;
-pub mod coordinator;
 pub mod config;
+pub mod coordinator;
 pub mod data;
+pub mod experiments;
 pub mod masks;
+pub mod metrics;
 pub mod runtime;
 pub mod train;
-pub mod metrics;
 pub mod util;

@@ -205,9 +205,11 @@ fn softmax_rows(logits: &[f32], layers: usize, n: usize) -> Vec<f32> {
 
 /// Top-k indices of a row (ties resolved by lower index, matching a stable
 /// descending sort — same convention as jnp.argsort(-x) in the L2 model).
+/// Uses a total order so NaN logits (e.g. a diverged profile) rank rather
+/// than panic inside a scheduler/serving thread.
 pub fn topk_indices(row: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..row.len()).collect();
-    idx.sort_by(|&i, &j| row[j].partial_cmp(&row[i]).unwrap().then(i.cmp(&j)));
+    idx.sort_by(|&i, &j| row[j].total_cmp(&row[i]).then(i.cmp(&j)));
     idx.truncate(k.min(row.len()));
     idx
 }
@@ -344,6 +346,30 @@ mod tests {
                     .filter(|&i| w.a[l * n + i] > 0.0)
                     .collect();
                 assert_eq!(sel, from_w);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_serialize_unpack_roundtrip_preserves_selection() {
+        // the serving-path cycle: binarize → to_bytes → from_bytes →
+        // to_weights must reproduce exactly the trained top-k selection,
+        // with every surviving weight equal to 1/k.
+        for (layers, n, k) in [(4usize, 100usize, 50usize), (12, 400, 50), (2, 37, 5)] {
+            let logits = random_logits(layers, n, (layers * n + k) as u64);
+            let packed = logits.binarize(k);
+            let restored = HardMask::from_bytes(&packed.to_bytes()).unwrap();
+            assert_eq!(packed, restored);
+            let w = restored.to_weights();
+            for l in 0..layers {
+                let mut expect = topk_indices(logits.row_a(l), k);
+                expect.sort_unstable();
+                let got: Vec<usize> =
+                    (0..n).filter(|&i| w.a[l * n + i] > 0.0).collect();
+                assert_eq!(got, expect, "L{l} selection survives the round-trip");
+                for &i in &got {
+                    assert!((w.a[l * n + i] - 1.0 / k as f32).abs() < 1e-7);
+                }
             }
         }
     }

@@ -1,0 +1,98 @@
+//! The backend abstraction: how numerics plug into the coordinator.
+//!
+//! A [`Backend`] turns a manifest [`ArtifactSpec`] into an executable
+//! [`Program`]; a `Program` maps input [`Tensor`]s to output `Tensor`s.
+//! That is the *entire* contract between the multi-profile system (trainer,
+//! evaluator, serving service) and whatever does the math.
+//!
+//! ## The contract
+//!
+//! * **Input order and shapes follow the manifest** (`runtime::manifest`):
+//!   `Program::run` takes exactly `spec().inputs.len()` tensors, in spec
+//!   order — trainable block (lexicographically sorted names), then
+//!   `opt_m`, `opt_v`, frozen PLM, adapter bank (xpeft artifacts only),
+//!   data, scalars. Callers keep frozen groups cached and splice them in by
+//!   input index; see `train::Trainer` for the canonical pattern.
+//! * **Output order follows `spec().outputs`**: train artifacts return
+//!   `trainable' ++ opt_m' ++ opt_v' ++ [loss]`, eval artifacts return
+//!   `[logits]` of shape `[batch, out_w]` row-major.
+//! * Programs are immutable and thread-safe; one compiled `Program` may be
+//!   shared across trainer/serving threads (`Arc<dyn Program>`).
+//!
+//! ## Implementations
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure-rust kernels
+//!   (gather-GEMM mask aggregation + hand-written encoder backward), the
+//!   default; builds offline on stock `cargo`.
+//! * `crate::runtime::pjrt::PjrtBackend` — compiles the AOT-lowered HLO
+//!   text via the PJRT C API. Behind the `pjrt` cargo feature (off by
+//!   default) because its `xla` FFI crate cannot be fetched or linked
+//!   offline.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// One compiled executable. Inputs/outputs follow the manifest spec order.
+pub trait Program: Send + Sync {
+    /// The manifest contract this program was compiled from.
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute on fully-materialized host tensors (manifest input order).
+    /// Returns outputs in `spec().outputs` order.
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// A numeric execution engine that can compile manifest artifacts.
+pub trait Backend: Send + Sync {
+    /// Short identifier for logs ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Compile one artifact. The manifest is passed alongside the spec so
+    /// backends can read static model dimensions (`manifest.config`).
+    fn compile(&self, manifest: &Manifest, spec: &ArtifactSpec) -> Result<Arc<dyn Program>>;
+}
+
+/// Shared input validation for `Program::run` implementations: arity plus
+/// per-tensor dtype/element-count against the spec.
+pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "artifact {}: got {} inputs, expected {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
+        );
+    }
+    for (t, ts) in inputs.iter().zip(&spec.inputs) {
+        t.check(ts)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use std::path::Path;
+
+    #[test]
+    fn validate_inputs_checks_arity_and_specs() {
+        let m = Manifest::synthesize(ModelConfig::default(), Path::new("artifacts"));
+        let spec = m.find("head_only_eval_cls").unwrap();
+        // wrong arity
+        assert!(validate_inputs(spec, &[]).is_err());
+        // right arity + right tensors
+        let tensors: Vec<Tensor> = spec.inputs.iter().map(Tensor::zeros_like).collect();
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        validate_inputs(spec, &refs).unwrap();
+        // dtype flip on the first input gets caught
+        let mut bad = tensors.clone();
+        bad[0] = Tensor::I32(vec![0; spec.inputs[0].elements()]);
+        let refs: Vec<&Tensor> = bad.iter().collect();
+        assert!(validate_inputs(spec, &refs).is_err());
+    }
+}

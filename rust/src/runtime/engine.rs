@@ -1,163 +1,148 @@
-//! The PJRT engine: loads HLO-text artifacts, compiles them once on the CPU
-//! client and executes them from the request/training path. This is the
-//! only module that touches the `xla` crate FFI at execution time.
+//! The engine: owns the manifest, a pluggable [`Backend`] and a cache of
+//! compiled programs. Everything above this module (trainer, evaluator,
+//! coordinator, experiments) talks to `Engine::program(name)` and
+//! `Program::run(..)` only — which backend does the math is invisible.
+//!
+//! Default construction uses the pure-rust [`NativeBackend`]. If an
+//! `artifacts/manifest.json` exists it is loaded (so AOT-lowered dims keep
+//! working); otherwise the identical contract is synthesized in-process,
+//! which is why `cargo test`/`cargo run` work from a fresh clone with no
+//! build step. The PJRT engine lives in `runtime::pjrt` behind the `pjrt`
+//! cargo feature.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::literal::{from_literal, Tensor};
-use super::manifest::{ArtifactSpec, Manifest};
+use crate::config::ModelConfig;
 use crate::info;
 
-/// One compiled executable plus its manifest spec.
-pub struct Program {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
+use super::backend::{Backend, Program};
+use super::manifest::Manifest;
+use super::native::NativeBackend;
 
-// SAFETY: the wrapped pointers come from the PJRT C API, which guarantees
-// thread-safe clients/executables (PJRT_Client and PJRT_LoadedExecutable are
-// documented as thread-safe; the CPU plugin serializes internally). The
-// `xla` crate merely forgot the markers. We never hand out mutable aliases
-// to the underlying objects.
-unsafe impl Send for Program {}
-unsafe impl Sync for Program {}
-
-impl Program {
-    /// Execute with fully-materialized input literals (manifest order).
-    /// Returns named outputs in manifest order.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        anyhow::ensure!(
-            inputs.len() == self.spec.inputs.len(),
-            "artifact {}: got {} inputs, expected {}",
-            self.spec.name,
-            inputs.len(),
-            self.spec.inputs.len()
-        );
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: unpack the root tuple.
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        anyhow::ensure!(
-            parts.len() == self.spec.outputs.len(),
-            "artifact {}: got {} outputs, expected {}",
-            self.spec.name,
-            parts.len(),
-            self.spec.outputs.len()
-        );
-        parts.iter().map(from_literal).collect()
-    }
-
-    /// Execute with borrowed literals (hot path: frozen PLM/bank literals
-    /// are cached by the caller and passed by reference, so no multi-MB
-    /// clone happens per step). Outputs come back as host tensors.
-    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<Tensor>> {
-        anyhow::ensure!(
-            inputs.len() == self.spec.inputs.len(),
-            "artifact {}: got {} inputs, expected {}",
-            self.spec.name,
-            inputs.len(),
-            self.spec.inputs.len()
-        );
-        let result = self
-            .exe
-            .execute::<&xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        anyhow::ensure!(
-            parts.len() == self.spec.outputs.len(),
-            "artifact {}: got {} outputs, expected {}",
-            self.spec.name,
-            parts.len(),
-            self.spec.outputs.len()
-        );
-        parts.iter().map(from_literal).collect()
-    }
-
-    /// Execute with device-resident buffers. NOTE: unused on this image —
-    /// xla_extension 0.5.1's pjrt_buffer_from_host_literal trips a fatal
-    /// `pointer_size > 0` CHECK (see EXPERIMENTS.md §Perf); kept for
-    /// environments with a healthy PJRT buffer path.
-    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
-        anyhow::ensure!(
-            inputs.len() == self.spec.inputs.len(),
-            "artifact {}: got {} buffer inputs, expected {}",
-            self.spec.name,
-            inputs.len(),
-            self.spec.inputs.len()
-        );
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .with_context(|| format!("executing (buffers) {}", self.spec.name))?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        parts.iter().map(from_literal).collect()
-    }
-}
-
-/// Loads artifacts on demand and caches compiled executables.
+/// Loads/synthesizes the manifest, compiles artifacts on demand and caches
+/// compiled programs.
 pub struct Engine {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    programs: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+    backend: Box<dyn Backend>,
+    programs: Mutex<HashMap<String, Arc<dyn Program>>>,
 }
 
-// SAFETY: see `Program` above — PJRT clients are thread-safe by contract.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
 impl Engine {
+    /// Native-backend engine. Loads `manifest.json` from `artifacts_dir`
+    /// when present (so AOT-lowered dims are honored), else synthesizes the
+    /// default contract so no artifacts directory is required. A manifest
+    /// that exists but fails to parse is an error, not a silent fallback —
+    /// falling back would train against different model dims than the
+    /// user's artifacts.
     pub fn new(artifacts_dir: &std::path::Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = if artifacts_dir.join("manifest.json").exists() {
+            let m = Manifest::load(artifacts_dir)?;
+            info!("engine", "loaded manifest from {}", artifacts_dir.display());
+            m
+        } else {
+            Manifest::synthesize(ModelConfig::default(), artifacts_dir)
+        };
+        Ok(Engine::with_backend(manifest, Box::new(NativeBackend::new())))
+    }
+
+    /// Native-backend engine with the default synthesized manifest.
+    pub fn native() -> Engine {
+        let manifest =
+            Manifest::synthesize(ModelConfig::default(), std::path::Path::new("artifacts"));
+        Engine::with_backend(manifest, Box::new(NativeBackend::new()))
+    }
+
+    /// Engine over an explicit manifest + backend (tests, PJRT, future
+    /// accelerator backends).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Engine {
         info!(
             "engine",
-            "PJRT client up: platform={} devices={} artifacts={}",
-            client.platform_name(),
-            client.device_count(),
+            "{} backend up: artifacts={}",
+            backend.name(),
             manifest.artifacts.len()
         );
-        Ok(Engine { manifest, client, programs: Mutex::new(HashMap::new()) })
+        Engine { manifest, backend, programs: Mutex::new(HashMap::new()) }
+    }
+
+    /// PJRT-backed engine over AOT-lowered HLO artifacts (requires the
+    /// `pjrt` cargo feature and a populated artifacts directory).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let backend = super::pjrt::PjrtBackend::new()?;
+        Ok(Engine::with_backend(manifest, Box::new(backend)))
     }
 
     /// Compile (or fetch cached) a program by artifact name.
-    pub fn program(&self, name: &str) -> Result<std::sync::Arc<Program>> {
+    pub fn program(&self, name: &str) -> Result<Arc<dyn Program>> {
         if let Some(p) = self.programs.lock().unwrap().get(name) {
             return Ok(p.clone());
         }
-        let spec = self.manifest.find(name)?.clone();
-        let (program, secs) = crate::util::timed(|| -> Result<Program> {
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.file.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-            Ok(Program { spec, exe })
-        });
-        let program = std::sync::Arc::new(program?);
-        info!("engine", "compiled {name} in {secs:.2}s");
-        self.programs.lock().unwrap().insert(name.to_string(), program.clone());
+        let spec = self.manifest.find(name)?;
+        let (program, secs) = crate::util::timed(|| self.backend.compile(&self.manifest, spec));
+        let program = program?;
+        if secs > 0.01 {
+            info!("engine", "compiled {name} in {secs:.2}s");
+        }
+        // Concurrent first requests may race the compile; converge every
+        // caller on whichever instance landed in the cache first.
+        let program = self
+            .programs
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(program)
+            .clone();
         Ok(program)
     }
 
-    /// Upload a literal to the default device (for frozen groups).
-    pub fn to_device(&self, literal: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, literal)
-            .context("uploading literal to device")
+    /// Which backend this engine executes on ("native", "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn compiled_count(&self) -> usize {
         self.programs.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_needs_no_artifacts() {
+        let eng = Engine::new(std::path::Path::new("definitely-not-a-dir")).unwrap();
+        assert_eq!(eng.backend_name(), "native");
+        assert!(!eng.manifest.artifacts.is_empty());
+        assert_eq!(eng.manifest.config, ModelConfig::default());
+    }
+
+    #[test]
+    fn program_cache_hits() {
+        let eng = Engine::native();
+        assert_eq!(eng.compiled_count(), 0);
+        let a = eng.program("xpeft_train_cls_n100").unwrap();
+        let b = eng.program("xpeft_train_cls_n100").unwrap();
+        assert_eq!(eng.compiled_count(), 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(eng.program("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn engine_is_shareable_across_threads() {
+        let eng = Arc::new(Engine::native());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let e = eng.clone();
+                std::thread::spawn(move || e.program("head_only_eval_cls").unwrap().spec().n)
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 0);
+        }
     }
 }

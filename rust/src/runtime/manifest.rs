@@ -1,6 +1,16 @@
-//! `artifacts/manifest.json` — the contract between the L2 AOT compiler
-//! (python/compile/aot.py) and this runtime: exact input/output buffer
-//! names, shapes, dtypes and order for every lowered executable.
+//! The executable contract: exact input/output buffer names, shapes,
+//! dtypes and order for every artifact a [`crate::runtime::Backend`] can
+//! compile.
+//!
+//! Two sources produce byte-identical contracts:
+//!
+//! * [`Manifest::load`] reads `artifacts/manifest.json`, written by the L2
+//!   AOT compiler (`python/compile/aot.py`) next to its lowered HLO — the
+//!   `pjrt` feature path.
+//! * [`Manifest::synthesize`] constructs the same specs directly in rust
+//!   (mirroring `aot.py`'s `build_train`/`build_eval` orderings, including
+//!   the lexicographic trainable sort), so the default `NativeBackend`
+//!   needs no artifacts directory at all.
 
 use std::path::{Path, PathBuf};
 
@@ -157,6 +167,26 @@ impl Manifest {
         }
     }
 
+    /// Build the full artifact contract in-process, without an artifacts
+    /// directory. Mirrors `aot.py`'s `artifact_plan` + `build_train` /
+    /// `build_eval` exactly: same artifact set, same input order
+    /// (trainable → opt_m → opt_v → plm → bank → data → scalars, with the
+    /// trainable block lexicographically sorted), same output order.
+    pub fn synthesize(config: ModelConfig, dir: &Path) -> Manifest {
+        let mut artifacts = Vec::new();
+        for (head, ns) in [("cls", &XPEFT_NS_CLS[..]), ("reg", &XPEFT_NS_REG[..])] {
+            for &n in ns {
+                artifacts.push(build_train_spec(&config, "xpeft", head, n, dir));
+                artifacts.push(build_eval_spec(&config, "xpeft", head, n, dir));
+            }
+            for mode in ["single_adapter", "head_only"] {
+                artifacts.push(build_train_spec(&config, mode, head, 0, dir));
+                artifacts.push(build_eval_spec(&config, mode, head, 0, dir));
+            }
+        }
+        Manifest { config, artifacts, dir: dir.to_path_buf() }
+    }
+
     /// N values with lowered xpeft artifacts for a given head.
     pub fn available_ns(&self, head: &str) -> Vec<usize> {
         let mut ns: Vec<usize> = self
@@ -167,6 +197,180 @@ impl Manifest {
             .collect();
         ns.sort_unstable();
         ns
+    }
+}
+
+/// Bank sizes with lowered/synthesized xpeft artifacts (aot.py's
+/// `XPEFT_NS_CLS` / `XPEFT_NS_REG`; 150 is the LaMP bank).
+pub const XPEFT_NS_CLS: [usize; 4] = [100, 150, 200, 400];
+pub const XPEFT_NS_REG: [usize; 3] = [100, 200, 400];
+
+fn spec(name: &str, shape: &[usize], dtype: DType, group: Group) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype, group }
+}
+
+/// Frozen-PLM tensor layout, in `aot.py::plm_specs` order.
+fn plm_specs(c: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let mut sp = vec![
+        ("tok_emb".to_string(), vec![c.vocab, c.d]),
+        ("pos_emb".to_string(), vec![c.seq, c.d]),
+        ("emb_ln_scale".to_string(), vec![c.d]),
+        ("emb_ln_bias".to_string(), vec![c.d]),
+    ];
+    for l in 0..c.layers {
+        sp.push((format!("b{l}_wq"), vec![c.d, c.d]));
+        sp.push((format!("b{l}_wk"), vec![c.d, c.d]));
+        sp.push((format!("b{l}_wv"), vec![c.d, c.d]));
+        sp.push((format!("b{l}_wo"), vec![c.d, c.d]));
+        sp.push((format!("b{l}_ln1_scale"), vec![c.d]));
+        sp.push((format!("b{l}_ln1_bias"), vec![c.d]));
+        sp.push((format!("b{l}_w1"), vec![c.d, c.ffn]));
+        sp.push((format!("b{l}_b1"), vec![c.ffn]));
+        sp.push((format!("b{l}_w2"), vec![c.ffn, c.d]));
+        sp.push((format!("b{l}_b2"), vec![c.d]));
+        sp.push((format!("b{l}_ln2_scale"), vec![c.d]));
+        sp.push((format!("b{l}_ln2_bias"), vec![c.d]));
+    }
+    sp
+}
+
+/// Per-profile trainable layout for (mode, n, head), lexicographically
+/// sorted like `aot.py::trainable_specs` (`eval_weights` swaps the mask
+/// logits for already-normalized `mask_{a,b}_w` rows).
+fn trainable_specs(
+    c: &ModelConfig,
+    mode: &str,
+    n: usize,
+    head: &str,
+    eval_weights: bool,
+) -> Vec<(String, Vec<usize>)> {
+    let out_w = if head == "cls" { c.c_max } else { 1 };
+    let mut sp: Vec<(String, Vec<usize>)> = Vec::new();
+    if mode == "xpeft" {
+        let (ma, mb) = if eval_weights {
+            ("mask_a_w", "mask_b_w")
+        } else {
+            ("mask_a_logits", "mask_b_logits")
+        };
+        sp.push(("ln_bias".to_string(), vec![c.layers, c.bottleneck]));
+        sp.push(("ln_scale".to_string(), vec![c.layers, c.bottleneck]));
+        sp.push((ma.to_string(), vec![c.layers, n]));
+        sp.push((mb.to_string(), vec![c.layers, n]));
+    } else if mode == "single_adapter" {
+        sp.push(("adapter_a".to_string(), vec![c.layers, c.d, c.bottleneck]));
+        sp.push(("adapter_b".to_string(), vec![c.layers, c.bottleneck, c.d]));
+        sp.push(("ln_bias".to_string(), vec![c.layers, c.bottleneck]));
+        sp.push(("ln_scale".to_string(), vec![c.layers, c.bottleneck]));
+    }
+    sp.push(("head_b".to_string(), vec![out_w]));
+    sp.push(("head_w".to_string(), vec![c.d, out_w]));
+    sp.sort();
+    sp
+}
+
+fn bank_specs(c: &ModelConfig, n: usize) -> Vec<(String, Vec<usize>)> {
+    vec![
+        ("bank_a".to_string(), vec![c.layers, n, c.d, c.bottleneck]),
+        ("bank_b".to_string(), vec![c.layers, n, c.bottleneck, c.d]),
+    ]
+}
+
+fn build_train_spec(
+    c: &ModelConfig,
+    mode: &str,
+    head: &str,
+    n: usize,
+    dir: &Path,
+) -> ArtifactSpec {
+    let tr = trainable_specs(c, mode, n, head, false);
+    let mut inputs = Vec::new();
+    for (name, shape) in &tr {
+        inputs.push(spec(name, shape, DType::F32, Group::Trainable));
+    }
+    for (name, shape) in &tr {
+        inputs.push(spec(&format!("m_{name}"), shape, DType::F32, Group::OptM));
+    }
+    for (name, shape) in &tr {
+        inputs.push(spec(&format!("v_{name}"), shape, DType::F32, Group::OptV));
+    }
+    for (name, shape) in plm_specs(c) {
+        inputs.push(spec(&name, &shape, DType::F32, Group::Plm));
+    }
+    if mode == "xpeft" {
+        for (name, shape) in bank_specs(c, n) {
+            inputs.push(spec(&name, &shape, DType::F32, Group::Bank));
+        }
+    }
+    let label_dt = if head == "cls" { DType::I32 } else { DType::F32 };
+    inputs.push(spec("tokens", &[c.batch, c.seq], DType::I32, Group::Data));
+    inputs.push(spec("pad_mask", &[c.batch, c.seq], DType::F32, Group::Data));
+    inputs.push(spec("labels", &[c.batch], label_dt, Group::Data));
+    inputs.push(spec("example_w", &[c.batch], DType::F32, Group::Data));
+    for (name, dt) in [
+        ("num_classes", DType::I32),
+        ("step", DType::I32),
+        ("total_steps", DType::I32),
+        ("base_lr", DType::F32),
+        ("seed", DType::I32),
+        ("hard_flag", DType::F32),
+        ("k", DType::I32),
+        ("tau", DType::F32),
+        ("nu", DType::F32),
+        ("single_mask_flag", DType::F32),
+    ] {
+        inputs.push(spec(name, &[], dt, Group::Scalar));
+    }
+
+    let mut outputs: Vec<String> = tr.iter().map(|(n2, _)| n2.clone()).collect();
+    outputs.extend(tr.iter().map(|(n2, _)| format!("m_{n2}")));
+    outputs.extend(tr.iter().map(|(n2, _)| format!("v_{n2}")));
+    outputs.push("loss".to_string());
+
+    let name = Manifest::artifact_name(mode, "train", head, n);
+    ArtifactSpec {
+        file: dir.join(format!("{name}.hlo.txt")),
+        name,
+        mode: mode.to_string(),
+        program: "train".to_string(),
+        head: head.to_string(),
+        n,
+        inputs,
+        outputs,
+    }
+}
+
+fn build_eval_spec(
+    c: &ModelConfig,
+    mode: &str,
+    head: &str,
+    n: usize,
+    dir: &Path,
+) -> ArtifactSpec {
+    let mut inputs = Vec::new();
+    for (name, shape) in trainable_specs(c, mode, n, head, true) {
+        inputs.push(spec(&name, &shape, DType::F32, Group::Trainable));
+    }
+    for (name, shape) in plm_specs(c) {
+        inputs.push(spec(&name, &shape, DType::F32, Group::Plm));
+    }
+    if mode == "xpeft" {
+        for (name, shape) in bank_specs(c, n) {
+            inputs.push(spec(&name, &shape, DType::F32, Group::Bank));
+        }
+    }
+    inputs.push(spec("tokens", &[c.batch, c.seq], DType::I32, Group::Data));
+    inputs.push(spec("pad_mask", &[c.batch, c.seq], DType::F32, Group::Data));
+
+    let name = Manifest::artifact_name(mode, "eval", head, n);
+    ArtifactSpec {
+        file: dir.join(format!("{name}.hlo.txt")),
+        name,
+        mode: mode.to_string(),
+        program: "eval".to_string(),
+        head: head.to_string(),
+        n,
+        inputs,
+        outputs: vec!["logits".to_string()],
     }
 }
 
@@ -227,5 +431,92 @@ mod tests {
     fn artifact_name_formatting() {
         assert_eq!(Manifest::artifact_name("xpeft", "train", "cls", 100), "xpeft_train_cls_n100");
         assert_eq!(Manifest::artifact_name("head_only", "eval", "reg", 0), "head_only_eval_reg");
+    }
+
+    fn synthesized() -> Manifest {
+        Manifest::synthesize(ModelConfig::default(), Path::new("artifacts"))
+    }
+
+    #[test]
+    fn synthesized_has_expected_families() {
+        let m = synthesized();
+        for n in XPEFT_NS_CLS {
+            m.find(&Manifest::artifact_name("xpeft", "train", "cls", n)).unwrap();
+            m.find(&Manifest::artifact_name("xpeft", "eval", "cls", n)).unwrap();
+        }
+        for n in XPEFT_NS_REG {
+            m.find(&Manifest::artifact_name("xpeft", "train", "reg", n)).unwrap();
+        }
+        m.find("single_adapter_train_cls").unwrap();
+        m.find("single_adapter_eval_reg").unwrap();
+        m.find("head_only_train_reg").unwrap();
+        m.find("head_only_eval_cls").unwrap();
+        assert!(m.available_ns("cls").contains(&150)); // LaMP bank
+        assert_eq!(m.available_ns("reg"), vec![100, 200, 400]);
+    }
+
+    #[test]
+    fn synthesized_train_input_layout() {
+        let m = synthesized();
+        let a = m.find("xpeft_train_cls_n100").unwrap();
+        // trainable block first, lexicographically sorted
+        let t: Vec<&TensorSpec> = a.inputs_in(Group::Trainable).collect();
+        let names: Vec<&str> = t.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["head_b", "head_w", "ln_bias", "ln_scale", "mask_a_logits", "mask_b_logits"]
+        );
+        // opt_m / opt_v mirror the trainable block with m_/v_ prefixes
+        let om: Vec<&TensorSpec> = a.inputs_in(Group::OptM).collect();
+        let ov: Vec<&TensorSpec> = a.inputs_in(Group::OptV).collect();
+        assert_eq!(t.len(), om.len());
+        assert_eq!(t.len(), ov.len());
+        for (x, y) in t.iter().zip(&om) {
+            assert_eq!(y.name, format!("m_{}", x.name));
+            assert_eq!(x.shape, y.shape);
+        }
+        // mask rows sized [L, N]
+        let ma = &a.inputs[a.input_index("mask_a_logits").unwrap()];
+        assert_eq!(ma.shape, vec![m.config.layers, 100]);
+        // every scalar present, dtype-correct
+        for s in ["k", "tau", "nu", "hard_flag", "single_mask_flag"] {
+            a.input_index(s).unwrap();
+        }
+        assert_eq!(a.inputs[a.input_index("k").unwrap()].dtype, DType::I32);
+        // outputs: trainable', m', v', loss
+        assert_eq!(a.outputs.len(), 3 * t.len() + 1);
+        assert_eq!(a.outputs.last().unwrap(), "loss");
+    }
+
+    #[test]
+    fn synthesized_eval_input_layout() {
+        let m = synthesized();
+        let a = m.find("xpeft_eval_cls_n150").unwrap();
+        let names: Vec<&str> =
+            a.inputs_in(Group::Trainable).map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["head_b", "head_w", "ln_bias", "ln_scale", "mask_a_w", "mask_b_w"]);
+        assert_eq!(a.outputs, vec!["logits".to_string()]);
+        // labels dtype differs per head on the train side
+        let reg = m.find("xpeft_train_reg_n100").unwrap();
+        assert_eq!(reg.inputs[reg.input_index("labels").unwrap()].dtype, DType::F32);
+        let cls = m.find("xpeft_train_cls_n100").unwrap();
+        assert_eq!(cls.inputs[cls.input_index("labels").unwrap()].dtype, DType::I32);
+    }
+
+    #[test]
+    fn synthesized_baselines_have_no_bank() {
+        let m = synthesized();
+        let sa = m.find("single_adapter_train_cls").unwrap();
+        assert_eq!(sa.inputs_in(Group::Bank).count(), 0);
+        let names: Vec<&str> =
+            sa.inputs_in(Group::Trainable).map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["adapter_a", "adapter_b", "head_b", "head_w", "ln_bias", "ln_scale"]
+        );
+        let ho = m.find("head_only_train_cls").unwrap();
+        let names: Vec<&str> =
+            ho.inputs_in(Group::Trainable).map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["head_b", "head_w"]);
     }
 }

@@ -1,13 +1,25 @@
-//! Runtime layer: PJRT client wrapper (`engine`), the artifact contract
-//! (`manifest`), literal conversion (`literal`) and parameter
-//! materialization (`params`). Everything above this module is pure rust;
-//! everything below is the AOT-compiled XLA executable.
+//! Runtime layer: the artifact contract ([`manifest`]), the host tensor
+//! currency ([`tensor`]), the pluggable execution abstraction
+//! ([`backend`]) and its implementations, plus frozen-parameter
+//! materialization ([`params`]).
+//!
+//! Everything above this module is backend-agnostic: it asks the
+//! [`Engine`] for a [`Program`] by artifact name and feeds it host
+//! [`Tensor`]s in manifest order. The default [`native`] backend is pure
+//! rust; the AOT/PJRT path compiles only with the `pjrt` cargo feature
+//! (its `xla` FFI dependency cannot be fetched offline).
 
+pub mod backend;
 pub mod engine;
-pub mod literal;
 pub mod manifest;
+pub mod native;
 pub mod params;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod tensor;
 
-pub use engine::{Engine, Program};
-pub use literal::Tensor;
+pub use backend::{Backend, Program};
+pub use engine::Engine;
 pub use manifest::{ArtifactSpec, DType, Group, Manifest, TensorSpec};
+pub use native::NativeBackend;
+pub use tensor::Tensor;

@@ -1,0 +1,571 @@
+//! Cache-friendly CPU kernels for the native backend.
+//!
+//! The numerics mirror the L1/L2 python reference exactly
+//! (`python/compile/kernels/ref.py` + `python/compile/model.py`): row-major
+//! matmuls, LayerNorm with `eps = 1e-5`, tanh-approximated GELU, and the
+//! X-PEFT **gather-GEMM**: `Â = Σ_i w[i]·A_i` over a layer's `[N, d, b]`
+//! bank slab, skipping zero weights so a hard k-hot mask touches only k
+//! contiguous adapter slabs.
+//!
+//! Forward kernels are paired with hand-written backward kernels (VJPs);
+//! the unit tests check every backward against central finite differences.
+
+pub const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// matmul family (row-major)
+// ---------------------------------------------------------------------------
+
+/// `a [m,k] @ b [k,n] -> [m,n]` — i-k-j loop order so the inner loop
+/// streams both the output row and a `b` row.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `aᵀ @ b` for `a [k,m]`, `b [k,n]` -> `[m,n]` (gradient of weights).
+pub fn matmul_at_b(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a @ bᵀ` for `a [m,k]`, `b [n,k]` -> `[m,n]` (gradient of activations).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Broadcast-add a `[n]` bias over `[rows, n]`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_exact_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------------
+
+/// Per-row normalization statistics cached for the backward pass.
+#[derive(Debug, Clone)]
+pub struct LnStats {
+    pub mu: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+/// `LN(x) * gamma + beta` over the last dim of `[rows, d]`.
+pub fn layer_norm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> (Vec<f32>, LnStats) {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    let mut mu = vec![0.0f32; rows];
+    let mut rstd = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let m: f32 = xr.iter().sum::<f32>() / d as f32;
+        let var: f32 = xr.iter().map(|&v| (v - m) * (v - m)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        mu[r] = m;
+        rstd[r] = rs;
+        let or = &mut out[r * d..(r + 1) * d];
+        for ((o, &xv), (&g, &b)) in or.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+            *o = (xv - m) * rs * g + b;
+        }
+    }
+    (out, LnStats { mu, rstd })
+}
+
+/// VJP of [`layer_norm`]. Returns `dx`; when `want_affine`, also
+/// `(dgamma, dbeta)` summed over rows (frozen-PLM LNs skip the affine
+/// grads entirely).
+pub fn layer_norm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    gamma: &[f32],
+    stats: &LnStats,
+    d: usize,
+    want_affine: bool,
+) -> (Vec<f32>, Option<(Vec<f32>, Vec<f32>)>) {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dgamma = vec![0.0f32; if want_affine { d } else { 0 }];
+    let mut dbeta = vec![0.0f32; if want_affine { d } else { 0 }];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let (m, rs) = (stats.mu[r], stats.rstd[r]);
+        // dyg = dy * gamma; the two row means close the normalization terms
+        let mut mean_dyg = 0.0f32;
+        let mut mean_dyg_xhat = 0.0f32;
+        for i in 0..d {
+            let xhat = (xr[i] - m) * rs;
+            let dyg = dyr[i] * gamma[i];
+            mean_dyg += dyg;
+            mean_dyg_xhat += dyg * xhat;
+            if want_affine {
+                dgamma[i] += dyr[i] * xhat;
+                dbeta[i] += dyr[i];
+            }
+        }
+        mean_dyg /= d as f32;
+        mean_dyg_xhat /= d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for i in 0..d {
+            let xhat = (xr[i] - m) * rs;
+            let dyg = dyr[i] * gamma[i];
+            dxr[i] = rs * (dyg - mean_dyg - xhat * mean_dyg_xhat);
+        }
+    }
+    let affine = want_affine.then_some((dgamma, dbeta));
+    (dx, affine)
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation — jax.nn.gelu's default)
+// ---------------------------------------------------------------------------
+
+const GELU_S: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_C: f32 = 0.044_715;
+
+pub fn gelu(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| {
+            let u = GELU_S * (v + GELU_C * v * v * v);
+            0.5 * v * (1.0 + u.tanh())
+        })
+        .collect()
+}
+
+pub fn gelu_bwd(x: &[f32], dy: &[f32]) -> Vec<f32> {
+    x.iter()
+        .zip(dy)
+        .map(|(&v, &g)| {
+            let u = GELU_S * (v + GELU_C * v * v * v);
+            let t = u.tanh();
+            let du = GELU_S * (1.0 + 3.0 * GELU_C * v * v);
+            g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// softmax
+// ---------------------------------------------------------------------------
+
+/// In-place row softmax over `[.., cols]` (max-subtracted, so masked
+/// `f32::MIN` entries underflow to exactly 0).
+pub fn softmax_rows(x: &mut [f32], cols: usize) {
+    for row in x.chunks_exact_mut(cols) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// VJP of one softmax row: `dz = y ⊙ (dy - Σ_j y_j dy_j)`.
+pub fn softmax_vjp_row(y: &[f32], dy: &[f32], out: &mut [f32]) {
+    let s: f32 = y.iter().zip(dy).map(|(&a, &b)| a * b).sum();
+    for ((o, &yv), &dv) in out.iter_mut().zip(y).zip(dy) {
+        *o = yv * (dv - s);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// X-PEFT gather-GEMM: mask-aggregated adapter assembly
+// ---------------------------------------------------------------------------
+
+/// `Â = Σ_i w[i] · bank[i]` over a layer slab `bank_layer [N, slab]`
+/// (row-major, `slab = d·b`). Zero weights are skipped, so a k-hot hard
+/// mask gathers exactly k contiguous adapter slabs — the serving hot path.
+pub fn aggregate_bank(weights: &[f32], bank_layer: &[f32], slab: usize) -> Vec<f32> {
+    debug_assert_eq!(bank_layer.len(), weights.len() * slab);
+    let mut out = vec![0.0f32; slab];
+    for (i, &w) in weights.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        let src = &bank_layer[i * slab..(i + 1) * slab];
+        for (o, &x) in out.iter_mut().zip(src) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// VJP of [`aggregate_bank`] w.r.t. the weights:
+/// `dw[i] = ⟨dÂ, bank[i]⟩` (dense — training needs every adapter's grad).
+pub fn aggregate_bank_bwd(d_hat: &[f32], bank_layer: &[f32], n: usize) -> Vec<f32> {
+    let slab = d_hat.len();
+    debug_assert_eq!(bank_layer.len(), n * slab);
+    let mut dw = vec![0.0f32; n];
+    for (i, o) in dw.iter_mut().enumerate() {
+        let src = &bank_layer[i * slab..(i + 1) * slab];
+        let mut acc = 0.0f32;
+        for (&d, &x) in d_hat.iter().zip(src) {
+            acc += d * x;
+        }
+        *o = acc;
+    }
+    dw
+}
+
+// ---------------------------------------------------------------------------
+// adapter blocks (mirrors python/compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// Plain Pfeiffer adapter block: `x + LN(x @ A) @ B` for `x [rows, d]`,
+/// `A [d, b]`, `B [b, d]` (ref.py `adapter_forward`).
+pub fn adapter_forward(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    bneck: usize,
+    a: &[f32],
+    b: &[f32],
+    ln_scale: &[f32],
+    ln_bias: &[f32],
+) -> Vec<f32> {
+    let h_pre = matmul(x, a, rows, d, bneck);
+    let (h, _) = layer_norm(&h_pre, ln_scale, ln_bias, bneck);
+    let mut out = matmul(&h, b, rows, bneck, d);
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o += xv;
+    }
+    out
+}
+
+/// Fused X-PEFT block (ref.py `xpeft_adapter_forward`): aggregate
+/// `Â`/`B̂` from the layer's bank slabs under the mask weights, then run
+/// the adapter: `x + LN(x @ Â) @ B̂`.
+#[allow(clippy::too_many_arguments)]
+pub fn xpeft_adapter_forward(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    bneck: usize,
+    mask_a: &[f32],
+    mask_b: &[f32],
+    bank_a_layer: &[f32],
+    bank_b_layer: &[f32],
+    ln_scale: &[f32],
+    ln_bias: &[f32],
+) -> Vec<f32> {
+    let a_hat = aggregate_bank(mask_a, bank_a_layer, d * bneck);
+    let b_hat = aggregate_bank(mask_b, bank_b_layer, bneck * d);
+    adapter_forward(x, rows, d, bneck, &a_hat, &b_hat, ln_scale, ln_bias)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (3, 5, 4);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let out = matmul(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_matmuls_agree_with_plain() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (4, 3, 5);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        // aᵀ stored as [k,m] view of a-transposed
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        assert_eq!(matmul_at_b(&at, &b, k, m, n), matmul(&a, &b, m, k, n));
+        let mut bt = vec![0.0; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let got = matmul_a_bt(&a, &bt, m, k, n);
+        let want = matmul(&a, &b, m, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layer_norm_rows_standardized() {
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let x = randv(&mut rng, 4 * d);
+        let gamma = vec![1.0; d];
+        let beta = vec![0.0; d];
+        let (y, _) = layer_norm(&x, &gamma, &beta, d);
+        for r in 0..4 {
+            let row = &y[r * d..(r + 1) * d];
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    /// Central finite-difference check of a scalar-valued function's grad.
+    fn fd_check(
+        f: &dyn Fn(&[f32]) -> f32,
+        x: &[f32],
+        analytic: &[f32],
+        eps: f32,
+        tol: f32,
+        label: &str,
+    ) {
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[i] += eps;
+            xm[i] -= eps;
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!(
+                (num - analytic[i]).abs() < tol * (1.0 + num.abs()),
+                "{label}[{i}]: analytic {} vs numeric {num}",
+                analytic[i]
+            );
+        }
+    }
+
+    #[test]
+    fn layer_norm_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(4);
+        let d = 8;
+        let rows = 3;
+        let x = randv(&mut rng, rows * d);
+        let gamma = randv(&mut rng, d);
+        let beta = randv(&mut rng, d);
+        let dy = randv(&mut rng, rows * d);
+        // scalar objective: <LN(x), dy>
+        let obj = |xv: &[f32]| -> f32 {
+            let (y, _) = layer_norm(xv, &gamma, &beta, d);
+            y.iter().zip(&dy).map(|(&a, &b)| a * b).sum()
+        };
+        let (_, stats) = layer_norm(&x, &gamma, &beta, d);
+        let (dx, affine) = layer_norm_bwd(&dy, &x, &gamma, &stats, d, true);
+        fd_check(&obj, &x, &dx, 1e-2, 2e-2, "ln dx");
+        // gamma grad
+        let (dgamma, dbeta) = affine.unwrap();
+        let obj_g = |gv: &[f32]| -> f32 {
+            let (y, _) = layer_norm(&x, gv, &beta, d);
+            y.iter().zip(&dy).map(|(&a, &b)| a * b).sum()
+        };
+        fd_check(&obj_g, &gamma, &dgamma, 1e-2, 2e-2, "ln dgamma");
+        let obj_b = |bv: &[f32]| -> f32 {
+            let (y, _) = layer_norm(&x, &gamma, bv, d);
+            y.iter().zip(&dy).map(|(&a, &b)| a * b).sum()
+        };
+        fd_check(&obj_b, &beta, &dbeta, 1e-2, 2e-2, "ln dbeta");
+    }
+
+    #[test]
+    fn gelu_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(5);
+        let x = randv(&mut rng, 32);
+        let dy = randv(&mut rng, 32);
+        let obj = |xv: &[f32]| -> f32 {
+            gelu(xv).iter().zip(&dy).map(|(&a, &b)| a * b).sum()
+        };
+        let dx = gelu_bwd(&x, &dy);
+        fd_check(&obj, &x, &dx, 1e-3, 1e-2, "gelu");
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_mask_underflows() {
+        let mut x = vec![1.0, 2.0, f32::MIN, 0.5];
+        softmax_rows(&mut x, 4);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert_eq!(x[2], 0.0);
+    }
+
+    #[test]
+    fn softmax_vjp_matches_finite_differences() {
+        let mut rng = Rng::new(6);
+        let z = randv(&mut rng, 6);
+        let dy = randv(&mut rng, 6);
+        let obj = |zv: &[f32]| -> f32 {
+            let mut y = zv.to_vec();
+            softmax_rows(&mut y, zv.len());
+            y.iter().zip(&dy).map(|(&a, &b)| a * b).sum()
+        };
+        let mut y = z.clone();
+        softmax_rows(&mut y, z.len());
+        let mut dz = vec![0.0; z.len()];
+        softmax_vjp_row(&y, &dy, &mut dz);
+        fd_check(&obj, &z, &dz, 1e-3, 1e-2, "softmax");
+    }
+
+    #[test]
+    fn aggregate_skips_zeros_and_matches_dense() {
+        let mut rng = Rng::new(7);
+        let (n, slab) = (10, 12);
+        let bank = randv(&mut rng, n * slab);
+        let mut w = vec![0.0f32; n];
+        w[2] = 0.5;
+        w[7] = -1.5;
+        let got = aggregate_bank(&w, &bank, slab);
+        for j in 0..slab {
+            let want = 0.5 * bank[2 * slab + j] - 1.5 * bank[7 * slab + j];
+            assert!((got[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn aggregate_bwd_is_per_adapter_inner_product() {
+        let mut rng = Rng::new(8);
+        let (n, slab) = (5, 6);
+        let bank = randv(&mut rng, n * slab);
+        let d_hat = randv(&mut rng, slab);
+        let dw = aggregate_bank_bwd(&d_hat, &bank, n);
+        for i in 0..n {
+            let want: f32 =
+                (0..slab).map(|j| d_hat[j] * bank[i * slab + j]).sum();
+            assert!((dw[i] - want).abs() < 1e-5);
+        }
+    }
+
+    /// The satellite parity test: the fused native kernel must match a
+    /// direct f64 transcription of `python/compile/kernels/ref.py`
+    /// (`xpeft_adapter_forward` = `x + LN(x @ Â) @ B̂`) on a fixed-seed
+    /// tiny config.
+    #[test]
+    fn xpeft_adapter_forward_matches_python_reference() {
+        let mut rng = Rng::new(42);
+        let (rows, d, bneck, n) = (6, 8, 4, 5);
+        let x = randv(&mut rng, rows * d);
+        let bank_a = randv(&mut rng, n * d * bneck);
+        let bank_b = randv(&mut rng, n * bneck * d);
+        let ln_s = randv(&mut rng, bneck);
+        let ln_b = randv(&mut rng, bneck);
+        let mut wa = randv(&mut rng, n);
+        let wb = randv(&mut rng, n);
+        wa[1] = 0.0; // exercise the zero-skip path too
+
+        let got = xpeft_adapter_forward(
+            &x, rows, d, bneck, &wa, &wb, &bank_a, &bank_b, &ln_s, &ln_b,
+        );
+
+        // -- independent oracle in f64, straight from ref.py --
+        let agg = |w: &[f32], bank: &[f32], slab: usize| -> Vec<f64> {
+            let mut out = vec![0.0f64; slab];
+            for i in 0..n {
+                for j in 0..slab {
+                    out[j] += w[i] as f64 * bank[i * slab + j] as f64;
+                }
+            }
+            out
+        };
+        let a_hat = agg(&wa, &bank_a, d * bneck);
+        let b_hat = agg(&wb, &bank_b, bneck * d);
+        for r in 0..rows {
+            // h_pre = x @ Â
+            let mut h_pre = vec![0.0f64; bneck];
+            for c in 0..bneck {
+                for kk in 0..d {
+                    h_pre[c] += x[r * d + kk] as f64 * a_hat[kk * bneck + c];
+                }
+            }
+            // LN over bneck
+            let mu: f64 = h_pre.iter().sum::<f64>() / bneck as f64;
+            let var: f64 =
+                h_pre.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / bneck as f64;
+            let rstd = 1.0 / (var + LN_EPS as f64).sqrt();
+            let h: Vec<f64> = h_pre
+                .iter()
+                .enumerate()
+                .map(|(c, &v)| (v - mu) * rstd * ln_s[c] as f64 + ln_b[c] as f64)
+                .collect();
+            // out = x + h @ B̂
+            for j in 0..d {
+                let mut acc = x[r * d + j] as f64;
+                for c in 0..bneck {
+                    acc += h[c] * b_hat[c * d + j];
+                }
+                let gv = got[r * d + j] as f64;
+                assert!(
+                    (gv - acc).abs() < 1e-4 * (1.0 + acc.abs()),
+                    "row {r} col {j}: native {gv} vs reference {acc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adapter_forward_identity_when_b_zero() {
+        let mut rng = Rng::new(9);
+        let (rows, d, bneck) = (3, 6, 2);
+        let x = randv(&mut rng, rows * d);
+        let a = randv(&mut rng, d * bneck);
+        let b = vec![0.0; bneck * d];
+        let ones = vec![1.0; bneck];
+        let zeros = vec![0.0; bneck];
+        let out = adapter_forward(&x, rows, d, bneck, &a, &b, &ones, &zeros);
+        assert_eq!(out, x);
+    }
+}

@@ -8,8 +8,8 @@
 //! `init_plm` / `init_trainable` conventions.
 
 use crate::data::tokenizer;
-use crate::runtime::literal::Tensor;
 use crate::runtime::manifest::TensorSpec;
+use crate::runtime::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Init rule for one frozen-PLM tensor (by manifest name).

@@ -1,0 +1,148 @@
+//! PJRT execution backend (feature `pjrt`): loads AOT-lowered HLO-text
+//! artifacts, compiles them once on the PJRT CPU client and executes them
+//! behind the [`Backend`]/[`Program`] traits. This is the only module that
+//! touches the `xla` crate FFI; the default build never compiles it.
+//!
+//! Enabling this feature additionally requires the `xla` dependency in
+//! `rust/Cargo.toml` (commented out there because the crate cannot be
+//! fetched or linked offline).
+//!
+//! Tensor conversion happens at this boundary: the host [`Tensor`] currency
+//! used by the rest of the system is materialized into `xla::Literal`s per
+//! call. (The historical by-reference literal cache lived in the trainer;
+//! with the backend abstraction the trainer caches host tensors instead,
+//! and this backend pays one host→literal copy per input per call. The
+//! device-buffer path is still blocked by the image's xla_extension
+//! `pointer_size > 0` CHECK — see EXPERIMENTS.md §Perf.)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{validate_inputs, Backend, Program};
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+use super::tensor::Tensor;
+
+/// Build an `xla::Literal` with the spec's shape from host data.
+pub fn to_literal(spec: &TensorSpec, t: &Tensor) -> Result<xla::Literal> {
+    t.check(spec)?;
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (spec.dtype, t) {
+        (DType::F32, Tensor::F32(v)) => {
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims).context("reshape f32")?
+            }
+        }
+        (DType::I32, Tensor::I32(v)) => {
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims).context("reshape i32")?
+            }
+        }
+        _ => bail!("dtype mismatch for '{}'", spec.name),
+    };
+    Ok(lit)
+}
+
+/// Read a literal back to a host tensor (dtype from the literal itself).
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    match lit.ty()? {
+        xla::ElementType::F32 => Ok(Tensor::F32(lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::I32(lit.to_vec::<i32>()?)),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// One compiled PJRT executable plus its manifest spec.
+pub struct PjrtProgram {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the wrapped pointers come from the PJRT C API, which guarantees
+// thread-safe clients/executables (PJRT_Client and PJRT_LoadedExecutable
+// are documented as thread-safe; the CPU plugin serializes internally).
+// The `xla` crate merely forgot the markers. We never hand out mutable
+// aliases to the underlying objects.
+unsafe impl Send for PjrtProgram {}
+unsafe impl Sync for PjrtProgram {}
+
+impl Program for PjrtProgram {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        validate_inputs(&self.spec, inputs)?;
+        let literals: Vec<xla::Literal> = self
+            .spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(ts, t)| to_literal(ts, t))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unpack the root tuple.
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+/// The PJRT backend: one CPU client shared by every compiled program.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: see `PjrtProgram` above — PJRT clients are thread-safe by
+// contract.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "pjrt",
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, _manifest: &Manifest, spec: &ArtifactSpec) -> Result<Arc<dyn Program>> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Arc::new(PjrtProgram { spec: spec.clone(), exe }))
+    }
+}

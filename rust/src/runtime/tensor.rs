@@ -1,0 +1,134 @@
+//! Host-side tensor values — the common currency every [`crate::runtime::Backend`]
+//! consumes and produces. Plain row-major `Vec`s typed by the manifest
+//! `TensorSpec` dtype; backends that need a foreign representation (the
+//! `pjrt` feature's `xla::Literal`) convert at their own boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// Host-side tensor value matching a `TensorSpec` (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    /// Scalar constructors (manifest scalars are rank-0, one element).
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32(vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32(vec![v])
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            Tensor::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(_) => DType::F32,
+            Tensor::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn zeros_like(spec: &TensorSpec) -> Tensor {
+        match spec.dtype {
+            DType::F32 => Tensor::F32(vec![0.0; spec.elements()]),
+            DType::I32 => Tensor::I32(vec![0; spec.elements()]),
+        }
+    }
+
+    /// Check this value against a spec (dtype + element count).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("tensor '{}': dtype mismatch ({:?} vs {:?})", spec.name, self.dtype(), spec.dtype);
+        }
+        if self.len() != spec.elements() {
+            bail!(
+                "tensor '{}' has {} elements, spec wants {:?} = {}",
+                spec.name,
+                self.len(),
+                spec.shape,
+                spec.elements()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Group;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype, group: Group::Data }
+    }
+
+    #[test]
+    fn accessors_enforce_dtype() {
+        let f = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.f32s().unwrap(), &[1.0, 2.0]);
+        assert!(f.i32s().is_err());
+        let i = Tensor::I32(vec![3, 4]);
+        assert_eq!(i.i32s().unwrap(), &[3, 4]);
+        assert!(i.f32s().is_err());
+    }
+
+    #[test]
+    fn scalar_constructors_single_element() {
+        assert_eq!(Tensor::scalar_f32(0.5).len(), 1);
+        assert_eq!(Tensor::scalar_i32(7), Tensor::I32(vec![7]));
+    }
+
+    #[test]
+    fn zeros_like_matches_spec() {
+        let s = spec("x", &[3, 4], DType::F32);
+        assert_eq!(Tensor::zeros_like(&s).len(), 12);
+        let si = spec("t", &[2], DType::I32);
+        assert_eq!(Tensor::zeros_like(&si), Tensor::I32(vec![0, 0]));
+    }
+
+    #[test]
+    fn check_catches_mismatches() {
+        let s = spec("x", &[2, 2], DType::F32);
+        assert!(Tensor::F32(vec![0.0; 4]).check(&s).is_ok());
+        assert!(Tensor::F32(vec![0.0; 3]).check(&s).is_err());
+        assert!(Tensor::I32(vec![0; 4]).check(&s).is_err());
+        // rank-0 scalars have one element
+        let sc = spec("k", &[], DType::I32);
+        assert!(Tensor::scalar_i32(5).check(&sc).is_ok());
+    }
+}

@@ -1,4 +1,4 @@
-//! Evaluation: runs the `eval` artifacts (shared by soft and hard masks —
+//! Evaluation: runs the `eval` programs (shared by soft and hard masks —
 //! rust feeds already-normalized weights) and computes the paper's metrics.
 
 use std::sync::Arc;
@@ -12,9 +12,9 @@ use crate::data::{Dataset, Label, MetricKind};
 use crate::masks::MaskWeights;
 use crate::metrics;
 use crate::metrics::Scores;
-use crate::runtime::literal::{to_literal, Tensor};
 use crate::runtime::manifest::{DType, Group, Manifest};
 use crate::runtime::params;
+use crate::runtime::tensor::Tensor;
 use crate::runtime::{Engine, Program};
 use crate::train::TrainState;
 use crate::util::rng::Rng;
@@ -26,18 +26,14 @@ pub enum Pred {
     Reg(f32),
 }
 
+/// Shareable across serving threads: the cached frozen tensors are plain
+/// host buffers and `Program` implementations are `Send + Sync`.
 pub struct Evaluator {
-    program: Arc<Program>,
-    plm: Vec<(usize, xla::Literal)>,
-    bank: Vec<(usize, xla::Literal)>,
+    program: Arc<dyn Program>,
+    plm: Vec<(usize, Tensor)>,
+    bank: Vec<(usize, Tensor)>,
     pub out_w: usize,
 }
-
-// SAFETY: the cached literals are host buffers uniquely owned by this
-// Evaluator and only read; XLA literals have no thread affinity. The `xla`
-// crate simply lacks the auto-markers because of its raw pointers.
-unsafe impl Send for Evaluator {}
-unsafe impl Sync for Evaluator {}
 
 impl Evaluator {
     pub fn new(
@@ -55,17 +51,16 @@ impl Evaluator {
             if mode.is_xpeft() { n } else { 0 },
         );
         let program = engine.program(&name)?;
-        let spec = &program.spec;
+        let spec = program.spec().clone();
 
         let mut plm_rng = Rng::new(plm_seed).fold_in(0x504c4d);
         let mut plm = Vec::new();
         for (i, ts) in spec.inputs.iter().enumerate() {
             if ts.group == Group::Plm {
-                let t = params::init_plm_tensor(ts, &mut plm_rng);
-                plm.push((i, to_literal(ts, &t)?));
+                plm.push((i, params::init_plm_tensor(ts, &mut plm_rng)));
             }
         }
-        let mut bank_lits = Vec::new();
+        let mut bank_tensors = Vec::new();
         if mode.is_xpeft() {
             let bank = bank.context("xpeft eval needs the adapter bank")?;
             for (i, ts) in spec.inputs.iter().enumerate() {
@@ -75,12 +70,12 @@ impl Evaluator {
                         "bank_b" => &bank.bank_b,
                         other => bail!("unexpected bank tensor '{other}'"),
                     };
-                    bank_lits.push((i, to_literal(ts, &Tensor::F32(data.clone()))?));
+                    bank_tensors.push((i, Tensor::F32(data.clone())));
                 }
             }
         }
         let out_w = if head == "cls" { engine.manifest.config.c_max } else { 1 };
-        Ok(Evaluator { program, plm, bank: bank_lits, out_w })
+        Ok(Evaluator { program, plm, bank: bank_tensors, out_w })
     }
 
     /// Forward one batch → logits `[B, out_w]` (row-major).
@@ -93,46 +88,44 @@ impl Evaluator {
         weights: Option<&MaskWeights>,
         batch: &Batch,
     ) -> Result<Vec<f32>> {
-        let spec = &self.program.spec;
-        let mut owned: Vec<Option<xla::Literal>> = (0..spec.inputs.len()).map(|_| None).collect();
+        let program = self.program.clone();
+        let spec = program.spec();
+        let mut owned: Vec<Option<Tensor>> = (0..spec.inputs.len()).map(|_| None).collect();
         for (i, ts) in spec.inputs.iter().enumerate() {
-            let lit = match ts.group {
+            let t = match ts.group {
                 Group::Plm | Group::Bank => continue,
                 Group::Trainable => match ts.name.as_str() {
                     "mask_a_w" => {
                         let w = weights.context("xpeft eval needs mask weights")?;
-                        to_literal(ts, &Tensor::F32(w.a.clone()))?
+                        Tensor::F32(w.a.clone())
                     }
                     "mask_b_w" => {
                         let w = weights.context("xpeft eval needs mask weights")?;
-                        to_literal(ts, &Tensor::F32(w.b.clone()))?
+                        Tensor::F32(w.b.clone())
                     }
-                    name => to_literal(ts, &Tensor::F32(state.get(name)?.to_vec()))?,
+                    name => Tensor::F32(state.get(name)?.to_vec()),
                 },
                 Group::Data => match (ts.name.as_str(), ts.dtype) {
-                    ("tokens", DType::I32) => to_literal(ts, &Tensor::I32(batch.tokens.clone()))?,
-                    ("pad_mask", DType::F32) => {
-                        to_literal(ts, &Tensor::F32(batch.pad_mask.clone()))?
-                    }
+                    ("tokens", DType::I32) => Tensor::I32(batch.tokens.clone()),
+                    ("pad_mask", DType::F32) => Tensor::F32(batch.pad_mask.clone()),
                     (other, _) => bail!("unexpected eval data tensor '{other}'"),
                 },
                 g => bail!("unexpected eval input group {g:?}"),
             };
-            owned[i] = Some(lit);
+            owned[i] = Some(t);
         }
-        let inputs: Vec<&xla::Literal> = {
-            let mut refs: Vec<Option<&xla::Literal>> =
-                owned.iter().map(|o| o.as_ref()).collect();
-            for (i, l) in &self.plm {
-                refs[*i] = Some(l);
+        let inputs: Vec<&Tensor> = {
+            let mut refs: Vec<Option<&Tensor>> = owned.iter().map(|o| o.as_ref()).collect();
+            for (i, t) in &self.plm {
+                refs[*i] = Some(t);
             }
-            for (i, l) in &self.bank {
-                refs[*i] = Some(l);
+            for (i, t) in &self.bank {
+                refs[*i] = Some(t);
             }
             refs.into_iter().map(Option::unwrap).collect()
         };
-        let mut out = self.program.run_refs(&inputs)?;
-        out.pop().context("eval artifact returned nothing")?.into_f32s()
+        let mut out = program.run(&inputs)?;
+        out.pop().context("eval program returned nothing")?.into_f32s()
     }
 
     /// Predictions over a whole dataset split (sequential order).

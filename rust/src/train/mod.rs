@@ -1,6 +1,7 @@
-//! Training driver: executes AOT `train_step` artifacts from rust. AdamW
-//! and the LR schedule live *inside* the HLO — this module only shuttles
-//! buffers, so python is never on the training path.
+//! Training driver: executes `train` programs through the backend
+//! abstraction. AdamW and the LR schedule live *inside* the executable
+//! (native rust or AOT HLO alike) — this module only shuttles buffers, so
+//! python is never on the training path.
 
 pub mod eval;
 
@@ -13,9 +14,9 @@ use crate::config::{Mode, TrainConfig};
 use crate::data::batch::{Batch, Batcher};
 use crate::data::Dataset;
 use crate::masks::{MaskLogits, MaskWeights, ProfileMasks};
-use crate::runtime::literal::{to_literal, Tensor};
 use crate::runtime::manifest::{DType, Group, Manifest, TensorSpec};
 use crate::runtime::params;
+use crate::runtime::tensor::Tensor;
 use crate::runtime::{Engine, Program};
 use crate::util::rng::Rng;
 
@@ -48,7 +49,8 @@ pub struct TrainOutcome {
     pub wallclock_s: f64,
 }
 
-/// Per-step hyper scalars (the runtime-tunable grid; see aot.py).
+/// Per-step hyper scalars (the runtime-tunable grid; see
+/// `runtime::manifest`'s scalar block).
 #[derive(Debug, Clone, Copy)]
 pub struct Hyper {
     pub num_classes: i32,
@@ -78,29 +80,28 @@ impl Hyper {
     }
 }
 
-/// Drives one profile's tuning against a train artifact.
+/// Drives one profile's tuning against a train program.
 ///
-/// Frozen tensors (PLM + adapter bank) are materialized as literals ONCE
-/// at construction and passed *by reference* to every step — the §Perf
-/// optimization that removes a multi-MB literal clone per step
-/// (EXPERIMENTS.md §Perf records the before/after; the device-buffer
-/// variant is blocked by a fatal CHECK in this image's xla_extension).
+/// Frozen tensors (PLM + adapter bank) are materialized ONCE at
+/// construction and spliced into every step's input list *by reference* —
+/// no multi-MB copy per step (the §Perf invariant the old literal cache
+/// existed for; host tensors make it free).
 pub struct Trainer<'e> {
     #[allow(dead_code)]
     engine: &'e Engine,
-    program: Arc<Program>,
-    /// frozen PLM literals, keyed by artifact input index
-    plm: Vec<(usize, xla::Literal)>,
-    /// frozen bank literals (xpeft modes), keyed by artifact input index
-    bank: Vec<(usize, xla::Literal)>,
+    program: Arc<dyn Program>,
+    /// frozen PLM tensors, keyed by artifact input index
+    plm: Vec<(usize, Tensor)>,
+    /// frozen bank tensors (xpeft modes), keyed by artifact input index
+    bank: Vec<(usize, Tensor)>,
     pub state: TrainState,
     pub step: usize,
     head: String,
 }
 
 impl<'e> Trainer<'e> {
-    /// Build a trainer: compiles/fetches the artifact, materializes the
-    /// frozen PLM (from `plm_seed`) and uploads the shared bank.
+    /// Build a trainer: compiles/fetches the program and materializes the
+    /// frozen PLM (from `plm_seed`) and the shared bank.
     pub fn new(
         engine: &'e Engine,
         mode: Mode,
@@ -117,20 +118,19 @@ impl<'e> Trainer<'e> {
             if mode.is_xpeft() { n } else { 0 },
         );
         let program = engine.program(&name)?;
-        let spec = &program.spec;
+        let spec = program.spec().clone();
 
         // Frozen PLM: one deterministic stream, in spec order.
         let mut plm_rng = Rng::new(plm_seed).fold_in(0x504c4d);
         let mut plm = Vec::new();
         for (i, ts) in spec.inputs.iter().enumerate() {
             if ts.group == Group::Plm {
-                let t = params::init_plm_tensor(ts, &mut plm_rng);
-                plm.push((i, to_literal(ts, &t)?));
+                plm.push((i, params::init_plm_tensor(ts, &mut plm_rng)));
             }
         }
 
         // Shared adapter bank (xpeft only).
-        let mut bank_lits = Vec::new();
+        let mut bank_tensors = Vec::new();
         if mode.is_xpeft() {
             let bank = bank.context("xpeft modes need an adapter bank")?;
             if bank.n != n {
@@ -143,7 +143,7 @@ impl<'e> Trainer<'e> {
                         "bank_b" => &bank.bank_b,
                         other => bail!("unexpected bank tensor '{other}'"),
                     };
-                    bank_lits.push((i, to_literal(ts, &Tensor::F32(data.clone()))?));
+                    bank_tensors.push((i, Tensor::F32(data.clone())));
                 }
             }
         }
@@ -166,7 +166,7 @@ impl<'e> Trainer<'e> {
             engine,
             program,
             plm,
-            bank: bank_lits,
+            bank: bank_tensors,
             state: TrainState { names, trainable, opt_m, opt_v },
             step: 0,
             head: head.to_string(),
@@ -174,57 +174,56 @@ impl<'e> Trainer<'e> {
     }
 
     pub fn spec(&self) -> &crate::runtime::ArtifactSpec {
-        &self.program.spec
+        self.program.spec()
     }
 
     /// One optimizer step on a batch. Returns the loss.
     ///
     /// Variable inputs (trainable/opt state/data/scalars — all small) are
-    /// rebuilt per step; frozen PLM + bank literals are passed by reference.
+    /// rebuilt per step; frozen PLM + bank tensors are passed by reference.
     pub fn step(&mut self, batch: &Batch, hp: &Hyper) -> Result<f32> {
-        let spec = self.program.spec.clone();
-        let mut owned: Vec<Option<xla::Literal>> =
-            (0..spec.inputs.len()).map(|_| None).collect();
+        let program = self.program.clone();
+        let spec = program.spec();
+        let mut owned: Vec<Option<Tensor>> = (0..spec.inputs.len()).map(|_| None).collect();
 
         let mut t_i = 0usize;
         let mut m_i = 0usize;
         let mut v_i = 0usize;
         for (i, ts) in spec.inputs.iter().enumerate() {
-            let lit = match ts.group {
-                Group::Plm | Group::Bank => continue, // device-resident
+            let t = match ts.group {
+                Group::Plm | Group::Bank => continue, // cached at construction
                 Group::Trainable => {
-                    let l = to_literal(ts, &Tensor::F32(self.state.trainable[t_i].clone()))?;
+                    let t = Tensor::F32(self.state.trainable[t_i].clone());
                     t_i += 1;
-                    l
+                    t
                 }
                 Group::OptM => {
-                    let l = to_literal(ts, &Tensor::F32(self.state.opt_m[m_i].clone()))?;
+                    let t = Tensor::F32(self.state.opt_m[m_i].clone());
                     m_i += 1;
-                    l
+                    t
                 }
                 Group::OptV => {
-                    let l = to_literal(ts, &Tensor::F32(self.state.opt_v[v_i].clone()))?;
+                    let t = Tensor::F32(self.state.opt_v[v_i].clone());
                     v_i += 1;
-                    l
+                    t
                 }
-                Group::Data => self.data_literal(ts, batch)?,
-                Group::Scalar => self.scalar_literal(ts, hp)?,
+                Group::Data => data_tensor(ts, batch)?,
+                Group::Scalar => scalar_tensor(ts, self.step, hp)?,
             };
-            owned[i] = Some(lit);
+            owned[i] = Some(t);
         }
-        let inputs: Vec<&xla::Literal> = {
-            let mut refs: Vec<Option<&xla::Literal>> =
-                owned.iter().map(|o| o.as_ref()).collect();
-            for (i, l) in &self.plm {
-                refs[*i] = Some(l);
+        let inputs: Vec<&Tensor> = {
+            let mut refs: Vec<Option<&Tensor>> = owned.iter().map(|o| o.as_ref()).collect();
+            for (i, t) in &self.plm {
+                refs[*i] = Some(t);
             }
-            for (i, l) in &self.bank {
-                refs[*i] = Some(l);
+            for (i, t) in &self.bank {
+                refs[*i] = Some(t);
             }
             refs.into_iter().map(Option::unwrap).collect()
         };
 
-        let outputs = self.program.run_refs(&inputs)?;
+        let outputs = program.run(&inputs)?;
         // outputs: trainable' x T, m' x T, v' x T, loss
         let t = self.state.names.len();
         anyhow::ensure!(outputs.len() == 3 * t + 1, "unexpected output count");
@@ -241,35 +240,6 @@ impl<'e> Trainer<'e> {
         let loss = it.next().unwrap().into_f32s()?[0];
         self.step += 1;
         Ok(loss)
-    }
-
-    fn data_literal(&self, ts: &TensorSpec, batch: &Batch) -> Result<xla::Literal> {
-        let t = match (ts.name.as_str(), ts.dtype) {
-            ("tokens", DType::I32) => Tensor::I32(batch.tokens.clone()),
-            ("pad_mask", DType::F32) => Tensor::F32(batch.pad_mask.clone()),
-            ("labels", DType::I32) => Tensor::I32(batch.labels_i.clone()),
-            ("labels", DType::F32) => Tensor::F32(batch.labels_f.clone()),
-            ("example_w", DType::F32) => Tensor::F32(batch.example_w.clone()),
-            (other, _) => bail!("unexpected data tensor '{other}'"),
-        };
-        to_literal(ts, &t)
-    }
-
-    fn scalar_literal(&self, ts: &TensorSpec, hp: &Hyper) -> Result<xla::Literal> {
-        let t = match ts.name.as_str() {
-            "num_classes" => Tensor::I32(vec![hp.num_classes]),
-            "step" => Tensor::I32(vec![self.step as i32]),
-            "total_steps" => Tensor::I32(vec![hp.total_steps]),
-            "base_lr" => Tensor::F32(vec![hp.base_lr]),
-            "seed" => Tensor::I32(vec![hp.seed]),
-            "hard_flag" => Tensor::F32(vec![hp.hard_flag]),
-            "k" => Tensor::I32(vec![hp.k]),
-            "tau" => Tensor::F32(vec![hp.tau]),
-            "nu" => Tensor::F32(vec![hp.nu]),
-            "single_mask_flag" => Tensor::F32(vec![hp.single_mask_flag]),
-            other => bail!("unexpected scalar '{other}'"),
-        };
-        to_literal(ts, &t)
     }
 
     /// The profile's mask logits (xpeft modes).
@@ -303,21 +273,33 @@ impl<'e> Trainer<'e> {
     }
 }
 
-/// `xla::Literal` has no public Clone; round-trip through shape+data.
-/// Used by the Evaluator's cached frozen tensors (the eval path runs once
-/// per dev split, not per step, so the clone cost is immaterial there).
-pub(crate) fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
-    let shape = l.array_shape()?;
-    let dims: Vec<i64> = shape.dims().to_vec();
-    match l.ty()? {
-        xla::ElementType::F32 => {
-            Ok(xla::Literal::vec1(&l.to_vec::<f32>()?).reshape(&dims)?)
-        }
-        xla::ElementType::S32 => {
-            Ok(xla::Literal::vec1(&l.to_vec::<i32>()?).reshape(&dims)?)
-        }
-        other => bail!("cannot clone literal of type {other:?}"),
-    }
+/// Materialize one data-group input from a batch.
+fn data_tensor(ts: &TensorSpec, batch: &Batch) -> Result<Tensor> {
+    Ok(match (ts.name.as_str(), ts.dtype) {
+        ("tokens", DType::I32) => Tensor::I32(batch.tokens.clone()),
+        ("pad_mask", DType::F32) => Tensor::F32(batch.pad_mask.clone()),
+        ("labels", DType::I32) => Tensor::I32(batch.labels_i.clone()),
+        ("labels", DType::F32) => Tensor::F32(batch.labels_f.clone()),
+        ("example_w", DType::F32) => Tensor::F32(batch.example_w.clone()),
+        (other, _) => bail!("unexpected data tensor '{other}'"),
+    })
+}
+
+/// Materialize one scalar-group input from the hyper grid + step counter.
+fn scalar_tensor(ts: &TensorSpec, step: usize, hp: &Hyper) -> Result<Tensor> {
+    Ok(match ts.name.as_str() {
+        "num_classes" => Tensor::scalar_i32(hp.num_classes),
+        "step" => Tensor::scalar_i32(step as i32),
+        "total_steps" => Tensor::scalar_i32(hp.total_steps),
+        "base_lr" => Tensor::scalar_f32(hp.base_lr),
+        "seed" => Tensor::scalar_i32(hp.seed),
+        "hard_flag" => Tensor::scalar_f32(hp.hard_flag),
+        "k" => Tensor::scalar_i32(hp.k),
+        "tau" => Tensor::scalar_f32(hp.tau),
+        "nu" => Tensor::scalar_f32(hp.nu),
+        "single_mask_flag" => Tensor::scalar_f32(hp.single_mask_flag),
+        other => bail!("unexpected scalar '{other}'"),
+    })
 }
 
 /// Train a profile for `cfg.steps` steps (epoch-cycling the dataset) and

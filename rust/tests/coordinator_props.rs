@@ -1,7 +1,7 @@
 //! Property-style tests on coordinator invariants (hand-rolled sweeps with
 //! the seeded PRNG — proptest is unavailable offline): routing, batching
 //! bounds, profile-store round-trips and accounting, plus a live
-//! service smoke test over real artifacts when they are present.
+//! service smoke test over the native backend.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -129,17 +129,12 @@ fn lru_cache_never_exceeds_capacity() {
 }
 
 // ---------------------------------------------------------------------------
-// live service over real artifacts
+// live service over the native backend
 // ---------------------------------------------------------------------------
 
 #[test]
 fn service_end_to_end_smoke() {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
-    let engine = Arc::new(Engine::new(&dir).unwrap());
+    let engine = Arc::new(Engine::native());
     let mc = engine.manifest.config.clone();
     let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
 

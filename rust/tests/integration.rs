@@ -1,6 +1,8 @@
-//! End-to-end integration: real artifacts loaded through PJRT, trained and
-//! evaluated from rust. These tests are the proof that all three layers
-//! compose (L1 Pallas kernel inside the L2 HLO, driven by the L3 runtime).
+//! End-to-end integration: the full train/eval stack driven through the
+//! backend abstraction (NativeBackend by default — no artifacts needed;
+//! the same tests exercise AOT HLO when an artifacts directory exists and
+//! the `pjrt` feature is on). These tests are the proof that all layers
+//! compose: gather-GEMM kernels inside the encoder, driven by the runtime.
 
 use std::path::PathBuf;
 use std::sync::OnceLock;
@@ -17,7 +19,7 @@ fn artifacts_dir() -> PathBuf {
 
 fn engine() -> &'static Engine {
     static ENGINE: OnceLock<Engine> = OnceLock::new();
-    ENGINE.get_or_init(|| Engine::new(&artifacts_dir()).expect("run `make artifacts` first"))
+    ENGINE.get_or_init(|| Engine::new(&artifacts_dir()).expect("engine construction"))
 }
 
 fn tiny_bank(engine: &Engine, n: usize) -> AdapterBank {
