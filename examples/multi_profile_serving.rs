@@ -76,7 +76,7 @@ fn main() -> Result<()> {
         engine,
         store,
         bank,
-        ServeConfig { max_batch: 16, batch_deadline_us: 1500, workers: 1, mask_cache: 64 },
+        ServeConfig { max_batch: 16, batch_deadline_us: 1500, workers: 1, mask_cache: 64, threads: 0 },
         lamp::CATEGORIES,
         42,
     )?;

@@ -95,7 +95,7 @@ fn main() {
             engine,
             Arc::new(Mutex::new(store)),
             bank,
-            ServeConfig { max_batch: 16, batch_deadline_us: 300, workers: 1, mask_cache: 16 },
+            ServeConfig { max_batch: 16, batch_deadline_us: 300, workers: 1, mask_cache: 16, threads: 0 },
             15,
             42,
         )

@@ -1,25 +1,78 @@
 //! `cargo bench --bench hotpath` — training/serving hot-path breakdown on
 //! the NativeBackend: the gather-GEMM mask aggregation kernel in isolation
-//! (soft dense vs hard k-sparse), end-to-end train-step latency per bank
-//! size N, and the eval forward the serving path runs.
+//! (soft dense vs hard k-sparse), a GEMM roofline section (blocked kernel
+//! vs the scalar PR-1 oracle at the model's actual shapes, GFLOP/s in
+//! `throughput_per_s`), end-to-end train-step latency per bank size N, the
+//! eval forward the serving path runs, and a threads=1 vs threads=max
+//! comparison of both hot paths.
 //!
-//! Writes `BENCH_hotpath.json` (first datapoint of the benchmark
-//! trajectory; see CHANGES.md for the entry format).
+//! Output always lands in one canonical place — `rust/BENCH_hotpath.json`
+//! (resolved via `CARGO_MANIFEST_DIR`, so the bench CWD is irrelevant) —
+//! plus a copy under `<workspace>/results/`. When a previous trajectory
+//! file exists, each matching entry gains `speedup_vs_prev`
+//! (= prev_median / new_median).
+//!
+//! `-- --smoke` runs a short-iteration CI mode: same code paths, fewer
+//! iterations, and no trajectory files written (CI machines must not
+//! overwrite the dev-box trajectory).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use xpeft::adapters::AdapterBank;
 use xpeft::bench::{Bench, Suite};
 use xpeft::config::{Mode, TrainConfig};
 use xpeft::data::batch::Batcher;
 use xpeft::data::glue;
-use xpeft::runtime::native::kernels;
+use xpeft::runtime::native::kernels::{self, scalar};
 use xpeft::runtime::Engine;
 use xpeft::train::{eval::Evaluator, Hyper, Trainer};
+use xpeft::util::json::Json;
 use xpeft::util::rng::Rng;
+use xpeft::util::threadpool;
+
+fn bench_out_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json")
+}
+
+fn results_out_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a workspace parent")
+        .join("results/bench_hotpath.json")
+}
+
+/// name → median_ns of the previous trajectory file, if any.
+fn load_prev(path: &Path) -> HashMap<String, f64> {
+    let mut prev = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return prev;
+    };
+    let Ok(json) = Json::parse(&text) else {
+        return prev;
+    };
+    if let Ok(entries) = json.as_arr() {
+        for e in entries {
+            if let (Ok(name), Ok(median)) = (e.str_field("name"), e.f64_field("median_ns")) {
+                prev.insert(name, median);
+            }
+        }
+    }
+    prev
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let engine = Engine::native();
     let mc = engine.manifest.config.clone();
     let mut suite = Suite::default();
+    let (warmup, iters) = if smoke { (1, 2) } else { (2, 10) };
+    let step_bench = |items: usize| Bench { warmup, iters, items_per_iter: Some(items) };
+    let kern_bench = |items: usize| Bench {
+        warmup: if smoke { 1 } else { 3 },
+        iters: if smoke { 3 } else { 20 },
+        items_per_iter: Some(items),
+    };
 
     // the L1 kernel in isolation: Â = Σ_i w_i·A_i over [N, d·b] slabs
     println!("== gather-GEMM aggregation (d={} b={}) ==", mc.d, mc.bottleneck);
@@ -28,7 +81,7 @@ fn main() {
     for n in [100usize, 400] {
         let bank = rng.normal_vec(n * slab, 0.1);
         let soft: Vec<f32> = vec![1.0 / n as f32; n];
-        suite.add(Bench::default().with_items(n).run(
+        suite.add(kern_bench(n).run(
             &format!("aggregate soft N={n} (dense)"),
             || kernels::aggregate_bank(&soft, &bank, slab),
         ));
@@ -36,9 +89,43 @@ fn main() {
         for i in 0..50 {
             hard[(i * n) / 50] = 1.0 / 50.0;
         }
-        suite.add(Bench::default().with_items(50).run(
+        suite.add(kern_bench(50).run(
             &format!("aggregate hard N={n} k=50 (zero-skip)"),
             || kernels::aggregate_bank(&hard, &bank, slab),
+        ));
+    }
+
+    // GEMM roofline at the model's actual shapes: blocked kernel vs the
+    // scalar PR-1 oracle, single-threaded. `throughput_per_s` is FLOP/s.
+    println!("\n== GEMM roofline (throughput_per_s = FLOP/s) ==");
+    let r = mc.batch * mc.seq;
+    let mut grng = Rng::new(7);
+    for (m, k, n) in [(r, mc.d, mc.d), (r, mc.d, mc.ffn), (r, mc.ffn, mc.d)] {
+        let a = grng.normal_vec(m * k, 0.5);
+        let b = grng.normal_vec(k * n, 0.5);
+        let flops = 2 * m * k * n;
+        suite.add(kern_bench(flops).run(
+            &format!("gemm {m}x{k}x{n} (blocked)"),
+            || kernels::matmul(&a, &b, m, k, n),
+        ));
+        suite.add(kern_bench(flops).run(
+            &format!("gemm {m}x{k}x{n} (scalar)"),
+            || scalar::matmul(&a, &b, m, k, n),
+        ));
+    }
+    // the weight-gradient shape: a long-K reduction (k = batch·seq rows)
+    {
+        let (kdim, m, n) = (r, mc.d, mc.ffn);
+        let a = grng.normal_vec(kdim * m, 0.5);
+        let b = grng.normal_vec(kdim * n, 0.5);
+        let flops = 2 * m * kdim * n;
+        suite.add(kern_bench(flops).run(
+            &format!("gemm_at_b {kdim}x{m}x{n} (blocked)"),
+            || kernels::matmul_at_b(&a, &b, kdim, m, n),
+        ));
+        suite.add(kern_bench(flops).run(
+            &format!("gemm_at_b {kdim}x{m}x{n} (scalar)"),
+            || scalar::matmul_at_b(&a, &b, kdim, m, n),
         ));
     }
 
@@ -54,12 +141,10 @@ fn main() {
             Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
         let cfg = TrainConfig { mode: Mode::XpeftHard, n, steps: 50, ..Default::default() };
         let hp = Hyper::from_config(&cfg, 2, 50);
-        suite.add(
-            Bench { warmup: 2, iters: 10, items_per_iter: Some(mc.batch) }.run(
-                &format!("xpeft_hard train step N={n}"),
-                || trainer.step(&batch, &hp).unwrap(),
-            ),
-        );
+        suite.add(step_bench(mc.batch).run(
+            &format!("xpeft_hard train step N={n}"),
+            || trainer.step(&batch, &hp).unwrap(),
+        ));
     }
 
     // the serving inner loop: one batched eval forward
@@ -70,21 +155,80 @@ fn main() {
             Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
         let ev = Evaluator::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42).unwrap();
         let w = trainer.mask_weights(Mode::XpeftHard, mc.layers, n, 50).unwrap();
-        suite.add(
-            Bench { warmup: 2, iters: 10, items_per_iter: Some(mc.batch) }.run(
-                &format!("eval step N={n} (batch {})", mc.batch),
-                || ev.forward(&trainer.state, Some(&w), &batch).unwrap(),
-            ),
-        );
+        suite.add(step_bench(mc.batch).run(
+            &format!("eval step N={n} (batch {})", mc.batch),
+            || ev.forward(&trainer.state, Some(&w), &batch).unwrap(),
+        ));
     }
 
-    let json = suite.to_json().to_string_pretty();
-    match std::fs::write("BENCH_hotpath.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} entries)", suite.results.len()),
-        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+    // thread scaling: same train/eval step at 1 lane vs every lane — the
+    // parallel win, visible in the JSON trajectory.
+    println!(
+        "\n== thread scaling (pool max = {} lanes) ==",
+        threadpool::max_parallelism()
+    );
+    {
+        let n = 400usize;
+        let bank = AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42);
+        let mut trainer =
+            Trainer::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42, 42).unwrap();
+        let cfg = TrainConfig { mode: Mode::XpeftHard, n, steps: 50, ..Default::default() };
+        let hp = Hyper::from_config(&cfg, 2, 50);
+        let ev = Evaluator::new(&engine, Mode::XpeftHard, "cls", n, Some(&bank), 42).unwrap();
+        let w = trainer.mask_weights(Mode::XpeftHard, mc.layers, n, 50).unwrap();
+
+        threadpool::set_parallelism(1);
+        suite.add(step_bench(mc.batch).run(
+            "xpeft_hard train step N=400 (threads=1)",
+            || trainer.step(&batch, &hp).unwrap(),
+        ));
+        suite.add(step_bench(mc.batch).run("eval step N=400 (threads=1)", || {
+            ev.forward(&trainer.state, Some(&w), &batch).unwrap()
+        }));
+        threadpool::set_parallelism(threadpool::max_parallelism());
+        suite.add(step_bench(mc.batch).run(
+            "xpeft_hard train step N=400 (threads=max)",
+            || trainer.step(&batch, &hp).unwrap(),
+        ));
+        suite.add(step_bench(mc.batch).run("eval step N=400 (threads=max)", || {
+            ev.forward(&trainer.state, Some(&w), &batch).unwrap()
+        }));
     }
-    std::fs::create_dir_all("results").ok();
-    if let Err(e) = std::fs::write("results/bench_hotpath.json", &json) {
-        eprintln!("failed to write results/bench_hotpath.json: {e}");
+
+    // ---- trajectory files (skipped in --smoke so CI can't clobber) ----
+    if smoke {
+        println!("\n--smoke: {} entries ok, no trajectory files written", suite.results.len());
+        return;
+    }
+    let out_path = bench_out_path();
+    let prev = load_prev(&out_path);
+    // one entry schema: Suite::to_json, plus a per-entry speedup patch
+    let mut json = suite.to_json();
+    if let Json::Arr(entries) = &mut json {
+        for (res, entry) in suite.results.iter().zip(entries.iter_mut()) {
+            if let Some(&p) = prev.get(&res.name) {
+                if res.median_ns > 0.0 {
+                    let speedup = p / res.median_ns;
+                    entry.set("speedup_vs_prev", Json::Num(speedup));
+                    println!("  {:<44} {speedup:>6.2}x vs previous run", res.name);
+                }
+            }
+        }
+    }
+    let json = json.to_string_pretty();
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!(
+            "\nwrote {} ({} entries)",
+            out_path.display(),
+            suite.results.len()
+        ),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+    let results_path = results_out_path();
+    if let Some(dir) = results_path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    if let Err(e) = std::fs::write(&results_path, &json) {
+        eprintln!("failed to write {}: {e}", results_path.display());
     }
 }

@@ -187,11 +187,23 @@ pub struct ServeConfig {
     pub workers: usize,
     /// profile-mask LRU cache capacity (entries)
     pub mask_cache: usize,
+    /// compute worker-pool lane limit (`--threads`; 0 keeps the pool
+    /// default, which is `XPEFT_THREADS` or the machine's parallelism).
+    /// The pool is process-wide, so only the top-level binary should apply
+    /// this (via `Engine::set_threads`) — `Service::start` deliberately
+    /// does not. Never changes numeric results — only wallclock.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 32, batch_deadline_us: 2_000, workers: 1, mask_cache: 4096 }
+        ServeConfig {
+            max_batch: 32,
+            batch_deadline_us: 2_000,
+            workers: 1,
+            mask_cache: 4096,
+            threads: 0,
+        }
     }
 }
 
@@ -201,6 +213,7 @@ impl ServeConfig {
         self.batch_deadline_us = args.get_u64("deadline-us", self.batch_deadline_us)?;
         self.workers = args.get_usize("workers", self.workers)?;
         self.mask_cache = args.get_usize("mask-cache", self.mask_cache)?;
+        self.threads = args.get_usize("threads", self.threads)?;
         if self.max_batch == 0 || self.workers == 0 {
             bail!("max-batch and workers must be positive");
         }
@@ -272,10 +285,12 @@ mod tests {
     #[test]
     fn serve_overrides_and_validation() {
         let sc = ServeConfig::default()
-            .override_from_args(&args("serve --max-batch 8 --workers 2"))
+            .override_from_args(&args("serve --max-batch 8 --workers 2 --threads 3"))
             .unwrap();
         assert_eq!(sc.max_batch, 8);
         assert_eq!(sc.workers, 2);
+        assert_eq!(sc.threads, 3);
+        assert_eq!(ServeConfig::default().threads, 0);
         assert!(ServeConfig::default()
             .override_from_args(&args("serve --max-batch 0"))
             .is_err());

@@ -5,6 +5,12 @@
 //! runs the forward (native gather-GEMM kernels by default, PJRT under the
 //! `pjrt` feature) is the engine's concern — this module never sees it.
 //!
+//! When several profile batches are ready at once, the executor fans them
+//! out over the process worker pool (`util::threadpool`) — concurrent
+//! profiles are the serving system's natural parallel axis; a lone ready
+//! batch instead parallelizes *inside* the eval forward (the native
+//! backend shards batch rows over the same pool).
+//!
 //! Request path (never touches python):
 //!   submit(text) → tokenize → DynamicBatcher (group by profile)
 //!   → executor: profile-store weight lookup (LRU) + eval program
@@ -102,13 +108,31 @@ impl Service {
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                 }
                 let now = Instant::now();
+                let mut ready: Vec<ProfileBatch> = Vec::new();
                 while let Some(pb) = batcher.poll(now) {
-                    Self::execute(&evaluator, &store, &tel, &tx_out, pb, bsz, seq, num_classes);
+                    ready.push(pb);
                 }
                 if !open {
-                    for pb in batcher.drain() {
-                        Self::execute(&evaluator, &store, &tel, &tx_out, pb, bsz, seq, num_classes);
-                    }
+                    ready.extend(batcher.drain());
+                }
+                if !ready.is_empty() {
+                    // Concurrent profile batches fan out over the worker
+                    // pool. Each batch sends its own responses the moment
+                    // it finishes — a fast batch must not wait on a slow
+                    // co-ready one, and its latency telemetry (stamped at
+                    // compute completion) stays honest. The Mutex only
+                    // serializes the (cheap) channel sends.
+                    let tx_shared = Mutex::new(tx_out.clone());
+                    crate::util::threadpool::run(ready.len(), |i| {
+                        let responses = Self::execute(
+                            &evaluator, &store, &tel, &ready[i], bsz, seq, num_classes,
+                        );
+                        let tx = tx_shared.lock().unwrap();
+                        for resp in responses {
+                            tel.record_response(resp.latency);
+                            let _ = tx.send(resp);
+                        }
+                    });
                 }
             }
         });
@@ -124,28 +148,31 @@ impl Service {
         })
     }
 
+    /// Run one profile batch to completion and return its responses (the
+    /// caller records latency telemetry and sends them — `execute` may run
+    /// on any pool thread).
     #[allow(clippy::too_many_arguments)]
     fn execute(
         evaluator: &Evaluator,
         store: &Mutex<ProfileStore>,
         tel: &Telemetry,
-        tx_out: &mpsc::Sender<Response>,
-        pb: ProfileBatch,
+        pb: &ProfileBatch,
         bsz: usize,
         seq: usize,
         num_classes: usize,
-    ) {
+    ) -> Vec<Response> {
         tel.record_batch(pb.requests.len());
         // profile state lookup (one lock scope)
         let (weights, state) = {
             let mut st = store.lock().unwrap();
             let w = match st.weights(pb.profile_id) {
                 Ok(w) => w,
-                Err(_) => return, // unknown profile: drop (responses time out)
+                // unknown profile: drop (responses time out)
+                Err(_) => return Vec::new(),
             };
             let aux = match st.aux(pb.profile_id) {
                 Ok(a) => a.clone(),
-                Err(_) => return,
+                Err(_) => return Vec::new(),
             };
             let state = TrainState {
                 names: vec![
@@ -184,21 +211,23 @@ impl Service {
             Ok(l) => l,
             Err(e) => {
                 crate::warn_log!("service", "eval failed for profile {}: {e:#}", pb.profile_id);
-                return;
+                return Vec::new();
             }
         };
         let now = Instant::now();
-        for (row, r) in pb.requests.iter().enumerate() {
-            let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + num_classes];
-            let resp = Response {
-                request_id: r.id,
-                profile_id: r.profile_id,
-                prediction: argmax(slice),
-                latency: now.duration_since(r.submitted),
-            };
-            tel.record_response(resp.latency);
-            let _ = tx_out.send(resp);
-        }
+        pb.requests
+            .iter()
+            .enumerate()
+            .map(|(row, r)| {
+                let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + num_classes];
+                Response {
+                    request_id: r.id,
+                    profile_id: r.profile_id,
+                    prediction: argmax(slice),
+                    latency: now.duration_since(r.submitted),
+                }
+            })
+            .collect()
     }
 
     /// Submit raw text for a profile; returns the request id.

@@ -150,6 +150,10 @@ fn serve(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 150)?;
     let steps = args.get_usize("tune-steps", 60)?;
     let serve_cfg = ServeConfig::default().override_from_args(args)?;
+    // `--threads` adjusts the process-wide worker pool, so the top-level
+    // binary applies it once — not Service::start, which would let one
+    // service silently throttle every other pool user.
+    Engine::set_threads(serve_cfg.threads);
 
     let engine = Arc::new(Engine::new(&std::path::PathBuf::from(
         args.get_str("artifacts", "artifacts"),

@@ -18,6 +18,11 @@
 //!   `[logits]` of shape `[batch, out_w]` row-major.
 //! * Programs are immutable and thread-safe; one compiled `Program` may be
 //!   shared across trainer/serving threads (`Arc<dyn Program>`).
+//! * Programs may parallelize internally over the process-wide worker pool
+//!   (`util::threadpool`, sized by `XPEFT_THREADS` / `Engine::set_threads`),
+//!   but their outputs MUST be bitwise independent of the thread count —
+//!   the native backend achieves this with fixed shard boundaries and an
+//!   ordered reduction, and its determinism tests pin the property.
 //!
 //! ## Implementations
 //!

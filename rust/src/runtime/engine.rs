@@ -58,6 +58,9 @@ impl Engine {
     /// Engine over an explicit manifest + backend (tests, PJRT, future
     /// accelerator backends).
     pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Engine {
+        // NOTE: don't log the pool's lane count here — reading it would
+        // eagerly spawn the whole worker pool on every Engine construction;
+        // the pool stays lazy until the first parallel region runs.
         info!(
             "engine",
             "{} backend up: artifacts={}",
@@ -65,6 +68,21 @@ impl Engine {
             manifest.artifacts.len()
         );
         Engine { manifest, backend, programs: Mutex::new(HashMap::new()) }
+    }
+
+    /// Set the worker-pool lane limit compute-parallel backends use (the
+    /// `XPEFT_THREADS`/`--threads` knob; `0` leaves the default). Numeric
+    /// results never depend on this — the native backend's sharding is
+    /// thread-count deterministic.
+    pub fn set_threads(n: usize) {
+        if n > 0 {
+            crate::util::threadpool::set_parallelism(n);
+        }
+    }
+
+    /// The current worker-pool lane limit.
+    pub fn threads() -> usize {
+        crate::util::threadpool::parallelism()
     }
 
     /// PJRT-backed engine over AOT-lowered HLO artifacts (requires the

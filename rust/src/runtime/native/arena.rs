@@ -1,0 +1,218 @@
+//! Scratch-buffer arena for the native backend's hot paths.
+//!
+//! PR 1's `model.rs` heap-allocated every intermediate tensor (~two dozen
+//! `vec![0.0; r*d]`-class buffers per train step); beyond malloc cost, the
+//! large ones crossed glibc's mmap threshold, so every step paid fresh
+//! page faults and memsets. The arena recycles buffers by size class:
+//! after one warmup step, the steady-state train/eval loop performs **zero
+//! arena growth** (pinned by `native::tests::train_step_arena_stops_growing`).
+//!
+//! Lifetime rules (also documented in `rust/README.md`):
+//!
+//! * [`Arena::alloc`] hands out a zero-filled [`Scratch`] that borrows the
+//!   arena; dropping it returns the buffer to the arena's free list.
+//!   [`Arena::scratch`] skips the zero fill for buffers that are fully
+//!   overwritten before use (every `*_into` kernel output), so recycled
+//!   buffers pay no memset at all.
+//! * An `Arena` is single-threaded (cheap `RefCell` interior). Concurrent
+//!   program runs and parallel shards each take a whole arena from the
+//!   program's [`ArenaPool`] and return it when the shard completes.
+//! * Arena buffers must not escape the step: anything returned to the
+//!   caller (output tensors, gradients, per-row LN stats) is an ordinary
+//!   `Vec` — only the O(rows·dim) activation/gradient scratch lives here.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::Mutex;
+
+/// Size-classed free lists of `f32` buffers.
+#[derive(Default)]
+pub struct Arena {
+    free: RefCell<HashMap<usize, Vec<Vec<f32>>>>,
+    grows: Cell<usize>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// A zero-filled buffer of `len` floats, recycled on drop. Use for
+    /// accumulation targets (`+=` consumers).
+    pub fn alloc(&self, len: usize) -> Scratch<'_> {
+        let mut buf = self.take(len);
+        buf.fill(0.0);
+        Scratch { buf, key: len, arena: self }
+    }
+
+    /// A buffer of `len` floats with **unspecified contents** (stale data
+    /// from its previous life). Use only for outputs that are fully
+    /// overwritten before being read — the `*_into` kernels all overwrite
+    /// — which skips the memset `alloc` pays on every reuse.
+    pub fn scratch(&self, len: usize) -> Scratch<'_> {
+        Scratch { buf: self.take(len), key: len, arena: self }
+    }
+
+    /// A buffer initialized as a copy of `src` (no zero fill either).
+    pub fn alloc_copy(&self, src: &[f32]) -> Scratch<'_> {
+        let mut buf = self.take(src.len());
+        buf.copy_from_slice(src);
+        Scratch { buf, key: src.len(), arena: self }
+    }
+
+    /// How many buffers were freshly heap-allocated (free-list misses).
+    /// Flat across steps ⇒ the hot loop no longer allocates.
+    pub fn grows(&self) -> usize {
+        self.grows.get()
+    }
+
+    /// Returns a buffer with `len` initialized elements: recycled buffers
+    /// keep their full length (and stale contents); fresh ones are zeroed
+    /// by construction.
+    fn take(&self, len: usize) -> Vec<f32> {
+        let recycled = self.free.borrow_mut().get_mut(&len).and_then(Vec::pop);
+        match recycled {
+            Some(buf) => {
+                debug_assert_eq!(buf.len(), len);
+                buf
+            }
+            None => {
+                self.grows.set(self.grows.get() + 1);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    fn put(&self, key: usize, buf: Vec<f32>) {
+        if buf.len() == key {
+            self.free.borrow_mut().entry(key).or_default().push(buf);
+        }
+    }
+}
+
+/// An `f32` buffer on loan from an [`Arena`]; derefs to `[f32]` and returns
+/// itself to the arena's free list on drop.
+pub struct Scratch<'a> {
+    buf: Vec<f32>,
+    key: usize,
+    arena: &'a Arena,
+}
+
+impl Deref for Scratch<'_> {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for Scratch<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch<'_> {
+    fn drop(&mut self) {
+        self.arena.put(self.key, std::mem::take(&mut self.buf));
+    }
+}
+
+/// Thread-safe checkout of whole arenas: one per concurrent execution lane
+/// (program run or parallel shard). The pool grows to the peak lane count
+/// and then stops allocating.
+#[derive(Default)]
+pub struct ArenaPool {
+    free: Mutex<Vec<Arena>>,
+}
+
+impl ArenaPool {
+    pub fn new() -> ArenaPool {
+        ArenaPool::default()
+    }
+
+    /// Take an arena (warm if one is free, fresh otherwise).
+    pub fn acquire(&self) -> Arena {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return an arena for reuse.
+    pub fn release(&self, arena: Arena) {
+        self.free.lock().unwrap().push(arena);
+    }
+
+    /// Total fresh heap allocations across every arena currently checked
+    /// in. Call between runs (all arenas released) for an exact figure.
+    pub fn grows(&self) -> usize {
+        self.free.lock().unwrap().iter().map(Arena::grows).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_buffers_by_size() {
+        let ar = Arena::new();
+        {
+            let a = ar.alloc(64);
+            assert_eq!(a.len(), 64);
+            assert!(a.iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(ar.grows(), 1);
+        {
+            let mut b = ar.alloc(64); // hits the free list
+            b[0] = 3.5;
+        }
+        assert_eq!(ar.grows(), 1);
+        let _c = ar.alloc(128); // different size class
+        assert_eq!(ar.grows(), 2);
+    }
+
+    #[test]
+    fn recycled_buffers_are_rezeroed() {
+        let ar = Arena::new();
+        {
+            let mut a = ar.alloc(8);
+            a.iter_mut().for_each(|v| *v = 9.0);
+        }
+        let b = ar.alloc(8);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn alloc_copy_matches_source() {
+        let ar = Arena::new();
+        let src = [1.0f32, 2.0, 3.0];
+        let c = ar.alloc_copy(&src);
+        assert_eq!(&*c, &src[..]);
+    }
+
+    #[test]
+    fn scratch_has_full_length_and_recycles_without_zeroing() {
+        let ar = Arena::new();
+        {
+            let mut s = ar.scratch(16);
+            assert_eq!(s.len(), 16);
+            s.iter_mut().for_each(|v| *v = 5.0);
+        }
+        let s = ar.scratch(16); // stale contents are allowed — only length matters
+        assert_eq!(s.len(), 16);
+        assert_eq!(ar.grows(), 1);
+    }
+
+    #[test]
+    fn pool_round_trips_arenas() {
+        let pool = ArenaPool::new();
+        let ar = pool.acquire();
+        drop(ar.alloc(32));
+        pool.release(ar);
+        assert_eq!(pool.grows(), 1);
+        let ar = pool.acquire();
+        drop(ar.alloc(32)); // warm
+        pool.release(ar);
+        assert_eq!(pool.grows(), 1);
+    }
+}

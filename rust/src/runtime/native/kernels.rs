@@ -7,69 +7,266 @@
 //! bank slab, skipping zero weights so a hard k-hot mask touches only k
 //! contiguous adapter slabs.
 //!
+//! ## The blocked GEMM
+//!
+//! All three matmul variants (`A·B`, `Aᵀ·B`, `A·Bᵀ`) route through one
+//! cache-blocked, register-tiled kernel ([`gemm_strided`]):
+//!
+//! * panels of A (`MC×KC`) and B (`KC×NC`) are packed into contiguous,
+//!   zero-padded per-thread buffers — packing absorbs every stride/
+//!   transpose, so the inner kernel is branch-free and layout-agnostic;
+//! * the micro-kernel accumulates an `MR×NR` (4×16) output tile in
+//!   registers over the packed K dimension; the fixed-size inner loops
+//!   autovectorize (one row of the tile is two 8-wide SIMD FMAs);
+//! * K is consumed in `KC` blocks, accumulating into the output tile, so
+//!   a packed B panel stays resident in L2 across the whole M loop.
+//!
+//! The PR-1 scalar kernels are kept verbatim in [`scalar`] as correctness
+//! oracles (parity tests below) and as the roofline baseline for
+//! `benches/hotpath.rs`.
+//!
+//! `*_into` variants write into caller-provided buffers so the model can
+//! run its hot loop entirely out of the scratch arena
+//! (`runtime::native::arena`) — no per-call heap allocation; the pack
+//! buffers are `thread_local` and the worker pool's threads are
+//! persistent, so they warm up exactly once per thread.
+//!
 //! Forward kernels are paired with hand-written backward kernels (VJPs);
 //! the unit tests check every backward against central finite differences.
+
+use std::cell::RefCell;
 
 pub const LN_EPS: f32 = 1e-5;
 
 // ---------------------------------------------------------------------------
-// matmul family (row-major)
+// blocked micro-kernel GEMM
 // ---------------------------------------------------------------------------
 
-/// `a [m,k] @ b [k,n] -> [m,n]` — i-k-j loop order so the inner loop
-/// streams both the output row and a `b` row.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
+/// Micro-tile rows (distinct accumulator rows held in registers).
+const MR: usize = 4;
+/// Micro-tile cols (one tile row = two 8-lane SIMD registers).
+const NR: usize = 16;
+/// K block: one packed A panel row-strip (`MR·KC` floats) fits in L1.
+const KC: usize = 256;
+/// M block: the packed A panel is `MC·KC` floats (64 KiB).
+const MC: usize = 64;
+/// N block: the packed B panel is `KC·NC` floats (128 KiB, L2-resident).
+const NC: usize = 128;
+
+thread_local! {
+    /// Packed (A, B) panels. Per-thread and persistent (the worker pool
+    /// keeps its threads alive), so steady-state GEMMs never allocate.
+    static PACK: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((Vec::new(), Vec::new()));
+    /// Assembled-Â scratch for the fused gather-GEMM's materialize path.
+    static AGG: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Pack an `mc×kc` block of A (element `(i, kk)` at `a[i·ars + kk·acs]`)
+/// into MR-row strips, k-major within each strip, zero-padding partial
+/// strips so the micro-kernel never branches on edges.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    pa: &mut [f32],
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+) {
+    let strips = mc.div_ceil(MR);
+    for s in 0..strips {
+        let base = s * MR * kc;
+        for kk in 0..kc {
+            let col = (p0 + kk) * acs;
+            let dst = &mut pa[base + kk * MR..base + kk * MR + MR];
+            for (r, slot) in dst.iter_mut().enumerate() {
+                let i = i0 + s * MR + r;
+                *slot = if i < i0 + mc { a[i * ars + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack a `kc×nc` block of B (element `(kk, j)` at `b[kk·brs + j·bcs]`)
+/// into NR-column strips, k-major within each strip, zero-padded.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    pb: &mut [f32],
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    let strips = nc.div_ceil(NR);
+    for t in 0..strips {
+        let base = t * NR * kc;
+        for kk in 0..kc {
+            let row = (p0 + kk) * brs;
+            let dst = &mut pb[base + kk * NR..base + kk * NR + NR];
+            for (c, slot) in dst.iter_mut().enumerate() {
+                let j = j0 + t * NR + c;
+                *slot = if j < j0 + nc { b[row + j * bcs] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// The register-tiled inner kernel: `acc[MR][NR] += pa_strip ⊗ pb_strip`
+/// over the packed K dimension. Fixed-size loops, no bounds checks in the
+/// body — this is the loop that must (and does) autovectorize.
+#[inline(always)]
+fn microkernel(pa_strip: &[f32], pb_strip: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (a, b) in pa_strip.chunks_exact(MR).zip(pb_strip.chunks_exact(NR)) {
+        for r in 0..MR {
+            let av = a[r];
+            let row = &mut acc[r];
+            for (o, &bv) in row.iter_mut().zip(b) {
                 *o += av * bv;
             }
         }
     }
-    out
 }
 
-/// `aᵀ @ b` for `a [k,m]`, `b [k,n]` -> `[m,n]` (gradient of weights).
-pub fn matmul_at_b(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+/// Write (`first`) or accumulate (`!first`) the valid region of a micro
+/// tile into `out[m,n]`.
+#[allow(clippy::too_many_arguments)]
+fn store_tile(
+    out: &mut [f32],
+    n: usize,
+    m: usize,
+    row0: usize,
+    col0: usize,
+    col_end: usize,
+    acc: &[[f32; NR]; MR],
+    first: bool,
+) {
+    let rows = MR.min(m - row0);
+    let cols = NR.min(col_end - col0);
+    for (r, arow) in acc.iter().enumerate().take(rows) {
+        let orow = &mut out[(row0 + r) * n + col0..(row0 + r) * n + col0 + cols];
+        if first {
+            orow.copy_from_slice(&arow[..cols]);
+        } else {
+            for (o, &v) in orow.iter_mut().zip(arow) {
+                *o += v;
+            }
+        }
+    }
+}
+
+/// Blocked GEMM over arbitrary row/column strides:
+/// `out[m,n] = A·B` with `A(i,kk) = a[i·ars + kk·acs]` and
+/// `B(kk,j) = b[kk·brs + j·bcs]`. `out` is fully overwritten (no need to
+/// zero it first). Strides express all three matmul variants, so one
+/// kernel serves forward and both backward products.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided(
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if kdim == 0 {
+        out.fill(0.0);
+        return;
+    }
+    PACK.with(|cell| {
+        let (pa, pb) = &mut *cell.borrow_mut();
+        pa.resize(MC * KC, 0.0);
+        pb.resize(KC * NC, 0.0);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let nr_strips = nc.div_ceil(NR);
+            for pc in (0..kdim).step_by(KC) {
+                let kc = KC.min(kdim - pc);
+                let first = pc == 0;
+                pack_b(pb, b, brs, bcs, pc, kc, jc, nc);
+                for ic in (0..m).step_by(MC) {
+                    let mc = MC.min(m - ic);
+                    let mr_strips = mc.div_ceil(MR);
+                    pack_a(pa, a, ars, acs, ic, mc, pc, kc);
+                    for s in 0..mr_strips {
+                        let pa_strip = &pa[s * MR * kc..(s + 1) * MR * kc];
+                        for t in 0..nr_strips {
+                            let pb_strip = &pb[t * NR * kc..(t + 1) * NR * kc];
+                            let mut acc = [[0.0f32; NR]; MR];
+                            microkernel(pa_strip, pb_strip, &mut acc);
+                            store_tile(
+                                out,
+                                n,
+                                m,
+                                ic + s * MR,
+                                jc + t * NR,
+                                jc + nc,
+                                &acc,
+                                first,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// matmul family (row-major), all routed through the blocked kernel
+// ---------------------------------------------------------------------------
+
+/// `out = a [m,k] @ b [k,n]`, overwriting `out [m,n]`.
+pub fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_strided(out, m, n, k, a, k, 1, b, n, 1);
+}
+
+/// `out = aᵀ @ b` for `a [k,m]`, `b [k,n]` (gradient of weights).
+pub fn matmul_at_b_into(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
+    gemm_strided(out, m, n, k, a, 1, m, b, n, 1);
+}
+
+/// `out = a @ bᵀ` for `a [m,k]`, `b [n,k]` (gradient of activations).
+pub fn matmul_a_bt_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm_strided(out, m, n, k, a, k, 1, b, 1, k);
+}
+
+/// `a [m,k] @ b [k,n] -> [m,n]` (allocating convenience wrapper).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    matmul_into(&mut out, a, b, m, k, n);
     out
 }
 
-/// `a @ bᵀ` for `a [m,k]`, `b [n,k]` -> `[m,n]` (gradient of activations).
-pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
+/// `aᵀ @ b` for `a [k,m]`, `b [k,n]` -> `[m,n]`.
+pub fn matmul_at_b(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *o = acc;
-        }
-    }
+    matmul_at_b_into(&mut out, a, b, k, m, n);
+    out
+}
+
+/// `a @ bᵀ` for `a [m,k]`, `b [n,k]` -> `[m,n]`.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_a_bt_into(&mut out, a, b, m, k, n);
     out
 }
 
@@ -80,6 +277,87 @@ pub fn add_bias(x: &mut [f32], bias: &[f32]) {
         for (v, &b) in row.iter_mut().zip(bias) {
             *v += b;
         }
+    }
+}
+
+/// Dot product with 8 independent accumulators so the reduction
+/// autovectorizes (a single running sum cannot be reassociated by the
+/// compiler). Used by attention scores and the bank-aggregation backward.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..8 {
+            acc[i] += xa[i] * xb[i];
+        }
+    }
+    let tail: f32 = ca
+        .remainder()
+        .iter()
+        .zip(cb.remainder())
+        .map(|(&x, &y)| x * y)
+        .sum();
+    acc.iter().sum::<f32>() + tail
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference kernels (PR-1 implementations)
+// ---------------------------------------------------------------------------
+
+/// The original scalar i-k-j matmuls, kept as correctness oracles for the
+/// blocked kernel's parity tests and as the single-thread roofline
+/// baseline in `benches/hotpath.rs`. Not used on any hot path.
+pub mod scalar {
+    /// `a [m,k] @ b [k,n] -> [m,n]` — i-k-j loop order.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `aᵀ @ b` for `a [k,m]`, `b [k,n]` -> `[m,n]`.
+    pub fn matmul_at_b(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `a @ bᵀ` for `a [m,k]`, `b [n,k]` -> `[m,n]`.
+    pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+        out
     }
 }
 
@@ -94,10 +372,11 @@ pub struct LnStats {
     pub rstd: Vec<f32>,
 }
 
-/// `LN(x) * gamma + beta` over the last dim of `[rows, d]`.
-pub fn layer_norm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> (Vec<f32>, LnStats) {
+/// `out = LN(x) * gamma + beta` over the last dim of `[rows, d]`,
+/// overwriting `out`; returns the per-row stats the backward needs.
+pub fn layer_norm_into(out: &mut [f32], x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> LnStats {
+    debug_assert_eq!(out.len(), x.len());
     let rows = x.len() / d;
-    let mut out = vec![0.0f32; x.len()];
     let mut mu = vec![0.0f32; rows];
     let mut rstd = vec![0.0f32; rows];
     for r in 0..rows {
@@ -112,22 +391,30 @@ pub fn layer_norm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> (Vec<f32>
             *o = (xv - m) * rs * g + b;
         }
     }
-    (out, LnStats { mu, rstd })
+    LnStats { mu, rstd }
 }
 
-/// VJP of [`layer_norm`]. Returns `dx`; when `want_affine`, also
-/// `(dgamma, dbeta)` summed over rows (frozen-PLM LNs skip the affine
-/// grads entirely).
-pub fn layer_norm_bwd(
+/// Allocating wrapper over [`layer_norm_into`].
+pub fn layer_norm(x: &[f32], gamma: &[f32], beta: &[f32], d: usize) -> (Vec<f32>, LnStats) {
+    let mut out = vec![0.0f32; x.len()];
+    let stats = layer_norm_into(&mut out, x, gamma, beta, d);
+    (out, stats)
+}
+
+/// VJP of [`layer_norm_into`], writing `dx` into a caller buffer. When
+/// `want_affine`, returns `(dgamma, dbeta)` summed over rows (frozen-PLM
+/// LNs skip the affine grads entirely).
+pub fn layer_norm_bwd_into(
+    dx: &mut [f32],
     dy: &[f32],
     x: &[f32],
     gamma: &[f32],
     stats: &LnStats,
     d: usize,
     want_affine: bool,
-) -> (Vec<f32>, Option<(Vec<f32>, Vec<f32>)>) {
+) -> Option<(Vec<f32>, Vec<f32>)> {
+    debug_assert_eq!(dx.len(), x.len());
     let rows = x.len() / d;
-    let mut dx = vec![0.0f32; x.len()];
     let mut dgamma = vec![0.0f32; if want_affine { d } else { 0 }];
     let mut dbeta = vec![0.0f32; if want_affine { d } else { 0 }];
     for r in 0..rows {
@@ -156,7 +443,21 @@ pub fn layer_norm_bwd(
             dxr[i] = rs * (dyg - mean_dyg - xhat * mean_dyg_xhat);
         }
     }
-    let affine = want_affine.then_some((dgamma, dbeta));
+    want_affine.then_some((dgamma, dbeta))
+}
+
+/// Allocating wrapper over [`layer_norm_bwd_into`].
+#[allow(clippy::type_complexity)]
+pub fn layer_norm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    gamma: &[f32],
+    stats: &LnStats,
+    d: usize,
+    want_affine: bool,
+) -> (Vec<f32>, Option<(Vec<f32>, Vec<f32>)>) {
+    let mut dx = vec![0.0f32; x.len()];
+    let affine = layer_norm_bwd_into(&mut dx, dy, x, gamma, stats, d, want_affine);
     (dx, affine)
 }
 
@@ -167,25 +468,34 @@ pub fn layer_norm_bwd(
 const GELU_S: f32 = 0.797_884_6; // sqrt(2/pi)
 const GELU_C: f32 = 0.044_715;
 
+pub fn gelu_into(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        let u = GELU_S * (v + GELU_C * v * v * v);
+        *o = 0.5 * v * (1.0 + u.tanh());
+    }
+}
+
 pub fn gelu(x: &[f32]) -> Vec<f32> {
-    x.iter()
-        .map(|&v| {
-            let u = GELU_S * (v + GELU_C * v * v * v);
-            0.5 * v * (1.0 + u.tanh())
-        })
-        .collect()
+    let mut out = vec![0.0f32; x.len()];
+    gelu_into(&mut out, x);
+    out
+}
+
+pub fn gelu_bwd_into(out: &mut [f32], x: &[f32], dy: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(dy) {
+        let u = GELU_S * (v + GELU_C * v * v * v);
+        let t = u.tanh();
+        let du = GELU_S * (1.0 + 3.0 * GELU_C * v * v);
+        *o = g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du);
+    }
 }
 
 pub fn gelu_bwd(x: &[f32], dy: &[f32]) -> Vec<f32> {
-    x.iter()
-        .zip(dy)
-        .map(|(&v, &g)| {
-            let u = GELU_S * (v + GELU_C * v * v * v);
-            let t = u.tanh();
-            let du = GELU_S * (1.0 + 3.0 * GELU_C * v * v);
-            g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
-        })
-        .collect()
+    let mut out = vec![0.0f32; x.len()];
+    gelu_bwd_into(&mut out, x, dy);
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -220,12 +530,13 @@ pub fn softmax_vjp_row(y: &[f32], dy: &[f32], out: &mut [f32]) {
 // X-PEFT gather-GEMM: mask-aggregated adapter assembly
 // ---------------------------------------------------------------------------
 
-/// `Â = Σ_i w[i] · bank[i]` over a layer slab `bank_layer [N, slab]`
-/// (row-major, `slab = d·b`). Zero weights are skipped, so a k-hot hard
-/// mask gathers exactly k contiguous adapter slabs — the serving hot path.
-pub fn aggregate_bank(weights: &[f32], bank_layer: &[f32], slab: usize) -> Vec<f32> {
+/// `out = Σ_i w[i] · bank[i]` over a layer slab `bank_layer [N, slab]`
+/// (row-major, `slab = d·b`), overwriting `out`. Zero weights are skipped,
+/// so a k-hot hard mask gathers exactly k contiguous adapter slabs.
+pub fn aggregate_bank_into(out: &mut [f32], weights: &[f32], bank_layer: &[f32], slab: usize) {
     debug_assert_eq!(bank_layer.len(), weights.len() * slab);
-    let mut out = vec![0.0f32; slab];
+    debug_assert_eq!(out.len(), slab);
+    out.fill(0.0);
     for (i, &w) in weights.iter().enumerate() {
         if w == 0.0 {
             continue;
@@ -235,24 +546,99 @@ pub fn aggregate_bank(weights: &[f32], bank_layer: &[f32], slab: usize) -> Vec<f
             *o += w * x;
         }
     }
+}
+
+/// Allocating wrapper over [`aggregate_bank_into`].
+pub fn aggregate_bank(weights: &[f32], bank_layer: &[f32], slab: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; slab];
+    aggregate_bank_into(&mut out, weights, bank_layer, slab);
     out
 }
 
-/// VJP of [`aggregate_bank`] w.r.t. the weights:
+/// VJP of [`aggregate_bank_into`] w.r.t. the weights:
 /// `dw[i] = ⟨dÂ, bank[i]⟩` (dense — training needs every adapter's grad).
-pub fn aggregate_bank_bwd(d_hat: &[f32], bank_layer: &[f32], n: usize) -> Vec<f32> {
+pub fn aggregate_bank_bwd_into(dw: &mut [f32], d_hat: &[f32], bank_layer: &[f32]) {
     let slab = d_hat.len();
-    debug_assert_eq!(bank_layer.len(), n * slab);
-    let mut dw = vec![0.0f32; n];
+    debug_assert_eq!(bank_layer.len(), dw.len() * slab);
     for (i, o) in dw.iter_mut().enumerate() {
-        let src = &bank_layer[i * slab..(i + 1) * slab];
-        let mut acc = 0.0f32;
-        for (&d, &x) in d_hat.iter().zip(src) {
-            acc += d * x;
-        }
-        *o = acc;
+        *o = dot(d_hat, &bank_layer[i * slab..(i + 1) * slab]);
     }
+}
+
+/// Allocating wrapper over [`aggregate_bank_bwd_into`].
+pub fn aggregate_bank_bwd(d_hat: &[f32], bank_layer: &[f32], n: usize) -> Vec<f32> {
+    let mut dw = vec![0.0f32; n];
+    aggregate_bank_bwd_into(&mut dw, d_hat, bank_layer);
     dw
+}
+
+/// The gather-GEMM plan predicate, shared by [`gather_gemm_into`] and the
+/// eval adapter planner (`model::eval_adapters`) so the two can't drift:
+/// per-slab flops are `nnz·rows` for the fused panel accumulation vs
+/// `nnz + rows` for materialize-then-GEMM. Strict `<` so fused wins
+/// exactly when `nnz == 1` or `rows == 1` (the 2×2 tie goes to the
+/// blocked-GEMM materialize plan, which has better constants).
+pub fn gather_fused_wins(nnz: usize, rows: usize) -> bool {
+    nnz * rows < nnz + rows
+}
+
+/// The fused serving-path gather-GEMM:
+/// `out [rows,dout] = x [rows,din] @ (Σ_i w[i]·W_i)` over `[N, din, dout]`
+/// bank slabs, without the caller materializing the aggregate.
+///
+/// Two execution plans, chosen by a flop count:
+/// * **materialize** — assemble `Ŵ` once (`nnz·din·dout` flops into
+///   thread-local scratch) then one dense GEMM (`rows·din·dout`);
+/// * **fused** — accumulate `w_i·(x @ W_i)` panel-by-panel
+///   (`nnz·rows·din·dout` flops, but no assembly and no scratch), which
+///   wins exactly when `nnz == 1` or `rows == 1` — the single-request /
+///   single-adapter serving corner.
+pub fn gather_gemm_into(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    weights: &[f32],
+    bank_layer: &[f32],
+) {
+    let slab = din * dout;
+    debug_assert_eq!(out.len(), rows * dout);
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(bank_layer.len(), weights.len() * slab);
+    let nnz = weights.iter().filter(|&&w| w != 0.0).count();
+    if nnz == 0 {
+        out.fill(0.0);
+        return;
+    }
+    if gather_fused_wins(nnz, rows) {
+        out.fill(0.0);
+        for (i, &w) in weights.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let wslab = &bank_layer[i * slab..(i + 1) * slab];
+            for r in 0..rows {
+                let xr = &x[r * din..(r + 1) * din];
+                let orow = &mut out[r * dout..(r + 1) * dout];
+                for (kk, &xv) in xr.iter().enumerate() {
+                    let s = w * xv;
+                    let wrow = &wslab[kk * dout..(kk + 1) * dout];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += s * wv;
+                    }
+                }
+            }
+        }
+    } else {
+        AGG.with(|cell| {
+            let agg = &mut *cell.borrow_mut();
+            agg.clear();
+            agg.resize(slab, 0.0);
+            aggregate_bank_into(agg, weights, bank_layer, slab);
+            matmul_into(out, x, agg, rows, din, dout);
+        });
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -261,6 +647,7 @@ pub fn aggregate_bank_bwd(d_hat: &[f32], bank_layer: &[f32], n: usize) -> Vec<f3
 
 /// Plain Pfeiffer adapter block: `x + LN(x @ A) @ B` for `x [rows, d]`,
 /// `A [d, b]`, `B [b, d]` (ref.py `adapter_forward`).
+#[allow(clippy::too_many_arguments)]
 pub fn adapter_forward(
     x: &[f32],
     rows: usize,
@@ -296,9 +683,15 @@ pub fn xpeft_adapter_forward(
     ln_scale: &[f32],
     ln_bias: &[f32],
 ) -> Vec<f32> {
-    let a_hat = aggregate_bank(mask_a, bank_a_layer, d * bneck);
-    let b_hat = aggregate_bank(mask_b, bank_b_layer, bneck * d);
-    adapter_forward(x, rows, d, bneck, &a_hat, &b_hat, ln_scale, ln_bias)
+    let mut h_pre = vec![0.0f32; rows * bneck];
+    gather_gemm_into(&mut h_pre, x, rows, d, bneck, mask_a, bank_a_layer);
+    let (h, _) = layer_norm(&h_pre, ln_scale, ln_bias, bneck);
+    let mut out = vec![0.0f32; rows * d];
+    gather_gemm_into(&mut out, &h, rows, bneck, d, mask_b, bank_b_layer);
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o += xv;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -349,6 +742,93 @@ mod tests {
         let want = matmul(&a, &b, m, k, n);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    /// The satellite parity suite: every blocked variant must match its
+    /// scalar PR-1 oracle to ≤1e-5 relative error on shapes that are not
+    /// multiples of the micro/cache tiles (MR=4, NR=16, MC=64, KC=256,
+    /// NC=128), including shapes that cross every blocking boundary.
+    #[test]
+    fn blocked_gemm_matches_scalar_oracle_on_odd_shapes() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 4),
+            (7, 17, 9),
+            (4, 16, 16),
+            (33, 64, 15),
+            (65, 257, 31),  // crosses MC and KC
+            (130, 300, 129), // crosses MC, KC and NC
+        ];
+        let mut rng = Rng::new(99);
+        for &(m, k, n) in &shapes {
+            let close = |got: &[f32], want: &[f32], label: &str| {
+                for (i, (g, w)) in got.iter().zip(want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                        "{label} {m}x{k}x{n} [{i}]: blocked {g} vs scalar {w}"
+                    );
+                }
+            };
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            close(&matmul(&a, &b, m, k, n), &scalar::matmul(&a, &b, m, k, n), "matmul");
+            let akm = randv(&mut rng, k * m); // a stored [k,m]
+            close(
+                &matmul_at_b(&akm, &b, k, m, n),
+                &scalar::matmul_at_b(&akm, &b, k, m, n),
+                "matmul_at_b",
+            );
+            let bnk = randv(&mut rng, n * k); // b stored [n,k]
+            close(
+                &matmul_a_bt(&a, &bnk, m, k, n),
+                &scalar::matmul_a_bt(&a, &bnk, m, k, n),
+                "matmul_a_bt",
+            );
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_sum() {
+        let mut rng = Rng::new(12);
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            let want: f32 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!(
+                (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "len {len}: {got} vs {want}"
+            );
+        }
+    }
+
+    /// Fused gather-GEMM parity: both execution plans (fused panel
+    /// accumulation and materialize-then-GEMM) must match the oracle
+    /// `x @ aggregate_bank(w)` built from the scalar kernels.
+    #[test]
+    fn gather_gemm_matches_aggregate_then_matmul() {
+        let mut rng = Rng::new(13);
+        let (din, dout, n) = (8, 6, 10);
+        let bank = randv(&mut rng, n * din * dout);
+        for rows in [1usize, 2, 5] {
+            let x = randv(&mut rng, rows * din);
+            for nnz in [0usize, 1, 3, n] {
+                let mut w = vec![0.0f32; n];
+                for i in 0..nnz {
+                    w[(i * 7 + 1) % n] = 0.25 + i as f32;
+                }
+                let mut got = vec![0.0f32; rows * dout];
+                gather_gemm_into(&mut got, &x, rows, din, dout, &w, &bank);
+                let a_hat = aggregate_bank(&w, &bank, din * dout);
+                let want = scalar::matmul(&x, &a_hat, rows, din, dout);
+                for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - wv).abs() <= 1e-5 * (1.0 + wv.abs()),
+                        "rows={rows} nnz={nnz} [{i}]: {g} vs {wv}"
+                    );
+                }
+            }
         }
     }
 
@@ -490,10 +970,9 @@ mod tests {
         }
     }
 
-    /// The satellite parity test: the fused native kernel must match a
-    /// direct f64 transcription of `python/compile/kernels/ref.py`
-    /// (`xpeft_adapter_forward` = `x + LN(x @ Â) @ B̂`) on a fixed-seed
-    /// tiny config.
+    /// The fused native kernel must match a direct f64 transcription of
+    /// `python/compile/kernels/ref.py` (`xpeft_adapter_forward` =
+    /// `x + LN(x @ Â) @ B̂`) on a fixed-seed tiny config.
     #[test]
     fn xpeft_adapter_forward_matches_python_reference() {
         let mut rng = Rng::new(42);

@@ -8,14 +8,22 @@
 //! FFI, no artifacts directory and no network access.
 //!
 //! Layout:
-//! * [`kernels`] — matmuls, LayerNorm/GELU/softmax + hand-written VJPs,
-//!   and the zero-skipping bank aggregation (`Â = Σ_i w_i·A_i`).
+//! * [`kernels`] — the blocked/register-tiled GEMM every matmul variant
+//!   routes through, LayerNorm/GELU/softmax + hand-written VJPs, the
+//!   zero-skipping bank aggregation (`Â = Σ_i w_i·A_i`) and the fused
+//!   gather-GEMM serving path.
+//! * [`arena`] — recycling scratch buffers; a compiled program owns an
+//!   [`arena::ArenaPool`] so its steady-state hot loop performs zero
+//!   arena growth (pinned by `train_step_arena_stops_growing`).
 //! * `model` (private) — the encoder forward/backward, mask activation
 //!   (soft softmax / hard gumbel top-k straight-through), losses, AdamW.
+//!   Train/eval shard the batch over `util::threadpool` with fixed shard
+//!   boundaries, so results are bitwise independent of `XPEFT_THREADS`.
 //!
 //! Numerics mirror `python/compile/model.py` + `kernels/ref.py`; parity
 //! tests live next to the kernels.
 
+pub mod arena;
 pub mod kernels;
 mod model;
 
@@ -28,6 +36,8 @@ use crate::config::ModelConfig;
 use super::backend::{validate_inputs, Backend, Program};
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::Tensor;
+
+use arena::ArenaPool;
 
 /// The default backend: compiles manifest specs into in-process rust
 /// programs. Stateless and trivially cheap to construct.
@@ -54,14 +64,21 @@ impl Backend for NativeBackend {
             "xpeft" | "single_adapter" | "head_only" => {}
             other => bail!("native backend cannot compile mode '{other}'"),
         }
-        Ok(Arc::new(NativeProgram { config: manifest.config.clone(), spec: spec.clone() }))
+        Ok(Arc::new(NativeProgram {
+            config: manifest.config.clone(),
+            spec: spec.clone(),
+            arenas: ArenaPool::new(),
+        }))
     }
 }
 
-/// One "compiled" native executable: the spec plus the static model dims.
+/// One "compiled" native executable: the spec, the static model dims, and
+/// a pool of scratch arenas (one per concurrent execution lane) that keeps
+/// the step-loop allocation-free after warmup.
 pub struct NativeProgram {
     config: ModelConfig,
     spec: ArtifactSpec,
+    arenas: ArenaPool,
 }
 
 impl Program for NativeProgram {
@@ -72,8 +89,8 @@ impl Program for NativeProgram {
     fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         validate_inputs(&self.spec, inputs)?;
         match self.spec.program.as_str() {
-            "train" => model::run_train(&self.config, &self.spec, inputs),
-            _ => model::run_eval(&self.config, &self.spec, inputs),
+            "train" => model::run_train(&self.config, &self.spec, inputs, &self.arenas),
+            _ => model::run_eval(&self.config, &self.spec, inputs, &self.arenas),
         }
     }
 }
@@ -107,5 +124,46 @@ mod tests {
         let spec = m.find("head_only_eval_cls").unwrap();
         let p = NativeBackend::new().compile(&m, spec).unwrap();
         assert!(p.run(&[]).is_err());
+    }
+
+    /// The satellite allocation-regression test: after a two-step warmup,
+    /// further train steps must not grow the program's arenas at all —
+    /// the scratch-reuse guarantee the perf work rests on can't silently
+    /// rot. (Uses a tiny config; only one shard runs, so the count is
+    /// exact and thread-scheduling independent.)
+    #[test]
+    fn train_step_arena_stops_growing() {
+        let cfg = ModelConfig {
+            vocab: 64,
+            d: 8,
+            layers: 2,
+            heads: 2,
+            ffn: 16,
+            seq: 4,
+            batch: 2,
+            bottleneck: 4,
+            c_max: 4,
+        };
+        let m = Manifest::synthesize(cfg, Path::new("unused"));
+        let spec = m.find("xpeft_train_cls_n100").unwrap().clone();
+        let tensors: Vec<Tensor> = spec.inputs.iter().map(Tensor::zeros_like).collect();
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let program = NativeProgram {
+            config: m.config.clone(),
+            spec,
+            arenas: ArenaPool::new(),
+        };
+        program.run(&refs).unwrap();
+        program.run(&refs).unwrap();
+        let warm = program.arenas.grows();
+        assert!(warm > 0, "the hot loop should be using the arena at all");
+        for _ in 0..3 {
+            program.run(&refs).unwrap();
+        }
+        assert_eq!(
+            program.arenas.grows(),
+            warm,
+            "train-step hot loop must perform zero arena growth after warmup"
+        );
     }
 }

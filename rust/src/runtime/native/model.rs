@@ -11,6 +11,22 @@
 //! bias/LN exemptions) and the linear LR decay live here too, so one
 //! `Program::run` is a full optimizer step, matching the AOT artifact
 //! contract output-for-output.
+//!
+//! ## Parallel hot path
+//!
+//! The batch is split into **fixed-size shards** ([`SHARD_ROWS`] batch rows
+//! each). A shard runs encoder forward → head → per-row loss → encoder
+//! backward as one task on the worker pool (`util::threadpool`), producing
+//! a [`ShardGrads`] partial; partials reduce in shard index order. Because
+//! shard boundaries never depend on the thread count and the reduction
+//! order is fixed, train/eval results are **bitwise identical for any
+//! `XPEFT_THREADS`** (pinned by `losses_identical_across_thread_counts`).
+//! The split is exact because both losses normalize by the batch-global
+//! `Σ example_w`, which is known before the forward runs.
+//!
+//! All O(rows·dim) intermediates come from a per-shard [`Arena`]
+//! checkout — after one warmup step the hot loop performs zero arena
+//! growth (see `runtime::native::arena`).
 
 use std::collections::HashMap;
 
@@ -21,8 +37,15 @@ use crate::masks::topk_indices;
 use crate::runtime::manifest::{ArtifactSpec, Group, TensorSpec};
 use crate::runtime::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
+use super::arena::{Arena, ArenaPool, Scratch};
 use super::kernels as k;
+
+/// Batch rows per parallel shard. Fixed (never derived from the thread
+/// count) so floating-point reduction order — and therefore every loss and
+/// gradient bit — is independent of pool parallelism.
+const SHARD_ROWS: usize = 4;
 
 // ---------------------------------------------------------------------------
 // input views
@@ -121,20 +144,40 @@ fn plm_view<'a>(inp: &Inputs<'a>, layers: usize) -> Result<Plm<'a>> {
     })
 }
 
-/// Per-layer adapter configuration (Â/B̂ either aggregated from the bank
-/// under mask weights, or the profile's own matrices, or absent).
+/// Per-layer adapter configuration: Â/B̂ aggregated from the bank under
+/// mask weights (training), the profile's own matrices, the *un*assembled
+/// masked form (eval — drives the fused gather-GEMM directly), or absent.
 enum Adapter<'a> {
     Assembled { a_hat: Vec<f32>, b_hat: Vec<f32>, ln_s: &'a [f32], ln_b: &'a [f32] },
     Borrowed { a: &'a [f32], b: &'a [f32], ln_s: &'a [f32], ln_b: &'a [f32] },
+    Masked {
+        wa: &'a [f32],
+        wb: &'a [f32],
+        bank_a: &'a [f32],
+        bank_b: &'a [f32],
+        ln_s: &'a [f32],
+        ln_b: &'a [f32],
+    },
     None,
 }
 
 impl<'a> Adapter<'a> {
+    /// Materialized matrices — what the backward pass needs. `Masked` is
+    /// eval-only (no backward), so it reports `None` here like `None`.
     fn parts(&self) -> Option<(&[f32], &[f32], &[f32], &[f32])> {
         match self {
             Adapter::Assembled { a_hat, b_hat, ln_s, ln_b } => Some((a_hat, b_hat, ln_s, ln_b)),
             Adapter::Borrowed { a, b, ln_s, ln_b } => Some((a, b, ln_s, ln_b)),
-            Adapter::None => None,
+            Adapter::Masked { .. } | Adapter::None => None,
+        }
+    }
+
+    fn ln(&self) -> (&[f32], &[f32]) {
+        match self {
+            Adapter::Assembled { ln_s, ln_b, .. }
+            | Adapter::Borrowed { ln_s, ln_b, .. }
+            | Adapter::Masked { ln_s, ln_b, .. } => (ln_s, ln_b),
+            Adapter::None => (&[], &[]),
         }
     }
 }
@@ -143,38 +186,43 @@ impl<'a> Adapter<'a> {
 // encoder forward (with optional activation cache for the backward pass)
 // ---------------------------------------------------------------------------
 
-struct BlockCache {
-    q: Vec<f32>, // [R,d] (b,t,h,hd) layout
-    kk: Vec<f32>,
-    v: Vec<f32>,
-    attn: Vec<f32>,   // [B,H,T,T] softmax probs
-    x1_pre: Vec<f32>, // x_in + attn_out
+struct BlockCache<'ar> {
+    q: Scratch<'ar>, // [R,d] (b,t,h,hd) layout
+    kk: Scratch<'ar>,
+    v: Scratch<'ar>,
+    attn: Scratch<'ar>,   // [B,H,T,T] softmax probs
+    x1_pre: Scratch<'ar>, // x_in + attn_out
     ln1: k::LnStats,
-    u: Vec<f32>, // [R,ffn] pre-GELU
-    ffn_out: Vec<f32>,
-    h_pre: Vec<f32>, // [R,b] adapter bottleneck pre-LN
+    u: Scratch<'ar>, // [R,ffn] pre-GELU
+    ffn_out: Scratch<'ar>,
+    h_pre: Scratch<'ar>, // [R,b] adapter bottleneck pre-LN
     ln_ad: Option<k::LnStats>,
-    h: Vec<f32>,      // [R,b] after adapter LN
-    x2_pre: Vec<f32>, // x1 + adapter_out
+    h: Scratch<'ar>,      // [R,b] after adapter LN
+    x2_pre: Scratch<'ar>, // x1 + adapter_out
     ln2: k::LnStats,
 }
 
 #[allow(clippy::type_complexity)]
-fn attention_fwd(
+fn attention_fwd<'ar>(
     cfg: &ModelConfig,
     blk: &Block<'_>,
     x: &[f32],
     pad_mask: &[f32],
     bsz: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    ar: &'ar Arena,
+) -> (Scratch<'ar>, Scratch<'ar>, Scratch<'ar>, Scratch<'ar>, Scratch<'ar>) {
     let (t, d, heads) = (cfg.seq, cfg.d, cfg.heads);
     let hd = cfg.head_dim();
     let r = bsz * t;
     let scale = 1.0 / (hd as f32).sqrt();
-    let q = k::matmul(x, blk.wq, r, d, d);
-    let kk = k::matmul(x, blk.wk, r, d, d);
-    let v = k::matmul(x, blk.wv, r, d, d);
-    let mut attn = vec![0.0f32; bsz * heads * t * t];
+    let mut q = ar.scratch(r * d);
+    k::matmul_into(&mut q, x, blk.wq, r, d, d);
+    let mut kk = ar.scratch(r * d);
+    k::matmul_into(&mut kk, x, blk.wk, r, d, d);
+    let mut v = ar.scratch(r * d);
+    k::matmul_into(&mut v, x, blk.wv, r, d, d);
+    // every attn element is written below (score or mask) — no zeroing
+    let mut attn = ar.scratch(bsz * heads * t * t);
     for bi in 0..bsz {
         for h in 0..heads {
             for i in 0..t {
@@ -185,11 +233,7 @@ fn attention_fwd(
                     if pad_mask[bi * t + j] > 0.0 {
                         let krow =
                             &kk[(bi * t + j) * d + h * hd..(bi * t + j) * d + (h + 1) * hd];
-                        let mut acc = 0.0f32;
-                        for (&qv, &kv) in qrow.iter().zip(krow) {
-                            acc += qv * kv;
-                        }
-                        *s = acc * scale;
+                        *s = k::dot(qrow, krow) * scale;
                     } else {
                         *s = f32::MIN;
                     }
@@ -198,7 +242,7 @@ fn attention_fwd(
         }
     }
     k::softmax_rows(&mut attn, t);
-    let mut ctx = vec![0.0f32; r * d];
+    let mut ctx = ar.alloc(r * d);
     for bi in 0..bsz {
         for h in 0..heads {
             for i in 0..t {
@@ -218,29 +262,32 @@ fn attention_fwd(
             }
         }
     }
-    let out = k::matmul(&ctx, blk.wo, r, d, d);
+    let mut out = ar.scratch(r * d);
+    k::matmul_into(&mut out, &ctx, blk.wo, r, d, d);
     (q, kk, v, attn, out)
 }
 
 /// Grad of [`attention_fwd`] w.r.t. the block input `x`.
-fn attention_bwd(
+fn attention_bwd<'ar>(
     cfg: &ModelConfig,
     blk: &Block<'_>,
-    cache: &BlockCache,
+    cache: &BlockCache<'_>,
     dout: &[f32],
     bsz: usize,
-) -> Vec<f32> {
+    ar: &'ar Arena,
+) -> Scratch<'ar> {
     let (t, d, heads) = (cfg.seq, cfg.d, cfg.heads);
     let hd = cfg.head_dim();
     let r = bsz * t;
     let scale = 1.0 / (hd as f32).sqrt();
     // out = ctx @ wo
-    let dctx = k::matmul_a_bt(dout, blk.wo, r, d, d);
-    let mut dq = vec![0.0f32; r * d];
-    let mut dk = vec![0.0f32; r * d];
-    let mut dv = vec![0.0f32; r * d];
-    let mut dattn_row = vec![0.0f32; t];
-    let mut dscores_row = vec![0.0f32; t];
+    let mut dctx = ar.scratch(r * d);
+    k::matmul_a_bt_into(&mut dctx, dout, blk.wo, r, d, d);
+    let mut dq = ar.alloc(r * d);
+    let mut dk = ar.alloc(r * d);
+    let mut dv = ar.alloc(r * d);
+    let mut dattn_row = ar.scratch(t); // fully written before each read
+    let mut dscores_row = ar.scratch(t);
     for bi in 0..bsz {
         for h in 0..heads {
             for i in 0..t {
@@ -251,12 +298,7 @@ fn attention_bwd(
                 // dattn[j] = <dctx_i, v_j>; dv_j += attn[j]·dctx_i
                 for j in 0..t {
                     let voff = (bi * t + j) * d + h * hd;
-                    let vrow = &cache.v[voff..voff + hd];
-                    let mut acc = 0.0f32;
-                    for (&dvv, &vv) in drow.iter().zip(vrow) {
-                        acc += dvv * vv;
-                    }
-                    dattn_row[j] = acc;
+                    dattn_row[j] = k::dot(drow, &cache.v[voff..voff + hd]);
                     if arow[j] != 0.0 {
                         let dvrow = &mut dv[voff..voff + hd];
                         for (o, &dvv) in dvrow.iter_mut().zip(drow) {
@@ -288,31 +330,79 @@ fn attention_bwd(
             }
         }
     }
+    drop(dctx);
     // back through the input projections
-    let mut dx = k::matmul_a_bt(&dq, blk.wq, r, d, d);
-    let dxk = k::matmul_a_bt(&dk, blk.wk, r, d, d);
-    let dxv = k::matmul_a_bt(&dv, blk.wv, r, d, d);
-    for ((o, &a), &b) in dx.iter_mut().zip(&dxk).zip(&dxv) {
+    let mut dx = ar.scratch(r * d);
+    k::matmul_a_bt_into(&mut dx, &dq, blk.wq, r, d, d);
+    let mut dxk = ar.scratch(r * d);
+    k::matmul_a_bt_into(&mut dxk, &dk, blk.wk, r, d, d);
+    let mut dxv = ar.scratch(r * d);
+    k::matmul_a_bt_into(&mut dxv, &dv, blk.wv, r, d, d);
+    for ((o, &a), &b) in dx.iter_mut().zip(dxk.iter()).zip(dxv.iter()) {
         *o += a + b;
     }
     dx
 }
 
-/// Encoder forward. Returns CLS rows `[B, d]` and, when `want_cache`, the
-/// per-block activations the backward pass needs.
-fn encode(
+/// One encoder block's adapter application: returns
+/// `(adapter_out, h_pre, h, ln_stats)`. `Masked` drives the fused
+/// gather-GEMM (`kernels::gather_gemm_into`) so eval never materializes
+/// Â/B̂ unless the flop heuristic says assembly is cheaper.
+fn apply_adapter<'ar>(
+    adapter: &Adapter<'_>,
+    ffn_out: &[f32],
+    r: usize,
+    d: usize,
+    bneck: usize,
+    ar: &'ar Arena,
+) -> (Scratch<'ar>, Scratch<'ar>, Scratch<'ar>, Option<k::LnStats>) {
+    if let Adapter::None = adapter {
+        return (ar.alloc_copy(ffn_out), ar.alloc(0), ar.alloc(0), None);
+    }
+    let (ln_s, ln_b) = adapter.ln();
+    let mut h_pre = ar.scratch(r * bneck);
+    match adapter {
+        Adapter::Assembled { a_hat, .. } => k::matmul_into(&mut h_pre, ffn_out, a_hat, r, d, bneck),
+        Adapter::Borrowed { a, .. } => k::matmul_into(&mut h_pre, ffn_out, a, r, d, bneck),
+        Adapter::Masked { wa, bank_a, .. } => {
+            k::gather_gemm_into(&mut h_pre, ffn_out, r, d, bneck, wa, bank_a)
+        }
+        Adapter::None => unreachable!(),
+    }
+    let mut h = ar.scratch(r * bneck);
+    let stats = k::layer_norm_into(&mut h, &h_pre, ln_s, ln_b, bneck);
+    let mut out = ar.scratch(r * d);
+    match adapter {
+        Adapter::Assembled { b_hat, .. } => k::matmul_into(&mut out, &h, b_hat, r, bneck, d),
+        Adapter::Borrowed { b, .. } => k::matmul_into(&mut out, &h, b, r, bneck, d),
+        Adapter::Masked { wb, bank_b, .. } => {
+            k::gather_gemm_into(&mut out, &h, r, bneck, d, wb, bank_b)
+        }
+        Adapter::None => unreachable!(),
+    }
+    for (o, &f) in out.iter_mut().zip(ffn_out) {
+        *o += f;
+    }
+    (out, h_pre, h, Some(stats))
+}
+
+/// Encoder forward over one shard's rows. Returns CLS rows `[B, d]` and,
+/// when `want_cache`, the per-block activations the backward pass needs.
+/// All scratch comes from `ar` and is recycled when the caches drop.
+fn encode<'ar>(
     cfg: &ModelConfig,
     plm: &Plm<'_>,
     adapters: &[Adapter<'_>],
     tokens: &[i32],
     pad_mask: &[f32],
     want_cache: bool,
-) -> Result<(Vec<f32>, Vec<BlockCache>)> {
+    ar: &'ar Arena,
+) -> Result<(Scratch<'ar>, Vec<BlockCache<'ar>>)> {
     let (t, d, bneck) = (cfg.seq, cfg.d, cfg.bottleneck);
     let bsz = tokens.len() / t;
     let r = bsz * t;
     // embeddings + embedding LN
-    let mut x = vec![0.0f32; r * d];
+    let mut emb = ar.scratch(r * d); // every row fully written below
     for (row, &tok) in tokens.iter().enumerate() {
         let tok = tok as usize;
         if tok >= cfg.vocab {
@@ -320,47 +410,47 @@ fn encode(
         }
         let e = &plm.tok_emb[tok * d..(tok + 1) * d];
         let p = &plm.pos_emb[(row % t) * d..(row % t + 1) * d];
-        let xr = &mut x[row * d..(row + 1) * d];
+        let xr = &mut emb[row * d..(row + 1) * d];
         for ((o, &ev), &pv) in xr.iter_mut().zip(e).zip(p) {
             *o = ev + pv;
         }
     }
-    let (mut x, _) = k::layer_norm(&x, plm.emb_ln_s, plm.emb_ln_b, d);
+    let mut x = ar.scratch(r * d);
+    let _ = k::layer_norm_into(&mut x, &emb, plm.emb_ln_s, plm.emb_ln_b, d);
+    drop(emb);
 
     let mut caches = Vec::with_capacity(if want_cache { cfg.layers } else { 0 });
     for (l, blk) in plm.blocks.iter().enumerate() {
         let x_in = x;
-        let (q, kk, v, attn, attn_out) = attention_fwd(cfg, blk, &x_in, pad_mask, bsz);
+        let (q, kk, v, attn, attn_out) = attention_fwd(cfg, blk, &x_in, pad_mask, bsz, ar);
         let mut x1_pre = x_in;
-        for (o, &a) in x1_pre.iter_mut().zip(&attn_out) {
+        for (o, &a) in x1_pre.iter_mut().zip(attn_out.iter()) {
             *o += a;
         }
-        let (x1, ln1) = k::layer_norm(&x1_pre, blk.ln1_s, blk.ln1_b, d);
+        drop(attn_out);
+        let mut x1 = ar.scratch(r * d);
+        let ln1 = k::layer_norm_into(&mut x1, &x1_pre, blk.ln1_s, blk.ln1_b, d);
         // FFN
-        let mut u = k::matmul(&x1, blk.w1, r, d, cfg.ffn);
+        let mut u = ar.scratch(r * cfg.ffn);
+        k::matmul_into(&mut u, &x1, blk.w1, r, d, cfg.ffn);
         k::add_bias(&mut u, blk.b1);
-        let g = k::gelu(&u);
-        let mut ffn_out = k::matmul(&g, blk.w2, r, cfg.ffn, d);
+        let mut g = ar.scratch(r * cfg.ffn);
+        k::gelu_into(&mut g, &u);
+        let mut ffn_out = ar.scratch(r * d);
+        k::matmul_into(&mut ffn_out, &g, blk.w2, r, cfg.ffn, d);
         k::add_bias(&mut ffn_out, blk.b2);
+        drop(g);
         // Pfeiffer placement: adapter transforms the FFN output before the
         // block's residual add + LN.
-        let (adapter_out, h_pre, h, ln_ad) = match adapters[l].parts() {
-            Some((a_hat, b_hat, ln_s, ln_b)) => {
-                let h_pre = k::matmul(&ffn_out, a_hat, r, d, bneck);
-                let (h, stats) = k::layer_norm(&h_pre, ln_s, ln_b, bneck);
-                let mut out = k::matmul(&h, b_hat, r, bneck, d);
-                for (o, &f) in out.iter_mut().zip(&ffn_out) {
-                    *o += f;
-                }
-                (out, h_pre, h, Some(stats))
-            }
-            None => (ffn_out.clone(), Vec::new(), Vec::new(), None),
-        };
+        let (adapter_out, h_pre, h, ln_ad) =
+            apply_adapter(&adapters[l], &ffn_out, r, d, bneck, ar);
         let mut x2_pre = x1;
-        for (o, &a) in x2_pre.iter_mut().zip(&adapter_out) {
+        for (o, &a) in x2_pre.iter_mut().zip(adapter_out.iter()) {
             *o += a;
         }
-        let (x2, ln2) = k::layer_norm(&x2_pre, blk.ln2_s, blk.ln2_b, d);
+        drop(adapter_out);
+        let mut x2 = ar.scratch(r * d);
+        let ln2 = k::layer_norm_into(&mut x2, &x2_pre, blk.ln2_s, blk.ln2_b, d);
         x = x2;
         if want_cache {
             caches.push(BlockCache {
@@ -381,7 +471,7 @@ fn encode(
         }
     }
     // CLS representation: sequence position 0 of each batch row
-    let mut cls = vec![0.0f32; bsz * d];
+    let mut cls = ar.scratch(bsz * d);
     for bi in 0..bsz {
         cls[bi * d..(bi + 1) * d].copy_from_slice(&x[bi * t * d..(bi * t + 1) * d]);
     }
@@ -402,6 +492,7 @@ struct MaskAct {
     y_soft: Vec<f32>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn mask_activation(
     logits: &[f32],
     layers: usize,
@@ -473,20 +564,21 @@ fn mask_activation_bwd(
 }
 
 // ---------------------------------------------------------------------------
-// losses
+// losses (per-shard row ranges; both normalize by the batch-global Σw)
 // ---------------------------------------------------------------------------
 
-/// Masked softmax cross-entropy over the first `num_classes` logits.
-/// Returns `(loss, dlogits)`.
-fn cls_loss(
+/// Masked softmax cross-entropy over the first `num_classes` logits for one
+/// shard's rows. Returns `(loss_partial, dlogits)`, both already divided
+/// by the batch-global `total_w` so shard partials sum to the batch loss.
+fn cls_loss_rows(
     logits: &[f32],
     labels: &[i32],
     num_classes: usize,
     example_w: &[f32],
     out_w: usize,
+    total_w: f32,
 ) -> (f32, Vec<f32>) {
-    let bsz = labels.len();
-    let total_w: f32 = example_w.iter().sum::<f32>().max(1.0);
+    let rows = labels.len();
     let mut p = logits.to_vec();
     for row in p.chunks_exact_mut(out_w) {
         for (j, v) in row.iter_mut().enumerate() {
@@ -498,7 +590,7 @@ fn cls_loss(
     k::softmax_rows(&mut p, out_w);
     let mut loss = 0.0f32;
     let mut dlogits = vec![0.0f32; logits.len()];
-    for r in 0..bsz {
+    for r in 0..rows {
         let w = example_w[r];
         let label = (labels[r].max(0) as usize).min(out_w - 1);
         let prow = &p[r * out_w..(r + 1) * out_w];
@@ -514,9 +606,14 @@ fn cls_loss(
     (loss / total_w, dlogits)
 }
 
-/// Weighted squared error on the first output column.
-fn reg_loss(preds: &[f32], targets: &[f32], example_w: &[f32], out_w: usize) -> (f32, Vec<f32>) {
-    let total_w: f32 = example_w.iter().sum::<f32>().max(1.0);
+/// Weighted squared error on the first output column for one shard's rows.
+fn reg_loss_rows(
+    preds: &[f32],
+    targets: &[f32],
+    example_w: &[f32],
+    out_w: usize,
+    total_w: f32,
+) -> (f32, Vec<f32>) {
     let mut loss = 0.0f32;
     let mut dlogits = vec![0.0f32; preds.len()];
     for (r, (&t, &w)) in targets.iter().zip(example_w).enumerate() {
@@ -603,8 +700,10 @@ fn borrowed_adapters<'a>(
         .collect()
 }
 
-/// Assemble the per-layer adapters for an xpeft forward from `[L,N]` mask
-/// weight rows and the `[L,N,·,·]` bank slabs.
+/// Assemble the per-layer Â/B̂ for an xpeft *train* forward from `[L,N]`
+/// mask weight rows and the `[L,N,·,·]` bank slabs (the backward needs the
+/// materialized matrices). Aggregation fans out across layers on the pool.
+#[allow(clippy::too_many_arguments)]
 fn xpeft_adapters<'a>(
     cfg: &ModelConfig,
     n: usize,
@@ -616,14 +715,330 @@ fn xpeft_adapters<'a>(
     ln_b: &'a [f32],
 ) -> Vec<Adapter<'a>> {
     let slab = cfg.d * cfg.bottleneck;
-    (0..cfg.layers)
-        .map(|l| Adapter::Assembled {
-            a_hat: k::aggregate_bank(&wa[l * n..(l + 1) * n], &bank_a[l * n * slab..(l + 1) * n * slab], slab),
-            b_hat: k::aggregate_bank(&wb[l * n..(l + 1) * n], &bank_b[l * n * slab..(l + 1) * n * slab], slab),
+    let slabs: Vec<(Vec<f32>, Vec<f32>)> = threadpool::map_indexed(cfg.layers, |l| {
+        (
+            k::aggregate_bank(
+                &wa[l * n..(l + 1) * n],
+                &bank_a[l * n * slab..(l + 1) * n * slab],
+                slab,
+            ),
+            k::aggregate_bank(
+                &wb[l * n..(l + 1) * n],
+                &bank_b[l * n * slab..(l + 1) * n * slab],
+                slab,
+            ),
+        )
+    });
+    slabs
+        .into_iter()
+        .enumerate()
+        .map(|(l, (a_hat, b_hat))| Adapter::Assembled {
+            a_hat,
+            b_hat,
             ln_s: &ln_s[l * cfg.bottleneck..(l + 1) * cfg.bottleneck],
             ln_b: &ln_b[l * cfg.bottleneck..(l + 1) * cfg.bottleneck],
         })
         .collect()
+}
+
+/// Eval/serving adapter plan: per layer, either pre-materialize Â/B̂
+/// **once** (shared read-only by every shard — re-aggregating per shard
+/// would multiply assembly work by the shard count) or keep the layer
+/// masked so shards drive the fused gather-GEMM. Same flop heuristic as
+/// `kernels::gather_gemm_into`, evaluated at shard-row scale: fused wins
+/// exactly when a shard has 1 row or the mask selects 1 adapter.
+#[allow(clippy::too_many_arguments)]
+fn eval_adapters<'a>(
+    cfg: &ModelConfig,
+    n: usize,
+    shard_rows: usize,
+    wa: &'a [f32],
+    wb: &'a [f32],
+    bank_a: &'a [f32],
+    bank_b: &'a [f32],
+    ln_s: &'a [f32],
+    ln_b: &'a [f32],
+) -> Vec<Adapter<'a>> {
+    let (bneck, slab) = (cfg.bottleneck, cfg.d * cfg.bottleneck);
+    let nnz = |w: &[f32]| w.iter().filter(|&&v| v != 0.0).count().max(1);
+    // assemble (in parallel over layers) only where materialization wins
+    let assembled: Vec<Option<(Vec<f32>, Vec<f32>)>> =
+        threadpool::map_indexed(cfg.layers, |l| {
+            let wal = &wa[l * n..(l + 1) * n];
+            let wbl = &wb[l * n..(l + 1) * n];
+            if k::gather_fused_wins(nnz(wal), shard_rows)
+                && k::gather_fused_wins(nnz(wbl), shard_rows)
+            {
+                None
+            } else {
+                Some((
+                    k::aggregate_bank(wal, &bank_a[l * n * slab..(l + 1) * n * slab], slab),
+                    k::aggregate_bank(wbl, &bank_b[l * n * slab..(l + 1) * n * slab], slab),
+                ))
+            }
+        });
+    assembled
+        .into_iter()
+        .enumerate()
+        .map(|(l, slabs)| {
+            let ln_s = &ln_s[l * bneck..(l + 1) * bneck];
+            let ln_b = &ln_b[l * bneck..(l + 1) * bneck];
+            match slabs {
+                Some((a_hat, b_hat)) => Adapter::Assembled { a_hat, b_hat, ln_s, ln_b },
+                None => Adapter::Masked {
+                    wa: &wa[l * n..(l + 1) * n],
+                    wb: &wb[l * n..(l + 1) * n],
+                    bank_a: &bank_a[l * n * slab..(l + 1) * n * slab],
+                    bank_b: &bank_b[l * n * slab..(l + 1) * n * slab],
+                    ln_s,
+                    ln_b,
+                },
+            }
+        })
+        .collect()
+}
+
+/// Labels for the active head.
+#[derive(Clone, Copy)]
+enum Labels<'a> {
+    Class(&'a [i32]),
+    Reg(&'a [f32]),
+}
+
+/// Everything a shard task reads — all shared, immutable, `Sync`.
+struct TrainCtx<'a> {
+    cfg: &'a ModelConfig,
+    plm: &'a Plm<'a>,
+    adapters: &'a [Adapter<'a>],
+    tokens: &'a [i32],
+    pad_mask: &'a [f32],
+    labels: Labels<'a>,
+    example_w: &'a [f32],
+    head_w: &'a [f32],
+    head_b: &'a [f32],
+    total_w: f32,
+    num_classes: usize,
+    out_w: usize,
+    mode: &'a str,
+    n: usize,
+    bank_a: Option<&'a [f32]>,
+    bank_b: Option<&'a [f32]>,
+    want_encoder_bwd: bool,
+}
+
+/// One shard's gradient partials (plain `Vec`s — they escape the shard's
+/// arena). Reduced in shard index order for thread-count determinism.
+struct ShardGrads {
+    loss: f32,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+    ln_scale: Vec<f32>,
+    ln_bias: Vec<f32>,
+    wa: Vec<f32>,
+    wb: Vec<f32>,
+    adapter_a: Vec<f32>,
+    adapter_b: Vec<f32>,
+}
+
+impl ShardGrads {
+    fn zeroed(ctx: &TrainCtx<'_>) -> ShardGrads {
+        let cfg = ctx.cfg;
+        let bneck = cfg.bottleneck;
+        let slab = cfg.d * bneck;
+        let enc = ctx.want_encoder_bwd;
+        let xp = ctx.mode == "xpeft";
+        let sa = ctx.mode == "single_adapter";
+        ShardGrads {
+            loss: 0.0,
+            head_w: vec![0.0; cfg.d * ctx.out_w],
+            head_b: vec![0.0; ctx.out_w],
+            ln_scale: vec![0.0; if enc { cfg.layers * bneck } else { 0 }],
+            ln_bias: vec![0.0; if enc { cfg.layers * bneck } else { 0 }],
+            wa: vec![0.0; if xp { cfg.layers * ctx.n } else { 0 }],
+            wb: vec![0.0; if xp { cfg.layers * ctx.n } else { 0 }],
+            adapter_a: vec![0.0; if sa { cfg.layers * slab } else { 0 }],
+            adapter_b: vec![0.0; if sa { cfg.layers * slab } else { 0 }],
+        }
+    }
+
+    fn add(&mut self, other: &ShardGrads) {
+        fn axpy(acc: &mut [f32], src: &[f32]) {
+            for (o, &v) in acc.iter_mut().zip(src) {
+                *o += v;
+            }
+        }
+        axpy(&mut self.head_w, &other.head_w);
+        axpy(&mut self.head_b, &other.head_b);
+        axpy(&mut self.ln_scale, &other.ln_scale);
+        axpy(&mut self.ln_bias, &other.ln_bias);
+        axpy(&mut self.wa, &other.wa);
+        axpy(&mut self.wb, &other.wb);
+        axpy(&mut self.adapter_a, &other.adapter_a);
+        axpy(&mut self.adapter_b, &other.adapter_b);
+    }
+}
+
+/// Forward + loss + backward for one shard of batch rows.
+fn train_shard(ctx: &TrainCtx<'_>, arenas: &ArenaPool, si: usize) -> Result<ShardGrads> {
+    let cfg = ctx.cfg;
+    let (t, d) = (cfg.seq, cfg.d);
+    let bsz = ctx.tokens.len() / t;
+    let lo = si * SHARD_ROWS;
+    let hi = ((si + 1) * SHARD_ROWS).min(bsz);
+    let sb = hi - lo;
+    let rs = sb * t;
+    let ar = arenas.acquire();
+    let out: Result<ShardGrads> = (|| {
+        let (cls, caches) = encode(
+            cfg,
+            ctx.plm,
+            ctx.adapters,
+            &ctx.tokens[lo * t..hi * t],
+            &ctx.pad_mask[lo * t..hi * t],
+            ctx.want_encoder_bwd,
+            &ar,
+        )?;
+        let mut logits = vec![0.0f32; sb * ctx.out_w];
+        k::matmul_into(&mut logits, &cls, ctx.head_w, sb, d, ctx.out_w);
+        k::add_bias(&mut logits, ctx.head_b);
+        let (loss, dlogits) = match ctx.labels {
+            Labels::Class(all) => cls_loss_rows(
+                &logits,
+                &all[lo..hi],
+                ctx.num_classes,
+                &ctx.example_w[lo..hi],
+                ctx.out_w,
+                ctx.total_w,
+            ),
+            Labels::Reg(all) => reg_loss_rows(
+                &logits,
+                &all[lo..hi],
+                &ctx.example_w[lo..hi],
+                ctx.out_w,
+                ctx.total_w,
+            ),
+        };
+        let mut g = ShardGrads::zeroed(ctx);
+        g.loss = loss;
+        k::matmul_at_b_into(&mut g.head_w, &cls, &dlogits, sb, d, ctx.out_w);
+        for row in dlogits.chunks_exact(ctx.out_w) {
+            for (o, &v) in g.head_b.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        if ctx.want_encoder_bwd {
+            let mut dcls = vec![0.0f32; sb * d];
+            k::matmul_a_bt_into(&mut dcls, &dlogits, ctx.head_w, sb, ctx.out_w, d);
+            // seed the encoder-output grad at each sequence's CLS position
+            let mut dx = ar.alloc(rs * d);
+            for bi in 0..sb {
+                dx[bi * t * d..bi * t * d + d].copy_from_slice(&dcls[bi * d..(bi + 1) * d]);
+            }
+            backward_blocks(ctx, &caches, dx, sb, &ar, &mut g)?;
+        }
+        Ok(g)
+    })();
+    arenas.release(ar);
+    out
+}
+
+/// Reverse-mode through the encoder blocks for one shard, accumulating
+/// trainable-parameter partials into `g`.
+fn backward_blocks<'ar>(
+    ctx: &TrainCtx<'_>,
+    caches: &[BlockCache<'ar>],
+    mut dx: Scratch<'ar>,
+    sb: usize,
+    ar: &'ar Arena,
+    g: &mut ShardGrads,
+) -> Result<()> {
+    let cfg = ctx.cfg;
+    let (t, d, bneck, ffn) = (cfg.seq, cfg.d, cfg.bottleneck, cfg.ffn);
+    let rs = sb * t;
+    let slab = d * bneck;
+    let n = ctx.n;
+    for l in (0..cfg.layers).rev() {
+        let c = &caches[l];
+        let blk = &ctx.plm.blocks[l];
+        // block output = LN(x2_pre, ln2)
+        let mut dx2_pre = ar.scratch(rs * d);
+        k::layer_norm_bwd_into(&mut dx2_pre, &dx, &c.x2_pre, blk.ln2_s, &c.ln2, d, false);
+        // adapter backward: out = f + LN(f@Â)@B̂, f = ffn_out
+        let (a_mat, b_mat, ln_s, _) =
+            ctx.adapters[l].parts().expect("cached modes have adapters");
+        let mut dx1 = ar.alloc_copy(&dx2_pre);
+        let mut dh = ar.scratch(rs * bneck);
+        k::matmul_a_bt_into(&mut dh, &dx2_pre, b_mat, rs, d, bneck);
+        let mut db_hat = ar.scratch(bneck * d);
+        k::matmul_at_b_into(&mut db_hat, &c.h, &dx2_pre, rs, bneck, d);
+        let stats = c.ln_ad.as_ref().expect("adapter LN stats cached");
+        let mut dh_pre = ar.scratch(rs * bneck);
+        let affine = k::layer_norm_bwd_into(&mut dh_pre, &dh, &c.h_pre, ln_s, stats, bneck, true);
+        let (dg_ln, db_ln) = affine.expect("affine grads requested");
+        g.ln_scale[l * bneck..(l + 1) * bneck].copy_from_slice(&dg_ln);
+        g.ln_bias[l * bneck..(l + 1) * bneck].copy_from_slice(&db_ln);
+        let mut da_hat = ar.scratch(d * bneck);
+        k::matmul_at_b_into(&mut da_hat, &c.ffn_out, &dh_pre, rs, d, bneck);
+        let mut dffn = dx2_pre;
+        let mut back_a = ar.scratch(rs * d);
+        k::matmul_a_bt_into(&mut back_a, &dh_pre, a_mat, rs, bneck, d);
+        for (o, &v) in dffn.iter_mut().zip(back_a.iter()) {
+            *o += v;
+        }
+        drop(back_a);
+        drop(dh);
+        drop(dh_pre);
+        match ctx.mode {
+            "xpeft" => {
+                let bank_a = ctx.bank_a.expect("xpeft train caches the bank");
+                let bank_b = ctx.bank_b.expect("xpeft train caches the bank");
+                k::aggregate_bank_bwd_into(
+                    &mut g.wa[l * n..(l + 1) * n],
+                    &da_hat,
+                    &bank_a[l * n * slab..(l + 1) * n * slab],
+                );
+                k::aggregate_bank_bwd_into(
+                    &mut g.wb[l * n..(l + 1) * n],
+                    &db_hat,
+                    &bank_b[l * n * slab..(l + 1) * n * slab],
+                );
+            }
+            "single_adapter" => {
+                g.adapter_a[l * slab..(l + 1) * slab].copy_from_slice(&da_hat);
+                g.adapter_b[l * slab..(l + 1) * slab].copy_from_slice(&db_hat);
+            }
+            _ => unreachable!(),
+        }
+        drop(da_hat);
+        drop(db_hat);
+        if l == 0 {
+            // nothing trainable below block 0's adapter — stop here
+            break;
+        }
+        // FFN backward: ffn_out = gelu(x1@w1 + b1)@w2 + b2
+        let mut dgel = ar.scratch(rs * ffn);
+        k::matmul_a_bt_into(&mut dgel, &dffn, blk.w2, rs, d, ffn);
+        let mut du = ar.scratch(rs * ffn);
+        k::gelu_bwd_into(&mut du, &c.u, &dgel);
+        drop(dgel);
+        let mut dffn_x1 = ar.scratch(rs * d);
+        k::matmul_a_bt_into(&mut dffn_x1, &du, blk.w1, rs, ffn, d);
+        drop(du);
+        drop(dffn);
+        for (o, &v) in dx1.iter_mut().zip(dffn_x1.iter()) {
+            *o += v;
+        }
+        drop(dffn_x1);
+        let mut dx1_pre = ar.scratch(rs * d);
+        k::layer_norm_bwd_into(&mut dx1_pre, &dx1, &c.x1_pre, blk.ln1_s, &c.ln1, d, false);
+        drop(dx1);
+        let dattn = attention_bwd(cfg, blk, c, &dx1_pre, sb, ar);
+        dx = dx1_pre;
+        for (o, &v) in dx.iter_mut().zip(dattn.iter()) {
+            *o += v;
+        }
+    }
+    Ok(())
 }
 
 /// Loss + gradients for one train batch — everything before the optimizer.
@@ -633,12 +1048,13 @@ pub(crate) fn loss_and_grads(
     cfg: &ModelConfig,
     spec: &ArtifactSpec,
     tensors: &[&Tensor],
+    arenas: &ArenaPool,
 ) -> Result<(f32, HashMap<String, Vec<f32>>)> {
     let inp = Inputs::new(spec, tensors);
     let mode = spec.mode.as_str();
     let head = spec.head.as_str();
     let n = spec.n;
-    let (t, d, bneck, ffn) = (cfg.seq, cfg.d, cfg.bottleneck, cfg.ffn);
+    let t = cfg.seq;
     let out_w = out_width(cfg, head);
 
     // scalars
@@ -655,8 +1071,7 @@ pub(crate) fn loss_and_grads(
     let tokens = inp.i32("tokens")?;
     let pad_mask = inp.f32("pad_mask")?;
     let example_w = inp.f32("example_w")?;
-    let bsz = cfg.batch;
-    let r = bsz * t;
+    let bsz = tokens.len() / t;
 
     let plm = plm_view(&inp, cfg.layers)?;
     let head_w = inp.f32("head_w")?;
@@ -709,112 +1124,58 @@ pub(crate) fn loss_and_grads(
         other => bail!("unknown artifact mode '{other}'"),
     };
 
-    let want_cache = mode != "head_only";
-    let (cls, caches) = encode(cfg, &plm, &adapters, tokens, pad_mask, want_cache)?;
-    let mut logits = k::matmul(&cls, head_w, bsz, d, out_w);
-    k::add_bias(&mut logits, head_b);
-
-    let (loss, dlogits) = if head == "cls" {
-        cls_loss(&logits, inp.i32("labels")?, num_classes.max(1), example_w, out_w)
+    let labels = if head == "cls" {
+        Labels::Class(inp.i32("labels")?)
     } else {
-        reg_loss(&logits, inp.f32("labels")?, example_w, out_w)
+        Labels::Reg(inp.f32("labels")?)
+    };
+    let (bank_a, bank_b) = if mode == "xpeft" {
+        (Some(inp.f32("bank_a")?), Some(inp.f32("bank_b")?))
+    } else {
+        (None, None)
+    };
+    let ctx = TrainCtx {
+        cfg,
+        plm: &plm,
+        adapters: &adapters,
+        tokens,
+        pad_mask,
+        labels,
+        example_w,
+        head_w,
+        head_b,
+        total_w: example_w.iter().sum::<f32>().max(1.0),
+        num_classes: num_classes.max(1),
+        out_w,
+        mode,
+        n,
+        bank_a,
+        bank_b,
+        want_encoder_bwd: mode != "head_only",
     };
 
-    // ---- backward ----
-    let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
-    grads.insert("head_w".into(), k::matmul_at_b(&cls, &dlogits, bsz, d, out_w));
-    let mut dhead_b = vec![0.0f32; out_w];
-    for row in dlogits.chunks_exact(out_w) {
-        for (o, &g) in dhead_b.iter_mut().zip(row) {
-            *o += g;
-        }
+    // ---- sharded forward + backward over the worker pool ----
+    let shards = bsz.div_ceil(SHARD_ROWS);
+    let results = threadpool::map_indexed(shards, |si| train_shard(&ctx, arenas, si));
+
+    let mut total = ShardGrads::zeroed(&ctx);
+    let mut loss = 0.0f32;
+    for res in results {
+        let g = res?;
+        loss += g.loss;
+        total.add(&g);
     }
-    grads.insert("head_b".into(), dhead_b);
 
-    if mode != "head_only" {
-        let dcls = k::matmul_a_bt(&dlogits, head_w, bsz, out_w, d);
-        // seed the encoder-output grad at each sequence's CLS position
-        let mut dx = vec![0.0f32; r * d];
-        for bi in 0..bsz {
-            dx[bi * t * d..bi * t * d + d].copy_from_slice(&dcls[bi * d..(bi + 1) * d]);
-        }
-        // trainable-grad accumulators
-        let mut d_ln_scale = vec![0.0f32; cfg.layers * bneck];
-        let mut d_ln_bias = vec![0.0f32; cfg.layers * bneck];
-        let slab = d * bneck;
-        let mut d_wa = vec![0.0f32; cfg.layers * n]; // xpeft
-        let mut d_wb = vec![0.0f32; cfg.layers * n];
-        let mut d_adapter_a = vec![0.0f32; if mode == "single_adapter" { cfg.layers * slab } else { 0 }];
-        let mut d_adapter_b = vec![0.0f32; d_adapter_a.len()];
-
-        for l in (0..cfg.layers).rev() {
-            let c = &caches[l];
-            let blk = &plm.blocks[l];
-            // block output = LN(x2_pre, ln2)
-            let (dx2_pre, _) = k::layer_norm_bwd(&dx, &c.x2_pre, blk.ln2_s, &c.ln2, d, false);
-            let mut dx1 = dx2_pre.clone();
-            // adapter backward: out = f + LN(f@Â)@B̂, f = ffn_out
-            let (a_mat, b_mat, ln_s, _) = adapters[l].parts().expect("cached modes have adapters");
-            let mut dffn = dx2_pre.clone();
-            let dh = k::matmul_a_bt(&dx2_pre, b_mat, r, d, bneck);
-            let db_hat = k::matmul_at_b(&c.h, &dx2_pre, r, bneck, d);
-            let stats = c.ln_ad.as_ref().expect("adapter LN stats cached");
-            let (dh_pre, affine) = k::layer_norm_bwd(&dh, &c.h_pre, ln_s, stats, bneck, true);
-            let (dg_ln, db_ln) = affine.expect("affine grads requested");
-            d_ln_scale[l * bneck..(l + 1) * bneck].copy_from_slice(&dg_ln);
-            d_ln_bias[l * bneck..(l + 1) * bneck].copy_from_slice(&db_ln);
-            let da_hat = k::matmul_at_b(&c.ffn_out, &dh_pre, r, d, bneck);
-            let back_a = k::matmul_a_bt(&dh_pre, a_mat, r, bneck, d);
-            for (o, &v) in dffn.iter_mut().zip(&back_a) {
-                *o += v;
-            }
-            match mode {
-                "xpeft" => {
-                    let bank_a = inp.f32("bank_a")?;
-                    let bank_b = inp.f32("bank_b")?;
-                    let dwa = k::aggregate_bank_bwd(
-                        &da_hat,
-                        &bank_a[l * n * slab..(l + 1) * n * slab],
-                        n,
-                    );
-                    let dwb = k::aggregate_bank_bwd(
-                        &db_hat,
-                        &bank_b[l * n * slab..(l + 1) * n * slab],
-                        n,
-                    );
-                    d_wa[l * n..(l + 1) * n].copy_from_slice(&dwa);
-                    d_wb[l * n..(l + 1) * n].copy_from_slice(&dwb);
-                }
-                "single_adapter" => {
-                    d_adapter_a[l * slab..(l + 1) * slab].copy_from_slice(&da_hat);
-                    d_adapter_b[l * slab..(l + 1) * slab].copy_from_slice(&db_hat);
-                }
-                _ => unreachable!(),
-            }
-            if l == 0 {
-                // nothing trainable below block 0's adapter — stop here
-                break;
-            }
-            // FFN backward: ffn_out = gelu(x1@w1 + b1)@w2 + b2
-            let dg = k::matmul_a_bt(&dffn, blk.w2, r, d, ffn);
-            let du = k::gelu_bwd(&c.u, &dg);
-            let dffn_x1 = k::matmul_a_bt(&du, blk.w1, r, ffn, d);
-            for (o, &v) in dx1.iter_mut().zip(&dffn_x1) {
-                *o += v;
-            }
-            let (dx1_pre, _) = k::layer_norm_bwd(&dx1, &c.x1_pre, blk.ln1_s, &c.ln1, d, false);
-            let dattn = attention_bwd(cfg, blk, c, &dx1_pre, bsz);
-            dx = dx1_pre;
-            for (o, &v) in dx.iter_mut().zip(&dattn) {
-                *o += v;
-            }
-        }
-
-        grads.insert("ln_scale".into(), d_ln_scale);
-        grads.insert("ln_bias".into(), d_ln_bias);
+    let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
+    grads.insert("head_w".into(), total.head_w);
+    grads.insert("head_b".into(), total.head_b);
+    if ctx.want_encoder_bwd {
+        grads.insert("ln_scale".into(), total.ln_scale);
+        grads.insert("ln_bias".into(), total.ln_bias);
         match mode {
             "xpeft" => {
                 // single-mask ablation scales M_A's pathway
+                let mut d_wa = total.wa;
                 for v in d_wa.iter_mut() {
                     *v *= 1.0 - single_mask_flag;
                 }
@@ -826,12 +1187,12 @@ pub(crate) fn loss_and_grads(
                 );
                 grads.insert(
                     "mask_b_logits".into(),
-                    mask_activation_bwd(act_b, &d_wb, cfg.layers, n, hard_flag, tau),
+                    mask_activation_bwd(act_b, &total.wb, cfg.layers, n, hard_flag, tau),
                 );
             }
             "single_adapter" => {
-                grads.insert("adapter_a".into(), d_adapter_a);
-                grads.insert("adapter_b".into(), d_adapter_b);
+                grads.insert("adapter_a".into(), total.adapter_a);
+                grads.insert("adapter_b".into(), total.adapter_b);
             }
             _ => unreachable!(),
         }
@@ -846,8 +1207,9 @@ pub(crate) fn run_train(
     cfg: &ModelConfig,
     spec: &ArtifactSpec,
     tensors: &[&Tensor],
+    arenas: &ArenaPool,
 ) -> Result<Vec<Tensor>> {
-    let (loss, grads) = loss_and_grads(cfg, spec, tensors)?;
+    let (loss, grads) = loss_and_grads(cfg, spec, tensors, arenas)?;
     let inp = Inputs::new(spec, tensors);
     let step = inp.scalar_i32("step")?;
     let total_steps = inp.scalar_i32("total_steps")?;
@@ -879,20 +1241,28 @@ pub(crate) fn run_train(
 
 /// Eval/serving forward: trainables carry already-normalized
 /// `mask_{a,b}_w` rows for xpeft, so one body serves soft and hard masks.
+/// Shards of batch rows fan out over the worker pool; the xpeft adapter
+/// plan ([`eval_adapters`]) pre-materializes Â/B̂ once per call unless the
+/// flop heuristic says the shards' fused gather-GEMM is cheaper.
 pub(crate) fn run_eval(
     cfg: &ModelConfig,
     spec: &ArtifactSpec,
     tensors: &[&Tensor],
+    arenas: &ArenaPool,
 ) -> Result<Vec<Tensor>> {
     let inp = Inputs::new(spec, tensors);
     let mode = spec.mode.as_str();
     let out_w = out_width(cfg, spec.head.as_str());
-    let d = cfg.d;
+    let (t, d) = (cfg.seq, cfg.d);
     let plm = plm_view(&inp, cfg.layers)?;
+    let tokens = inp.i32("tokens")?;
+    let bsz = tokens.len() / t;
+    let shard_rows = SHARD_ROWS.min(bsz.max(1)) * t;
     let adapters: Vec<Adapter<'_>> = match mode {
-        "xpeft" => xpeft_adapters(
+        "xpeft" => eval_adapters(
             cfg,
             spec.n,
+            shard_rows,
             inp.f32("mask_a_w")?,
             inp.f32("mask_b_w")?,
             inp.f32("bank_a")?,
@@ -910,12 +1280,41 @@ pub(crate) fn run_eval(
         "head_only" => (0..cfg.layers).map(|_| Adapter::None).collect(),
         other => bail!("unknown artifact mode '{other}'"),
     };
-    let tokens = inp.i32("tokens")?;
     let pad_mask = inp.f32("pad_mask")?;
-    let (cls, _) = encode(cfg, &plm, &adapters, tokens, pad_mask, false)?;
-    let bsz = tokens.len() / cfg.seq;
-    let mut logits = k::matmul(&cls, inp.f32("head_w")?, bsz, d, out_w);
-    k::add_bias(&mut logits, inp.f32("head_b")?);
+    let head_w = inp.f32("head_w")?;
+    let head_b = inp.f32("head_b")?;
+    let shards = bsz.div_ceil(SHARD_ROWS);
+    let plm_ref = &plm;
+    let adapters_ref = &adapters[..];
+    let results = threadpool::map_indexed(shards, |si| -> Result<Vec<f32>> {
+        let lo = si * SHARD_ROWS;
+        let hi = ((si + 1) * SHARD_ROWS).min(bsz);
+        let sb = hi - lo;
+        let ar = arenas.acquire();
+        let shard: Result<Vec<f32>> = (|| {
+            let (cls, _) = encode(
+                cfg,
+                plm_ref,
+                adapters_ref,
+                &tokens[lo * t..hi * t],
+                &pad_mask[lo * t..hi * t],
+                false,
+                &ar,
+            )?;
+            let mut logits = vec![0.0f32; sb * out_w];
+            k::matmul_into(&mut logits, &cls, head_w, sb, d, out_w);
+            k::add_bias(&mut logits, head_b);
+            Ok(logits)
+        })();
+        arenas.release(ar);
+        shard
+    });
+    let mut logits = vec![0.0f32; bsz * out_w];
+    for (si, res) in results.into_iter().enumerate() {
+        let part = res?;
+        let off = si * SHARD_ROWS * out_w;
+        logits[off..off + part.len()].copy_from_slice(&part);
+    }
     Ok(vec![Tensor::F32(logits)])
 }
 
@@ -993,7 +1392,7 @@ mod tests {
 
     fn loss_of(cfg: &ModelConfig, spec: &ArtifactSpec, tensors: &[Tensor]) -> f32 {
         let refs: Vec<&Tensor> = tensors.iter().collect();
-        loss_and_grads(cfg, spec, &refs).unwrap().0
+        loss_and_grads(cfg, spec, &refs, &ArenaPool::new()).unwrap().0
     }
 
     /// Central-difference check of `loss_and_grads` for a handful of
@@ -1005,7 +1404,7 @@ mod tests {
         let spec = m.find(&name).unwrap().clone();
         let tensors = build_inputs(&cfg, &spec, 42);
         let refs: Vec<&Tensor> = tensors.iter().collect();
-        let (_, grads) = loss_and_grads(&cfg, &spec, &refs).unwrap();
+        let (_, grads) = loss_and_grads(&cfg, &spec, &refs, &ArenaPool::new()).unwrap();
 
         let mut pick = Rng::new(5);
         for (ti, ts) in spec.inputs.iter().enumerate() {
@@ -1064,13 +1463,35 @@ mod tests {
         let spec = m.find("xpeft_train_cls_n100").unwrap().clone();
         let tensors = build_inputs(&cfg, &spec, 11);
         let refs: Vec<&Tensor> = tensors.iter().collect();
-        let a = run_train(&cfg, &spec, &refs).unwrap();
-        let b = run_train(&cfg, &spec, &refs).unwrap();
+        let arenas = ArenaPool::new();
+        let a = run_train(&cfg, &spec, &refs, &arenas).unwrap();
+        let b = run_train(&cfg, &spec, &refs, &arenas).unwrap();
         assert_eq!(a, b);
         // output arity: 3 blocks of trainables + loss
         let t = spec.inputs_in(Group::Trainable).count();
         assert_eq!(a.len(), 3 * t + 1);
         assert!(a.last().unwrap().f32s().unwrap()[0].is_finite());
+    }
+
+    /// The satellite determinism test: train-step outputs must be bitwise
+    /// identical for any pool parallelism, because shard boundaries are
+    /// fixed (`SHARD_ROWS`) and partials reduce in shard order. Uses
+    /// batch=8 (= 2 shards) so the parallel reduction actually runs.
+    #[test]
+    fn losses_identical_across_thread_counts() {
+        let mut cfg = tiny_cfg();
+        cfg.batch = 8;
+        let m = Manifest::synthesize(cfg.clone(), Path::new("unused"));
+        let spec = m.find("xpeft_train_cls_n100").unwrap().clone();
+        let tensors = build_inputs(&cfg, &spec, 17);
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let arenas = ArenaPool::new();
+        let max = threadpool::max_parallelism();
+        threadpool::set_parallelism(1);
+        let serial = run_train(&cfg, &spec, &refs, &arenas).unwrap();
+        threadpool::set_parallelism(max);
+        let parallel = run_train(&cfg, &spec, &refs, &arenas).unwrap();
+        assert_eq!(serial, parallel);
     }
 
     #[test]
@@ -1084,12 +1505,13 @@ mod tests {
         let lr_idx = spec.input_index("base_lr").unwrap();
         tensors[lr_idx] = Tensor::scalar_f32(0.05);
         let t = spec.inputs_in(Group::Trainable).count();
+        let arenas = ArenaPool::new();
         let mut first = None;
         let mut last = 0.0;
         for s in 0..12 {
             tensors[step_idx] = Tensor::scalar_i32(s);
             let refs: Vec<&Tensor> = tensors.iter().collect();
-            let out = run_train(&cfg, &spec, &refs).unwrap();
+            let out = run_train(&cfg, &spec, &refs, &arenas).unwrap();
             last = out.last().unwrap().f32s().unwrap()[0];
             if first.is_none() {
                 first = Some(last);
@@ -1132,10 +1554,110 @@ mod tests {
             })
             .collect();
         let refs: Vec<&Tensor> = tensors.iter().collect();
-        let out = run_eval(&cfg, &spec, &refs).unwrap();
+        let out = run_eval(&cfg, &spec, &refs, &ArenaPool::new()).unwrap();
         assert_eq!(out.len(), 1);
         let logits = out[0].f32s().unwrap();
         assert_eq!(logits.len(), cfg.batch * cfg.c_max);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// The fused gather-GEMM eval path (`Adapter::Masked`) must agree with
+    /// a forward over pre-materialized Â/B̂ at the full-model level, not
+    /// just per-kernel — and `run_eval` (whose per-layer plan is chosen by
+    /// the flop heuristic) must agree with both.
+    #[test]
+    fn eval_fused_gather_matches_materialized_forward() {
+        let cfg = tiny_cfg();
+        let m = Manifest::synthesize(cfg.clone(), Path::new("unused"));
+        let spec = m.find("xpeft_eval_cls_n100").unwrap().clone();
+        let tensors = build_inputs(&cfg, &spec, 23);
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let fused = run_eval(&cfg, &spec, &refs, &ArenaPool::new()).unwrap();
+        let fused = fused[0].f32s().unwrap();
+
+        // materialized oracle: aggregate Â/B̂ per layer, encode with
+        // Assembled adapters, same head
+        let inp = Inputs::new(&spec, &refs);
+        let plm = plm_view(&inp, cfg.layers).unwrap();
+        let n = spec.n;
+        let slab = cfg.d * cfg.bottleneck;
+        let wa = inp.f32("mask_a_w").unwrap();
+        let wb = inp.f32("mask_b_w").unwrap();
+        let bank_a = inp.f32("bank_a").unwrap();
+        let bank_b = inp.f32("bank_b").unwrap();
+        let ln_s = inp.f32("ln_scale").unwrap();
+        let ln_b = inp.f32("ln_bias").unwrap();
+        let adapters: Vec<Adapter<'_>> = (0..cfg.layers)
+            .map(|l| Adapter::Assembled {
+                a_hat: k::aggregate_bank(
+                    &wa[l * n..(l + 1) * n],
+                    &bank_a[l * n * slab..(l + 1) * n * slab],
+                    slab,
+                ),
+                b_hat: k::aggregate_bank(
+                    &wb[l * n..(l + 1) * n],
+                    &bank_b[l * n * slab..(l + 1) * n * slab],
+                    slab,
+                ),
+                ln_s: &ln_s[l * cfg.bottleneck..(l + 1) * cfg.bottleneck],
+                ln_b: &ln_b[l * cfg.bottleneck..(l + 1) * cfg.bottleneck],
+            })
+            .collect();
+        let ar = Arena::new();
+        let (cls, _) = encode(
+            &cfg,
+            &plm,
+            &adapters,
+            inp.i32("tokens").unwrap(),
+            inp.f32("pad_mask").unwrap(),
+            false,
+            &ar,
+        )
+        .unwrap();
+        let bsz = cfg.batch;
+        let out_w = cfg.c_max;
+        let mut want = vec![0.0f32; bsz * out_w];
+        k::matmul_into(&mut want, &cls, inp.f32("head_w").unwrap(), bsz, cfg.d, out_w);
+        k::add_bias(&mut want, inp.f32("head_b").unwrap());
+        for (i, (g, w)) in fused.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                "logit [{i}]: run_eval {g} vs materialized {w}"
+            );
+        }
+
+        // the explicitly-masked (fused gather) forward, regardless of what
+        // plan run_eval's heuristic picked
+        let bneck = cfg.bottleneck;
+        let masked: Vec<Adapter<'_>> = (0..cfg.layers)
+            .map(|l| Adapter::Masked {
+                wa: &wa[l * n..(l + 1) * n],
+                wb: &wb[l * n..(l + 1) * n],
+                bank_a: &bank_a[l * n * slab..(l + 1) * n * slab],
+                bank_b: &bank_b[l * n * slab..(l + 1) * n * slab],
+                ln_s: &ln_s[l * bneck..(l + 1) * bneck],
+                ln_b: &ln_b[l * bneck..(l + 1) * bneck],
+            })
+            .collect();
+        let ar2 = Arena::new();
+        let (cls_m, _) = encode(
+            &cfg,
+            &plm,
+            &masked,
+            inp.i32("tokens").unwrap(),
+            inp.f32("pad_mask").unwrap(),
+            false,
+            &ar2,
+        )
+        .unwrap();
+        let mut got_m = vec![0.0f32; bsz * out_w];
+        k::matmul_into(&mut got_m, &cls_m, inp.f32("head_w").unwrap(), bsz, cfg.d, out_w);
+        k::add_bias(&mut got_m, inp.f32("head_b").unwrap());
+        for (i, (g, w)) in got_m.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                "logit [{i}]: masked-fused {g} vs materialized {w}"
+            );
+        }
     }
 }

@@ -1,11 +1,12 @@
 //! Cross-cutting substrates built from scratch for the offline environment:
-//! PRNG, JSON, CLI parsing, logging and statistics.
+//! PRNG, JSON, CLI parsing, logging, statistics and the worker thread pool.
 
 pub mod cli;
 pub mod json;
 pub mod log;
 pub mod rng;
 pub mod stats;
+pub mod threadpool;
 
 use std::time::Instant;
 

@@ -1,0 +1,383 @@
+//! A small persistent worker pool (std-only — rayon/crossbeam are
+//! unavailable offline) used to parallelize the native backend's train/eval
+//! hot paths and the serving executor.
+//!
+//! Design notes:
+//!
+//! * **Persistent workers.** Threads are spawned once (first use) and live
+//!   for the process lifetime, so per-thread state — notably the GEMM pack
+//!   buffers in `runtime::native::kernels` — stays warm across steps and
+//!   the steady-state hot loop performs no thread spawns or allocations.
+//! * **Caller participates.** `run(tasks, f)` executes `f(0..tasks)` with
+//!   the calling thread claiming work alongside the workers, so progress
+//!   never depends on a free worker and a 1-thread pool degrades to a
+//!   plain loop.
+//! * **Determinism is the caller's job, and it's easy:** tasks are claimed
+//!   dynamically, but each task `i` is a pure function writing only its own
+//!   slot, and callers reduce slots in index order. Results are therefore
+//!   bitwise independent of the thread count (the property the native
+//!   backend's determinism tests pin down).
+//! * **No nesting.** A `run` issued from inside a pool task executes
+//!   serially inline — nested fan-out could deadlock a fixed-size pool and
+//!   never helps at this scale.
+//!
+//! The pool size comes from `XPEFT_THREADS` (or the machine's available
+//! parallelism) and can be lowered/restored at runtime with
+//! [`set_parallelism`] — e.g. the hotpath bench measures threads=1 vs max.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True while this thread is executing tasks of an active region
+    /// (worker or participating caller): nested `run`s go serial.
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Fixed-size pool of persistent worker threads plus a runtime-adjustable
+/// parallelism limit.
+pub struct ThreadPool {
+    tx: Mutex<Sender<Job>>,
+    /// Worker threads actually spawned (callers add one more lane).
+    spawned: usize,
+    /// Active limit: `run` uses at most this many lanes (caller included).
+    limit: AtomicUsize,
+}
+
+/// Count-down latch: `wait` returns once `count_down` ran `n` times.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+/// One parallel region, type-erased so it can cross the pool's 'static job
+/// channel. All pointers target `run_dyn`'s stack frame, which provably
+/// outlives every access: the caller blocks on the latch, and each worker's
+/// final touch of the region is its latch count-down.
+#[derive(Clone, Copy)]
+struct Region {
+    f: *const (dyn Fn(usize) + Sync),
+    next: *const AtomicUsize,
+    total: usize,
+    latch: *const Latch,
+    panicked: *const AtomicBool,
+}
+
+// SAFETY: the raw pointers are only dereferenced while the issuing
+// `run_dyn` call blocks on the latch (see `Region` docs).
+unsafe impl Send for Region {}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // pool dropped
+        };
+        // A panicking task must not kill the (fixed-size) pool.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the participating caller.
+///
+/// SAFETY: caller must guarantee the region's pointers are live (the pool
+/// guarantees this via the latch protocol).
+unsafe fn drive(region: Region) {
+    struct Guard<'a>(&'a Latch);
+    impl Drop for Guard<'_> {
+        fn drop(&mut self) {
+            self.0.count_down();
+        }
+    }
+    let latch = &*region.latch;
+    let _guard = Guard(latch); // counts down even if a task panics
+    let f = &*region.f;
+    let next = &*region.next;
+    let panicked = &*region.panicked;
+    let was_in = IN_REGION.with(|c| c.replace(true));
+    let result = catch_unwind(AssertUnwindSafe(|| loop {
+        if panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= region.total {
+            break;
+        }
+        f(i);
+    }));
+    IN_REGION.with(|c| c.set(was_in));
+    if result.is_err() {
+        panicked.store(true, Ordering::Relaxed);
+    }
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes: `threads - 1` worker threads are
+    /// spawned; the calling thread is the last lane.
+    pub fn with_threads(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for w in 0..threads - 1 {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("xpeft-pool-{w}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+        }
+        ThreadPool {
+            tx: Mutex::new(tx),
+            spawned: threads - 1,
+            limit: AtomicUsize::new(threads),
+        }
+    }
+
+    /// The process-wide pool, sized by `XPEFT_THREADS` (falls back to the
+    /// machine's available parallelism). Spawned lazily on first use.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| ThreadPool::with_threads(default_threads()))
+    }
+
+    /// Current lane limit (caller + workers `run` may use). Always ≥ 1.
+    pub fn parallelism(&self) -> usize {
+        self.limit.load(Ordering::Relaxed)
+    }
+
+    /// Hard upper bound: lanes that physically exist.
+    pub fn max_parallelism(&self) -> usize {
+        self.spawned + 1
+    }
+
+    /// Adjust the lane limit at runtime, clamped to `1..=max_parallelism`.
+    /// Results of pool-parallelized numerics do not depend on this value.
+    pub fn set_parallelism(&self, n: usize) {
+        self.limit.store(n.clamp(1, self.spawned + 1), Ordering::Relaxed);
+    }
+
+    /// Run `f(i)` for every `i in 0..tasks`, fanned out over the pool.
+    /// Blocks until all tasks finished. Panics (after the region fully
+    /// drains) if any task panicked.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        self.run_dyn(tasks, &f);
+    }
+
+    // The transmute is NOT expressible as a cast: it erases the trait
+    // object's lifetime (clippy compares the region-erased types).
+    #[allow(clippy::useless_transmute, clippy::transmutes_expressible_as_ptr_casts)]
+    fn run_dyn(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        let serial = tasks == 1
+            || self.parallelism() <= 1
+            || IN_REGION.with(|c| c.get());
+        if serial {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let helpers = (self.parallelism() - 1).min(tasks - 1).min(self.spawned);
+        if helpers == 0 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let latch = Latch::new(helpers);
+        // SAFETY (lifetime erasure): `region` pointers reference this stack
+        // frame; `latch.wait()` below keeps the frame alive until every
+        // worker finished with them.
+        let region = Region {
+            f: unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    *const (dyn Fn(usize) + Sync),
+                >(f)
+            },
+            next: &next,
+            total: tasks,
+            latch: &latch,
+            panicked: &panicked,
+        };
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in 0..helpers {
+                let r = region;
+                // SAFETY: latch protocol, see `Region`.
+                let _ = tx.send(Box::new(move || unsafe { drive(r) }));
+            }
+        }
+        // The caller claims tasks too; its claim loop mirrors `drive` but
+        // without the latch guard (it is the thread the latch releases).
+        let was_in = IN_REGION.with(|c| c.replace(true));
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            if panicked.load(Ordering::Relaxed) {
+                break;
+            }
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            f(i);
+        }));
+        IN_REGION.with(|c| c.set(was_in));
+        if caller.is_err() {
+            panicked.store(true, Ordering::Relaxed);
+        }
+        latch.wait();
+        if let Err(e) = caller {
+            resume_unwind(e);
+        }
+        if panicked.load(Ordering::Relaxed) {
+            panic!("a ThreadPool task panicked");
+        }
+    }
+
+    /// Fan `f` out over the pool and collect its results in task order.
+    pub fn map_indexed<T, F>(&self, tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..tasks).map(|_| Mutex::new(None)).collect();
+        self.run(tasks, |i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("task slot filled"))
+            .collect()
+    }
+}
+
+fn default_threads() -> usize {
+    match std::env::var("XPEFT_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+// --- global-pool conveniences (what the hot paths call) -------------------
+
+/// `ThreadPool::global().run(..)`.
+pub fn run<F: Fn(usize) + Sync>(tasks: usize, f: F) {
+    ThreadPool::global().run(tasks, f);
+}
+
+/// `ThreadPool::global().map_indexed(..)`.
+pub fn map_indexed<T: Send, F: Fn(usize) -> T + Sync>(tasks: usize, f: F) -> Vec<T> {
+    ThreadPool::global().map_indexed(tasks, f)
+}
+
+/// Current global lane limit.
+pub fn parallelism() -> usize {
+    ThreadPool::global().parallelism()
+}
+
+/// Physical lane count of the global pool.
+pub fn max_parallelism() -> usize {
+    ThreadPool::global().max_parallelism()
+}
+
+/// Set the global lane limit (the `XPEFT_THREADS`/`--threads` knob).
+pub fn set_parallelism(n: usize) {
+    ThreadPool::global().set_parallelism(n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let out = map_indexed(64, |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_runs_execute_serially_and_complete() {
+        let total = AtomicU64::new(0);
+        run(8, |_| {
+            // nested region: must not deadlock, must still run everything
+            run(8, |j| {
+                total.fetch_add(j as u64 + 1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * (1..=8).sum::<u64>());
+    }
+
+    #[test]
+    fn parallelism_limit_round_trips() {
+        // a private pool: the global one is shared with concurrently
+        // running tests that adjust its limit
+        let pool = ThreadPool::with_threads(3);
+        assert_eq!(pool.max_parallelism(), 3);
+        pool.set_parallelism(1);
+        assert_eq!(pool.parallelism(), 1);
+        // limited pool still runs all tasks
+        let out = pool.map_indexed(10, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        pool.set_parallelism(5);
+        assert_eq!(pool.parallelism(), 3, "limit clamps to physical lanes");
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = ThreadPool::with_threads(2);
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, |i| {
+                if i == 2 {
+                    panic!("task boom");
+                }
+            });
+        }));
+        assert!(boom.is_err());
+        // the pool still works afterwards
+        let sum = AtomicUsize::new(0);
+        pool.run(5, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+}

@@ -154,7 +154,8 @@ fn service_end_to_end_smoke() {
     });
     let store = Arc::new(Mutex::new(store));
 
-    let cfg = ServeConfig { max_batch: 4, batch_deadline_us: 500, workers: 1, mask_cache: 16 };
+    let cfg =
+        ServeConfig { max_batch: 4, batch_deadline_us: 500, workers: 1, mask_cache: 16, threads: 0 };
     let svc = Service::start(engine, store, bank, cfg, 15, 42).unwrap();
 
     let total = 24;
