@@ -1,16 +1,18 @@
 //! END-TO-END DRIVER: the full multi-profile system on a real small
 //! workload, proving all layers compose — gather-GEMM kernels inside the
 //! encoder ← backend-generic runtime ← rust coordinator (scheduler →
-//! profile store → router/batcher → executor).
+//! sharded profile store → router/batcher → executor).
 //!
 //!   cargo run --release --example multi_profile_serving
 //!
 //! Pipeline: generate a LaMP-like multi-profile corpus → tune byte-level
-//! mask profiles for every author through the training scheduler → serve a
-//! batched request stream and report latency/throughput/online accuracy.
+//! mask profiles for every author through the training scheduler (jobs fan
+//! out over the worker pool, each commit appending one record to the
+//! lock-striped store) → serve a batched request stream and report
+//! latency/throughput/online accuracy plus store shard/cache telemetry.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -31,7 +33,7 @@ fn main() -> Result<()> {
     let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
     let mc = engine.manifest.config.clone();
     let bank = Arc::new(AdapterBank::random(mc.layers, BANK_N, mc.d, mc.bottleneck, 42));
-    let store = Arc::new(Mutex::new(ProfileStore::new(1024)));
+    let store = Arc::new(ProfileStore::new(1024));
 
     // --- phase 1: new profiles arrive and get mask-tuned by the scheduler
     let corpus = lamp::generate(PROFILES, mc.seq, mc.vocab, 42, 20, 120);
@@ -65,10 +67,11 @@ fn main() -> Result<()> {
     }
     scheduler.wait_all();
     println!(
-        "tuned {} profiles in {:.1}s — profile store holds {:.0} B/profile of masks",
+        "tuned {} profiles in {:.1}s — store holds {:.0} B/profile of masks across {} shards",
         PROFILES,
         t0.elapsed().as_secs_f64(),
-        store.lock().unwrap().mean_profile_bytes(),
+        store.mean_profile_bytes(),
+        store.shard_count(),
     );
 
     // --- phase 2: serve a live request stream (text in, category out)
@@ -76,7 +79,12 @@ fn main() -> Result<()> {
         engine,
         store,
         bank,
-        ServeConfig { max_batch: 16, batch_deadline_us: 1500, workers: 1, mask_cache: 64, threads: 0 },
+        ServeConfig {
+            max_batch: 16,
+            batch_deadline_us: 1500,
+            mask_cache: 64,
+            ..ServeConfig::default()
+        },
         lamp::CATEGORIES,
         42,
     )?;
@@ -117,5 +125,15 @@ fn main() -> Result<()> {
         "online accuracy  {:.3} (15-way personalized categorization)",
         correct as f64 / received as f64
     );
+    if let Some(st) = &snap.store {
+        let lookups = st.cache_hits + st.cache_misses;
+        println!(
+            "store            {} profiles / {} shards, cache hit rate {:.2} ({} evictions)",
+            st.profiles,
+            st.shards,
+            if lookups > 0 { st.cache_hits as f64 / lookups as f64 } else { 0.0 },
+            st.evictions
+        );
+    }
     Ok(())
 }

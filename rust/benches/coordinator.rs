@@ -1,21 +1,46 @@
-//! `cargo bench --bench coordinator` — L3 hot-path micro benches: dynamic
-//! batcher ops, profile-store lookups at scale, mask pack/unpack, and the
-//! full service round-trip over the native backend.
+//! `cargo bench --bench coordinator` — coordinator hot-path benches:
+//! dynamic batcher ops, mask pack/unpack, the **store-scale section**
+//! (insert / cache-hit read / miss+evict read throughput at 1M synthetic
+//! hard-mask profiles, plus thread-scaling of concurrent reads over the
+//! lock-striped shards), and the full service round-trip over the native
+//! backend.
+//!
+//! Output lands in the canonical trajectory file `rust/BENCH_coordinator.json`
+//! (CWD-independent, via `CARGO_MANIFEST_DIR`) plus a copy under
+//! `<workspace>/results/`; entries matching a previous trajectory gain
+//! `speedup_vs_prev`. `-- --smoke` is the CI short mode: same code paths
+//! at reduced scale, no trajectory files written.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use xpeft::adapters::AdapterBank;
-use xpeft::bench::{Bench, Suite};
+use xpeft::bench::{write_trajectory, Bench, BenchResult, Suite};
 use xpeft::config::ServeConfig;
 use xpeft::coordinator::batcher::{DynamicBatcher, Request};
-use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore, StoreConfig};
 use xpeft::coordinator::Service;
-use xpeft::masks::{MaskLogits, ProfileMasks};
+use xpeft::masks::{HardMask, MaskLogits, ProfileMasks};
 use xpeft::runtime::Engine;
 use xpeft::util::rng::Rng;
+use xpeft::util::threadpool;
+
+/// One manually timed measurement (for one-shot operations like filling a
+/// million-profile store, where re-running the closure isn't meaningful).
+fn timed(name: &str, items: usize, elapsed: Duration) -> BenchResult {
+    let ns = elapsed.as_nanos() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        median_ns: ns,
+        mean_ns: ns,
+        p95_ns: ns,
+        throughput: Some(items as f64 / elapsed.as_secs_f64()),
+    }
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut suite = Suite::default();
     let mut rng = Rng::new(42);
 
@@ -40,7 +65,7 @@ fn main() {
         n
     }));
 
-    println!("\n== profile store ==");
+    println!("\n== mask ops ==");
     let logits = MaskLogits {
         layers: 12,
         n: 400,
@@ -50,31 +75,129 @@ fn main() {
     suite.add(Bench::default().run("binarize L=12 N=400 k=50", || logits.binarize(50)));
     let hard = logits.binarize(50);
     suite.add(Bench::default().run("unpack k-hot → weights", || hard.to_weights()));
-    for size in [1_000usize, 100_000] {
-        let mut store = ProfileStore::new(1024);
-        for pid in 0..size as u64 {
-            store.insert(pid, ProfileRecord {
-                masks: ProfileMasks::Hard(hard.clone()),
+
+    // ---- store scale: the million-profile section --------------------
+    // Small masks (L=2, N=64) keep 1M profiles in a few hundred MB while
+    // exercising exactly the sharded-store paths: hashed shard placement,
+    // per-shard RwLock, Arc reads, O(1) LRU eviction.
+    let scale: usize = if smoke { 50_000 } else { 1_000_000 };
+    let scale_label = if smoke { "50k".to_string() } else { "1M".to_string() };
+    println!("\n== store scale ({scale} hard-mask profiles) ==");
+    let templates: Vec<HardMask> = (0..64)
+        .map(|i| {
+            let mut r = Rng::new(1000 + i as u64);
+            MaskLogits {
+                layers: 2,
+                n: 64,
+                a: r.normal_vec(2 * 64, 1.0),
+                b: r.normal_vec(2 * 64, 1.0),
+            }
+            .binarize(16)
+        })
+        .collect();
+    // cache sized to hold the hot set AND every concurrent reader's window
+    // (so the thread-scaling section measures the shared-lock hit path)
+    // while staying ≪ the store: cold reads still miss and evict.
+    let tasks = threadpool::max_parallelism();
+    let cache_cap = (tasks * 2048).max(8192);
+    let store = ProfileStore::with_config(StoreConfig {
+        shards: 64,
+        cache_capacity: cache_cap,
+        ..StoreConfig::default()
+    });
+    let t0 = Instant::now();
+    for pid in 0..scale as u64 {
+        store
+            .insert(pid, ProfileRecord {
+                masks: ProfileMasks::Hard(templates[(pid % 64) as usize].clone()),
                 aux: None,
-            });
+            })
+            .unwrap();
+    }
+    suite.add(timed(&format!("store insert {scale_label} hard profiles"), scale, t0.elapsed()));
+    assert_eq!(store.len(), scale);
+
+    let read_iters = if smoke { 2 } else { 10 };
+    let reads_per_iter: usize = if smoke { 20_000 } else { 200_000 };
+    // cache-hit path: ids confined to half the cache capacity → after
+    // warmup every read is a shared-lock hit returning the cached Arc
+    suite.add(Bench { warmup: 1, iters: read_iters, items_per_iter: Some(reads_per_iter) }.run(
+        &format!("store read hot {scale_label} (cache-hit)"),
+        || {
+            let mut r = Rng::new(7);
+            let mut touched = 0usize;
+            for _ in 0..reads_per_iter {
+                let id = r.below(2048) as u64;
+                touched += store.weights(id).unwrap().n;
+            }
+            touched
+        },
+    ));
+    // miss+evict path: uniform ids over the whole store → ~every read
+    // unpacks and pushes an eviction through the intrusive LRU
+    let cold_reads = reads_per_iter / 10;
+    suite.add(Bench { warmup: 1, iters: read_iters, items_per_iter: Some(cold_reads) }.run(
+        &format!("store read cold {scale_label} (miss+evict)"),
+        || {
+            let mut r = Rng::new(99);
+            let mut touched = 0usize;
+            for _ in 0..cold_reads {
+                let id = r.below(scale) as u64;
+                touched += store.weights(id).unwrap().n;
+            }
+            touched
+        },
+    ));
+
+    // thread scaling of concurrent reads: T reader tasks over disjoint id
+    // ranges (mostly hits), pool limited to 1 lane vs every lane — the
+    // lock-striping win the Mutex<ProfileStore> design could never show.
+    // Untimed warmup sweep first, so the threads=1 pass (which runs
+    // before threads=max) doesn't absorb all the cold-cache fills and
+    // inflate the recorded scaling.
+    let per_task = if smoke { 10_000 } else { 100_000 };
+    for t in 0..tasks {
+        for i in 0..1024u64 {
+            let id = ((t as u64) * 1024 + i) % scale as u64;
+            std::hint::black_box(store.weights(id).unwrap());
         }
-        let mut i = 0u64;
-        suite.add(Bench::default().with_items(1).run(
-            &format!("store lookup ({size} profiles, LRU 1024)"),
-            || {
-                i = (i + 7919) % size as u64;
-                store.weights(i).unwrap()
-            },
+    }
+    for (label, lanes) in [("threads=1", 1), ("threads=max", tasks)] {
+        threadpool::set_parallelism(lanes);
+        let t0 = Instant::now();
+        threadpool::run(tasks, |t| {
+            let mut r = Rng::new(0xC0FFEE + t as u64);
+            let base = (t * 1024) as u64;
+            for _ in 0..per_task {
+                // each task reads its own 1024-id window (wrapped into
+                // the store's id range): distinct profiles across
+                // threads, hot within a thread
+                let id = (base + r.below(1024) as u64) % scale as u64;
+                std::hint::black_box(store.weights(id).unwrap());
+            }
+        });
+        suite.add(timed(
+            &format!("store concurrent reads {scale_label} ({label}, {tasks} tasks)"),
+            tasks * per_task,
+            t0.elapsed(),
         ));
     }
+    threadpool::set_parallelism(threadpool::max_parallelism());
+    let st = store.stats();
+    println!(
+        "store stats: {} profiles / {} shards (hottest {}), {} hits / {} misses / {} evictions",
+        st.profiles, st.shards, st.hottest_shard_profiles, st.cache_hits, st.cache_misses,
+        st.evictions
+    );
+    drop(store);
 
-    // full service round-trip over the native backend
+    // ---- full service round-trip over the native backend -------------
     {
         println!("\n== service round-trip (native eval) ==");
         let engine = Arc::new(Engine::native());
         let mc = engine.manifest.config.clone();
         let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
-        let mut store = ProfileStore::new(64);
+        let store = Arc::new(ProfileStore::new(64));
         for pid in 0..4u64 {
             let mut r = Rng::new(pid);
             let lg = MaskLogits {
@@ -83,7 +206,9 @@ fn main() {
                 a: r.normal_vec(mc.layers * 100, 1.0),
                 b: r.normal_vec(mc.layers * 100, 1.0),
             };
-            store.insert(pid, ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None });
+            store
+                .insert(pid, ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None })
+                .unwrap();
         }
         store.set_shared_aux(AuxParams {
             ln_scale: vec![1.0; mc.layers * mc.bottleneck],
@@ -93,15 +218,21 @@ fn main() {
         });
         let svc = Service::start(
             engine,
-            Arc::new(Mutex::new(store)),
+            store,
             bank,
-            ServeConfig { max_batch: 16, batch_deadline_us: 300, workers: 1, mask_cache: 16, threads: 0 },
+            ServeConfig {
+                max_batch: 16,
+                batch_deadline_us: 300,
+                mask_cache: 16,
+                ..ServeConfig::default()
+            },
             15,
             42,
         )
         .unwrap();
         let reqs = 64usize;
-        suite.add(Bench { warmup: 1, iters: 8, items_per_iter: Some(reqs) }.run(
+        let iters = if smoke { 2 } else { 8 };
+        suite.add(Bench { warmup: 1, iters, items_per_iter: Some(reqs) }.run(
             "service round-trip (64 reqs, 4 profiles)",
             || {
                 for i in 0..reqs {
@@ -127,6 +258,9 @@ fn main() {
         );
     }
 
-    std::fs::create_dir_all("results").ok();
-    std::fs::write("results/bench_coordinator.json", suite.to_json().to_string_pretty()).ok();
+    if smoke {
+        println!("\n--smoke: {} entries ok, no trajectory files written", suite.results.len());
+        return;
+    }
+    write_trajectory(&suite, "BENCH_coordinator.json", "bench_coordinator.json");
 }

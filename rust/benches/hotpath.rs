@@ -16,50 +16,16 @@
 //! iterations, and no trajectory files written (CI machines must not
 //! overwrite the dev-box trajectory).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
 use xpeft::adapters::AdapterBank;
-use xpeft::bench::{Bench, Suite};
+use xpeft::bench::{write_trajectory, Bench, Suite};
 use xpeft::config::{Mode, TrainConfig};
 use xpeft::data::batch::Batcher;
 use xpeft::data::glue;
 use xpeft::runtime::native::kernels::{self, scalar};
 use xpeft::runtime::Engine;
 use xpeft::train::{eval::Evaluator, Hyper, Trainer};
-use xpeft::util::json::Json;
 use xpeft::util::rng::Rng;
 use xpeft::util::threadpool;
-
-fn bench_out_path() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json")
-}
-
-fn results_out_path() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("rust/ has a workspace parent")
-        .join("results/bench_hotpath.json")
-}
-
-/// name → median_ns of the previous trajectory file, if any.
-fn load_prev(path: &Path) -> HashMap<String, f64> {
-    let mut prev = HashMap::new();
-    let Ok(text) = std::fs::read_to_string(path) else {
-        return prev;
-    };
-    let Ok(json) = Json::parse(&text) else {
-        return prev;
-    };
-    if let Ok(entries) = json.as_arr() {
-        for e in entries {
-            if let (Ok(name), Ok(median)) = (e.str_field("name"), e.f64_field("median_ns")) {
-                prev.insert(name, median);
-            }
-        }
-    }
-    prev
-}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -200,35 +166,5 @@ fn main() {
         println!("\n--smoke: {} entries ok, no trajectory files written", suite.results.len());
         return;
     }
-    let out_path = bench_out_path();
-    let prev = load_prev(&out_path);
-    // one entry schema: Suite::to_json, plus a per-entry speedup patch
-    let mut json = suite.to_json();
-    if let Json::Arr(entries) = &mut json {
-        for (res, entry) in suite.results.iter().zip(entries.iter_mut()) {
-            if let Some(&p) = prev.get(&res.name) {
-                if res.median_ns > 0.0 {
-                    let speedup = p / res.median_ns;
-                    entry.set("speedup_vs_prev", Json::Num(speedup));
-                    println!("  {:<44} {speedup:>6.2}x vs previous run", res.name);
-                }
-            }
-        }
-    }
-    let json = json.to_string_pretty();
-    match std::fs::write(&out_path, &json) {
-        Ok(()) => println!(
-            "\nwrote {} ({} entries)",
-            out_path.display(),
-            suite.results.len()
-        ),
-        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
-    }
-    let results_path = results_out_path();
-    if let Some(dir) = results_path.parent() {
-        std::fs::create_dir_all(dir).ok();
-    }
-    if let Err(e) = std::fs::write(&results_path, &json) {
-        eprintln!("failed to write {}: {e}", results_path.display());
-    }
+    write_trajectory(&suite, "BENCH_hotpath.json", "bench_hotpath.json");
 }

@@ -127,11 +127,23 @@ impl AdapterBank {
         f.read_exact(&mut hdr)?;
         let rd = |i: usize| u32::from_le_bytes(hdr[i..i + 4].try_into().unwrap()) as usize;
         let (layers, n, d, b) = (rd(0), rd(4), rd(8), rd(12));
-        let count = layers * n * d * b;
+        // hostile headers: layers·n·d·b (and the ·8 payload size) must not
+        // overflow — and must match the actual payload before any indexing
+        let count = layers
+            .checked_mul(n)
+            .and_then(|x| x.checked_mul(d))
+            .and_then(|x| x.checked_mul(b))
+            .with_context(|| format!("bank dims {layers}×{n}×{d}×{b} overflow"))?;
+        let payload = count
+            .checked_mul(8)
+            .with_context(|| format!("bank payload size for {count} weights overflows"))?;
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
-        if buf.len() != 2 * count * 4 {
-            bail!("bank payload size mismatch");
+        if buf.len() != payload {
+            bail!(
+                "bank payload size mismatch: {} bytes on disk, header implies {payload}",
+                buf.len()
+            );
         }
         let floats: Vec<f32> = buf
             .chunks_exact(4)
@@ -235,5 +247,36 @@ mod tests {
         let path = dir.join("garbage.bin");
         std::fs::write(&path, b"not a bank").unwrap();
         assert!(AdapterBank::load(&path).is_err());
+    }
+
+    #[test]
+    fn load_rejects_hostile_headers_without_aborting() {
+        let dir = std::env::temp_dir().join("xpeft_test_bank");
+        std::fs::create_dir_all(&dir).unwrap();
+        // dims whose product overflows usize: must error, not abort on a
+        // giant allocation (or wrap and mis-index)
+        let path = dir.join("overflow.bin");
+        let mut bytes = MAGIC.to_vec();
+        for v in [u32::MAX, u32::MAX, u32::MAX, u32::MAX] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(AdapterBank::load(&path).is_err());
+        // huge-but-not-overflowing dims with a tiny payload: size mismatch
+        let path2 = dir.join("huge_dims.bin");
+        let mut bytes = MAGIC.to_vec();
+        for v in [1u32 << 20, 1 << 20, 16, 1] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0u8; 64]);
+        std::fs::write(&path2, &bytes).unwrap();
+        assert!(AdapterBank::load(&path2).is_err());
+        // truncated payload for honest dims
+        let path3 = dir.join("truncated.bin");
+        let bank = AdapterBank::random(2, 3, 4, 2, 5);
+        bank.save(&path3).unwrap();
+        let full = std::fs::read(&path3).unwrap();
+        std::fs::write(&path3, &full[..full.len() - 5]).unwrap();
+        assert!(AdapterBank::load(&path3).is_err());
     }
 }

@@ -1,9 +1,13 @@
 //! Micro-benchmark framework (criterion is unavailable offline): warmup,
-//! timed iterations, median/p95 reporting, and a suite runner used by the
-//! `rust/benches/*` targets and `xpeft bench`.
+//! timed iterations, median/p95 reporting, a suite runner used by the
+//! `rust/benches/*` targets and `xpeft bench`, and the shared trajectory
+//! writer (`BENCH_*.json` with per-entry `speedup_vs_prev`).
 
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 #[derive(Debug, Clone)]
@@ -101,8 +105,7 @@ impl Suite {
         self.results.push(r);
     }
 
-    pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::Json;
+    pub fn to_json(&self) -> Json {
         let mut arr = Vec::new();
         for r in &self.results {
             let mut o = Json::obj();
@@ -115,6 +118,77 @@ impl Suite {
             arr.push(o);
         }
         Json::Arr(arr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trajectory files (shared by the hotpath and coordinator bench binaries)
+// ---------------------------------------------------------------------------
+
+/// Canonical trajectory location: `rust/<file>`, resolved at compile time
+/// via `CARGO_MANIFEST_DIR` so the bench CWD is irrelevant.
+pub fn trajectory_path(file: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(file)
+}
+
+/// name → median_ns of a previous trajectory file, if any.
+pub fn load_prev_medians(path: &Path) -> HashMap<String, f64> {
+    let mut prev = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return prev;
+    };
+    let Ok(json) = Json::parse(&text) else {
+        return prev;
+    };
+    if let Ok(entries) = json.as_arr() {
+        for e in entries {
+            if let (Ok(name), Ok(median)) = (e.str_field("name"), e.f64_field("median_ns")) {
+                prev.insert(name, median);
+            }
+        }
+    }
+    prev
+}
+
+/// Write the suite to `rust/<canonical>` plus a copy under
+/// `<workspace>/results/<copy>`, patching each entry that also appeared in
+/// the previous trajectory with `speedup_vs_prev` (= prev_median /
+/// new_median, printed as it goes). Never call this in `--smoke` mode — CI
+/// machines must not overwrite the dev-box trajectory.
+pub fn write_trajectory(suite: &Suite, canonical: &str, copy: &str) {
+    let out_path = trajectory_path(canonical);
+    let prev = load_prev_medians(&out_path);
+    let mut json = suite.to_json();
+    if let Json::Arr(entries) = &mut json {
+        for (res, entry) in suite.results.iter().zip(entries.iter_mut()) {
+            if let Some(&p) = prev.get(&res.name) {
+                if res.median_ns > 0.0 {
+                    let speedup = p / res.median_ns;
+                    entry.set("speedup_vs_prev", Json::Num(speedup));
+                    println!("  {:<44} {speedup:>6.2}x vs previous run", res.name);
+                }
+            }
+        }
+    }
+    let json = json.to_string_pretty();
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!(
+            "\nwrote {} ({} entries)",
+            out_path.display(),
+            suite.results.len()
+        ),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+    let results_path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a workspace parent")
+        .join("results")
+        .join(copy);
+    if let Some(dir) = results_path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    if let Err(e) = std::fs::write(&results_path, &json) {
+        eprintln!("failed to write {}: {e}", results_path.display());
     }
 }
 

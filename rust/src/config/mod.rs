@@ -183,10 +183,17 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// deadline before a partial batch is flushed (µs)
     pub batch_deadline_us: u64,
-    /// worker executor threads
-    pub workers: usize,
-    /// profile-mask LRU cache capacity (entries)
+    /// profile-mask LRU cache capacity (entries, split across shards)
     pub mask_cache: usize,
+    /// profile-store shard count (`--shards`; rounded up to a power of
+    /// two, 0 ⇒ the store default of 64). More shards = finer lock
+    /// striping between the serving readers and the scheduler's inserts.
+    pub store_shards: usize,
+    /// never compact a shard log segment with fewer dead (superseded)
+    /// records than this (`--compact-min-dead`)
+    pub compact_min_dead: usize,
+    /// compact a shard segment when dead > ratio·live (`--compact-ratio`)
+    pub compact_dead_ratio: f64,
     /// compute worker-pool lane limit (`--threads`; 0 keeps the pool
     /// default, which is `XPEFT_THREADS` or the machine's parallelism).
     /// The pool is process-wide, so only the top-level binary should apply
@@ -200,8 +207,10 @@ impl Default for ServeConfig {
         ServeConfig {
             max_batch: 32,
             batch_deadline_us: 2_000,
-            workers: 1,
             mask_cache: 4096,
+            store_shards: 0,
+            compact_min_dead: 1024,
+            compact_dead_ratio: 0.5,
             threads: 0,
         }
     }
@@ -211,13 +220,28 @@ impl ServeConfig {
     pub fn override_from_args(mut self, args: &Args) -> Result<ServeConfig> {
         self.max_batch = args.get_usize("max-batch", self.max_batch)?;
         self.batch_deadline_us = args.get_u64("deadline-us", self.batch_deadline_us)?;
-        self.workers = args.get_usize("workers", self.workers)?;
         self.mask_cache = args.get_usize("mask-cache", self.mask_cache)?;
+        self.store_shards = args.get_usize("shards", self.store_shards)?;
+        self.compact_min_dead = args.get_usize("compact-min-dead", self.compact_min_dead)?;
+        self.compact_dead_ratio = args.get_f64("compact-ratio", self.compact_dead_ratio)?;
         self.threads = args.get_usize("threads", self.threads)?;
-        if self.max_batch == 0 || self.workers == 0 {
-            bail!("max-batch and workers must be positive");
+        if self.max_batch == 0 {
+            bail!("max-batch must be positive");
+        }
+        if !(0.0..=1.0e6).contains(&self.compact_dead_ratio) {
+            bail!("compact-ratio must be a non-negative finite ratio");
         }
         Ok(self)
+    }
+
+    /// The store-construction knobs carried by this serve config.
+    pub fn store_config(&self) -> crate::coordinator::profile_store::StoreConfig {
+        crate::coordinator::profile_store::StoreConfig {
+            shards: self.store_shards,
+            cache_capacity: self.mask_cache,
+            compact_min_dead: self.compact_min_dead,
+            compact_dead_ratio: self.compact_dead_ratio,
+        }
     }
 }
 
@@ -285,15 +309,24 @@ mod tests {
     #[test]
     fn serve_overrides_and_validation() {
         let sc = ServeConfig::default()
-            .override_from_args(&args("serve --max-batch 8 --workers 2 --threads 3"))
+            .override_from_args(&args(
+                "serve --max-batch 8 --threads 3 --shards 16 --compact-min-dead 64 --compact-ratio 0.25",
+            ))
             .unwrap();
         assert_eq!(sc.max_batch, 8);
-        assert_eq!(sc.workers, 2);
         assert_eq!(sc.threads, 3);
+        assert_eq!(sc.store_shards, 16);
+        assert_eq!(sc.compact_min_dead, 64);
+        assert!((sc.compact_dead_ratio - 0.25).abs() < 1e-12);
         assert_eq!(ServeConfig::default().threads, 0);
+        assert_eq!(ServeConfig::default().store_shards, 0);
         assert!(ServeConfig::default()
             .override_from_args(&args("serve --max-batch 0"))
             .is_err());
+        // store knobs flow through to the store config
+        let stc = sc.store_config();
+        assert_eq!(stc.shards, 16);
+        assert_eq!(stc.cache_capacity, sc.mask_cache);
     }
 
     #[test]

@@ -78,9 +78,13 @@ impl DynamicBatcher {
         Some(self.flush(pid))
     }
 
-    /// Force-flush a profile's queue (used at shutdown/drain).
+    /// Force-flush a profile's queue (used at shutdown/drain). A profile
+    /// with nothing queued yields an empty batch rather than panicking —
+    /// drain/shutdown may race a poll that already emptied the queue.
     pub fn flush(&mut self, profile_id: u64) -> ProfileBatch {
-        let q = self.queues.get_mut(&profile_id).expect("profile has a queue");
+        let Some(q) = self.queues.get_mut(&profile_id) else {
+            return ProfileBatch { profile_id, requests: Vec::new() };
+        };
         let take = q.len().min(self.max_batch);
         let requests: Vec<Request> = q.drain(..take).collect();
         self.queued -= requests.len();
@@ -217,6 +221,61 @@ mod tests {
             expect.sort_unstable();
             assert_eq!(seen, expect, "trial {trial}");
         }
+    }
+
+    #[test]
+    fn deadline_exactly_now_flushes() {
+        // the boundary case: elapsed == deadline must flush (>=, not >)
+        let mut b = DynamicBatcher::new(32, Duration::from_millis(5));
+        let t = Instant::now();
+        b.push(req(1, 3, t));
+        let exactly = t + Duration::from_millis(5);
+        let batch = b.poll(exactly).expect("deadline boundary is inclusive");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.next_deadline(exactly), None);
+    }
+
+    #[test]
+    fn flush_of_empty_profile_is_noop() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(1));
+        let t = Instant::now();
+        b.push(req(1, 7, t));
+        // profile 9 has nothing queued: empty batch, state untouched
+        let empty = b.flush(9);
+        assert_eq!(empty.profile_id, 9);
+        assert!(empty.requests.is_empty());
+        assert_eq!(b.queued(), 1);
+        // flushing a profile twice: second flush is also empty
+        assert_eq!(b.flush(7).requests.len(), 1);
+        assert!(b.flush(7).requests.is_empty());
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn interleaved_profiles_fill_max_batch_independently() {
+        // A and B arrive interleaved; each flushes exactly when ITS queue
+        // hits max_batch, with no cross-profile contamination
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(10));
+        let t = Instant::now();
+        let mut id = 0;
+        for _ in 0..2 {
+            for pid in [1u64, 2] {
+                b.push(req(id, pid, t));
+                id += 1;
+            }
+        }
+        assert!(b.poll(t).is_none(), "both profiles at 2/3: nothing ready");
+        b.push(req(id, 1, t));
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.profile_id, 1);
+        assert_eq!(batch.requests.len(), 3);
+        assert!(batch.requests.iter().all(|r| r.profile_id == 1));
+        assert!(b.poll(t).is_none(), "profile 2 still at 2/3");
+        b.push(req(id + 1, 2, t));
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.profile_id, 2);
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.queued(), 0);
     }
 
     #[test]

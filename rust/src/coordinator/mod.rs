@@ -1,8 +1,10 @@
 //! The multi-profile coordinator — the systems side of X-PEFT's "extreme
-//! multi-profile scenario": a profile store holding byte-level mask state
-//! for arbitrarily many profiles over one shared PLM + adapter bank, a
-//! per-profile dynamic batcher feeding the PJRT executables, a training
-//! scheduler that tunes masks for newly-arriving profiles, and telemetry.
+//! multi-profile scenario": a lock-striped sharded profile store holding
+//! byte-level mask state for millions of profiles over one shared PLM +
+//! adapter bank (append-log persistence, per-shard LRU weight caches), a
+//! per-profile dynamic batcher feeding the eval executables, a training
+//! scheduler fanning mask-tuning jobs for newly-arriving profiles over the
+//! process worker pool, and per-shard + latency telemetry.
 
 pub mod batcher;
 pub mod profile_store;
@@ -11,7 +13,7 @@ pub mod service;
 pub mod telemetry;
 
 pub use batcher::{DynamicBatcher, ProfileBatch, Request};
-pub use profile_store::{AuxParams, ProfileRecord, ProfileStore};
+pub use profile_store::{AuxParams, ProfileRecord, ProfileStore, ShardStats, StoreConfig, StoreStats};
 pub use scheduler::{JobStatus, Scheduler, TrainJob};
 pub use service::{Response, Service};
 pub use telemetry::{Snapshot, Telemetry};

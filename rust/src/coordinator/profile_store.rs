@@ -1,15 +1,81 @@
 //! Profile store: the byte-level per-profile state of the multi-profile
-//! system (Table 1 / Fig 1). Hard-mask profiles cost `2·⌈N/8⌉·L` bytes plus
-//! (optional) per-profile aux tensors; the adapter bank and PLM are shared
-//! and counted once. An LRU cache keeps the hottest profiles' *unpacked*
-//! mask weights ready for the serving path.
+//! system (Table 1 / Fig 1), built for *millions* of concurrent profiles.
+//!
+//! # Concurrency layout
+//!
+//! Profiles are hashed across `S` **shards** (lock striping): each shard is
+//! an independent `RwLock` over its own id→record map and weight cache, so
+//! the serving read path takes only a *shared* lock on *one* shard and the
+//! scheduler inserting a freshly tuned profile write-locks only the shard
+//! that owns it. Reads return `Arc<MaskWeights>` / `Arc<AuxParams>` —
+//! shared views of the stored state, never a per-batch clone.
+//!
+//! Each shard caches unpacked mask weights in an **O(1) LRU**: an intrusive
+//! doubly-linked list threaded through a slot arena (constant-time link,
+//! unlink, and evict — replacing the old O(n) `min_by_key` scan). Cache
+//! hits run under the shared lock, so recency is recorded with a per-entry
+//! atomic "touched" bit instead of a list splice; eviction pops the list
+//! tail and gives touched entries a second chance (moving them to the
+//! front, amortized O(1)) — LRU order materializes lazily, at eviction
+//! time, without readers ever taking the write lock.
+//!
+//! # On-disk layout
+//!
+//! Two formats share one record encoding (all integers little-endian):
+//!
+//! **Append log** (current, magic `XPFTLOG1`) — an append-only sequence of
+//! framed records:
+//!
+//! ```text
+//! log    := "XPFTLOG1" record*
+//! record := u32 payload_len | u32 fnv1a32(payload) | payload
+//! payload:= u64 profile_id | u8 kind | u32 blob_len | blob
+//!           | u8 has_aux | [aux: 4 × (u32 len | len·f32)]
+//! kind   := 0 = hard (blob = HardMask::to_bytes)
+//!         | 1 = soft (blob = u32 layers | u32 n | 2·layers·n·f32)
+//! ```
+//!
+//! Committing one tuned profile **appends one record** (~142 B for a hard
+//! profile at testbed dims L=4, N=100: 8 B frame + 14 B payload header +
+//! 120 B mask blob) instead of rewriting the store. A record for an id
+//! that already exists supersedes it (the old record becomes *dead*).
+//! Recovery replays records in order and stops at the first truncated or
+//! checksum-failing frame — a crash mid-append loses at most the partial
+//! trailing record, never the store. (Appends are OS-buffered, not
+//! fsynced per record; a *power loss* may also drop recently appended
+//! whole records. Compaction and snapshots `sync_all` before their
+//! renames, so already-durable records are never traded for unsynced
+//! ones.)
+//!
+//! In **segmented** mode ([`ProfileStore::open`]) the log is split per
+//! shard (`shard-NNNN.log` under a store directory, plus a `store.meta`
+//! JSON recording the shard count), each shard appending independently
+//! under its own lock. When a shard's dead records pass the configured
+//! threshold it is **compacted** in place: live records are rewritten to a
+//! temp file which atomically replaces the segment. [`ProfileStore::save`]
+//! writes the same record stream as a single-file snapshot.
+//!
+//! **Legacy snapshot** (magic `XPFTPROF`) — the v0 monolithic format
+//! (u32 count, then per profile: u64 id, u8 kind, u32 blob_len, blob,
+//! u8 has_aux, aux sections — note the format *does* persist aux).
+//! [`ProfileStore::load`] still reads it; new files are always logs.
+//!
+//! All deserialization uses checked arithmetic and validates section
+//! lengths against the actual byte count, so hostile headers fail with an
+//! error instead of aborting on a huge allocation.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::masks::{MaskWeights, ProfileMasks};
+use crate::masks::{HardMask, MaskWeights, ProfileMasks};
+
+const LOG_MAGIC: &[u8; 8] = b"XPFTLOG1";
+const LEGACY_MAGIC: &[u8; 8] = b"XPFTPROF";
 
 /// Per-profile auxiliary trainables (LN affine + head). The LaMP warm
 /// setting shares one head across profiles (paper §4.1), in which case
@@ -32,7 +98,8 @@ impl AuxParams {
 pub struct ProfileRecord {
     pub masks: ProfileMasks,
     /// None ⇒ profile uses the store's shared aux (warm-start setting).
-    pub aux: Option<AuxParams>,
+    /// `Arc` so the serving path shares it without cloning 4 tensors.
+    pub aux: Option<Arc<AuxParams>>,
 }
 
 impl ProfileRecord {
@@ -42,254 +109,1040 @@ impl ProfileRecord {
     }
 }
 
-/// Simple LRU over unpacked mask weights.
-struct LruCache {
-    capacity: usize,
-    map: HashMap<u64, (MaskWeights, u64)>,
-    clock: u64,
+/// Store-construction knobs (the `--shards` / compaction CLI flags).
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Shard count (rounded up to a power of two). 0 ⇒ default (64).
+    pub shards: usize,
+    /// Total unpacked-weight cache entries, split across shards.
+    pub cache_capacity: usize,
+    /// Never compact a shard segment holding fewer dead records than this.
+    pub compact_min_dead: usize,
+    /// Compact a shard when `dead > ratio · live` (and ≥ `compact_min_dead`).
+    pub compact_dead_ratio: f64,
 }
 
-impl LruCache {
-    fn new(capacity: usize) -> Self {
-        LruCache { capacity, map: HashMap::new(), clock: 0 }
-    }
-
-    fn get(&mut self, id: u64) -> Option<MaskWeights> {
-        self.clock += 1;
-        let clock = self.clock;
-        self.map.get_mut(&id).map(|(w, t)| {
-            *t = clock;
-            w.clone()
-        })
-    }
-
-    fn put(&mut self, id: u64, w: MaskWeights) {
-        self.clock += 1;
-        if self.map.len() >= self.capacity && !self.map.contains_key(&id) {
-            if let Some((&evict, _)) = self.map.iter().min_by_key(|(_, (_, t))| *t) {
-                self.map.remove(&evict);
-            }
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            shards: 0,
+            cache_capacity: 4096,
+            compact_min_dead: 1024,
+            compact_dead_ratio: 0.5,
         }
-        self.map.insert(id, (w, self.clock));
+    }
+}
+
+const DEFAULT_SHARDS: usize = 64;
+
+/// Counters for one shard (all monotonically increasing except the sizes).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    pub profiles: usize,
+    pub cached: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Superseded records still occupying log bytes (segmented mode).
+    pub log_dead: usize,
+}
+
+/// Aggregate + per-shard store telemetry (surfaced in serving snapshots).
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    pub shards: usize,
+    pub profiles: usize,
+    pub cached: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub evictions: u64,
+    /// Profiles in the most loaded shard (hash-balance indicator).
+    pub hottest_shard_profiles: usize,
+    pub log_dead: usize,
+    pub compactions: u64,
+    pub appended_bytes: u64,
+    pub per_shard: Vec<ShardStats>,
+}
+
+// ---------------------------------------------------------------------------
+// O(1) LRU over unpacked weights (intrusive list through a slot arena)
+// ---------------------------------------------------------------------------
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    id: u64,
+    w: Option<Arc<MaskWeights>>,
+    prev: usize,
+    next: usize,
+    /// Set by readers under the *shared* shard lock; consumed at eviction
+    /// (second chance). This is how recency crosses the read path without
+    /// an exclusive lock.
+    touched: AtomicBool,
+}
+
+struct Lru {
+    cap: usize,
+    map: HashMap<u64, usize>,
+    slots: Vec<Slot>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl Lru {
+    fn new(cap: usize) -> Self {
+        Lru { cap, map: HashMap::new(), slots: Vec::new(), head: NIL, tail: NIL, free: Vec::new() }
     }
 
     fn len(&self) -> usize {
         self.map.len()
     }
-}
 
-pub struct ProfileStore {
-    profiles: HashMap<u64, ProfileRecord>,
-    shared_aux: Option<AuxParams>,
-    cache: LruCache,
-    hits: u64,
-    misses: u64,
-}
+    /// Shared-lock read: no list mutation, just the touched bit.
+    fn get(&self, id: u64) -> Option<Arc<MaskWeights>> {
+        let &slot = self.map.get(&id)?;
+        let s = &self.slots[slot];
+        s.touched.store(true, Ordering::Relaxed);
+        s.w.clone()
+    }
 
-impl ProfileStore {
-    pub fn new(cache_capacity: usize) -> Self {
-        ProfileStore {
-            profiles: HashMap::new(),
-            shared_aux: None,
-            cache: LruCache::new(cache_capacity.max(1)),
-            hits: 0,
-            misses: 0,
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slots[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slots[n].prev = prev,
         }
     }
 
-    pub fn set_shared_aux(&mut self, aux: AuxParams) {
-        self.shared_aux = Some(aux);
+    fn link_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        match self.head {
+            NIL => self.tail = i,
+            h => self.slots[h].prev = i,
+        }
+        self.head = i;
     }
 
-    pub fn shared_aux(&self) -> Option<&AuxParams> {
-        self.shared_aux.as_ref()
+    /// Evict the least-recently-used entry; entries touched since their
+    /// last repositioning get a second chance (amortized O(1): every move
+    /// to the front is paid for by a prior read that set the bit).
+    fn evict_one(&mut self) -> bool {
+        loop {
+            let t = self.tail;
+            if t == NIL {
+                return false;
+            }
+            if self.slots[t].touched.swap(false, Ordering::Relaxed) {
+                self.unlink(t);
+                self.link_front(t);
+            } else {
+                self.unlink(t);
+                let id = self.slots[t].id;
+                self.slots[t].w = None;
+                self.map.remove(&id);
+                self.free.push(t);
+                return true;
+            }
+        }
     }
 
-    pub fn insert(&mut self, profile_id: u64, record: ProfileRecord) {
-        self.profiles.insert(profile_id, record);
+    /// Write-lock insert. Returns the number of evictions performed.
+    fn insert(&mut self, id: u64, w: Arc<MaskWeights>) -> u64 {
+        if self.cap == 0 {
+            return 0;
+        }
+        if let Some(&i) = self.map.get(&id) {
+            self.slots[i].w = Some(w);
+            self.slots[i].touched.store(false, Ordering::Relaxed);
+            self.unlink(i);
+            self.link_front(i);
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.map.len() >= self.cap {
+            if !self.evict_one() {
+                break;
+            }
+            evicted += 1;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Slot {
+                    id,
+                    w: Some(w),
+                    prev: NIL,
+                    next: NIL,
+                    touched: AtomicBool::new(false),
+                };
+                i
+            }
+            None => {
+                self.slots.push(Slot {
+                    id,
+                    w: Some(w),
+                    prev: NIL,
+                    next: NIL,
+                    touched: AtomicBool::new(false),
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(id, i);
+        self.link_front(i);
+        evicted
+    }
+
+    /// Drop a cached entry (stale weights after a record overwrite).
+    fn remove(&mut self, id: u64) {
+        if let Some(i) = self.map.remove(&id) {
+            self.unlink(i);
+            self.slots[i].w = None;
+            self.free.push(i);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shards
+// ---------------------------------------------------------------------------
+
+/// Append handle + occupancy accounting for one shard's log segment.
+struct ShardLog {
+    path: PathBuf,
+    file: std::fs::File,
+    /// Bytes of validated log content — the next append offset. Torn
+    /// tails are truncated away at open, and a failed append rolls the
+    /// file back to this offset so the segment never contains garbage
+    /// *between* records.
+    len: u64,
+    /// Records in the segment superseded by a later append.
+    dead: usize,
+    /// Set when an append failed AND the rollback truncate also failed:
+    /// the segment may end in a torn frame that would hide later appends
+    /// from recovery, so all further persistent inserts fail fast.
+    poisoned: bool,
+}
+
+struct ShardState {
+    profiles: HashMap<u64, Arc<ProfileRecord>>,
+    cache: Lru,
+    log: Option<ShardLog>,
+}
+
+struct Shard {
+    state: RwLock<ShardState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    compactions: AtomicU64,
+    appended_bytes: AtomicU64,
+}
+
+impl Shard {
+    fn new(cache_cap: usize) -> Shard {
+        Shard {
+            state: RwLock::new(ShardState {
+                profiles: HashMap::new(),
+                cache: Lru::new(cache_cap),
+                log: None,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            appended_bytes: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-striped sharded profile store. All methods take `&self`; share it
+/// across threads with a plain `Arc<ProfileStore>`.
+pub struct ProfileStore {
+    shards: Vec<Shard>,
+    /// `shards.len() == 1 << shard_bits`.
+    shard_bits: u32,
+    shared_aux: RwLock<Option<Arc<AuxParams>>>,
+    cfg: StoreConfig,
+    /// True for stores created by [`ProfileStore::open`]: every shard has
+    /// a log segment, and inserts pre-encode their record before taking
+    /// the shard lock.
+    persistent: bool,
+    /// Serializes whole-store maintenance (compact-all, save) against
+    /// itself; never taken by the serving read path.
+    maintenance: Mutex<()>,
+}
+
+impl ProfileStore {
+    /// In-memory store with the default shard count and the given total
+    /// cache capacity (the historical constructor).
+    pub fn new(cache_capacity: usize) -> Self {
+        ProfileStore::with_config(StoreConfig {
+            cache_capacity,
+            ..StoreConfig::default()
+        })
+    }
+
+    pub fn with_config(cfg: StoreConfig) -> Self {
+        let shards = resolve_shards(cfg.shards);
+        let shard_bits = shards.trailing_zeros();
+        let shards = (0..shards)
+            .map(|i| Shard::new(shard_cache_cap(cfg.cache_capacity, i, 1usize << shard_bits)))
+            .collect();
+        ProfileStore {
+            shards,
+            shard_bits,
+            shared_aux: RwLock::new(None),
+            cfg,
+            persistent: false,
+            maintenance: Mutex::new(()),
+        }
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_of(&self, id: u64) -> &Shard {
+        // Fibonacci multiplicative hash: ids are often sequential; spread
+        // them over the top bits.
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let idx = (h >> (64 - self.shard_bits.max(1))) as usize & (self.shards.len() - 1);
+        &self.shards[idx]
+    }
+
+    pub fn set_shared_aux(&self, aux: AuxParams) {
+        *self.shared_aux.write().unwrap() = Some(Arc::new(aux));
+    }
+
+    pub fn shared_aux(&self) -> Option<Arc<AuxParams>> {
+        self.shared_aux.read().unwrap().clone()
+    }
+
+    /// Insert or replace a profile. Write-locks only the owning shard; in
+    /// persistent mode appends one record to that shard's segment, and
+    /// compacts the segment when its dead-record share passes the
+    /// configured threshold. Compaction rewrites one shard (1/S of the
+    /// store) while holding only that shard's lock — reads of the other
+    /// S−1 shards proceed untouched, which is the deliberate trade for
+    /// keeping the log self-maintaining without a background thread.
+    pub fn insert(&self, profile_id: u64, record: ProfileRecord) -> Result<()> {
+        let rec = Arc::new(record);
+        let shard = self.shard_of(profile_id);
+        // encode before taking the lock: serialization needs only the
+        // immutable record, and the exclusive section should cover just
+        // the file append + map update
+        let frame = self.persistent.then(|| {
+            let mut f = Vec::new();
+            encode_record(profile_id, &rec, &mut f);
+            f
+        });
+        let mut st = shard.state.write().unwrap();
+        if let Some(frame) = &frame {
+            let log = st.log.as_mut().expect("persistent store shards have logs");
+            if log.poisoned {
+                bail!(
+                    "{}: segment poisoned by an earlier unrecovered append failure",
+                    log.path.display()
+                );
+            }
+            if let Err(e) = log.file.write_all(frame) {
+                // a partial frame may be on disk; roll back to the last
+                // good offset so later appends stay recoverable. If even
+                // the truncate fails, poison the segment — appending past
+                // a torn frame would silently hide every later record
+                // from recovery.
+                if log.file.set_len(log.len).is_err() {
+                    log.poisoned = true;
+                }
+                return Err(e)
+                    .with_context(|| format!("appending to {}", log.path.display()));
+            }
+            log.len += frame.len() as u64;
+            shard.appended_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        }
+        let replaced = st.profiles.insert(profile_id, rec).is_some();
+        if replaced {
+            // the cached weights (if any) describe the superseded record
+            st.cache.remove(profile_id);
+            if let Some(log) = st.log.as_mut() {
+                log.dead += 1;
+            }
+        }
+        let needs_compact = st.log.as_ref().is_some_and(|log| {
+            log.dead >= self.cfg.compact_min_dead.max(1)
+                && log.dead as f64 > self.cfg.compact_dead_ratio * st.profiles.len() as f64
+        });
+        if needs_compact {
+            // compaction failure is non-fatal: the record's append has
+            // been accepted by the OS (appends are page-cache-buffered;
+            // per-record fsync would serialize the scheduler on the disk)
+            // and the old segment stays fully valid (compact_locked only
+            // commits on success)
+            match compact_locked(&mut st) {
+                Ok(()) => {
+                    shard.compactions.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => crate::warn_log!("store", "compaction deferred: {e:#}"),
+            }
+        }
+        Ok(())
     }
 
     pub fn contains(&self, profile_id: u64) -> bool {
-        self.profiles.contains_key(&profile_id)
+        self.shard_of(profile_id)
+            .state
+            .read()
+            .unwrap()
+            .profiles
+            .contains_key(&profile_id)
     }
 
     pub fn len(&self) -> usize {
-        self.profiles.len()
+        self.shards
+            .iter()
+            .map(|s| s.state.read().unwrap().profiles.len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.profiles.is_empty()
+        self.shards
+            .iter()
+            .all(|s| s.state.read().unwrap().profiles.is_empty())
     }
 
     pub fn ids(&self) -> Vec<u64> {
-        let mut v: Vec<u64> = self.profiles.keys().copied().collect();
+        let mut v: Vec<u64> = Vec::new();
+        for s in &self.shards {
+            v.extend(s.state.read().unwrap().profiles.keys().copied());
+        }
         v.sort_unstable();
         v
     }
 
-    pub fn record(&self, profile_id: u64) -> Result<&ProfileRecord> {
-        self.profiles
+    /// Shared view of a profile's record (shared lock on one shard).
+    pub fn record(&self, profile_id: u64) -> Result<Arc<ProfileRecord>> {
+        self.shard_of(profile_id)
+            .state
+            .read()
+            .unwrap()
+            .profiles
             .get(&profile_id)
+            .cloned()
             .with_context(|| format!("unknown profile {profile_id}"))
     }
 
-    /// Mask weights for serving, via the LRU cache.
-    pub fn weights(&mut self, profile_id: u64) -> Result<MaskWeights> {
-        if let Some(w) = self.cache.get(profile_id) {
-            self.hits += 1;
-            return Ok(w);
-        }
-        self.misses += 1;
-        let rec = self
-            .profiles
-            .get(&profile_id)
-            .with_context(|| format!("unknown profile {profile_id}"))?;
-        let w = rec.masks.to_weights();
-        self.cache.put(profile_id, w.clone());
-        Ok(w)
+    /// Mask weights for serving. Cache hits take only the shared shard
+    /// lock and return the cached `Arc` (no clone of the weight tensors);
+    /// misses unpack outside any lock, then write-lock briefly to fill the
+    /// cache.
+    pub fn weights(&self, profile_id: u64) -> Result<Arc<MaskWeights>> {
+        let shard = self.shard_of(profile_id);
+        let (rec, cached) = self.lookup(shard, profile_id)?;
+        Ok(self.weights_from(shard, profile_id, rec, cached))
     }
 
-    /// Aux params for a profile (its own, or the shared set).
-    pub fn aux(&self, profile_id: u64) -> Result<&AuxParams> {
+    /// The per-batch serving lookup: weights + aux as a **consistent
+    /// pair**, both derived from one record read under one shared shard
+    /// lock — a concurrent re-tune commit can never yield one tune's
+    /// masks with another tune's head/LN params.
+    pub fn serving_state(
+        &self,
+        profile_id: u64,
+    ) -> Result<(Arc<MaskWeights>, Arc<AuxParams>)> {
+        let shard = self.shard_of(profile_id);
+        let (rec, cached) = self.lookup(shard, profile_id)?;
+        let aux = match &rec.aux {
+            Some(a) => Arc::clone(a),
+            None => self.shared_aux().with_context(|| {
+                format!("profile {profile_id} has no aux and no shared aux is set")
+            })?,
+        };
+        let w = self.weights_from(shard, profile_id, rec, cached);
+        Ok((w, aux))
+    }
+
+    /// One shared-lock read of a shard: the profile's record plus its
+    /// cached weights, observed atomically (insert replaces the record
+    /// and drops the stale cache entry under one write lock, so a hit
+    /// seen here always matches the record seen here).
+    #[allow(clippy::type_complexity)]
+    fn lookup(
+        &self,
+        shard: &Shard,
+        profile_id: u64,
+    ) -> Result<(Arc<ProfileRecord>, Option<Arc<MaskWeights>>)> {
+        let st = shard.state.read().unwrap();
+        let rec = st
+            .profiles
+            .get(&profile_id)
+            .cloned()
+            .with_context(|| format!("unknown profile {profile_id}"))?;
+        let cached = st.cache.get(profile_id);
+        Ok((rec, cached))
+    }
+
+    /// Resolve the weight view for an already-fetched record: cache hit
+    /// returns the shared `Arc`; a miss unpacks outside any lock, then
+    /// write-locks briefly to fill the cache.
+    fn weights_from(
+        &self,
+        shard: &Shard,
+        profile_id: u64,
+        rec: Arc<ProfileRecord>,
+        cached: Option<Arc<MaskWeights>>,
+    ) -> Arc<MaskWeights> {
+        if let Some(w) = cached {
+            shard.hits.fetch_add(1, Ordering::Relaxed);
+            return w;
+        }
+        shard.misses.fetch_add(1, Ordering::Relaxed);
+        let w = rec.masks.to_weights_shared();
+        {
+            let mut st = shard.state.write().unwrap();
+            // the record may have been replaced between our read unlock and
+            // this write lock; caching would then serve stale weights.
+            if st
+                .profiles
+                .get(&profile_id)
+                .is_some_and(|cur| Arc::ptr_eq(cur, &rec))
+            {
+                let evicted = st.cache.insert(profile_id, Arc::clone(&w));
+                if evicted > 0 {
+                    shard.evictions.fetch_add(evicted, Ordering::Relaxed);
+                }
+            }
+        }
+        w
+    }
+
+    /// Aux params for a profile (its own, or the shared set) as a shared
+    /// handle — shared lock only.
+    pub fn aux(&self, profile_id: u64) -> Result<Arc<AuxParams>> {
         let rec = self.record(profile_id)?;
         if let Some(a) = &rec.aux {
-            return Ok(a);
+            return Ok(Arc::clone(a));
         }
-        self.shared_aux
-            .as_ref()
+        self.shared_aux()
             .with_context(|| format!("profile {profile_id} has no aux and no shared aux is set"))
     }
 
+    /// (hits, misses, cached entries) summed over all shards.
     pub fn cache_stats(&self) -> (u64, u64, usize) {
-        (self.hits, self.misses, self.cache.len())
+        let s = self.stats();
+        (s.cache_hits, s.cache_misses, s.cached)
+    }
+
+    /// Per-shard + aggregate telemetry.
+    pub fn stats(&self) -> StoreStats {
+        let mut out = StoreStats {
+            shards: self.shards.len(),
+            ..StoreStats::default()
+        };
+        for sh in &self.shards {
+            let st = sh.state.read().unwrap();
+            let s = ShardStats {
+                profiles: st.profiles.len(),
+                cached: st.cache.len(),
+                hits: sh.hits.load(Ordering::Relaxed),
+                misses: sh.misses.load(Ordering::Relaxed),
+                evictions: sh.evictions.load(Ordering::Relaxed),
+                log_dead: st.log.as_ref().map_or(0, |l| l.dead),
+            };
+            out.profiles += s.profiles;
+            out.cached += s.cached;
+            out.cache_hits += s.hits;
+            out.cache_misses += s.misses;
+            out.evictions += s.evictions;
+            out.hottest_shard_profiles = out.hottest_shard_profiles.max(s.profiles);
+            out.log_dead += s.log_dead;
+            out.compactions += sh.compactions.load(Ordering::Relaxed);
+            out.appended_bytes += sh.appended_bytes.load(Ordering::Relaxed);
+            out.per_shard.push(s);
+        }
+        out
     }
 
     /// Total per-profile bytes (the Fig 1 measured series).
     pub fn total_profile_bytes(&self) -> u64 {
-        self.profiles.values().map(|r| r.stored_bytes() as u64).sum()
+        self.shards
+            .iter()
+            .map(|s| {
+                s.state
+                    .read()
+                    .unwrap()
+                    .profiles
+                    .values()
+                    .map(|r| r.stored_bytes() as u64)
+                    .sum::<u64>()
+            })
+            .sum()
     }
 
     pub fn mean_profile_bytes(&self) -> f64 {
-        if self.profiles.is_empty() {
+        let n = self.len();
+        if n == 0 {
             return 0.0;
         }
-        self.total_profile_bytes() as f64 / self.profiles.len() as f64
+        self.total_profile_bytes() as f64 / n as f64
     }
 
     // -- persistence -------------------------------------------------------
 
-    /// Binary format: u32 count, then per profile: u64 id, u8 kind
-    /// (0=hard,1=soft), u32 blob_len, blob; soft blobs are (layers,n) + f32s;
-    /// aux omitted (serving with shared aux) — aux-bearing profiles persist
-    /// an extra f32 section.
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let mut out: Vec<u8> = Vec::new();
-        out.extend_from_slice(b"XPFTPROF");
-        out.extend_from_slice(&(self.profiles.len() as u32).to_le_bytes());
-        for id in self.ids() {
-            let rec = &self.profiles[&id];
-            out.extend_from_slice(&id.to_le_bytes());
-            let blob = match &rec.masks {
-                ProfileMasks::Hard(h) => {
-                    out.push(0);
-                    h.to_bytes()
-                }
-                ProfileMasks::Soft(w) => {
-                    out.push(1);
-                    let mut b = Vec::with_capacity(8 + 4 * (w.a.len() + w.b.len()));
-                    b.extend_from_slice(&(w.layers as u32).to_le_bytes());
-                    b.extend_from_slice(&(w.n as u32).to_le_bytes());
-                    for x in w.a.iter().chain(&w.b) {
-                        b.extend_from_slice(&x.to_le_bytes());
-                    }
-                    b
-                }
-            };
-            out.extend_from_slice(&(blob.len() as u32).to_le_bytes());
-            out.extend_from_slice(&blob);
-            match &rec.aux {
-                None => out.push(0),
-                Some(a) => {
-                    out.push(1);
-                    for sect in [&a.ln_scale, &a.ln_bias, &a.head_w, &a.head_b] {
-                        out.extend_from_slice(&(sect.len() as u32).to_le_bytes());
-                        for x in sect.iter() {
-                            out.extend_from_slice(&x.to_le_bytes());
-                        }
-                    }
-                }
+    /// Open (or create) a **segmented** persistent store rooted at `dir`:
+    /// one append-log segment per shard plus a `store.meta` recording the
+    /// shard count (an existing store's shard count wins over `cfg.shards`
+    /// so segments always match their hash placement).
+    pub fn open(dir: &Path, mut cfg: StoreConfig) -> Result<ProfileStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        let meta_path = dir.join("store.meta");
+        if let Ok(text) = std::fs::read_to_string(&meta_path) {
+            let meta = crate::util::json::Json::parse(&text)
+                .with_context(|| format!("parsing {}", meta_path.display()))?;
+            cfg.shards = meta.usize_field("shards")?;
+        } else {
+            // segments without a meta file mean the shard count (= hash
+            // placement) is unknown: regenerating it from cfg could
+            // silently drop or orphan every record whose id hashes
+            // elsewhere, so refuse rather than guess. Check for ANY
+            // segment — a partial copy may be missing shard-0000 itself.
+            let has_segments = std::fs::read_dir(dir)
+                .with_context(|| format!("listing {}", dir.display()))?
+                .flatten()
+                .any(|e| {
+                    let name = e.file_name();
+                    let name = name.to_string_lossy();
+                    name.starts_with("shard-") && name.ends_with(".log")
+                });
+            if has_segments {
+                bail!(
+                    "{}: shard segments exist but store.meta is missing — refusing to guess \
+                     the shard count (restore store.meta, or rebuild via save/load)",
+                    dir.display()
+                );
             }
+            cfg.shards = resolve_shards(cfg.shards);
+            let mut meta = crate::util::json::Json::obj();
+            meta.set("shards", crate::util::json::Json::Num(cfg.shards as f64));
+            meta.set("version", crate::util::json::Json::Num(1.0));
+            std::fs::write(&meta_path, meta.to_string_pretty())
+                .with_context(|| format!("writing {}", meta_path.display()))?;
         }
-        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
-    }
-
-    pub fn load(path: &Path, cache_capacity: usize) -> Result<ProfileStore> {
-        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-        let mut store = ProfileStore::new(cache_capacity);
-        let mut pos = 0usize;
-        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-            if *pos + n > bytes.len() {
-                bail!("truncated profile store");
-            }
-            let s = &bytes[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
-        };
-        if take(&mut pos, 8)? != b"XPFTPROF" {
-            bail!("not a profile store file");
-        }
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-        for _ in 0..count {
-            let id = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-            let kind = take(&mut pos, 1)?[0];
-            let blob_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-            let blob = take(&mut pos, blob_len)?.to_vec();
-            let masks = match kind {
-                0 => ProfileMasks::Hard(crate::masks::HardMask::from_bytes(&blob)?),
-                1 => {
-                    let layers = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
-                    let n = u32::from_le_bytes(blob[4..8].try_into().unwrap()) as usize;
-                    let floats: Vec<f32> = blob[8..]
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    if floats.len() != 2 * layers * n {
-                        bail!("soft mask blob size mismatch");
-                    }
-                    ProfileMasks::Soft(MaskWeights {
-                        layers,
-                        n,
-                        a: floats[..layers * n].to_vec(),
-                        b: floats[layers * n..].to_vec(),
-                    })
+        let mut store = ProfileStore::with_config(cfg);
+        store.persistent = true;
+        for (i, shard) in store.shards.iter().enumerate() {
+            let path = dir.join(format!("shard-{i:04}.log"));
+            let mut st = shard.state.write().unwrap();
+            let mut seen = 0usize;
+            let mut valid_len = 8u64; // magic only, for fresh segments
+            let existing = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            if existing >= 8 {
+                let bytes = std::fs::read(&path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                let (records, prefix) = replay_log(&bytes, &path)?;
+                valid_len = prefix;
+                for (id, rec) in records {
+                    st.profiles.insert(id, Arc::new(rec));
+                    seen += 1;
                 }
-                k => bail!("unknown mask kind {k}"),
-            };
-            let has_aux = take(&mut pos, 1)?[0] == 1;
-            let aux = if has_aux {
-                let mut sections = Vec::new();
-                for _ in 0..4 {
-                    let len =
-                        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-                    let raw = take(&mut pos, len * 4)?;
-                    sections.push(
-                        raw.chunks_exact(4)
-                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                            .collect::<Vec<f32>>(),
-                    );
-                }
-                let head_b = sections.pop().unwrap();
-                let head_w = sections.pop().unwrap();
-                let ln_bias = sections.pop().unwrap();
-                let ln_scale = sections.pop().unwrap();
-                Some(AuxParams { ln_scale, ln_bias, head_w, head_b })
             } else {
-                None
-            };
-            store.insert(id, ProfileRecord { masks, aux });
+                // missing, or shorter than the magic — a crash between
+                // segment creation and the magic write leaves such a stub;
+                // (re-)initialize it instead of failing the whole open
+                std::fs::write(&path, LOG_MAGIC)
+                    .with_context(|| format!("creating {}", path.display()))?;
+            }
+            let file = std::fs::OpenOptions::new()
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening {} for append", path.display()))?;
+            // drop any torn tail NOW so records appended from here on are
+            // never hidden behind garbage at the next recovery
+            file.set_len(valid_len)
+                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+            st.log = Some(ShardLog {
+                path,
+                file,
+                len: valid_len,
+                dead: seen - st.profiles.len(),
+                poisoned: false,
+            });
         }
         Ok(store)
     }
+
+    /// Force-compact every shard segment (no-op for in-memory stores).
+    /// Returns the number of dead records reclaimed.
+    pub fn compact(&self) -> Result<usize> {
+        let _guard = self.maintenance.lock().unwrap();
+        let mut reclaimed = 0;
+        for shard in &self.shards {
+            let mut st = shard.state.write().unwrap();
+            if st.log.as_ref().is_some_and(|l| l.dead > 0) {
+                reclaimed += st.log.as_ref().map_or(0, |l| l.dead);
+                compact_locked(&mut st)?;
+                shard.compactions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(reclaimed)
+    }
+
+    /// Single-file snapshot in the append-log format (`XPFTLOG1`): the
+    /// same record stream the segmented mode appends, concatenated in id
+    /// order. Loadable by [`ProfileStore::load`]. Written via temp file +
+    /// atomic rename, so a crash mid-save can never leave a torn snapshot
+    /// in place of a good one (a torn *copy* of a snapshot still loads its
+    /// valid prefix, with a warning — the log recovery contract).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let _guard = self.maintenance.lock().unwrap();
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(LOG_MAGIC);
+        for id in self.ids() {
+            if let Ok(rec) = self.record(id) {
+                encode_record(id, &rec, &mut out);
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&out).with_context(|| format!("writing {}", tmp.display()))?;
+            // the rename may replace an existing snapshot — sync first so
+            // a crash can't persist the rename without the data
+            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("replacing {}", path.display()))
+    }
+
+    /// Load a single-file store: sniffs the magic and reads either the
+    /// current append-log snapshot or the legacy `XPFTPROF` format.
+    pub fn load(path: &Path, cache_capacity: usize) -> Result<ProfileStore> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let store = ProfileStore::new(cache_capacity);
+        if bytes.len() < 8 {
+            bail!("{}: too short to be a profile store", path.display());
+        }
+        if &bytes[..8] == LOG_MAGIC {
+            let (records, _) = replay_log(&bytes, path)?;
+            for (id, rec) in records {
+                store
+                    .insert(id, rec)
+                    .expect("in-memory insert cannot fail");
+            }
+        } else if &bytes[..8] == LEGACY_MAGIC {
+            for (id, rec) in parse_legacy(&bytes)? {
+                store
+                    .insert(id, rec)
+                    .expect("in-memory insert cannot fail");
+            }
+        } else {
+            bail!("{}: not a profile store file", path.display());
+        }
+        Ok(store)
+    }
+}
+
+/// Shard count: default 64, rounded up to a power of two, clamped to a
+/// sane range (an unchecked `next_power_of_two` of a huge `--shards` value
+/// wraps to 0 in release builds — a zero-shard store would panic on first
+/// access).
+fn resolve_shards(requested: usize) -> usize {
+    let s = if requested == 0 { DEFAULT_SHARDS } else { requested };
+    s.clamp(1, 1 << 16).next_power_of_two()
+}
+
+/// Split the total cache capacity across shards so Σ per-shard caps equals
+/// the configured total exactly (small caps leave some shards uncached).
+fn shard_cache_cap(total: usize, shard: usize, shards: usize) -> usize {
+    total / shards + usize::from(shard < total % shards)
+}
+
+/// Rewrite a shard's segment with only its live records (caller holds the
+/// shard write lock; `st.log` must be Some). Commits `st.log` only after
+/// every fallible step succeeded: the append handle is opened on the temp
+/// file *before* the rename (the fd follows the inode across the rename),
+/// so any failure leaves the old segment and its handle fully intact.
+fn compact_locked(st: &mut ShardState) -> Result<()> {
+    let path = st.log.as_ref().expect("compact requires a log").path.clone();
+    let tmp = path.with_extension("log.tmp");
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(LOG_MAGIC);
+    let mut ids: Vec<u64> = st.profiles.keys().copied().collect();
+    ids.sort_unstable();
+    for id in ids {
+        encode_record(id, &st.profiles[&id], &mut out);
+    }
+    std::fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
+    let file = std::fs::OpenOptions::new()
+        .append(true)
+        .open(&tmp)
+        .with_context(|| format!("opening {}", tmp.display()))?;
+    // the rename discards the ONLY durable copy of these records, so the
+    // replacement must hit the platter before it: sync data, then rename
+    // (a rename persisted ahead of the temp file's blocks would leave a
+    // zero/partial segment after power loss)
+    file.sync_all()
+        .with_context(|| format!("syncing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("replacing {}", path.display()))?;
+    st.log = Some(ShardLog {
+        path,
+        file,
+        len: out.len() as u64,
+        dead: 0,
+        poisoned: false,
+    });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// record codec
+// ---------------------------------------------------------------------------
+
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Append one framed record (`len | checksum | payload`) to `out`.
+fn encode_record(id: u64, rec: &ProfileRecord, out: &mut Vec<u8>) {
+    let mut payload: Vec<u8> = Vec::new();
+    payload.extend_from_slice(&id.to_le_bytes());
+    let blob = match &rec.masks {
+        ProfileMasks::Hard(h) => {
+            payload.push(0);
+            h.to_bytes()
+        }
+        ProfileMasks::Soft(w) => {
+            payload.push(1);
+            let mut b = Vec::with_capacity(8 + 4 * (w.a.len() + w.b.len()));
+            b.extend_from_slice(&(w.layers as u32).to_le_bytes());
+            b.extend_from_slice(&(w.n as u32).to_le_bytes());
+            for x in w.a.iter().chain(&w.b) {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+            b
+        }
+    };
+    payload.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+    payload.extend_from_slice(&blob);
+    match &rec.aux {
+        None => payload.push(0),
+        Some(a) => {
+            payload.push(1);
+            for sect in [&a.ln_scale, &a.ln_bias, &a.head_w, &a.head_b] {
+                payload.extend_from_slice(&(sect.len() as u32).to_le_bytes());
+                for x in sect.iter() {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+/// A bounds-checked little-endian cursor over untrusted bytes.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Cursor { bytes, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated record: wanted {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `count` f32s, validating `count·4` against the remaining bytes
+    /// *before* allocating (hostile headers must not abort on alloc).
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let n = count
+            .checked_mul(4)
+            .with_context(|| format!("f32 section length {count} overflows"))?;
+        Ok(self
+            .take(n)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Decode one record payload (after checksum verification).
+fn decode_payload(payload: &[u8]) -> Result<(u64, ProfileRecord)> {
+    let mut c = Cursor::new(payload);
+    let id = c.u64()?;
+    let kind = c.u8()?;
+    let blob_len = c.u32()? as usize;
+    let blob = c.take(blob_len)?;
+    let masks = decode_mask_blob(kind, blob)?;
+    let aux = decode_aux(&mut c)?;
+    if c.remaining() != 0 {
+        bail!("record for profile {id} has {} trailing bytes", c.remaining());
+    }
+    Ok((id, ProfileRecord { masks, aux }))
+}
+
+fn decode_mask_blob(kind: u8, blob: &[u8]) -> Result<ProfileMasks> {
+    match kind {
+        0 => Ok(ProfileMasks::Hard(HardMask::from_bytes(blob)?)),
+        1 => {
+            let mut c = Cursor::new(blob);
+            let layers = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            let count = layers
+                .checked_mul(n)
+                .with_context(|| format!("soft mask dims {layers}×{n} overflow"))?;
+            let a = c.f32s(count)?;
+            let b = c.f32s(count)?;
+            if c.remaining() != 0 {
+                bail!("soft mask blob size mismatch");
+            }
+            Ok(ProfileMasks::Soft(Arc::new(MaskWeights { layers, n, a, b })))
+        }
+        k => bail!("unknown mask kind {k}"),
+    }
+}
+
+fn decode_aux(c: &mut Cursor) -> Result<Option<Arc<AuxParams>>> {
+    if c.u8()? != 1 {
+        return Ok(None);
+    }
+    let mut sections = Vec::with_capacity(4);
+    for _ in 0..4 {
+        let len = c.u32()? as usize;
+        sections.push(c.f32s(len)?);
+    }
+    let head_b = sections.pop().unwrap();
+    let head_w = sections.pop().unwrap();
+    let ln_bias = sections.pop().unwrap();
+    let ln_scale = sections.pop().unwrap();
+    Ok(Some(Arc::new(AuxParams { ln_scale, ln_bias, head_w, head_b })))
+}
+
+/// Replay an append log: every complete, checksum-valid record in order.
+/// Stops (with a warning, not an error) at the first truncated or
+/// corrupted frame — that is the crash-recovery contract. A record whose
+/// checksum passes but whose payload is malformed is a writer bug and
+/// fails loudly. Returns the records plus the byte offset where the valid
+/// prefix ends, so segmented opens can truncate the torn tail before
+/// appending (a record written after garbage would be invisible to the
+/// next recovery).
+fn replay_log(bytes: &[u8], path: &Path) -> Result<(Vec<(u64, ProfileRecord)>, u64)> {
+    if bytes.len() < 8 || &bytes[..8] != LOG_MAGIC {
+        bail!("{}: not an append-log profile store", path.display());
+    }
+    let mut out = Vec::new();
+    let mut pos = 8usize;
+    while bytes.len() - pos >= 8 {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len > bytes.len() - pos - 8 {
+            crate::warn_log!(
+                "store",
+                "{}: truncated trailing record ({} of {len} payload bytes) — recovered {} records",
+                path.display(),
+                bytes.len() - pos - 8,
+                out.len()
+            );
+            break;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if fnv1a32(payload) != crc {
+            // a bad FINAL frame is a torn append (power loss can persist
+            // the length header without all payload blocks) — recover the
+            // prefix. A bad frame with valid data beyond it is disk
+            // corruption: refuse rather than silently truncate away the
+            // records that follow.
+            if pos + 8 + len == bytes.len() {
+                crate::warn_log!(
+                    "store",
+                    "{}: checksum mismatch on final record at byte {pos} — recovered {} records",
+                    path.display(),
+                    out.len()
+                );
+                break;
+            }
+            bail!(
+                "{}: checksum mismatch at byte {pos} with {} bytes of data beyond — \
+                 corrupt segment (not a torn tail); refusing to truncate",
+                path.display(),
+                bytes.len() - (pos + 8 + len)
+            );
+        }
+        out.push(decode_payload(payload)?);
+        pos += 8 + len;
+    }
+    if pos < bytes.len() && bytes.len() - pos < 8 {
+        crate::warn_log!(
+            "store",
+            "{}: {} trailing garbage bytes ignored",
+            path.display(),
+            bytes.len() - pos
+        );
+    }
+    Ok((out, pos as u64))
+}
+
+/// Parse the legacy monolithic `XPFTPROF` snapshot (v0).
+fn parse_legacy(bytes: &[u8]) -> Result<Vec<(u64, ProfileRecord)>> {
+    let mut c = Cursor::new(bytes);
+    if c.take(8)? != LEGACY_MAGIC {
+        bail!("not a legacy profile store");
+    }
+    let count = c.u32()? as usize;
+    let mut out = Vec::new();
+    for _ in 0..count {
+        let id = c.u64()?;
+        let kind = c.u8()?;
+        let blob_len = c.u32()? as usize;
+        let blob = c.take(blob_len)?;
+        let masks = decode_mask_blob(kind, blob)?;
+        let aux = decode_aux(&mut c)?;
+        out.push((id, ProfileRecord { masks, aux }));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -316,10 +1169,27 @@ mod tests {
         }
     }
 
+    /// Single-shard store: deterministic cache behavior for unit tests.
+    fn single_shard(cache: usize) -> ProfileStore {
+        ProfileStore::with_config(StoreConfig {
+            shards: 1,
+            cache_capacity: cache,
+            ..StoreConfig::default()
+        })
+    }
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("xpeft_store_{name}_{}", std::process::id()));
+        // segmented-store tests must start from an empty directory
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn insert_lookup_weights() {
-        let mut s = ProfileStore::new(8);
-        s.insert(7, hard_rec(1));
+        let s = ProfileStore::new(8);
+        s.insert(7, hard_rec(1)).unwrap();
         assert!(s.contains(7));
         let w = s.weights(7).unwrap();
         assert_eq!(w.n, 100);
@@ -327,20 +1197,33 @@ mod tests {
     }
 
     #[test]
-    fn cache_hits_after_first_access() {
-        let mut s = ProfileStore::new(8);
-        s.insert(1, hard_rec(1));
-        s.weights(1).unwrap();
-        s.weights(1).unwrap();
+    fn cache_hits_after_first_access_and_shares_allocation() {
+        let s = single_shard(8);
+        s.insert(1, hard_rec(1)).unwrap();
+        let w1 = s.weights(1).unwrap();
+        let w2 = s.weights(1).unwrap();
+        // the hit returns the SAME allocation — no MaskWeights clone
+        assert!(Arc::ptr_eq(&w1, &w2));
         let (hits, misses, len) = s.cache_stats();
         assert_eq!((hits, misses, len), (1, 1, 1));
     }
 
     #[test]
-    fn lru_evicts_oldest() {
-        let mut s = ProfileStore::new(2);
+    fn insert_invalidates_cached_weights() {
+        let s = single_shard(8);
+        s.insert(1, hard_rec(1)).unwrap();
+        let w1 = s.weights(1).unwrap();
+        s.insert(1, hard_rec(2)).unwrap();
+        let w2 = s.weights(1).unwrap();
+        assert!(!Arc::ptr_eq(&w1, &w2), "overwrite must drop the stale cache entry");
+        assert_ne!(*w1, *w2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let s = single_shard(2);
         for id in 0..3 {
-            s.insert(id, hard_rec(id));
+            s.insert(id, hard_rec(id)).unwrap();
             s.weights(id).unwrap();
         }
         // 0 was evicted: re-access misses
@@ -351,44 +1234,101 @@ mod tests {
     }
 
     #[test]
+    fn lru_second_chance_keeps_hot_entries() {
+        let s = single_shard(2);
+        for id in 0..2 {
+            s.insert(id, hard_rec(id)).unwrap();
+            s.weights(id).unwrap();
+        }
+        // keep 0 hot; inserting 2 must evict 1, not 0
+        s.weights(0).unwrap();
+        s.insert(2, hard_rec(2)).unwrap();
+        s.weights(2).unwrap();
+        let (hits_before, _, _) = s.cache_stats();
+        s.weights(0).unwrap();
+        let (hits_after, _, _) = s.cache_stats();
+        assert_eq!(hits_after, hits_before + 1, "0 stayed cached through the eviction");
+    }
+
+    #[test]
+    fn cache_capacity_is_a_global_bound() {
+        // capacity splits across shards but the total never exceeds it
+        let s = ProfileStore::with_config(StoreConfig {
+            shards: 8,
+            cache_capacity: 5,
+            ..StoreConfig::default()
+        });
+        for id in 0..200u64 {
+            s.insert(id, hard_rec(id)).unwrap();
+            s.weights(id).unwrap();
+            let (_, _, len) = s.cache_stats();
+            assert!(len <= 5, "cached {len} > capacity 5");
+        }
+    }
+
+    #[test]
     fn byte_accounting_matches_table1() {
-        let mut s = ProfileStore::new(4);
+        let s = ProfileStore::new(4);
         for id in 0..10 {
-            s.insert(id, hard_rec(id));
+            s.insert(id, hard_rec(id)).unwrap();
         }
         // 2·⌈100/8⌉·4 = 104 bytes per profile
         assert_eq!(s.total_profile_bytes(), 10 * 104);
         assert_eq!(s.mean_profile_bytes(), 104.0);
         // soft costs 4·2·N·L bytes
         s.insert(100, ProfileRecord {
-            masks: ProfileMasks::Soft(logits(4, 100, 5).soft_weights()),
+            masks: ProfileMasks::Soft(Arc::new(logits(4, 100, 5).soft_weights())),
             aux: None,
-        });
+        })
+        .unwrap();
         assert_eq!(s.record(100).unwrap().stored_bytes(), 2 * 100 * 4 * 4);
     }
 
     #[test]
+    fn serving_state_pairs_weights_and_aux_from_one_record() {
+        let s = single_shard(8);
+        s.insert(2, ProfileRecord { masks: hard_rec(2).masks, aux: Some(Arc::new(aux())) })
+            .unwrap();
+        let (w, a) = s.serving_state(2).unwrap();
+        assert_eq!(w.n, 100);
+        // aux is the record's own allocation — same record read as the weights
+        assert!(Arc::ptr_eq(&a, s.record(2).unwrap().aux.as_ref().unwrap()));
+        // a second call hits the cache with the same weight allocation
+        let (w2, _) = s.serving_state(2).unwrap();
+        assert!(Arc::ptr_eq(&w, &w2));
+        let (hits, misses, _) = s.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+        // falls back to shared aux when the record carries none
+        s.insert(3, hard_rec(3)).unwrap();
+        assert!(s.serving_state(3).is_err());
+        s.set_shared_aux(aux());
+        assert!(s.serving_state(3).is_ok());
+    }
+
+    #[test]
     fn shared_vs_private_aux() {
-        let mut s = ProfileStore::new(4);
-        s.insert(1, hard_rec(1));
-        s.insert(2, ProfileRecord { masks: hard_rec(2).masks, aux: Some(aux()) });
+        let s = ProfileStore::new(4);
+        s.insert(1, hard_rec(1)).unwrap();
+        s.insert(2, ProfileRecord { masks: hard_rec(2).masks, aux: Some(Arc::new(aux())) })
+            .unwrap();
         assert!(s.aux(1).is_err()); // no shared yet
         s.set_shared_aux(aux());
         assert!(s.aux(1).is_ok());
-        assert_eq!(s.aux(2).unwrap(), &aux());
+        assert_eq!(*s.aux(2).unwrap(), aux());
+        // private aux is the stored allocation, not a copy
+        assert!(Arc::ptr_eq(&s.aux(2).unwrap(), s.record(2).unwrap().aux.as_ref().unwrap()));
     }
 
     #[test]
     fn save_load_roundtrip_mixed() {
-        let mut s = ProfileStore::new(4);
-        s.insert(1, hard_rec(1));
+        let s = ProfileStore::new(4);
+        s.insert(1, hard_rec(1)).unwrap();
         s.insert(2, ProfileRecord {
-            masks: ProfileMasks::Soft(logits(4, 100, 9).soft_weights()),
-            aux: Some(aux()),
-        });
-        let dir = std::env::temp_dir().join("xpeft_store_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("store.bin");
+            masks: ProfileMasks::Soft(Arc::new(logits(4, 100, 9).soft_weights())),
+            aux: Some(Arc::new(aux())),
+        })
+        .unwrap();
+        let path = tmp_dir("roundtrip").join("store.bin");
         s.save(&path).unwrap();
         let loaded = ProfileStore::load(&path, 4).unwrap();
         assert_eq!(loaded.len(), 2);
@@ -397,12 +1337,331 @@ mod tests {
         assert_eq!(loaded.record(2).unwrap().aux, s.record(2).unwrap().aux);
     }
 
+    /// Byte-level writer for the legacy v0 format (the shipped loader must
+    /// keep reading stores saved before the append-log migration).
+    fn write_legacy(recs: &[(u64, &ProfileRecord)], path: &Path) {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(LEGACY_MAGIC);
+        out.extend_from_slice(&(recs.len() as u32).to_le_bytes());
+        for (id, rec) in recs {
+            out.extend_from_slice(&id.to_le_bytes());
+            let blob = match &rec.masks {
+                ProfileMasks::Hard(h) => {
+                    out.push(0);
+                    h.to_bytes()
+                }
+                ProfileMasks::Soft(w) => {
+                    out.push(1);
+                    let mut b = Vec::new();
+                    b.extend_from_slice(&(w.layers as u32).to_le_bytes());
+                    b.extend_from_slice(&(w.n as u32).to_le_bytes());
+                    for x in w.a.iter().chain(&w.b) {
+                        b.extend_from_slice(&x.to_le_bytes());
+                    }
+                    b
+                }
+            };
+            out.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+            out.extend_from_slice(&blob);
+            match &rec.aux {
+                None => out.push(0),
+                Some(a) => {
+                    out.push(1);
+                    for sect in [&a.ln_scale, &a.ln_bias, &a.head_w, &a.head_b] {
+                        out.extend_from_slice(&(sect.len() as u32).to_le_bytes());
+                        for x in sect.iter() {
+                            out.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        std::fs::write(path, out).unwrap();
+    }
+
+    #[test]
+    fn legacy_xpftprof_files_still_load() {
+        let rec1 = hard_rec(3);
+        let rec2 = ProfileRecord {
+            masks: ProfileMasks::Soft(Arc::new(logits(2, 40, 4).soft_weights())),
+            aux: Some(Arc::new(aux())),
+        };
+        let path = tmp_dir("legacy").join("legacy.bin");
+        write_legacy(&[(10, &rec1), (11, &rec2)], &path);
+        let loaded = ProfileStore::load(&path, 4).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.record(10).unwrap().masks, rec1.masks);
+        assert_eq!(loaded.record(11).unwrap().masks, rec2.masks);
+        assert_eq!(loaded.record(11).unwrap().aux, rec2.aux);
+    }
+
+    #[test]
+    fn truncated_log_recovers_complete_records() {
+        let s = ProfileStore::new(4);
+        for id in 0..5 {
+            s.insert(id, hard_rec(id)).unwrap();
+        }
+        let path = tmp_dir("trunc").join("store.bin");
+        s.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut mid-way through the last record's payload
+        let cut = full.len() - 30;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let loaded = ProfileStore::load(&path, 4).unwrap();
+        assert_eq!(loaded.len(), 4, "all complete records survive the torn tail");
+        for id in loaded.ids() {
+            assert_eq!(loaded.record(id).unwrap().masks, s.record(id).unwrap().masks);
+        }
+    }
+
+    #[test]
+    fn corrupted_final_record_recovers_prefix_but_midfile_corruption_errors() {
+        let s = ProfileStore::new(4);
+        for id in 0..3 {
+            s.insert(id, hard_rec(id)).unwrap();
+        }
+        let path = tmp_dir("crc").join("store.bin");
+        s.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // a bad FINAL record is indistinguishable from a torn append
+        // (power loss): recover everything before it
+        let mut bytes = good.clone();
+        let idx = bytes.len() - 10;
+        bytes[idx] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let loaded = ProfileStore::load(&path, 4).unwrap();
+        assert_eq!(loaded.len(), 2);
+        // a bad MIDDLE record with valid data beyond it is disk
+        // corruption: refuse, never silently drop the records after it
+        let mut bytes = good;
+        let second_record_payload = 8 + 142 + 10; // magic + frame 1 + into frame 2
+        bytes[second_record_payload] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ProfileStore::load(&path, 4).is_err());
+    }
+
+    #[test]
+    fn hostile_headers_error_instead_of_aborting() {
+        let dir = tmp_dir("hostile");
+        // legacy: count claims 4B entries
+        let p1 = dir.join("huge_count.bin");
+        let mut b = LEGACY_MAGIC.to_vec();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p1, &b).unwrap();
+        assert!(ProfileStore::load(&p1, 4).is_err());
+        // log: frame claims a huge payload — trailing-garbage tolerance
+        // means it loads as an EMPTY store, not an abort
+        let p2 = dir.join("huge_frame.bin");
+        let mut b = LOG_MAGIC.to_vec();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p2, &b).unwrap();
+        assert_eq!(ProfileStore::load(&p2, 4).unwrap().len(), 0);
+        // legacy: soft mask with overflowing layers×n dims
+        let p3 = dir.join("overflow_dims.bin");
+        let mut b = LEGACY_MAGIC.to_vec();
+        b.extend_from_slice(&1u32.to_le_bytes()); // count
+        b.extend_from_slice(&7u64.to_le_bytes()); // id
+        b.push(1); // soft
+        b.extend_from_slice(&8u32.to_le_bytes()); // blob_len
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // layers
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // n
+        std::fs::write(&p3, &b).unwrap();
+        assert!(ProfileStore::load(&p3, 4).is_err());
+        // legacy: aux section length far beyond the file
+        let p4 = dir.join("huge_aux.bin");
+        let rec = hard_rec(1);
+        write_legacy(&[(1, &rec)], &p4);
+        let mut b = std::fs::read(&p4).unwrap();
+        let aux_flag = b.len() - 1;
+        b[aux_flag] = 1;
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p4, &b).unwrap();
+        assert!(ProfileStore::load(&p4, 4).is_err());
+    }
+
     #[test]
     fn load_rejects_garbage() {
-        let dir = std::env::temp_dir().join("xpeft_store_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.bin");
+        let path = tmp_dir("garbage").join("bad.bin");
         std::fs::write(&path, b"XPFTPROF\xff\xff\xff\xff").unwrap();
         assert!(ProfileStore::load(&path, 4).is_err());
+        std::fs::write(&path, b"notmagic").unwrap();
+        assert!(ProfileStore::load(&path, 4).is_err());
+    }
+
+    #[test]
+    fn segmented_append_does_not_rewrite_prior_records() {
+        let dir = tmp_dir("seg_append");
+        let cfg = StoreConfig { shards: 2, ..StoreConfig::default() };
+        let (seg_sizes, rec2_frame) = {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            s.insert(1, hard_rec(1)).unwrap();
+            let sizes: Vec<u64> = (0..2)
+                .map(|i| {
+                    std::fs::metadata(dir.join(format!("shard-{i:04}.log")))
+                        .unwrap()
+                        .len()
+                })
+                .collect();
+            let mut frame = Vec::new();
+            encode_record(2, &hard_rec(2), &mut frame);
+            s.insert(2, hard_rec(2)).unwrap();
+            (sizes, frame.len() as u64)
+        };
+        // exactly ONE shard grew, by exactly one record's frame
+        let new_sizes: Vec<u64> = (0..2)
+            .map(|i| {
+                std::fs::metadata(dir.join(format!("shard-{i:04}.log")))
+                    .unwrap()
+                    .len()
+            })
+            .collect();
+        let grown: Vec<u64> = new_sizes
+            .iter()
+            .zip(&seg_sizes)
+            .map(|(n, o)| n - o)
+            .collect();
+        assert_eq!(grown.iter().sum::<u64>(), rec2_frame);
+        assert_eq!(grown.iter().filter(|&&g| g > 0).count(), 1);
+        // reopen: both profiles recovered
+        let s = ProfileStore::open(&dir, cfg).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(1) && s.contains(2));
+    }
+
+    #[test]
+    fn segmented_reopen_preserves_overwrites_and_compaction_reclaims() {
+        let dir = tmp_dir("seg_compact");
+        let cfg = StoreConfig {
+            shards: 1,
+            compact_min_dead: usize::MAX, // no auto-compact: we drive it
+            ..StoreConfig::default()
+        };
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            for seed in 0..4 {
+                s.insert(9, hard_rec(seed)).unwrap(); // 3 dead records
+            }
+            s.insert(10, hard_rec(10)).unwrap();
+        }
+        let seg = dir.join("shard-0000.log");
+        let before = std::fs::metadata(&seg).unwrap().len();
+        let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.record(9).unwrap().masks, hard_rec(3).masks, "last write wins");
+        assert_eq!(s.stats().log_dead, 3);
+        assert_eq!(s.compact().unwrap(), 3);
+        assert!(std::fs::metadata(&seg).unwrap().len() < before);
+        assert_eq!(s.stats().log_dead, 0);
+        // compacted store still loads
+        drop(s);
+        let s = ProfileStore::open(&dir, cfg).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.record(9).unwrap().masks, hard_rec(3).masks);
+    }
+
+    #[test]
+    fn open_refuses_segments_without_meta() {
+        // shard segments whose shard count is unknown must not be guessed
+        // at — rehashing ids over a different count silently strands them
+        let dir = tmp_dir("seg_nometa");
+        let cfg = StoreConfig { shards: 2, ..StoreConfig::default() };
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            s.insert(1, hard_rec(1)).unwrap();
+        }
+        std::fs::remove_file(dir.join("store.meta")).unwrap();
+        assert!(ProfileStore::open(&dir, cfg).is_err());
+    }
+
+    #[test]
+    fn open_reinitializes_stub_segment_from_crash_before_magic() {
+        let dir = tmp_dir("seg_stub");
+        let cfg = StoreConfig { shards: 2, ..StoreConfig::default() };
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            s.insert(1, hard_rec(1)).unwrap();
+        }
+        // crash between creating a segment and writing its magic leaves a
+        // stub: fake one in the shard that holds no records (len == magic)
+        let victim = (0..2)
+            .map(|i| dir.join(format!("shard-{i:04}.log")))
+            .find(|p| std::fs::metadata(p).unwrap().len() == 8)
+            .expect("one shard holds no records");
+        std::fs::write(&victim, b"XPF").unwrap();
+        // the whole store must still open; healthy segments keep their data
+        let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(1));
+        // and the re-initialized stub accepts appends again
+        s.insert(2, hard_rec(2)).unwrap();
+        drop(s);
+        let s = ProfileStore::open(&dir, cfg).unwrap();
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn open_truncates_torn_tail_so_later_appends_survive_recovery() {
+        let dir = tmp_dir("seg_torn");
+        let cfg = StoreConfig { shards: 1, ..StoreConfig::default() };
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            s.insert(1, hard_rec(1)).unwrap();
+        }
+        // simulate a crash mid-append: a torn frame at the segment tail
+        let seg = dir.join("shard-0000.log");
+        let mut bytes = std::fs::read(&seg).unwrap();
+        bytes.extend_from_slice(&[0x7f; 21]);
+        std::fs::write(&seg, &bytes).unwrap();
+        // reopen must truncate the torn tail, so this append lands at a
+        // recoverable offset
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            assert_eq!(s.len(), 1);
+            s.insert(2, hard_rec(2)).unwrap();
+        }
+        let s = ProfileStore::open(&dir, cfg).unwrap();
+        assert_eq!(s.len(), 2, "record appended after recovery is not hidden by garbage");
+        assert!(s.contains(1) && s.contains(2));
+    }
+
+    #[test]
+    fn auto_compaction_triggers_on_dead_ratio() {
+        let dir = tmp_dir("seg_auto");
+        let cfg = StoreConfig {
+            shards: 1,
+            compact_min_dead: 4,
+            compact_dead_ratio: 1.0,
+            ..StoreConfig::default()
+        };
+        let s = ProfileStore::open(&dir, cfg).unwrap();
+        for seed in 0..10 {
+            s.insert(1, hard_rec(seed)).unwrap();
+        }
+        let st = s.stats();
+        assert!(st.compactions >= 1, "repeated overwrites must trigger compaction");
+        assert!(st.log_dead < 9, "compaction reclaimed dead records");
+        // and the data is intact
+        assert_eq!(s.record(1).unwrap().masks, hard_rec(9).masks);
+    }
+
+    #[test]
+    fn stats_cover_all_shards() {
+        let s = ProfileStore::with_config(StoreConfig {
+            shards: 4,
+            cache_capacity: 16,
+            ..StoreConfig::default()
+        });
+        for id in 0..40 {
+            s.insert(id, hard_rec(id)).unwrap();
+            s.weights(id).unwrap();
+        }
+        let st = s.stats();
+        assert_eq!(st.shards, 4);
+        assert_eq!(st.per_shard.len(), 4);
+        assert_eq!(st.profiles, 40);
+        assert_eq!(st.per_shard.iter().map(|p| p.profiles).sum::<usize>(), 40);
+        assert!(st.hottest_shard_profiles >= 10);
+        assert_eq!(st.cache_misses, 40);
     }
 }

@@ -1,12 +1,25 @@
 //! Training-job scheduler: each *new profile* entering the system gets a
 //! mask-tuning job against the shared frozen bank (paper §3: "each new
 //! incoming profile is designed to reuse and adaptively select them").
-//! Jobs run on a dedicated worker thread; finished masks land in the
-//! profile store, byte-level and ready to serve.
+//!
+//! Jobs are independent (distinct profiles, shared frozen inputs), so the
+//! dispatcher fans each ready wave out over the process worker pool
+//! (`util::threadpool`) instead of running one serial worker thread:
+//! concurrent tuning jobs are the training side's natural parallel axis,
+//! mirroring how the serving executor fans concurrent profile batches. A
+//! lone job still parallelizes *inside* its train steps (nested pool
+//! regions run serial, so a wave of W jobs uses the pool at the job level
+//! and each job's numerics stay deterministic).
+//!
+//! Finished masks land in the (sharded, lock-free-read) profile store,
+//! byte-level and ready to serve; in persistent mode each commit appends
+//! one ~100-byte record to the owning shard's log. Completion is signaled
+//! on a `Condvar`, so `wait_all` wakes the moment the last job finishes
+//! rather than sleep-polling.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
@@ -27,6 +40,12 @@ pub enum JobStatus {
     Failed(String),
 }
 
+impl JobStatus {
+    fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done { .. } | JobStatus::Failed(_))
+    }
+}
+
 pub struct TrainJob {
     pub profile_id: u64,
     pub dataset: Dataset,
@@ -40,9 +59,26 @@ enum Msg {
     Shutdown,
 }
 
+/// Status table + completion signal shared between the dispatcher, the
+/// pool tasks, and `wait_all` callers.
+struct StatusBoard {
+    statuses: Mutex<HashMap<u64, JobStatus>>,
+    done_cv: Condvar,
+}
+
+impl StatusBoard {
+    fn set(&self, profile_id: u64, status: JobStatus) {
+        let terminal = status.is_terminal();
+        self.statuses.lock().unwrap().insert(profile_id, status);
+        if terminal {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
 pub struct Scheduler {
     tx: mpsc::Sender<Msg>,
-    statuses: Arc<Mutex<HashMap<u64, JobStatus>>>,
+    board: Arc<StatusBoard>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -50,51 +86,70 @@ impl Scheduler {
     pub fn start(
         engine: Arc<Engine>,
         bank: Arc<AdapterBank>,
-        store: Arc<Mutex<ProfileStore>>,
+        store: Arc<ProfileStore>,
         plm_seed: u64,
     ) -> Scheduler {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let statuses: Arc<Mutex<HashMap<u64, JobStatus>>> = Arc::default();
-        let st = statuses.clone();
-        let handle = std::thread::spawn(move || {
-            while let Ok(Msg::Job(job)) = rx.recv() {
-                let pid = job.profile_id;
-                st.lock().unwrap().insert(pid, JobStatus::Running);
-                match run_job(&engine, &bank, &store, &job, plm_seed) {
-                    Ok((final_loss, steps, wallclock_s)) => {
-                        st.lock().unwrap().insert(
-                            pid,
-                            JobStatus::Done { final_loss, steps, wallclock_s },
-                        );
-                    }
-                    Err(e) => {
-                        st.lock().unwrap().insert(pid, JobStatus::Failed(format!("{e:#}")));
-                    }
+        let board = Arc::new(StatusBoard {
+            statuses: Mutex::new(HashMap::new()),
+            done_cv: Condvar::new(),
+        });
+        let bd = board.clone();
+        let handle = std::thread::spawn(move || loop {
+            // block for the first job of a wave, then drain whatever else
+            // is already queued so independent jobs run concurrently
+            let first = match rx.recv() {
+                Ok(Msg::Job(job)) => job,
+                Ok(Msg::Shutdown) | Err(_) => return,
+            };
+            let mut wave = vec![first];
+            let mut shutdown = false;
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Msg::Job(job) => wave.push(job),
+                    Msg::Shutdown => shutdown = true,
                 }
             }
+            crate::util::threadpool::run(wave.len(), |i| {
+                let job = &wave[i];
+                let pid = job.profile_id;
+                bd.set(pid, JobStatus::Running);
+                match run_job(&engine, &bank, &store, job, plm_seed) {
+                    Ok((final_loss, steps, wallclock_s)) => {
+                        bd.set(pid, JobStatus::Done { final_loss, steps, wallclock_s });
+                    }
+                    Err(e) => {
+                        bd.set(pid, JobStatus::Failed(format!("{e:#}")));
+                    }
+                }
+            });
+            if shutdown {
+                return;
+            }
         });
-        Scheduler { tx, statuses, handle: Some(handle) }
+        Scheduler { tx, board, handle: Some(handle) }
     }
 
     pub fn submit(&self, job: TrainJob) -> Result<()> {
-        self.statuses.lock().unwrap().insert(job.profile_id, JobStatus::Queued);
+        self.board
+            .statuses
+            .lock()
+            .unwrap()
+            .insert(job.profile_id, JobStatus::Queued);
         self.tx.send(Msg::Job(job)).context("scheduler worker gone")
     }
 
     pub fn status(&self, profile_id: u64) -> Option<JobStatus> {
-        self.statuses.lock().unwrap().get(&profile_id).cloned()
+        self.board.statuses.lock().unwrap().get(&profile_id).cloned()
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished. Wakes on the
+    /// completion `Condvar` — returns as soon as the last job's status
+    /// turns terminal, no polling interval.
     pub fn wait_all(&self) {
-        loop {
-            {
-                let st = self.statuses.lock().unwrap();
-                if st.values().all(|s| matches!(s, JobStatus::Done { .. } | JobStatus::Failed(_))) {
-                    return;
-                }
-            }
-            std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut st = self.board.statuses.lock().unwrap();
+        while !st.values().all(JobStatus::is_terminal) {
+            st = self.board.done_cv.wait(st).unwrap();
         }
     }
 
@@ -119,7 +174,7 @@ impl Drop for Scheduler {
 pub fn run_job(
     engine: &Engine,
     bank: &AdapterBank,
-    store: &Mutex<ProfileStore>,
+    store: &ProfileStore,
     job: &TrainJob,
     plm_seed: u64,
 ) -> Result<(f32, usize, f64)> {
@@ -128,19 +183,16 @@ pub fn run_job(
         train::train_profile(engine, &job.cfg, &job.dataset, Some(bank), plm_seed)?;
     let masks = trainer.profile_masks(job.cfg.mode, mc.layers, job.cfg.n, job.cfg.k)?;
     let aux = if job.keep_aux {
-        Some(AuxParams {
+        Some(Arc::new(AuxParams {
             ln_scale: trainer.state.get("ln_scale")?.to_vec(),
             ln_bias: trainer.state.get("ln_bias")?.to_vec(),
             head_w: trainer.state.get("head_w")?.to_vec(),
             head_b: trainer.state.get("head_b")?.to_vec(),
-        })
+        }))
     } else {
         None
     };
-    store
-        .lock()
-        .unwrap()
-        .insert(job.profile_id, ProfileRecord { masks, aux });
+    store.insert(job.profile_id, ProfileRecord { masks, aux })?;
     let final_loss = *outcome.losses.last().unwrap_or(&f32::NAN);
     info!(
         "scheduler",

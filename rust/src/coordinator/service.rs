@@ -1,9 +1,14 @@
 //! The serving service: ingress → per-profile dynamic batching →
 //! backend-generic eval execution → responses, on plain threads + channels
-//! (tokio is not available offline; the request path is allocation-light
-//! and lock scope is one profile-store lookup per batch). Which backend
-//! runs the forward (native gather-GEMM kernels by default, PJRT under the
-//! `pjrt` feature) is the engine's concern — this module never sees it.
+//! (tokio is not available offline; the request path is allocation-light).
+//! Which backend runs the forward (native gather-GEMM kernels by default,
+//! PJRT under the `pjrt` feature) is the engine's concern — this module
+//! never sees it.
+//!
+//! Profile state comes from the lock-striped sharded `ProfileStore`: the
+//! per-batch weight lookup takes a *shared* lock on one shard and returns
+//! `Arc<MaskWeights>` / `Arc<AuxParams>` — no mask-tensor clone, and no
+//! global lock contended with the scheduler's inserts.
 //!
 //! When several profile batches are ready at once, the executor fans them
 //! out over the process worker pool (`util::threadpool`) — concurrent
@@ -13,7 +18,7 @@
 //!
 //! Request path (never touches python):
 //!   submit(text) → tokenize → DynamicBatcher (group by profile)
-//!   → executor: profile-store weight lookup (LRU) + eval program
+//!   → executor: sharded-store weight lookup (per-shard LRU) + eval program
 //!   → Response {prediction, latency}
 
 use std::sync::mpsc;
@@ -51,6 +56,7 @@ pub struct Service {
     tx: mpsc::Sender<Ingress>,
     rx_out: Mutex<mpsc::Receiver<Response>>,
     telemetry: Arc<Telemetry>,
+    store: Arc<ProfileStore>,
     tokenizer: Tokenizer,
     seq: usize,
     next_id: Mutex<u64>,
@@ -61,7 +67,7 @@ impl Service {
     /// Start the serving loop for one (head, N) deployment.
     pub fn start(
         engine: Arc<Engine>,
-        store: Arc<Mutex<ProfileStore>>,
+        store: Arc<ProfileStore>,
         bank: Arc<AdapterBank>,
         cfg: ServeConfig,
         num_classes: usize,
@@ -74,6 +80,7 @@ impl Service {
         let (tx, rx_in) = mpsc::channel::<Ingress>();
         let (tx_out, rx_out) = mpsc::channel::<Response>();
         let tel = telemetry.clone();
+        let st = store.clone();
         let batch_cap = cfg.max_batch.min(mc.batch);
         let deadline = Duration::from_micros(cfg.batch_deadline_us);
         let seq = mc.seq;
@@ -125,7 +132,7 @@ impl Service {
                     let tx_shared = Mutex::new(tx_out.clone());
                     crate::util::threadpool::run(ready.len(), |i| {
                         let responses = Self::execute(
-                            &evaluator, &store, &tel, &ready[i], bsz, seq, num_classes,
+                            &evaluator, &st, &tel, &ready[i], bsz, seq, num_classes,
                         );
                         let tx = tx_shared.lock().unwrap();
                         for resp in responses {
@@ -141,6 +148,7 @@ impl Service {
             tx,
             rx_out: Mutex::new(rx_out),
             telemetry,
+            store,
             tokenizer: Tokenizer::new(mc.vocab),
             seq,
             next_id: Mutex::new(0),
@@ -150,11 +158,12 @@ impl Service {
 
     /// Run one profile batch to completion and return its responses (the
     /// caller records latency telemetry and sends them — `execute` may run
-    /// on any pool thread).
+    /// on any pool thread). The store lookups are shared-lock reads of one
+    /// shard; the weight `Arc` is served straight out of the shard cache.
     #[allow(clippy::too_many_arguments)]
     fn execute(
         evaluator: &Evaluator,
-        store: &Mutex<ProfileStore>,
+        store: &ProfileStore,
         tel: &Telemetry,
         pb: &ProfileBatch,
         bsz: usize,
@@ -162,30 +171,35 @@ impl Service {
         num_classes: usize,
     ) -> Vec<Response> {
         tel.record_batch(pb.requests.len());
-        // profile state lookup (one lock scope)
-        let (weights, state) = {
-            let mut st = store.lock().unwrap();
-            let w = match st.weights(pb.profile_id) {
-                Ok(w) => w,
-                // unknown profile: drop (responses time out)
-                Err(_) => return Vec::new(),
-            };
-            let aux = match st.aux(pb.profile_id) {
-                Ok(a) => a.clone(),
-                Err(_) => return Vec::new(),
-            };
-            let state = TrainState {
-                names: vec![
-                    "head_b".into(),
-                    "head_w".into(),
-                    "ln_bias".into(),
-                    "ln_scale".into(),
-                ],
-                trainable: vec![aux.head_b, aux.head_w, aux.ln_bias, aux.ln_scale],
-                opt_m: vec![],
-                opt_v: vec![],
-            };
-            (w, state)
+        // profile state lookup: one consistent (weights, aux) pair from a
+        // single record read — shared handles, no mask clone, and a
+        // concurrent re-tune can't tear the pair
+        let (weights, aux) = match store.serving_state(pb.profile_id) {
+            Ok(pair) => pair,
+            // unknown profile / missing aux: drop (responses time out)
+            Err(_) => return Vec::new(),
+        };
+        // TrainState owns Vec<f32>s, so the aux tensors are copied here —
+        // a few KB (head + LN affine) that the executor would clone into
+        // program inputs anyway; the per-batch win lives in the mask
+        // tensors (2NL floats), which stay behind the shared Arc. An
+        // Arc-backed TrainState would shave this too, but that reshapes
+        // the train/runtime layer and isn't worth it for serving.
+        let state = TrainState {
+            names: vec![
+                "head_b".into(),
+                "head_w".into(),
+                "ln_bias".into(),
+                "ln_scale".into(),
+            ],
+            trainable: vec![
+                aux.head_b.clone(),
+                aux.head_w.clone(),
+                aux.ln_bias.clone(),
+                aux.ln_scale.clone(),
+            ],
+            opt_m: vec![],
+            opt_v: vec![],
         };
         // assemble the fixed-shape executor batch
         let mut batch = Batch {
@@ -207,7 +221,7 @@ impl Service {
             batch.tokens[row * seq] = CLS as i32;
             batch.pad_mask[row * seq] = 1.0;
         }
-        let logits = match evaluator.forward(&state, Some(&weights), &batch) {
+        let logits = match evaluator.forward(&state, Some(weights.as_ref()), &batch) {
             Ok(l) => l,
             Err(e) => {
                 crate::warn_log!("service", "eval failed for profile {}: {e:#}", pb.profile_id);
@@ -255,16 +269,16 @@ impl Service {
     }
 
     pub fn telemetry(&self) -> Snapshot {
-        self.telemetry.snapshot()
+        self.telemetry.snapshot_with_store(&self.store)
     }
 
-    /// Drain and stop. Returns final telemetry.
+    /// Drain and stop. Returns final telemetry (including store stats).
     pub fn shutdown(mut self) -> Snapshot {
         let _ = self.tx.send(Ingress::Shutdown);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
-        self.telemetry.snapshot()
+        self.telemetry.snapshot_with_store(&self.store)
     }
 }
 

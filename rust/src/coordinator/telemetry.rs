@@ -1,10 +1,15 @@
 //! Serving telemetry: atomic counters + latency histogram, reported by the
-//! service and the benches (criterion is unavailable offline).
+//! service and the benches (criterion is unavailable offline). Snapshots
+//! taken through a live [`Service`](crate::coordinator::Service) also carry
+//! the profile store's per-shard stats (hit/miss/eviction counters, shard
+//! occupancy, append-log liveness) so operators can see cache health and
+//! hash balance next to the latency quantiles.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::profile_store::{ProfileStore, StoreStats};
 use crate::util::stats;
 
 #[derive(Default)]
@@ -27,6 +32,9 @@ pub struct Snapshot {
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
     pub p99_latency_us: f64,
+    /// Profile-store shard/cache stats (None for bare `Telemetry::snapshot`,
+    /// filled by `Service` snapshots which hold the store).
+    pub store: Option<StoreStats>,
 }
 
 impl Telemetry {
@@ -64,7 +72,15 @@ impl Telemetry {
             p50_latency_us: stats::quantile(&lat, 0.5),
             p95_latency_us: stats::quantile(&lat, 0.95),
             p99_latency_us: stats::quantile(&lat, 0.99),
+            store: None,
         }
+    }
+
+    /// Snapshot with the profile store's per-shard stats attached.
+    pub fn snapshot_with_store(&self, store: &ProfileStore) -> Snapshot {
+        let mut s = self.snapshot();
+        s.store = Some(store.stats());
+        s
     }
 }
 
@@ -95,5 +111,27 @@ mod tests {
         let s = Telemetry::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_latency_us, 0.0);
+        assert!(s.store.is_none());
+    }
+
+    #[test]
+    fn store_stats_attach_to_snapshot() {
+        use crate::coordinator::profile_store::{ProfileRecord, ProfileStore};
+        use crate::masks::{MaskLogits, ProfileMasks};
+        use crate::util::rng::Rng;
+
+        let store = ProfileStore::new(8);
+        let mut r = Rng::new(1);
+        let logits =
+            MaskLogits { layers: 2, n: 32, a: r.normal_vec(64, 1.0), b: r.normal_vec(64, 1.0) };
+        store
+            .insert(5, ProfileRecord { masks: ProfileMasks::Hard(logits.binarize(8)), aux: None })
+            .unwrap();
+        store.weights(5).unwrap();
+        let s = Telemetry::new().snapshot_with_store(&store);
+        let st = s.store.unwrap();
+        assert_eq!(st.profiles, 1);
+        assert_eq!(st.cache_misses, 1);
+        assert_eq!(st.per_shard.len(), st.shards);
     }
 }

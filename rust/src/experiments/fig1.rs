@@ -40,7 +40,7 @@ pub fn run(args: &Args) -> Result<()> {
 
     // measured series from a live profile store (tiny dims, N=150, k=50)
     let tiny = Dims { d: 64, b: 8, layers: 4 };
-    let mut store = ProfileStore::new(16);
+    let store = ProfileStore::new(16);
     let mut measured = Vec::new();
     let mut rng = Rng::new(7);
     for pid in 0..1000u64 {
@@ -53,7 +53,7 @@ pub fn run(args: &Args) -> Result<()> {
         store.insert(pid, ProfileRecord {
             masks: ProfileMasks::Hard(logits.binarize(50)),
             aux: None,
-        });
+        })?;
         if [1, 10, 100, 1000].contains(&(pid + 1)) {
             let mut row = Json::obj();
             row.set("profiles", Json::Num((pid + 1) as f64));

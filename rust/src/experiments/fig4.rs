@@ -10,7 +10,7 @@
 //! `--profiles 24 --bank-n 150 --warm-profiles 12` so the full figure runs
 //! in minutes on one CPU core; pass paper-scale values to go bigger.
 
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -79,7 +79,7 @@ pub fn run(args: &Args) -> Result<()> {
     println!("{:<24} {:>8} {:>8}", "setting", "acc", "f1");
 
     for (label, mode, bank) in settings {
-        let store = Mutex::new(ProfileStore::new(1024));
+        let store = ProfileStore::new(1024);
         let mut accs = Vec::new();
         let mut f1s = Vec::new();
         // warm settings tune masks only for the remaining authors (paper:
@@ -119,18 +119,18 @@ pub fn run(args: &Args) -> Result<()> {
             accs.push(metrics::accuracy(&pv, &lv));
             f1s.push(metrics::f1_macro(&pv, &lv, CATEGORIES));
             // persist the profile into the store (masks + its aux)
-            store.lock().unwrap().insert(
+            store.insert(
                 p.author_id as u64,
                 ProfileRecord {
                     masks: trainer.profile_masks(mode, mc.layers, bank_n, k)?,
-                    aux: Some(AuxParams {
+                    aux: Some(Arc::new(AuxParams {
                         ln_scale: trainer.state.get("ln_scale")?.to_vec(),
                         ln_bias: trainer.state.get("ln_bias")?.to_vec(),
                         head_w: trainer.state.get("head_w")?.to_vec(),
                         head_b: trainer.state.get("head_b")?.to_vec(),
-                    }),
+                    })),
                 },
-            );
+            )?;
         }
         let acc = stats::mean(&accs);
         let f1 = stats::mean(&f1s);
@@ -143,7 +143,6 @@ pub fn run(args: &Args) -> Result<()> {
         summary_rows.push(row);
 
         // persist the store for fig3/fig6/serving
-        let store = store.into_inner().unwrap();
         let fname = format!(
             "lamp_store_{}.bin",
             label.replace([' ', '(', ')'], "_").replace("__", "_")

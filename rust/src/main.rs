@@ -7,7 +7,7 @@
 //!   bench              quick micro-bench suite (full suites: cargo bench)
 //!   info               show artifact/manifest inventory
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -68,7 +68,10 @@ COMMANDS
   train-profile     tune one profile: --task sst2 --mode soft|hard|sa|ho
                     --n 100 --k 50 --steps 300 --lr 0.02 --seed 42
   serve             multi-profile serving demo: --profiles 8 --requests 256
-                    --max-batch 16 --deadline-us 2000
+                    --max-batch 16 --deadline-us 2000 --shards 64
+                    --mask-cache 4096 --store-dir DIR (persist profiles as
+                    per-shard append logs; tuned profiles append ~142 B
+                    each) --compact-min-dead 1024 --compact-ratio 0.5
   info              artifact inventory from artifacts/manifest.json
   bench             quick micro-bench suite (full: cargo bench)
 
@@ -159,7 +162,15 @@ fn serve(args: &Args) -> Result<()> {
         args.get_str("artifacts", "artifacts"),
     ))?);
     let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, env.seed));
-    let store = Arc::new(Mutex::new(ProfileStore::new(serve_cfg.mask_cache)));
+    // lock-striped sharded store: --shards / --mask-cache / compaction
+    // knobs; --store-dir switches on segmented append-log persistence
+    // (each tuned profile appends one record; reruns recover the store)
+    let store = Arc::new(match args.get("store-dir") {
+        Some(dir) => {
+            ProfileStore::open(std::path::Path::new(dir), serve_cfg.store_config())?
+        }
+        None => ProfileStore::with_config(serve_cfg.store_config()),
+    });
 
     // 1) tune profiles through the scheduler (the "new profile" path)
     let corpus = lamp::generate(profiles, mc.seq, mc.vocab, env.seed, 12, 80);
@@ -186,15 +197,13 @@ fn serve(args: &Args) -> Result<()> {
     }
     info!("serve", "tuning {profiles} profiles ({steps} steps each)…");
     scheduler.wait_all();
-    {
-        let st = store.lock().unwrap();
-        info!(
-            "serve",
-            "profile store ready: {} profiles, {:.0} B/profile (masks)",
-            st.len(),
-            st.mean_profile_bytes()
-        );
-    }
+    info!(
+        "serve",
+        "profile store ready: {} profiles over {} shards, {:.0} B/profile (masks)",
+        store.len(),
+        store.shard_count(),
+        store.mean_profile_bytes()
+    );
 
     // 2) serve a request stream drawn from the corpus
     let svc = Service::start(engine, store, bank, serve_cfg, lamp::CATEGORIES, env.plm_seed)?;
@@ -240,6 +249,16 @@ fn serve(args: &Args) -> Result<()> {
     println!("  latency p95     {:.1} ms", snap.p95_latency_us / 1e3);
     println!("  latency p99     {:.1} ms", snap.p99_latency_us / 1e3);
     println!("  online accuracy {:.3}", correct as f64 / received as f64);
+    if let Some(st) = &snap.store {
+        let total = st.cache_hits + st.cache_misses;
+        println!(
+            "  store           {} profiles / {} shards (hottest {}), cache hit rate {:.2}",
+            st.profiles,
+            st.shards,
+            st.hottest_shard_profiles,
+            if total > 0 { st.cache_hits as f64 / total as f64 } else { 0.0 }
+        );
+    }
     Ok(())
 }
 
@@ -264,7 +283,7 @@ fn quick_bench(args: &Args) -> Result<()> {
     suite.add(Bench::default().run("pack to bytes", || hard.to_bytes()));
 
     // store lookup at scale
-    let mut store = ProfileStore::new(1024);
+    let store = ProfileStore::new(1024);
     for pid in 0..10_000u64 {
         store.insert(
             pid,
@@ -272,7 +291,7 @@ fn quick_bench(args: &Args) -> Result<()> {
                 masks: xpeft::masks::ProfileMasks::Hard(logits.binarize(50)),
                 aux: None,
             },
-        );
+        )?;
     }
     let mut i = 0u64;
     suite.add(Bench::default().with_items(1).run("profile store lookup (10k profiles)", || {

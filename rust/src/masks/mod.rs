@@ -8,6 +8,8 @@
 
 pub mod accounting;
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 /// One profile's mask pair in trainable (logit) form.
@@ -151,10 +153,14 @@ impl HardMask {
 }
 
 /// A profile's persisted mask state: the two storage classes of Table 1.
+///
+/// Soft weights are held behind an `Arc` so the serving path can hand out
+/// shared views of the exact stored tensor without copying 2NL floats per
+/// batch (see [`ProfileMasks::to_weights_shared`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ProfileMasks {
     /// `2NL` f32 = `2·N·L·4` bytes.
-    Soft(MaskWeights),
+    Soft(Arc<MaskWeights>),
     /// `2·⌈N/8⌉·L` bytes.
     Hard(HardMask),
 }
@@ -169,8 +175,19 @@ impl ProfileMasks {
 
     pub fn to_weights(&self) -> MaskWeights {
         match self {
-            ProfileMasks::Soft(w) => w.clone(),
+            ProfileMasks::Soft(w) => (**w).clone(),
             ProfileMasks::Hard(h) => h.to_weights(),
+        }
+    }
+
+    /// Serving-path view: a shared handle to this profile's unpacked
+    /// weights. Soft profiles share their stored tensor (zero copy); hard
+    /// profiles unpack once into a fresh `Arc` (the profile-store LRU keeps
+    /// that allocation alive across batches).
+    pub fn to_weights_shared(&self) -> Arc<MaskWeights> {
+        match self {
+            ProfileMasks::Soft(w) => Arc::clone(w),
+            ProfileMasks::Hard(h) => Arc::new(h.to_weights()),
         }
     }
 
@@ -399,11 +416,21 @@ mod tests {
     #[test]
     fn profile_masks_stored_bytes() {
         let m = random_logits(12, 100, 9);
-        let soft = ProfileMasks::Soft(m.soft_weights());
+        let soft = ProfileMasks::Soft(Arc::new(m.soft_weights()));
         let hard = ProfileMasks::Hard(m.binarize(50));
         // Table 1, N=100, L=12: soft 2·100·12·4 = 9.6KB; hard 2·13·12 = 312B.
         assert_eq!(soft.stored_bytes(), 9600);
         assert_eq!(hard.stored_bytes(), 312);
+    }
+
+    #[test]
+    fn shared_weights_view_is_zero_copy_for_soft() {
+        let m = random_logits(3, 64, 11);
+        let soft = ProfileMasks::Soft(Arc::new(m.soft_weights()));
+        let (w1, w2) = (soft.to_weights_shared(), soft.to_weights_shared());
+        assert!(Arc::ptr_eq(&w1, &w2), "soft view shares the stored tensor");
+        let hard = ProfileMasks::Hard(m.binarize(16));
+        assert_eq!(*hard.to_weights_shared(), hard.to_weights());
     }
 
     #[test]

@@ -259,7 +259,7 @@ impl<'e> Trainer<'e> {
         Ok(if mode.is_hard() {
             ProfileMasks::Hard(logits.binarize(k))
         } else {
-            ProfileMasks::Soft(logits.soft_weights())
+            ProfileMasks::Soft(Arc::new(logits.soft_weights()))
         })
     }
 

@@ -1,18 +1,22 @@
 //! Property-style tests on coordinator invariants (hand-rolled sweeps with
 //! the seeded PRNG — proptest is unavailable offline): routing, batching
-//! bounds, profile-store round-trips and accounting, plus a live
-//! service smoke test over the native backend.
+//! bounds, sharded profile-store round-trips and accounting, concurrent
+//! reads racing scheduler inserts, and live service tests over the native
+//! backend (including concurrent submits from many threads).
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use xpeft::adapters::AdapterBank;
-use xpeft::config::ServeConfig;
+use xpeft::config::{Mode, ServeConfig, TrainConfig};
 use xpeft::coordinator::batcher::{DynamicBatcher, Request};
-use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore, StoreConfig};
+use xpeft::coordinator::scheduler::{JobStatus, Scheduler, TrainJob};
 use xpeft::coordinator::Service;
-use xpeft::masks::{MaskLogits, ProfileMasks};
+use xpeft::data::glue;
 use xpeft::masks::accounting::Dims;
+use xpeft::masks::{MaskLogits, ProfileMasks};
 use xpeft::runtime::Engine;
 use xpeft::util::rng::Rng;
 
@@ -29,6 +33,34 @@ fn random_masks(layers: usize, n: usize, k: usize, seed: u64) -> ProfileMasks {
         b: r.normal_vec(layers * n, 1.0),
     };
     ProfileMasks::Hard(logits.binarize(k))
+}
+
+fn shared_aux(mc: &xpeft::config::ModelConfig) -> AuxParams {
+    AuxParams {
+        ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+        ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+        head_w: {
+            let mut r = Rng::new(5);
+            r.normal_vec(mc.d * mc.c_max, 0.05)
+        },
+        head_b: vec![0.0; mc.c_max],
+    }
+}
+
+fn tiny_job(mc: &xpeft::config::ModelConfig, pid: u64) -> TrainJob {
+    TrainJob {
+        profile_id: pid,
+        dataset: glue::build("sst2", mc.seq, mc.vocab, pid),
+        cfg: TrainConfig {
+            mode: Mode::XpeftHard,
+            n: 100,
+            k: 50,
+            steps: 2,
+            seed: pid,
+            ..Default::default()
+        },
+        keep_aux: true,
+    }
 }
 
 #[test]
@@ -56,21 +88,26 @@ fn batching_bounds_property() {
 
 #[test]
 fn store_roundtrip_property() {
-    // pack(unpack(x)) == x across random shapes; byte counts match Table 1
+    // save→load == identity across random shapes; byte counts match Table 1
     let mut rng = Rng::new(2);
-    let dir = std::env::temp_dir().join("xpeft_props");
+    let dir = std::env::temp_dir().join(format!("xpeft_props_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     for trial in 0..20 {
         let layers = 1 + rng.below(12);
         let n = 8 + rng.below(400);
         let k = 1 + rng.below(n);
-        let mut store = ProfileStore::new(4);
+        let store = ProfileStore::new(4);
         let profiles = 1 + rng.below(20);
         for pid in 0..profiles {
-            store.insert(
-                pid as u64,
-                ProfileRecord { masks: random_masks(layers, n, k, trial * 100 + pid as u64), aux: None },
-            );
+            store
+                .insert(
+                    pid as u64,
+                    ProfileRecord {
+                        masks: random_masks(layers, n, k, trial * 100 + pid as u64),
+                        aux: None,
+                    },
+                )
+                .unwrap();
         }
         let dims = Dims { d: 64, b: 8, layers };
         assert_eq!(
@@ -113,11 +150,17 @@ fn mask_binarization_always_k_bits_property() {
 #[test]
 fn lru_cache_never_exceeds_capacity() {
     let mut rng = Rng::new(4);
-    for _ in 0..10 {
+    for trial in 0..10 {
         let cap = 1 + rng.below(16);
-        let mut store = ProfileStore::new(cap);
+        let store = ProfileStore::with_config(StoreConfig {
+            shards: 1usize << (trial % 4), // 1..8 shards: bound holds regardless
+            cache_capacity: cap,
+            ..StoreConfig::default()
+        });
         for pid in 0..50u64 {
-            store.insert(pid, ProfileRecord { masks: random_masks(2, 32, 8, pid), aux: None });
+            store
+                .insert(pid, ProfileRecord { masks: random_masks(2, 32, 8, pid), aux: None })
+                .unwrap();
         }
         for _ in 0..200 {
             let pid = rng.below(50) as u64;
@@ -129,35 +172,149 @@ fn lru_cache_never_exceeds_capacity() {
 }
 
 // ---------------------------------------------------------------------------
-// live service over the native backend
+// concurrency: the lock-striping contract
 // ---------------------------------------------------------------------------
 
+/// The acceptance-criterion test: ≥4 threads read distinct profiles while
+/// the scheduler trains and inserts new ones. Reads return shared `Arc`s
+/// (no `MaskWeights` clone on a hit — pinned by the pointer-equality and
+/// miss-count assertions) and never block on a global lock.
 #[test]
-fn service_end_to_end_smoke() {
+fn concurrent_reads_while_scheduler_inserts() {
     let engine = Arc::new(Engine::native());
     let mc = engine.manifest.config.clone();
     let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
-
-    // two profiles with distinct random hard masks + shared aux
-    let mut store = ProfileStore::new(64);
-    for pid in [1u64, 2] {
-        store.insert(pid, ProfileRecord { masks: random_masks(mc.layers, 100, 50, pid), aux: None });
+    let store = Arc::new(ProfileStore::new(256));
+    for pid in 0..64u64 {
+        store
+            .insert(pid, ProfileRecord { masks: random_masks(mc.layers, 100, 50, pid), aux: None })
+            .unwrap();
     }
-    store.set_shared_aux(AuxParams {
-        ln_scale: vec![1.0; mc.layers * mc.bottleneck],
-        ln_bias: vec![0.0; mc.layers * mc.bottleneck],
-        head_w: {
-            let mut r = Rng::new(5);
-            r.normal_vec(mc.d * mc.c_max, 0.05)
-        },
-        head_b: vec![0.0; mc.c_max],
+
+    let scheduler = Scheduler::start(engine, bank, store.clone(), 42);
+    for pid in 1000..1004u64 {
+        scheduler.submit(tiny_job(&mc, pid)).unwrap();
+    }
+
+    // 4 reader threads, each hammering its own disjoint 16-profile window
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..4u64)
+        .map(|t| {
+            let store = store.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let id = t * 16 + (i % 16);
+                    let w = store.weights(id).expect("pre-inserted profile");
+                    assert_eq!(w.n, 100);
+                    i += 1;
+                    reads += 1;
+                }
+                reads
+            })
+        })
+        .collect();
+
+    scheduler.wait_all();
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "readers made progress during training");
+    for pid in 1000..1004u64 {
+        assert!(
+            matches!(scheduler.status(pid), Some(JobStatus::Done { .. })),
+            "job {pid} finished: {:?}",
+            scheduler.status(pid)
+        );
+        assert!(store.contains(pid), "tuned profile {pid} landed in the store");
+    }
+
+    // zero-clone pin: consecutive lookups of one profile share the SAME
+    // allocation (the second is a cache hit returning the cached Arc)
+    let (_, misses_before, _) = store.cache_stats();
+    let w1 = store.weights(1001).unwrap();
+    let w2 = store.weights(1001).unwrap();
+    assert!(Arc::ptr_eq(&w1, &w2), "hit returns the cached Arc, not a clone");
+    let (_, misses_after, _) = store.cache_stats();
+    assert!(misses_after <= misses_before + 1, "at most one unpack for both lookups");
+}
+
+/// `wait_all` wakes off the completion Condvar: it must return almost
+/// immediately once the last job's status turns terminal (the old
+/// implementation slept in a 20 ms poll loop).
+#[test]
+fn wait_all_returns_promptly_after_jobs_finish() {
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    let store = Arc::new(ProfileStore::new(16));
+    let scheduler = Scheduler::start(engine, bank, store, 42);
+    for pid in [1u64, 2] {
+        scheduler.submit(tiny_job(&mc, pid)).unwrap();
+    }
+    let (tx, rx) = mpsc::channel::<Instant>();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            scheduler.wait_all();
+            let _ = tx.send(Instant::now());
+        });
+        // observe completion independently of the waiter
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let done = [1u64, 2].iter().all(|&pid| {
+                matches!(
+                    scheduler.status(pid),
+                    Some(JobStatus::Done { .. } | JobStatus::Failed(_))
+                )
+            });
+            if done {
+                break;
+            }
+            assert!(Instant::now() < deadline, "jobs never finished");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let observed_done = Instant::now();
+        let returned = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("wait_all returned");
+        let lag = returned.saturating_duration_since(observed_done);
+        assert!(lag < Duration::from_millis(100), "wait_all lagged completion by {lag:?}");
     });
-    let store = Arc::new(Mutex::new(store));
+    // with everything terminal, another wait_all returns immediately
+    let t0 = Instant::now();
+    scheduler.wait_all();
+    assert!(t0.elapsed() < Duration::from_millis(50));
+}
 
-    let cfg =
-        ServeConfig { max_batch: 4, batch_deadline_us: 500, workers: 1, mask_cache: 16, threads: 0 };
+// ---------------------------------------------------------------------------
+// live service over the native backend
+// ---------------------------------------------------------------------------
+
+fn start_service(profiles: u64) -> (Arc<Service>, usize) {
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    let store = Arc::new(ProfileStore::new(64));
+    for pid in 1..=profiles {
+        store
+            .insert(pid, ProfileRecord { masks: random_masks(mc.layers, 100, 50, pid), aux: None })
+            .unwrap();
+    }
+    store.set_shared_aux(shared_aux(&mc));
+    let cfg = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 500,
+        mask_cache: 16,
+        ..ServeConfig::default()
+    };
     let svc = Service::start(engine, store, bank, cfg, 15, 42).unwrap();
+    (Arc::new(svc), 15)
+}
 
+#[test]
+fn service_end_to_end_smoke() {
+    let (svc, classes) = start_service(2);
     let total = 24;
     for i in 0..total {
         let pid = 1 + (i % 2) as u64;
@@ -167,15 +324,63 @@ fn service_end_to_end_smoke() {
     let deadline = Instant::now() + Duration::from_secs(30);
     while got < total && Instant::now() < deadline {
         if let Some(resp) = svc.recv_timeout(Duration::from_millis(200)) {
-            assert!(resp.prediction < 15);
+            assert!(resp.prediction < classes);
             assert!(resp.latency < Duration::from_secs(10));
             got += 1;
         }
     }
     assert_eq!(got, total, "all requests answered");
+    let svc = Arc::into_inner(svc).expect("sole owner");
     let snap = svc.shutdown();
     assert_eq!(snap.requests, total as u64);
     assert_eq!(snap.responses, total as u64);
     assert!(snap.mean_batch >= 1.0);
     assert!(snap.p99_latency_us > 0.0);
+    // the snapshot carries per-shard store telemetry
+    let st = snap.store.expect("service snapshots include store stats");
+    assert_eq!(st.profiles, 2);
+    assert!(st.cache_hits + st.cache_misses > 0);
+    assert_eq!(st.per_shard.len(), st.shards);
+}
+
+/// Many threads submitting concurrently: every request is answered exactly
+/// once with a valid prediction (the ingress path is thread-safe).
+#[test]
+fn concurrent_submit_from_many_threads() {
+    let (svc, classes) = start_service(4);
+    let threads = 6usize;
+    let per_thread = 8usize;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                (0..per_thread)
+                    .map(|i| {
+                        let pid = 1 + ((t + i) % 4) as u64;
+                        svc.submit(pid, "s42t3w1 s42t2w5 s42fw0").unwrap()
+                    })
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    let mut submitted: Vec<u64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    submitted.sort_unstable();
+    let total = threads * per_thread;
+    assert_eq!(submitted.len(), total);
+    submitted.dedup();
+    assert_eq!(submitted.len(), total, "request ids are globally unique");
+
+    let mut answered: Vec<u64> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while answered.len() < total && Instant::now() < deadline {
+        if let Some(resp) = svc.recv_timeout(Duration::from_millis(200)) {
+            assert!(resp.prediction < classes);
+            answered.push(resp.request_id);
+        }
+    }
+    answered.sort_unstable();
+    assert_eq!(answered, submitted, "every submitted request answered exactly once");
 }
