@@ -116,6 +116,12 @@ fn main() -> Result<()> {
     println!("throughput       {:.1} req/s", submitted as f64 / wall);
     println!("mean batch size  {:.2}", snap.mean_batch);
     println!(
+        "trunk forwards   {} ({:.0}/1k requests; mixed batches span {:.1} profiles)",
+        snap.trunk_forwards,
+        snap.trunk_forwards_per_1k_requests(),
+        snap.mean_profiles_per_batch
+    );
+    println!(
         "latency p50/p95/p99  {:.1} / {:.1} / {:.1} ms",
         snap.p50_latency_us / 1e3,
         snap.p95_latency_us / 1e3,

@@ -36,6 +36,7 @@ fn timed(name: &str, items: usize, elapsed: Duration) -> BenchResult {
         mean_ns: ns,
         p95_ns: ns,
         throughput: Some(items as f64 / elapsed.as_secs_f64()),
+        extras: Vec::new(),
     }
 }
 
@@ -256,6 +257,103 @@ fn main() {
             snap.p50_latency_us / 1e3,
             snap.p99_latency_us / 1e3
         );
+    }
+
+    // ---- cross-profile fused serving at high profile fan-out ----------
+    // The same synthetic load (every profile contributing ~1 row) served
+    // two ways: the historical per-profile batching (one fixed-shape trunk
+    // forward per profile group) vs mixed-profile batching + the prepacked
+    // aggregate cache (one trunk forward per batch, cached Â/B̂ panels).
+    // Headline numbers: request throughput and trunk_forwards_per_1k_requests
+    // (written into each entry's JSON record), plus the p50 latency.
+    {
+        let fan: usize = if smoke { 128 } else { 1024 };
+        let reqs_per_iter: usize = fan;
+        println!("\n== serving at profile fan-out ({fan} profiles, mixed vs per-profile) ==");
+        let engine = Arc::new(Engine::native());
+        let mc = engine.manifest.config.clone();
+        let n = 100usize;
+        let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+        let shared = AuxParams {
+            ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+            ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+            head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+            head_b: vec![0.0; mc.c_max],
+        };
+        let iters = if smoke { 1 } else { 3 };
+        for (label, mixed) in [("per-profile", false), ("mixed+agg-cache", true)] {
+            let store = Arc::new(ProfileStore::with_config(StoreConfig {
+                shards: 64,
+                cache_capacity: 2 * fan,
+                ..StoreConfig::default()
+            }));
+            for pid in 0..fan as u64 {
+                let mut r = Rng::new(5000 + pid);
+                let lg = MaskLogits {
+                    layers: mc.layers,
+                    n,
+                    a: r.normal_vec(mc.layers * n, 1.0),
+                    b: r.normal_vec(mc.layers * n, 1.0),
+                };
+                store
+                    .insert(
+                        pid,
+                        ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None },
+                    )
+                    .unwrap();
+            }
+            store.set_shared_aux(shared.clone());
+            let svc = Service::start(
+                engine.clone(),
+                store,
+                bank.clone(),
+                ServeConfig {
+                    mixed_batch: mixed,
+                    max_batch: 32,
+                    batch_deadline_us: 400,
+                    mask_cache: 2 * fan,
+                    ..ServeConfig::default()
+                },
+                15,
+                42,
+            )
+            .unwrap();
+            let r = Bench { warmup: 1, iters, items_per_iter: Some(reqs_per_iter) }.run(
+                &format!("serve {label} {fan} profiles (batch_cap 32 rows)"),
+                || {
+                    for i in 0..reqs_per_iter {
+                        svc.submit((i % fan) as u64, "s42t3w1 s42t2w5 s42fw0").unwrap();
+                    }
+                    let mut got = 0;
+                    while got < reqs_per_iter {
+                        if svc.recv_timeout(Duration::from_secs(60)).is_some() {
+                            got += 1;
+                        } else {
+                            panic!("serving bench timed out ({label})");
+                        }
+                    }
+                    got
+                },
+            );
+            let snap = svc.shutdown();
+            let tf1k = snap.trunk_forwards_per_1k_requests();
+            println!(
+                "   {label}: {:.0} trunk forwards/1k req, p50 {:.2}ms, {:.1} profiles/batch",
+                tf1k,
+                snap.p50_latency_us / 1e3,
+                snap.mean_profiles_per_batch.max(1.0)
+            );
+            if let Some(st) = &snap.store {
+                println!(
+                    "   {label}: agg cache {} entries / {} hits / {} misses",
+                    st.agg_entries, st.agg_hits, st.agg_misses
+                );
+            }
+            suite.add(
+                r.with_extra("trunk_forwards_per_1k_requests", tf1k)
+                    .with_extra("p50_latency_us", snap.p50_latency_us),
+            );
+        }
     }
 
     if smoke {

@@ -127,6 +127,36 @@ fn main() {
         ));
     }
 
+    // the serving adapter site `x @ Â`, uncached vs cached: without the
+    // aggregate cache every batch re-runs the gather-GEMM from the bank
+    // (its heuristic materializes Σ wᵢ·Wᵢ then packs + multiplies); a
+    // cache hit pays only the prepacked-panel GEMM — aggregation AND
+    // pack_b were paid once at tune time.
+    println!("\n== serving adapter site (aggregate cache: uncached vs hit) ==");
+    {
+        let n = 100usize;
+        let rows = 4 * mc.seq; // one executor shard's token rows
+        let mut srng = Rng::new(21);
+        let bank_a = srng.normal_vec(n * mc.d * mc.bottleneck, 0.1);
+        let x = srng.normal_vec(rows * mc.d, 0.5);
+        let mut w = vec![0.0f32; n];
+        for i in 0..50 {
+            w[(i * n) / 50] = 1.0 / 50.0;
+        }
+        let flops = 2 * rows * mc.d * mc.bottleneck;
+        let mut out = vec![0.0f32; rows * mc.bottleneck];
+        suite.add(kern_bench(flops).run(
+            &format!("adapter site {rows}x{}x{} (uncached gather, k=50)", mc.d, mc.bottleneck),
+            || kernels::gather_gemm_into(&mut out, &x, rows, mc.d, mc.bottleneck, &w, &bank_a),
+        ));
+        let a_hat = kernels::aggregate_bank(&w, &bank_a, mc.d * mc.bottleneck);
+        let packed = kernels::pack_b_panels(&a_hat, mc.d, mc.bottleneck);
+        suite.add(kern_bench(flops).run(
+            &format!("adapter site {rows}x{}x{} (cached prepacked)", mc.d, mc.bottleneck),
+            || kernels::gemm_packed_into(&mut out, rows, &x, mc.d, 1, &packed),
+        ));
+    }
+
     // thread scaling: same train/eval step at 1 lane vs every lane — the
     // parallel win, visible in the JSON trajectory.
     println!(

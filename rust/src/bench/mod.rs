@@ -10,7 +10,7 @@ use std::time::Instant;
 use crate::util::json::Json;
 use crate::util::stats;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -19,9 +19,18 @@ pub struct BenchResult {
     pub p95_ns: f64,
     /// optional throughput units (items/sec) when `items_per_iter` is set
     pub throughput: Option<f64>,
+    /// extra named measurements written alongside the timings (e.g. the
+    /// serving entries' `trunk_forwards_per_1k_requests`)
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
+    /// Attach an extra named measurement to this entry's JSON record.
+    pub fn with_extra(mut self, key: &str, value: f64) -> BenchResult {
+        self.extras.push((key.to_string(), value));
+        self
+    }
+
     pub fn report(&self) -> String {
         let t = |ns: f64| {
             if ns >= 1e9 {
@@ -89,6 +98,7 @@ impl Bench {
             mean_ns: stats::mean(&samples),
             p95_ns: stats::quantile(&samples, 0.95),
             throughput: self.items_per_iter.map(|n| n as f64 / (median_ns / 1e9)),
+            extras: Vec::new(),
         }
     }
 }
@@ -114,6 +124,9 @@ impl Suite {
             o.set("p95_ns", Json::Num(r.p95_ns));
             if let Some(tp) = r.throughput {
                 o.set("throughput_per_s", Json::Num(tp));
+            }
+            for (k, v) in &r.extras {
+                o.set(k, Json::Num(*v));
             }
             arr.push(o);
         }
@@ -224,8 +237,21 @@ mod tests {
             mean_ns: 1500.0,
             p95_ns: 2500.0,
             throughput: Some(1000.0),
+            extras: Vec::new(),
         };
         let s = r.report();
         assert!(s.contains("µs") && s.contains("1000"));
+    }
+
+    #[test]
+    fn extras_land_in_json() {
+        let mut suite = Suite::default();
+        suite.results.push(
+            BenchResult { name: "serve".into(), iters: 1, ..BenchResult::default() }
+                .with_extra("trunk_forwards_per_1k_requests", 31.0),
+        );
+        let json = suite.to_json().to_string_pretty();
+        assert!(json.contains("trunk_forwards_per_1k_requests"));
+        assert!(json.contains("31"));
     }
 }

@@ -179,6 +179,18 @@ impl TrainConfig {
 /// Serving-side configuration for the coordinator.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Cross-profile batching (default ON): one fixed-shape batch closes
+    /// from rows of many profiles and the executor runs ONE trunk forward
+    /// per batch, routing adapter sites per row segment. `--no-mixed-batch`
+    /// restores per-profile batches (one trunk forward per profile group) —
+    /// also the fallback for backends without routed execution (PJRT).
+    pub mixed_batch: bool,
+    /// Per-profile prepacked aggregate-adapter cache budget in MiB
+    /// (`--agg-cache-mb`, 0 disables): frozen masks mean Â/B̂ can be
+    /// materialized once per tune, prepacked into the blocked-GEMM B-panel
+    /// layout, and reused by every batch until a re-tune bumps the
+    /// profile's mask epoch.
+    pub agg_cache_mb: usize,
     /// max requests aggregated into one executor batch
     pub max_batch: usize,
     /// deadline before a partial batch is flushed (µs)
@@ -205,6 +217,8 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
+            mixed_batch: true,
+            agg_cache_mb: 64,
             max_batch: 32,
             batch_deadline_us: 2_000,
             mask_cache: 4096,
@@ -218,6 +232,13 @@ impl Default for ServeConfig {
 
 impl ServeConfig {
     pub fn override_from_args(mut self, args: &Args) -> Result<ServeConfig> {
+        if args.flag("mixed-batch") {
+            self.mixed_batch = true;
+        }
+        if args.flag("no-mixed-batch") {
+            self.mixed_batch = false;
+        }
+        self.agg_cache_mb = args.get_usize("agg-cache-mb", self.agg_cache_mb)?;
         self.max_batch = args.get_usize("max-batch", self.max_batch)?;
         self.batch_deadline_us = args.get_u64("deadline-us", self.batch_deadline_us)?;
         self.mask_cache = args.get_usize("mask-cache", self.mask_cache)?;
@@ -241,6 +262,7 @@ impl ServeConfig {
             cache_capacity: self.mask_cache,
             compact_min_dead: self.compact_min_dead,
             compact_dead_ratio: self.compact_dead_ratio,
+            agg_cache_bytes: self.agg_cache_mb.saturating_mul(1 << 20),
         }
     }
 }
@@ -310,7 +332,7 @@ mod tests {
     fn serve_overrides_and_validation() {
         let sc = ServeConfig::default()
             .override_from_args(&args(
-                "serve --max-batch 8 --threads 3 --shards 16 --compact-min-dead 64 --compact-ratio 0.25",
+                "serve --max-batch 8 --threads 3 --shards 16 --compact-min-dead 64 --compact-ratio 0.25 --agg-cache-mb 8",
             ))
             .unwrap();
         assert_eq!(sc.max_batch, 8);
@@ -318,6 +340,8 @@ mod tests {
         assert_eq!(sc.store_shards, 16);
         assert_eq!(sc.compact_min_dead, 64);
         assert!((sc.compact_dead_ratio - 0.25).abs() < 1e-12);
+        assert_eq!(sc.agg_cache_mb, 8);
+        assert!(sc.mixed_batch, "mixed batching defaults ON for serving");
         assert_eq!(ServeConfig::default().threads, 0);
         assert_eq!(ServeConfig::default().store_shards, 0);
         assert!(ServeConfig::default()
@@ -327,6 +351,12 @@ mod tests {
         let stc = sc.store_config();
         assert_eq!(stc.shards, 16);
         assert_eq!(stc.cache_capacity, sc.mask_cache);
+        assert_eq!(stc.agg_cache_bytes, 8 << 20);
+        // mixed batching off-switch
+        let off = ServeConfig::default()
+            .override_from_args(&args("serve --no-mixed-batch"))
+            .unwrap();
+        assert!(!off.mixed_batch);
     }
 
     #[test]

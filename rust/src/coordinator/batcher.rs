@@ -1,8 +1,18 @@
-//! Dynamic per-profile batcher. The eval executable applies ONE profile's
-//! masks to a whole `[B, T]` batch, so the batcher groups pending requests
-//! by profile and flushes a group when it reaches `max_batch` or its oldest
-//! request exceeds the deadline — the core serving-efficiency trade-off of
-//! the multi-profile scenario.
+//! Dynamic batcher, two modes sharing one queue structure:
+//!
+//! * **Per-profile** ([`DynamicBatcher::poll`]) — the historical mode: one
+//!   flushed group holds ONE profile's requests, and the executor pays a
+//!   full fixed-shape trunk forward per group.
+//! * **Mixed-profile** ([`DynamicBatcher::poll_mixed`], serving default) —
+//!   one fixed-shape batch closes from rows of *many* profiles, carrying a
+//!   row→profile routing vector (contiguous per-profile segments), so the
+//!   executor runs ONE trunk forward per batch no matter how many profiles
+//!   it spans. At high profile fan-out (every profile contributing ~1 row)
+//!   this is the difference between `P` trunk forwards and `⌈rows/B⌉`.
+//!
+//! Both modes flush on `max_batch` rows or when the oldest pending request
+//! exceeds the deadline — the core serving-efficiency trade-off of the
+//! multi-profile scenario.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -22,6 +32,23 @@ pub struct Request {
 pub struct ProfileBatch {
     pub profile_id: u64,
     pub requests: Vec<Request>,
+}
+
+/// A flushed cross-profile batch: `requests` holds rows of many profiles,
+/// grouped so each profile's rows are contiguous; `segments` is the
+/// row→profile routing vector, `(profile_id, lo, hi)` with half-open row
+/// ranges tiling `0..requests.len()` in order.
+#[derive(Debug)]
+pub struct MixedBatch {
+    pub requests: Vec<Request>,
+    pub segments: Vec<(u64, usize, usize)>,
+}
+
+impl MixedBatch {
+    /// Distinct profiles in this batch (one segment each).
+    pub fn profiles(&self) -> usize {
+        self.segments.len()
+    }
 }
 
 pub struct DynamicBatcher {
@@ -93,6 +120,61 @@ impl DynamicBatcher {
             self.pending.retain(|&p| p != profile_id);
         }
         ProfileBatch { profile_id, requests }
+    }
+
+    /// Next cross-profile batch ready at `now`: flushes when the queued
+    /// total reaches `max_batch` rows (throughput) or any profile's oldest
+    /// request has exceeded the deadline (latency — the flush then carries
+    /// *everything* queued, up to `max_batch`, since one trunk forward is
+    /// paid either way). Profiles fill the batch in arrival (FIFO) order.
+    pub fn poll_mixed(&mut self, now: Instant) -> Option<MixedBatch> {
+        if self.queued == 0 {
+            return None;
+        }
+        let full = self.queued >= self.max_batch;
+        let expired = self.pending.iter().any(|pid| {
+            self.queues[pid]
+                .front()
+                .is_some_and(|r| now.duration_since(r.submitted) >= self.deadline)
+        });
+        if !full && !expired {
+            return None;
+        }
+        Some(self.take_mixed())
+    }
+
+    /// Close one mixed batch of up to `max_batch` rows, walking pending
+    /// profiles in FIFO order and draining each queue front-first so every
+    /// profile's rows land contiguous.
+    fn take_mixed(&mut self) -> MixedBatch {
+        let mut requests: Vec<Request> = Vec::new();
+        let mut segments: Vec<(u64, usize, usize)> = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() && requests.len() < self.max_batch {
+            let pid = self.pending[i];
+            let q = self.queues.get_mut(&pid).expect("pending profiles have queues");
+            let take = q.len().min(self.max_batch - requests.len());
+            let lo = requests.len();
+            requests.extend(q.drain(..take));
+            self.queued -= take;
+            segments.push((pid, lo, requests.len()));
+            if q.is_empty() {
+                self.queues.remove(&pid);
+                let _ = self.pending.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        MixedBatch { requests, segments }
+    }
+
+    /// Drain everything into mixed batches (shutdown of the mixed mode).
+    pub fn drain_mixed(&mut self) -> Vec<MixedBatch> {
+        let mut out = Vec::new();
+        while self.queued > 0 {
+            out.push(self.take_mixed());
+        }
+        out
     }
 
     /// Drain everything (shutdown).
@@ -275,6 +357,100 @@ mod tests {
         let batch = b.poll(t).unwrap();
         assert_eq!(batch.profile_id, 2);
         assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn mixed_batch_spans_profiles_with_contiguous_segments() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(10));
+        let t = Instant::now();
+        // 5 requests over 3 profiles, arrival order 1,2,1,3,2
+        for (id, pid) in [(0u64, 1u64), (1, 2), (2, 1), (3, 3), (4, 2)] {
+            b.push(req(id, pid, t));
+        }
+        // 5 queued >= max_batch 4: one full mixed batch closes, filled by
+        // profiles 1 and 2 (FIFO); profile 3's lone row stays queued
+        let mb = b.poll_mixed(t).unwrap();
+        assert_eq!(mb.requests.len(), 4);
+        assert_eq!(mb.profiles(), 2);
+        // segments tile the rows in order and are profile-pure
+        let mut next = 0;
+        for &(pid, lo, hi) in &mb.segments {
+            assert_eq!(lo, next);
+            assert!(hi > lo);
+            assert!(mb.requests[lo..hi].iter().all(|r| r.profile_id == pid));
+            next = hi;
+        }
+        assert_eq!(next, mb.requests.len());
+        // FIFO: profile 1 (first arrival) fills first, both its rows
+        assert_eq!(mb.segments[0].0, 1);
+        assert_eq!(mb.segments[0].2 - mb.segments[0].1, 2);
+        // the 5th request remains queued, not yet ready
+        assert_eq!(b.queued(), 1);
+        assert!(b.poll_mixed(t).is_none());
+    }
+
+    #[test]
+    fn mixed_deadline_flushes_everything_queued() {
+        let mut b = DynamicBatcher::new(32, Duration::from_millis(5));
+        let t = Instant::now();
+        b.push(req(0, 1, t));
+        b.push(req(1, 2, t + Duration::from_millis(3)));
+        assert!(b.poll_mixed(t).is_none());
+        // only profile 1's front has expired, but one trunk forward is
+        // paid anyway: the flush carries both profiles' rows
+        let mb = b.poll_mixed(t + Duration::from_millis(5)).unwrap();
+        assert_eq!(mb.requests.len(), 2);
+        assert_eq!(mb.profiles(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn mixed_routing_property_every_request_exactly_once() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(44);
+        for trial in 0..25 {
+            let mut b = DynamicBatcher::new(1 + rng.below(6), Duration::from_millis(1));
+            let t = Instant::now();
+            let n = 1 + rng.below(50);
+            let mut expect: Vec<(u64, u64)> = Vec::new();
+            for i in 0..n {
+                let pid = rng.below(5) as u64;
+                expect.push((i as u64, pid));
+                b.push(req(i as u64, pid, t));
+            }
+            let mut seen: Vec<(u64, u64)> = Vec::new();
+            let later = t + Duration::from_millis(5);
+            while let Some(mb) = b.poll_mixed(later) {
+                assert!(!mb.requests.is_empty(), "trial {trial}");
+                let mut next = 0;
+                for &(pid, lo, hi) in &mb.segments {
+                    assert_eq!(lo, next, "trial {trial}: segments tile");
+                    for r in &mb.requests[lo..hi] {
+                        assert_eq!(r.profile_id, pid, "trial {trial}");
+                        seen.push((r.id, r.profile_id));
+                    }
+                    next = hi;
+                }
+                assert_eq!(next, mb.requests.len(), "trial {trial}");
+            }
+            seen.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(seen, expect, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn drain_mixed_empties_everything_in_capped_batches() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(10));
+        let t = Instant::now();
+        for i in 0..11u64 {
+            b.push(req(i, i % 3, t));
+        }
+        let batches = b.drain_mixed();
+        assert!(batches.iter().all(|mb| mb.requests.len() <= 4));
+        let total: usize = batches.iter().map(|mb| mb.requests.len()).sum();
+        assert_eq!(total, 11);
         assert_eq!(b.queued(), 0);
     }
 

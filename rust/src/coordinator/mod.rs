@@ -1,10 +1,12 @@
 //! The multi-profile coordinator — the systems side of X-PEFT's "extreme
 //! multi-profile scenario": a lock-striped sharded profile store holding
 //! byte-level mask state for millions of profiles over one shared PLM +
-//! adapter bank (append-log persistence, per-shard LRU weight caches), a
-//! per-profile dynamic batcher feeding the eval executables, a training
-//! scheduler fanning mask-tuning jobs for newly-arriving profiles over the
-//! process worker pool, and per-shard + latency telemetry.
+//! adapter bank (append-log persistence, per-shard LRU weight caches, a
+//! prepacked aggregate-adapter cache), a dynamic batcher feeding the eval
+//! executables (cross-profile mixed batches by default — one trunk forward
+//! per batch, not per profile), a training scheduler fanning mask-tuning
+//! jobs for newly-arriving profiles over the process worker pool, and
+//! per-shard + latency telemetry.
 
 pub mod batcher;
 pub mod profile_store;
@@ -12,8 +14,10 @@ pub mod scheduler;
 pub mod service;
 pub mod telemetry;
 
-pub use batcher::{DynamicBatcher, ProfileBatch, Request};
-pub use profile_store::{AuxParams, ProfileRecord, ProfileStore, ShardStats, StoreConfig, StoreStats};
+pub use batcher::{DynamicBatcher, MixedBatch, ProfileBatch, Request};
+pub use profile_store::{
+    AuxParams, ProfileAggregates, ProfileRecord, ProfileStore, ShardStats, StoreConfig, StoreStats,
+};
 pub use scheduler::{JobStatus, Scheduler, TrainJob};
 pub use service::{Response, Service};
 pub use telemetry::{Snapshot, Telemetry};

@@ -64,7 +64,7 @@
 //! lengths against the actual byte count, so hostile headers fail with an
 //! error instead of aborting on a huge allocation.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -72,7 +72,9 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
+use crate::adapters::AdapterBank;
 use crate::masks::{HardMask, MaskWeights, ProfileMasks};
+use crate::runtime::native::kernels::{self, PackedPanels};
 
 const LOG_MAGIC: &[u8; 8] = b"XPFTLOG1";
 const LEGACY_MAGIC: &[u8; 8] = b"XPFTPROF";
@@ -120,6 +122,9 @@ pub struct StoreConfig {
     pub compact_min_dead: usize,
     /// Compact a shard when `dead > ratio · live` (and ≥ `compact_min_dead`).
     pub compact_dead_ratio: f64,
+    /// Byte budget for the prepacked aggregate-adapter cache
+    /// (`--agg-cache-mb`), split evenly across shards. 0 disables it.
+    pub agg_cache_bytes: usize,
 }
 
 impl Default for StoreConfig {
@@ -129,7 +134,72 @@ impl Default for StoreConfig {
             cache_capacity: 4096,
             compact_min_dead: 1024,
             compact_dead_ratio: 0.5,
+            agg_cache_bytes: 64 << 20,
         }
+    }
+}
+
+/// One profile's serving aggregates: per layer, `Â = Σ_i w_i·A_i` and
+/// `B̂ = Σ_i w_i·B_i` materialized once and **prepacked** in the blocked
+/// GEMM's B-panel layout — the serving GEMM then skips both the bank
+/// aggregation and `pack_b` on every batch. Masks are immutable between
+/// tunings, so the entry stays valid until the profile's mask `epoch` is
+/// bumped by a re-tune.
+///
+/// Memory: ~`2·L·d·b·4` bytes per profile (plus NR-strip padding when a
+/// projection width is not a multiple of the tile — see
+/// [`PackedPanels`]) vs the `2·N·L` floats of the unpacked mask weights.
+#[derive(Debug, Clone)]
+pub struct ProfileAggregates {
+    /// Mask epoch this aggregate was materialized at.
+    pub epoch: u64,
+    /// Per layer: (`Â` packed `[d → b]`, `B̂` packed `[b → d]`).
+    pub layers: Vec<(PackedPanels, PackedPanels)>,
+}
+
+impl ProfileAggregates {
+    /// Materialize + prepack a profile's aggregates from its mask weights
+    /// and the shared bank. `weights` must match the bank's `(L, N)`.
+    pub fn prepack(weights: &MaskWeights, bank: &AdapterBank, epoch: u64) -> ProfileAggregates {
+        assert_eq!(
+            (weights.layers, weights.n),
+            (bank.layers, bank.n),
+            "mask weights must match the bank shape"
+        );
+        let (d, b, n) = (bank.d, bank.b, bank.n);
+        let slab = d * b;
+        let layers = (0..bank.layers)
+            .map(|l| {
+                let a_hat = kernels::aggregate_bank(
+                    &weights.a[l * n..(l + 1) * n],
+                    &bank.bank_a[l * n * slab..(l + 1) * n * slab],
+                    slab,
+                );
+                let b_hat = kernels::aggregate_bank(
+                    &weights.b[l * n..(l + 1) * n],
+                    &bank.bank_b[l * n * slab..(l + 1) * n * slab],
+                    slab,
+                );
+                (kernels::pack_b_panels(&a_hat, d, b), kernels::pack_b_panels(&b_hat, b, d))
+            })
+            .collect();
+        ProfileAggregates { epoch, layers }
+    }
+
+    /// Heap bytes this entry holds against the cache budget.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|(a, b)| a.bytes() + b.bytes()).sum()
+    }
+
+    /// Bytes a prepacked entry for this bank WILL occupy (strip padding
+    /// included), computable without materializing anything — pair with
+    /// [`ProfileStore::agg_cache_admits`] so the serving path never pays
+    /// the prepack for an entry the budget can't ever hold.
+    pub fn projected_bytes(bank: &AdapterBank) -> usize {
+        bank.layers
+            * 4
+            * (kernels::packed_panels_len(bank.d, bank.b)
+                + kernels::packed_panels_len(bank.b, bank.d))
     }
 }
 
@@ -145,6 +215,9 @@ pub struct ShardStats {
     pub evictions: u64,
     /// Superseded records still occupying log bytes (segmented mode).
     pub log_dead: usize,
+    /// Prepacked aggregate-cache occupancy.
+    pub agg_entries: usize,
+    pub agg_bytes: usize,
 }
 
 /// Aggregate + per-shard store telemetry (surfaced in serving snapshots).
@@ -161,6 +234,12 @@ pub struct StoreStats {
     pub log_dead: usize,
     pub compactions: u64,
     pub appended_bytes: u64,
+    /// Prepacked aggregate cache: hit/miss/eviction counters + occupancy.
+    pub agg_hits: u64,
+    pub agg_misses: u64,
+    pub agg_evictions: u64,
+    pub agg_entries: usize,
+    pub agg_bytes: usize,
     pub per_shard: Vec<ShardStats>,
 }
 
@@ -333,6 +412,14 @@ struct ShardState {
     profiles: HashMap<u64, Arc<ProfileRecord>>,
     cache: Lru,
     log: Option<ShardLog>,
+    /// Mask epoch per profile, bumped on every overwrite (re-tune). A
+    /// profile never re-tuned is implicitly at epoch 0.
+    epochs: HashMap<u64, u64>,
+    /// Prepacked aggregate cache: insertion-ordered, evicted FIFO once
+    /// `agg_bytes` passes the per-shard byte budget.
+    agg: HashMap<u64, Arc<ProfileAggregates>>,
+    agg_order: VecDeque<u64>,
+    agg_bytes: usize,
 }
 
 struct Shard {
@@ -342,6 +429,9 @@ struct Shard {
     evictions: AtomicU64,
     compactions: AtomicU64,
     appended_bytes: AtomicU64,
+    agg_hits: AtomicU64,
+    agg_misses: AtomicU64,
+    agg_evictions: AtomicU64,
 }
 
 impl Shard {
@@ -351,12 +441,19 @@ impl Shard {
                 profiles: HashMap::new(),
                 cache: Lru::new(cache_cap),
                 log: None,
+                epochs: HashMap::new(),
+                agg: HashMap::new(),
+                agg_order: VecDeque::new(),
+                agg_bytes: 0,
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             compactions: AtomicU64::new(0),
             appended_bytes: AtomicU64::new(0),
+            agg_hits: AtomicU64::new(0),
+            agg_misses: AtomicU64::new(0),
+            agg_evictions: AtomicU64::new(0),
         }
     }
 }
@@ -369,6 +466,8 @@ pub struct ProfileStore {
     shard_bits: u32,
     shared_aux: RwLock<Option<Arc<AuxParams>>>,
     cfg: StoreConfig,
+    /// Per-shard byte budget of the prepacked aggregate cache (0 = off).
+    agg_budget: usize,
     /// True for stores created by [`ProfileStore::open`]: every shard has
     /// a log segment, and inserts pre-encode their record before taking
     /// the shard lock.
@@ -391,6 +490,7 @@ impl ProfileStore {
     pub fn with_config(cfg: StoreConfig) -> Self {
         let shards = resolve_shards(cfg.shards);
         let shard_bits = shards.trailing_zeros();
+        let agg_budget = cfg.agg_cache_bytes / shards;
         let shards = (0..shards)
             .map(|i| Shard::new(shard_cache_cap(cfg.cache_capacity, i, 1usize << shard_bits)))
             .collect();
@@ -399,6 +499,7 @@ impl ProfileStore {
             shard_bits,
             shared_aux: RwLock::new(None),
             cfg,
+            agg_budget,
             persistent: false,
             maintenance: Mutex::new(()),
         }
@@ -475,6 +576,13 @@ impl ProfileStore {
         if replaced {
             // the cached weights (if any) describe the superseded record
             st.cache.remove(profile_id);
+            // a re-tune bumps the mask epoch and orphans the prepacked
+            // aggregates — serving must never see the old tune's Â/B̂
+            *st.epochs.entry(profile_id).or_insert(0) += 1;
+            if let Some(old) = st.agg.remove(&profile_id) {
+                st.agg_bytes -= old.bytes();
+                st.agg_order.retain(|&p| p != profile_id);
+            }
             if let Some(log) = st.log.as_mut() {
                 log.dead += 1;
             }
@@ -572,6 +680,111 @@ impl ProfileStore {
         Ok((w, aux))
     }
 
+    /// The mixed-batch serving lookup: weights + aux + mask epoch + (if
+    /// cached) the prepacked aggregates, all observed under ONE shared
+    /// shard lock — a concurrent re-tune can never pair one tune's masks
+    /// with another tune's aggregates (the epoch filter is belt-and-braces
+    /// on top of `insert`'s eager removal).
+    #[allow(clippy::type_complexity)]
+    pub fn serving_state_with_agg(
+        &self,
+        profile_id: u64,
+    ) -> Result<(Arc<MaskWeights>, Arc<AuxParams>, u64, Option<Arc<ProfileAggregates>>)> {
+        let shard = self.shard_of(profile_id);
+        let (rec, cached, epoch, agg) = {
+            let st = shard.state.read().unwrap();
+            let rec = st
+                .profiles
+                .get(&profile_id)
+                .cloned()
+                .with_context(|| format!("unknown profile {profile_id}"))?;
+            let cached = st.cache.get(profile_id);
+            let epoch = st.epochs.get(&profile_id).copied().unwrap_or(0);
+            let agg = st.agg.get(&profile_id).filter(|a| a.epoch == epoch).cloned();
+            (rec, cached, epoch, agg)
+        };
+        if self.agg_budget > 0 {
+            if agg.is_some() {
+                shard.agg_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shard.agg_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let aux = match &rec.aux {
+            Some(a) => Arc::clone(a),
+            None => self.shared_aux().with_context(|| {
+                format!("profile {profile_id} has no aux and no shared aux is set")
+            })?,
+        };
+        let w = self.weights_from(shard, profile_id, rec, cached);
+        Ok((w, aux, epoch, agg))
+    }
+
+    /// Whether the prepacked aggregate cache is configured on.
+    pub fn agg_cache_enabled(&self) -> bool {
+        self.agg_budget > 0
+    }
+
+    /// Whether an entry of `bytes` can ever be admitted (the per-shard
+    /// byte budget bounds every single entry).
+    pub fn agg_cache_admits(&self, bytes: usize) -> bool {
+        bytes <= self.agg_budget
+    }
+
+    /// Current mask epoch of a profile (0 until its first re-tune).
+    pub fn mask_epoch(&self, profile_id: u64) -> Result<u64> {
+        let st = self.shard_of(profile_id).state.read().unwrap();
+        if !st.profiles.contains_key(&profile_id) {
+            bail!("unknown profile {profile_id}");
+        }
+        Ok(st.epochs.get(&profile_id).copied().unwrap_or(0))
+    }
+
+    /// Offer a freshly materialized aggregate to the cache. Returns false
+    /// when the cache is disabled, the entry alone exceeds the per-shard
+    /// budget, or the profile was re-tuned (or removed) after the entry
+    /// was materialized — a stale aggregate must never enter the cache.
+    /// Over-budget shards evict their oldest entries (FIFO: masks are
+    /// immutable between tunings, so entries never go stale in place and
+    /// recency tracking buys little here).
+    pub fn agg_cache_put(&self, profile_id: u64, agg: Arc<ProfileAggregates>) -> bool {
+        if self.agg_budget == 0 {
+            return false;
+        }
+        let bytes = agg.bytes();
+        if bytes > self.agg_budget {
+            return false;
+        }
+        let shard = self.shard_of(profile_id);
+        let mut st = shard.state.write().unwrap();
+        let epoch = st.epochs.get(&profile_id).copied().unwrap_or(0);
+        if agg.epoch != epoch || !st.profiles.contains_key(&profile_id) {
+            return false;
+        }
+        if let Some(old) = st.agg.insert(profile_id, agg) {
+            st.agg_bytes -= old.bytes();
+        } else {
+            st.agg_order.push_back(profile_id);
+        }
+        st.agg_bytes += bytes;
+        while st.agg_bytes > self.agg_budget {
+            let Some(victim) = st.agg_order.pop_front() else {
+                break;
+            };
+            if victim == profile_id {
+                // never evict the entry just inserted; rotate it to the
+                // back (the pre-checked size bound guarantees progress)
+                st.agg_order.push_back(victim);
+                continue;
+            }
+            if let Some(e) = st.agg.remove(&victim) {
+                st.agg_bytes -= e.bytes();
+                shard.agg_evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        true
+    }
+
     /// One shared-lock read of a shard: the profile's record plus its
     /// cached weights, observed atomically (insert replaces the record
     /// and drops the stale cache entry under one write lock, so a hit
@@ -658,6 +871,8 @@ impl ProfileStore {
                 misses: sh.misses.load(Ordering::Relaxed),
                 evictions: sh.evictions.load(Ordering::Relaxed),
                 log_dead: st.log.as_ref().map_or(0, |l| l.dead),
+                agg_entries: st.agg.len(),
+                agg_bytes: st.agg_bytes,
             };
             out.profiles += s.profiles;
             out.cached += s.cached;
@@ -668,6 +883,11 @@ impl ProfileStore {
             out.log_dead += s.log_dead;
             out.compactions += sh.compactions.load(Ordering::Relaxed);
             out.appended_bytes += sh.appended_bytes.load(Ordering::Relaxed);
+            out.agg_hits += sh.agg_hits.load(Ordering::Relaxed);
+            out.agg_misses += sh.agg_misses.load(Ordering::Relaxed);
+            out.agg_evictions += sh.agg_evictions.load(Ordering::Relaxed);
+            out.agg_entries += s.agg_entries;
+            out.agg_bytes += s.agg_bytes;
             out.per_shard.push(s);
         }
         out
@@ -1303,6 +1523,106 @@ mod tests {
         assert!(s.serving_state(3).is_err());
         s.set_shared_aux(aux());
         assert!(s.serving_state(3).is_ok());
+    }
+
+    fn test_bank() -> AdapterBank {
+        // dims match hard_rec's masks (L=4, N=100); small d/b keep it cheap
+        AdapterBank::random(4, 100, 8, 4, 7)
+    }
+
+    #[test]
+    fn agg_cache_roundtrip_and_epoch_invalidation() {
+        let s = ProfileStore::with_config(StoreConfig {
+            shards: 1,
+            cache_capacity: 8,
+            ..StoreConfig::default()
+        });
+        s.set_shared_aux(aux());
+        s.insert(1, hard_rec(1)).unwrap();
+        let bank = test_bank();
+        let (w, _, epoch, miss) = s.serving_state_with_agg(1).unwrap();
+        assert_eq!(epoch, 0);
+        assert!(miss.is_none());
+        let entry = Arc::new(ProfileAggregates::prepack(&w, &bank, epoch));
+        assert!(s.agg_cache_put(1, Arc::clone(&entry)));
+        let (_, _, _, hit) = s.serving_state_with_agg(1).unwrap();
+        assert!(Arc::ptr_eq(&hit.unwrap(), &entry), "hit returns the cached allocation");
+        let st = s.stats();
+        assert_eq!((st.agg_hits, st.agg_misses, st.agg_entries), (1, 1, 1));
+        assert_eq!(st.agg_bytes, entry.bytes());
+
+        // re-tune: the epoch bumps, the cached aggregate is orphaned, and
+        // a put computed against the old tune is refused
+        s.insert(1, hard_rec(2)).unwrap();
+        let (w2, _, epoch2, stale) = s.serving_state_with_agg(1).unwrap();
+        assert_eq!(epoch2, 1);
+        assert_eq!(s.mask_epoch(1).unwrap(), 1);
+        assert!(stale.is_none(), "re-tune invalidates the cached aggregate");
+        let fresh = Arc::new(ProfileAggregates::prepack(&w2, &bank, epoch2));
+        assert_ne!(
+            fresh.layers[0].0.data, entry.layers[0].0.data,
+            "the fresh tune's aggregate really is different"
+        );
+        assert!(!s.agg_cache_put(1, entry), "stale-epoch entries are refused");
+        assert!(s.agg_cache_put(1, Arc::clone(&fresh)));
+        let (_, _, _, hit2) = s.serving_state_with_agg(1).unwrap();
+        assert!(Arc::ptr_eq(&hit2.unwrap(), &fresh), "fresh aggregate is served after the re-tune");
+    }
+
+    #[test]
+    fn agg_cache_respects_byte_budget() {
+        let bank = test_bank();
+        let w0 = hard_rec(0).masks.to_weights();
+        let ebytes = ProfileAggregates::prepack(&w0, &bank, 0).bytes();
+        assert_eq!(
+            ProfileAggregates::projected_bytes(&bank),
+            ebytes,
+            "the no-materialize size projection matches the real entry"
+        );
+        // room for two entries, not three
+        let s = ProfileStore::with_config(StoreConfig {
+            shards: 1,
+            cache_capacity: 8,
+            agg_cache_bytes: 2 * ebytes + ebytes / 2,
+            ..StoreConfig::default()
+        });
+        s.set_shared_aux(aux());
+        for id in 0..3u64 {
+            s.insert(id, hard_rec(id)).unwrap();
+        }
+        for id in 0..3u64 {
+            let (w, _, e, _) = s.serving_state_with_agg(id).unwrap();
+            assert!(s.agg_cache_put(id, Arc::new(ProfileAggregates::prepack(&w, &bank, e))));
+        }
+        let st = s.stats();
+        assert_eq!(st.agg_evictions, 1, "FIFO evicted the oldest entry");
+        assert_eq!(st.agg_entries, 2);
+        assert!(st.agg_bytes <= 2 * ebytes + ebytes / 2);
+        assert!(s.serving_state_with_agg(0).unwrap().3.is_none(), "oldest entry evicted");
+        assert!(s.serving_state_with_agg(2).unwrap().3.is_some());
+
+        // an entry larger than the whole budget is refused outright, and a
+        // disabled cache (budget 0) refuses everything without counting
+        let tiny = ProfileStore::with_config(StoreConfig {
+            shards: 1,
+            agg_cache_bytes: 16,
+            ..StoreConfig::default()
+        });
+        tiny.insert(9, hard_rec(9)).unwrap();
+        let w = tiny.record(9).unwrap().masks.to_weights();
+        assert!(!tiny.agg_cache_admits(ProfileAggregates::projected_bytes(&bank)));
+        assert!(!tiny.agg_cache_put(9, Arc::new(ProfileAggregates::prepack(&w, &bank, 0))));
+        let off = ProfileStore::with_config(StoreConfig {
+            shards: 1,
+            agg_cache_bytes: 0,
+            ..StoreConfig::default()
+        });
+        off.set_shared_aux(aux());
+        off.insert(9, hard_rec(9)).unwrap();
+        assert!(!off.agg_cache_put(9, Arc::new(ProfileAggregates::prepack(&w, &bank, 0))));
+        assert!(!off.agg_cache_enabled());
+        let _ = off.serving_state_with_agg(9).unwrap();
+        assert_eq!(off.stats().agg_misses, 0, "disabled cache records no misses");
     }
 
     #[test]

@@ -1,26 +1,45 @@
-//! The serving service: ingress → per-profile dynamic batching →
-//! backend-generic eval execution → responses, on plain threads + channels
-//! (tokio is not available offline; the request path is allocation-light).
-//! Which backend runs the forward (native gather-GEMM kernels by default,
-//! PJRT under the `pjrt` feature) is the engine's concern — this module
-//! never sees it.
+//! The serving service: ingress → dynamic batching → backend-generic eval
+//! execution → responses, on plain threads + channels (tokio is not
+//! available offline; the request path is allocation-light). Which backend
+//! runs the forward (native gather-GEMM kernels by default, PJRT under the
+//! `pjrt` feature) is the engine's concern — this module never sees it.
+//!
+//! # Cross-profile fused serving (the default)
+//!
+//! X-PEFT's whole point is that a profile is just a frozen mask over one
+//! shared trunk + adapter bank — so the executor batches across profiles:
+//! the batcher closes one fixed-shape **mixed batch** from rows of many
+//! profiles (contiguous per-profile segments), and the executor runs ONE
+//! PLM trunk forward per batch, routing each adapter site per segment
+//! through a grouped gather-GEMM and applying each profile's own head to
+//! its rows. At high profile fan-out this replaces `P` fixed-shape
+//! forwards with `⌈rows/B⌉`.
+//!
+//! Because masks are immutable between tunings, each profile's aggregate
+//! `Â = Σ_i w_i·A_i` / `B̂` is materialized ONCE and kept in the store's
+//! byte-budgeted **prepacked aggregate cache** (`--agg-cache-mb`), stored
+//! in the blocked-GEMM B-panel layout so the serving GEMM also skips
+//! `pack_b`; a re-tune bumps the profile's mask epoch and invalidates.
+//! `--no-mixed-batch` restores the historical per-profile batching (one
+//! trunk forward per profile group) — also the fallback for backends
+//! without routed execution.
 //!
 //! Profile state comes from the lock-striped sharded `ProfileStore`: the
-//! per-batch weight lookup takes a *shared* lock on one shard and returns
-//! `Arc<MaskWeights>` / `Arc<AuxParams>` — no mask-tensor clone, and no
-//! global lock contended with the scheduler's inserts.
+//! per-batch lookup takes a *shared* lock on one shard and returns
+//! `Arc<MaskWeights>` / `Arc<AuxParams>` (+ mask epoch + cached
+//! aggregates) from one consistent record read.
 //!
-//! When several profile batches are ready at once, the executor fans them
-//! out over the process worker pool (`util::threadpool`) — concurrent
-//! profiles are the serving system's natural parallel axis; a lone ready
-//! batch instead parallelizes *inside* the eval forward (the native
-//! backend shards batch rows over the same pool).
+//! When several batches are ready at once, the executor fans them out over
+//! the process worker pool (`util::threadpool`); each batch clones the
+//! response `Sender` (clonable, lock-free) and sends its responses the
+//! moment it finishes.
 //!
 //! Request path (never touches python):
-//!   submit(text) → tokenize → DynamicBatcher (group by profile)
-//!   → executor: sharded-store weight lookup (per-shard LRU) + eval program
+//!   submit(text) → tokenize → DynamicBatcher (mixed or per-profile)
+//!   → executor: sharded-store state lookup (+ aggregate cache) + eval
 //!   → Response {prediction, latency}
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -30,14 +49,14 @@ use anyhow::{Context, Result};
 
 use crate::adapters::AdapterBank;
 use crate::config::{Mode, ServeConfig};
-use crate::coordinator::batcher::{DynamicBatcher, ProfileBatch, Request};
-use crate::coordinator::profile_store::ProfileStore;
+use crate::coordinator::batcher::{DynamicBatcher, MixedBatch, ProfileBatch, Request};
+use crate::coordinator::profile_store::{AuxParams, ProfileAggregates, ProfileStore};
 use crate::coordinator::telemetry::{Snapshot, Telemetry};
 use crate::data::batch::Batch;
 use crate::data::tokenizer::{Tokenizer, CLS};
-use crate::runtime::Engine;
+use crate::masks::MaskWeights;
+use crate::runtime::{Engine, RouteSegment, RoutingPlan};
 use crate::train::eval::{argmax, Evaluator};
-use crate::train::TrainState;
 
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -63,6 +82,15 @@ pub struct Service {
     worker: Option<JoinHandle<()>>,
 }
 
+/// One resolved segment of a mixed batch: the requests plus a consistent
+/// (weights, aux, aggregates) snapshot of their profile.
+struct ResolvedSegment<'a> {
+    reqs: &'a [Request],
+    weights: Arc<MaskWeights>,
+    aux: Arc<AuxParams>,
+    agg: Option<Arc<ProfileAggregates>>,
+}
+
 impl Service {
     /// Start the serving loop for one (head, N) deployment.
     pub fn start(
@@ -83,11 +111,28 @@ impl Service {
         let st = store.clone();
         let batch_cap = cfg.max_batch.min(mc.batch);
         let deadline = Duration::from_micros(cfg.batch_deadline_us);
+        let mixed = cfg.mixed_batch;
         let seq = mc.seq;
         let bsz = mc.batch;
+        if store.agg_cache_enabled()
+            && !store.agg_cache_admits(ProfileAggregates::projected_bytes(&bank))
+        {
+            crate::warn_log!(
+                "service",
+                "aggregate cache budget admits no entry ({} B/shard < {} B/profile) — \
+                 effectively disabled; raise --agg-cache-mb or lower --shards",
+                store.config().agg_cache_bytes / store.shard_count().max(1),
+                ProfileAggregates::projected_bytes(&bank)
+            );
+        }
 
         let worker = std::thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(batch_cap, deadline);
+            // Latched false the first time routed execution reports
+            // unsupported (e.g. a PJRT program): later batches then skip
+            // straight to per-profile polling instead of paying segment
+            // resolution + prepacking + a warn per batch.
+            let routed_ok = AtomicBool::new(true);
             let mut open = true;
             while open || batcher.queued() > 0 {
                 // ingest with a bounded wait so deadlines fire
@@ -115,31 +160,53 @@ impl Service {
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                 }
                 let now = Instant::now();
-                let mut ready: Vec<ProfileBatch> = Vec::new();
-                while let Some(pb) = batcher.poll(now) {
-                    ready.push(pb);
-                }
-                if !open {
-                    ready.extend(batcher.drain());
-                }
-                if !ready.is_empty() {
-                    // Concurrent profile batches fan out over the worker
-                    // pool. Each batch sends its own responses the moment
-                    // it finishes — a fast batch must not wait on a slow
-                    // co-ready one, and its latency telemetry (stamped at
-                    // compute completion) stays honest. The Mutex only
-                    // serializes the (cheap) channel sends.
-                    let tx_shared = Mutex::new(tx_out.clone());
-                    crate::util::threadpool::run(ready.len(), |i| {
-                        let responses = Self::execute(
-                            &evaluator, &st, &tel, &ready[i], bsz, seq, num_classes,
-                        );
-                        let tx = tx_shared.lock().unwrap();
-                        for resp in responses {
-                            tel.record_response(resp.latency);
-                            let _ = tx.send(resp);
-                        }
-                    });
+                // Concurrent ready batches fan out over the worker pool.
+                // Each batch clones the response Sender and sends its own
+                // responses the moment it finishes — a fast batch must not
+                // wait on a slow co-ready one, its latency telemetry
+                // (stamped at compute completion) stays honest, and the
+                // sends are lock-free (`mpsc::Sender` is clonable).
+                if mixed && routed_ok.load(Ordering::Relaxed) {
+                    let mut ready: Vec<MixedBatch> = Vec::new();
+                    while let Some(mb) = batcher.poll_mixed(now) {
+                        ready.push(mb);
+                    }
+                    if !open {
+                        ready.extend(batcher.drain_mixed());
+                    }
+                    if !ready.is_empty() {
+                        crate::util::threadpool::run(ready.len(), |i| {
+                            let responses = Self::execute_mixed(
+                                &evaluator, &st, &bank, &tel, &ready[i], bsz, seq, num_classes,
+                                &routed_ok,
+                            );
+                            let tx = tx_out.clone();
+                            for resp in responses {
+                                tel.record_response(resp.latency);
+                                let _ = tx.send(resp);
+                            }
+                        });
+                    }
+                } else {
+                    let mut ready: Vec<ProfileBatch> = Vec::new();
+                    while let Some(pb) = batcher.poll(now) {
+                        ready.push(pb);
+                    }
+                    if !open {
+                        ready.extend(batcher.drain());
+                    }
+                    if !ready.is_empty() {
+                        crate::util::threadpool::run(ready.len(), |i| {
+                            let responses = Self::execute(
+                                &evaluator, &st, &tel, &ready[i], bsz, seq, num_classes,
+                            );
+                            let tx = tx_out.clone();
+                            for resp in responses {
+                                tel.record_response(resp.latency);
+                                let _ = tx.send(resp);
+                            }
+                        });
+                    }
                 }
             }
         });
@@ -156,10 +223,12 @@ impl Service {
         })
     }
 
-    /// Run one profile batch to completion and return its responses (the
-    /// caller records latency telemetry and sends them — `execute` may run
-    /// on any pool thread). The store lookups are shared-lock reads of one
-    /// shard; the weight `Arc` is served straight out of the shard cache.
+    /// Run one per-profile batch to completion and return its responses
+    /// (the caller records latency telemetry and sends them — `execute`
+    /// may run on any pool thread). The store lookup is a shared-lock read
+    /// of one shard; weights and aux are served straight out of the shard
+    /// as `Arc`s, and the eval path consumes them without an intermediate
+    /// `TrainState` copy.
     #[allow(clippy::too_many_arguments)]
     fn execute(
         evaluator: &Evaluator,
@@ -170,7 +239,6 @@ impl Service {
         seq: usize,
         num_classes: usize,
     ) -> Vec<Response> {
-        tel.record_batch(pb.requests.len());
         // profile state lookup: one consistent (weights, aux) pair from a
         // single record read — shared handles, no mask clone, and a
         // concurrent re-tune can't tear the pair
@@ -178,28 +246,6 @@ impl Service {
             Ok(pair) => pair,
             // unknown profile / missing aux: drop (responses time out)
             Err(_) => return Vec::new(),
-        };
-        // TrainState owns Vec<f32>s, so the aux tensors are copied here —
-        // a few KB (head + LN affine) that the executor would clone into
-        // program inputs anyway; the per-batch win lives in the mask
-        // tensors (2NL floats), which stay behind the shared Arc. An
-        // Arc-backed TrainState would shave this too, but that reshapes
-        // the train/runtime layer and isn't worth it for serving.
-        let state = TrainState {
-            names: vec![
-                "head_b".into(),
-                "head_w".into(),
-                "ln_bias".into(),
-                "ln_scale".into(),
-            ],
-            trainable: vec![
-                aux.head_b.clone(),
-                aux.head_w.clone(),
-                aux.ln_bias.clone(),
-                aux.ln_scale.clone(),
-            ],
-            opt_m: vec![],
-            opt_v: vec![],
         };
         // assemble the fixed-shape executor batch
         let mut batch = Batch {
@@ -221,13 +267,17 @@ impl Service {
             batch.tokens[row * seq] = CLS as i32;
             batch.pad_mask[row * seq] = 1.0;
         }
-        let logits = match evaluator.forward(&state, Some(weights.as_ref()), &batch) {
+        let logits = match evaluator.forward_serving(&aux, Some(weights.as_ref()), &batch) {
             Ok(l) => l,
             Err(e) => {
                 crate::warn_log!("service", "eval failed for profile {}: {e:#}", pb.profile_id);
                 return Vec::new();
             }
         };
+        // counted only on success, mirroring the mixed path: the batch /
+        // trunk-forward telemetry compares executed work on both sides
+        tel.record_batch(pb.requests.len());
+        tel.record_trunk_forward();
         let now = Instant::now();
         pb.requests
             .iter()
@@ -242,6 +292,167 @@ impl Service {
                 }
             })
             .collect()
+    }
+
+    /// Run one cross-profile mixed batch: ONE trunk forward for rows of
+    /// many profiles. Per segment, the store yields a consistent
+    /// (weights, aux, epoch, cached aggregates) snapshot; on an aggregate
+    /// cache miss the profile's Â/B̂ are materialized + prepacked HERE —
+    /// once per tune, amortized over every later batch — and offered back
+    /// to the store's byte-budgeted cache (skipped when the budget could
+    /// never admit the entry: the routed eval's own materialize/fused
+    /// heuristic is cheaper than a prepack nobody will reuse). Segments
+    /// whose profile is unknown, or whose masks/aux don't match the
+    /// deployment shapes, are dropped alone — one malformed profile must
+    /// not poison its co-batched neighbors — and their requests time out
+    /// like the per-profile path's unknown profiles. If the backend cannot
+    /// route (`run_routed` unsupported, e.g. PJRT), the batch falls back
+    /// to per-profile execution instead of dropping everything, and
+    /// `routed_ok` latches false so the serving loop stops attempting
+    /// mixed execution altogether.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_mixed(
+        evaluator: &Evaluator,
+        store: &ProfileStore,
+        bank: &AdapterBank,
+        tel: &Telemetry,
+        mb: &MixedBatch,
+        bsz: usize,
+        seq: usize,
+        num_classes: usize,
+        routed_ok: &AtomicBool,
+    ) -> Vec<Response> {
+        if mb.requests.is_empty() {
+            return Vec::new();
+        }
+        let (lb, out_w) = (bank.layers * bank.b, evaluator.out_w);
+        let mut segs: Vec<ResolvedSegment<'_>> = Vec::with_capacity(mb.segments.len());
+        for &(pid, lo, hi) in &mb.segments {
+            let (weights, aux, epoch, agg) = match store.serving_state_with_agg(pid) {
+                Ok(x) => x,
+                Err(_) => continue,
+            };
+            if weights.layers != bank.layers || weights.n != bank.n {
+                crate::warn_log!(
+                    "service",
+                    "profile {pid}: mask shape [{}, {}] does not match the bank [{}, {}] — dropping",
+                    weights.layers,
+                    weights.n,
+                    bank.layers,
+                    bank.n
+                );
+                continue;
+            }
+            if aux.ln_scale.len() != lb
+                || aux.ln_bias.len() != lb
+                || aux.head_w.len() != bank.d * out_w
+                || aux.head_b.len() != out_w
+            {
+                crate::warn_log!(
+                    "service",
+                    "profile {pid}: aux shapes do not match the deployment — dropping"
+                );
+                continue;
+            }
+            let agg = match agg {
+                Some(a) => Some(a),
+                None if store.agg_cache_enabled()
+                    && store.agg_cache_admits(ProfileAggregates::projected_bytes(bank)) =>
+                {
+                    let a = Arc::new(ProfileAggregates::prepack(&weights, bank, epoch));
+                    // a concurrently re-tuned entry is simply not cached;
+                    // this batch still serves the fresh materialization
+                    let _ = store.agg_cache_put(pid, Arc::clone(&a));
+                    Some(a)
+                }
+                None => None,
+            };
+            segs.push(ResolvedSegment { reqs: &mb.requests[lo..hi], weights, aux, agg });
+        }
+        let rows: usize = segs.iter().map(|s| s.reqs.len()).sum();
+        if rows == 0 {
+            return Vec::new();
+        }
+        // assemble the fixed-shape batch; rows past `rows` are padding the
+        // routed eval never computes, so they stay zero
+        let mut batch = Batch {
+            tokens: vec![0; bsz * seq],
+            pad_mask: vec![0.0; bsz * seq],
+            labels_i: vec![0; bsz],
+            labels_f: vec![0.0; bsz],
+            example_w: vec![0.0; bsz],
+            size: rows,
+        };
+        let mut plan = RoutingPlan { segments: Vec::with_capacity(segs.len()) };
+        let mut row = 0usize;
+        for s in &segs {
+            let lo = row;
+            for r in s.reqs {
+                for (j, (&t, &m)) in r.tokens.iter().zip(&r.pad_mask).enumerate().take(seq) {
+                    batch.tokens[row * seq + j] = t as i32;
+                    batch.pad_mask[row * seq + j] = m;
+                }
+                batch.example_w[row] = 1.0;
+                row += 1;
+            }
+            plan.segments.push(RouteSegment {
+                rows: (lo, row),
+                mask_a: &s.weights.a,
+                mask_b: &s.weights.b,
+                ln_scale: &s.aux.ln_scale,
+                ln_bias: &s.aux.ln_bias,
+                head_w: &s.aux.head_w,
+                head_b: &s.aux.head_b,
+                prepacked: s.agg.as_ref().map(|a| a.layers.as_slice()),
+            });
+        }
+        let logits = match evaluator.forward_routed(&batch, &plan) {
+            Ok(l) => l,
+            Err(e) => {
+                // routed execution unavailable (e.g. a backend without
+                // run_routed) or rejected the plan: serve the batch the
+                // old way — one per-profile forward per segment — rather
+                // than dropping every request on the floor, and stop
+                // attempting mixed execution for the rest of this service
+                routed_ok.store(false, Ordering::Relaxed);
+                crate::warn_log!(
+                    "service",
+                    "mixed eval failed ({} profiles, {rows} rows), falling back to \
+                     per-profile execution: {e:#}",
+                    segs.len()
+                );
+                let mut out = Vec::new();
+                for s in &segs {
+                    let pb = ProfileBatch {
+                        profile_id: s.reqs[0].profile_id,
+                        requests: s.reqs.to_vec(),
+                    };
+                    out.extend(Self::execute(evaluator, store, tel, &pb, bsz, seq, num_classes));
+                }
+                return out;
+            }
+        };
+        // counted only on success: the headline trunk_forwards metric must
+        // reflect forwards that actually executed
+        tel.record_batch(rows);
+        tel.record_mixed_batch(segs.len());
+        tel.record_trunk_forward();
+        let now = Instant::now();
+        let mut out = Vec::with_capacity(rows);
+        let mut row = 0usize;
+        for s in &segs {
+            for r in s.reqs {
+                let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + num_classes];
+                out.push(Response {
+                    request_id: r.id,
+                    profile_id: r.profile_id,
+                    prediction: argmax(slice),
+                    latency: now.duration_since(r.submitted),
+                });
+                row += 1;
+            }
+        }
+        out
     }
 
     /// Submit raw text for a profile; returns the request id.

@@ -18,8 +18,15 @@ pub struct Telemetry {
     pub responses: AtomicU64,
     pub batches: AtomicU64,
     pub train_jobs: AtomicU64,
+    /// PLM trunk forwards executed — the headline serving cost. One per
+    /// executor batch: per-profile batching pays one per *profile group*,
+    /// mixed batching one per fixed-shape batch regardless of fan-out.
+    pub trunk_forwards: AtomicU64,
+    /// Mixed (cross-profile) batches executed.
+    pub mixed_batches: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
+    profiles_per_batch: Mutex<Vec<f64>>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -28,13 +35,29 @@ pub struct Snapshot {
     pub responses: u64,
     pub batches: u64,
     pub train_jobs: u64,
+    pub trunk_forwards: u64,
+    pub mixed_batches: u64,
     pub mean_batch: f64,
+    /// Mean distinct profiles per mixed batch (0 when mixed mode is off).
+    pub mean_profiles_per_batch: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
     pub p99_latency_us: f64,
     /// Profile-store shard/cache stats (None for bare `Telemetry::snapshot`,
     /// filled by `Service` snapshots which hold the store).
     pub store: Option<StoreStats>,
+}
+
+impl Snapshot {
+    /// Trunk forwards per 1000 requests — the mixed-batching win in one
+    /// number (per-profile serving at fan-out approaches 1000; mixed
+    /// serving approaches `1000 / batch_rows`).
+    pub fn trunk_forwards_per_1k_requests(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.trunk_forwards as f64 * 1000.0 / self.requests as f64
+    }
 }
 
 impl Telemetry {
@@ -60,15 +83,30 @@ impl Telemetry {
         self.train_jobs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One PLM trunk forward executed (per executor batch).
+    pub fn record_trunk_forward(&self) {
+        self.trunk_forwards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One mixed batch executed, spanning `profiles` distinct profiles.
+    pub fn record_mixed_batch(&self, profiles: usize) {
+        self.mixed_batches.fetch_add(1, Ordering::Relaxed);
+        self.profiles_per_batch.lock().unwrap().push(profiles as f64);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.latencies_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
+        let ppb = self.profiles_per_batch.lock().unwrap();
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             train_jobs: self.train_jobs.load(Ordering::Relaxed),
+            trunk_forwards: self.trunk_forwards.load(Ordering::Relaxed),
+            mixed_batches: self.mixed_batches.load(Ordering::Relaxed),
             mean_batch: stats::mean(&sizes),
+            mean_profiles_per_batch: stats::mean(&ppb),
             p50_latency_us: stats::quantile(&lat, 0.5),
             p95_latency_us: stats::quantile(&lat, 0.95),
             p99_latency_us: stats::quantile(&lat, 0.99),
@@ -97,11 +135,19 @@ mod tests {
         }
         t.record_batch(4);
         t.record_batch(8);
+        t.record_trunk_forward();
+        t.record_trunk_forward();
+        t.record_mixed_batch(3);
+        t.record_mixed_batch(5);
         let s = t.snapshot();
         assert_eq!(s.requests, 100);
         assert_eq!(s.responses, 100);
         assert_eq!(s.batches, 2);
         assert_eq!(s.mean_batch, 6.0);
+        assert_eq!(s.trunk_forwards, 2);
+        assert_eq!(s.mixed_batches, 2);
+        assert_eq!(s.mean_profiles_per_batch, 4.0);
+        assert_eq!(s.trunk_forwards_per_1k_requests(), 20.0);
         assert!(s.p50_latency_us > 40.0 && s.p50_latency_us < 60.0);
         assert!(s.p99_latency_us >= s.p95_latency_us);
     }

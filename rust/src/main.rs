@@ -72,6 +72,10 @@ COMMANDS
                     --mask-cache 4096 --store-dir DIR (persist profiles as
                     per-shard append logs; tuned profiles append ~142 B
                     each) --compact-min-dead 1024 --compact-ratio 0.5
+                    --no-mixed-batch (per-profile batching; mixed
+                    cross-profile batches are the default — one trunk
+                    forward per batch) --agg-cache-mb 64 (prepacked
+                    aggregate-adapter cache; 0 disables)
   info              artifact inventory from artifacts/manifest.json
   bench             quick micro-bench suite (full: cargo bench)
 
@@ -245,6 +249,17 @@ fn serve(args: &Args) -> Result<()> {
     println!("  requests        {submitted}");
     println!("  wallclock       {wall:.2}s  ({:.1} req/s)", submitted as f64 / wall);
     println!("  mean batch      {:.2}", snap.mean_batch);
+    println!(
+        "  trunk forwards  {} ({:.0} per 1k requests)",
+        snap.trunk_forwards,
+        snap.trunk_forwards_per_1k_requests()
+    );
+    if snap.mixed_batches > 0 {
+        println!(
+            "  mixed batches   {} ({:.1} profiles/batch, {:.1} rows/batch)",
+            snap.mixed_batches, snap.mean_profiles_per_batch, snap.mean_batch
+        );
+    }
     println!("  latency p50     {:.1} ms", snap.p50_latency_us / 1e3);
     println!("  latency p95     {:.1} ms", snap.p95_latency_us / 1e3);
     println!("  latency p99     {:.1} ms", snap.p99_latency_us / 1e3);
@@ -257,6 +272,14 @@ fn serve(args: &Args) -> Result<()> {
             st.shards,
             st.hottest_shard_profiles,
             if total > 0 { st.cache_hits as f64 / total as f64 } else { 0.0 }
+        );
+        let agg_total = st.agg_hits + st.agg_misses;
+        println!(
+            "  agg cache       {} entries / {:.1} KiB, hit rate {:.2} ({} evictions)",
+            st.agg_entries,
+            st.agg_bytes as f64 / 1024.0,
+            if agg_total > 0 { st.agg_hits as f64 / agg_total as f64 } else { 0.0 },
+            st.agg_evictions
         );
     }
     Ok(())

@@ -39,7 +39,45 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
+use super::native::kernels::PackedPanels;
 use super::tensor::Tensor;
+
+/// One contiguous row segment of a mixed-profile serving batch: all rows
+/// in `[rows.0, rows.1)` belong to one profile, whose per-profile tensors
+/// ride alongside instead of occupying the artifact's trainable slots
+/// (those are filled with zeros and ignored by routed execution).
+pub struct RouteSegment<'a> {
+    /// Batch-row range `[lo, hi)` this profile owns.
+    pub rows: (usize, usize),
+    /// Normalized mask-weight rows `[L, N]`.
+    pub mask_a: &'a [f32],
+    pub mask_b: &'a [f32],
+    /// Adapter LN affine `[L, b]` each.
+    pub ln_scale: &'a [f32],
+    pub ln_bias: &'a [f32],
+    /// Classifier head `[d, out_w]` / `[out_w]`.
+    pub head_w: &'a [f32],
+    pub head_b: &'a [f32],
+    /// Per-layer cached aggregates `(Â, B̂)`, prepacked in the blocked-GEMM
+    /// B-panel layout — when present, the site skips both `Σ w_i·W_i`
+    /// assembly and `pack_b` (the cached-prepacked plan).
+    pub prepacked: Option<&'a [(PackedPanels, PackedPanels)]>,
+}
+
+/// Row→profile routing for one mixed-profile batch: segments must tile the
+/// batch's *live* rows contiguously from row 0; rows past the last segment
+/// are padding and are skipped entirely (no trunk forward is spent on
+/// them).
+pub struct RoutingPlan<'a> {
+    pub segments: Vec<RouteSegment<'a>>,
+}
+
+impl RoutingPlan<'_> {
+    /// Number of live (routed) batch rows.
+    pub fn rows(&self) -> usize {
+        self.segments.last().map_or(0, |s| s.rows.1)
+    }
+}
 
 /// One compiled executable. Inputs/outputs follow the manifest spec order.
 pub trait Program: Send + Sync {
@@ -49,6 +87,20 @@ pub trait Program: Send + Sync {
     /// Execute on fully-materialized host tensors (manifest input order).
     /// Returns outputs in `spec().outputs` order.
     fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Mixed-profile serving entry: one trunk forward over an eval batch
+    /// whose rows belong to *many* profiles, routed per contiguous row
+    /// segment (each with its own mask weights, adapter LN and head).
+    /// Inputs still follow the manifest contract; the per-profile
+    /// trainable slots are ignored in favor of the plan. Backends that
+    /// compile fixed single-profile graphs (the AOT/PJRT path) report
+    /// unsupported, and the service must fall back to per-profile batches.
+    fn run_routed(&self, _inputs: &[&Tensor], _routing: &RoutingPlan<'_>) -> Result<Vec<Tensor>> {
+        bail!(
+            "backend program '{}' does not support segment-routed eval",
+            self.spec().name
+        )
+    }
 }
 
 /// A numeric execution engine that can compile manifest artifacts.

@@ -18,7 +18,7 @@ pub mod params;
 pub mod pjrt;
 pub mod tensor;
 
-pub use backend::{Backend, Program};
+pub use backend::{Backend, Program, RouteSegment, RoutingPlan};
 pub use engine::Engine;
 pub use manifest::{ArtifactSpec, DType, Group, Manifest, TensorSpec};
 pub use native::NativeBackend;

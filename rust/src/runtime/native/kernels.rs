@@ -225,6 +225,133 @@ pub fn gemm_strided(
 }
 
 // ---------------------------------------------------------------------------
+// prepacked B-panels (the serving aggregate-cache representation)
+// ---------------------------------------------------------------------------
+
+/// A `[kdim, ncols]` matrix prepacked into the blocked GEMM's B-panel
+/// layout: panels in the exact order [`gemm_strided`] consumes them
+/// (`jc` blocks of `NC` columns outer, `pc` blocks of `KC` depth inner),
+/// each panel packed by [`pack_b`] — NR-column strips, k-major, zero-padded
+/// to the strip width. A GEMM against this form ([`gemm_packed_into`])
+/// skips `pack_b` entirely, which is the point of caching a profile's
+/// aggregate Â/B̂ in this layout: the pack cost is paid once per re-tune
+/// instead of once per serving batch.
+///
+/// Padding makes `data` slightly larger than `kdim·ncols` when `ncols`
+/// is not a multiple of `NR` (e.g. a `[d, b]` adapter down-projection at
+/// b=8 packs to NR=16-wide strips — 2× that panel). [`Self::bytes`] reports
+/// the allocated size, which is what the aggregate cache budgets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedPanels {
+    pub kdim: usize,
+    pub ncols: usize,
+    pub data: Vec<f32>,
+}
+
+impl PackedPanels {
+    /// Heap bytes held by the packed form (the cache-accounting figure).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Exact element count of [`pack_b_panels`]' output for a `[kdim, ncols]`
+/// matrix (NR-strip padding included) — lets callers budget a packed
+/// aggregate without materializing it.
+pub fn packed_panels_len(kdim: usize, ncols: usize) -> usize {
+    let mut total = 0;
+    for jc in (0..ncols).step_by(NC) {
+        let nc = NC.min(ncols - jc);
+        let strips = nc.div_ceil(NR);
+        for pc in (0..kdim).step_by(KC) {
+            let kc = KC.min(kdim - pc);
+            total += strips * NR * kc;
+        }
+    }
+    total
+}
+
+/// Prepack a row-major `[kdim, ncols]` matrix into [`PackedPanels`].
+pub fn pack_b_panels(b: &[f32], kdim: usize, ncols: usize) -> PackedPanels {
+    debug_assert_eq!(b.len(), kdim * ncols);
+    let mut data = Vec::new();
+    let mut panel = vec![0.0f32; KC * NC];
+    for jc in (0..ncols).step_by(NC) {
+        let nc = NC.min(ncols - jc);
+        let strips = nc.div_ceil(NR);
+        for pc in (0..kdim).step_by(KC) {
+            let kc = KC.min(kdim - pc);
+            let len = strips * NR * kc;
+            pack_b(&mut panel, b, ncols, 1, pc, kc, jc, nc);
+            data.extend_from_slice(&panel[..len]);
+        }
+    }
+    PackedPanels { kdim, ncols, data }
+}
+
+/// Blocked GEMM `out[m, ncols] = A[m, kdim] @ B` where B arrives prepacked.
+/// Identical blocking, micro-kernel and accumulation order to
+/// [`gemm_strided`] — results are bitwise equal to the unpacked path —
+/// minus the per-call `pack_b` traffic. A strides express transposes as in
+/// `gemm_strided` (element `(i, kk)` at `a[i·ars + kk·acs]`).
+pub fn gemm_packed_into(
+    out: &mut [f32],
+    m: usize,
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    packed: &PackedPanels,
+) {
+    let (kdim, n) = (packed.kdim, packed.ncols);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if kdim == 0 {
+        out.fill(0.0);
+        return;
+    }
+    PACK.with(|cell| {
+        let (pa, _) = &mut *cell.borrow_mut();
+        pa.resize(MC * KC, 0.0);
+        let mut cursor = 0usize;
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let nr_strips = nc.div_ceil(NR);
+            for pc in (0..kdim).step_by(KC) {
+                let kc = KC.min(kdim - pc);
+                let first = pc == 0;
+                let pb = &packed.data[cursor..cursor + nr_strips * NR * kc];
+                cursor += nr_strips * NR * kc;
+                for ic in (0..m).step_by(MC) {
+                    let mc = MC.min(m - ic);
+                    let mr_strips = mc.div_ceil(MR);
+                    pack_a(pa, a, ars, acs, ic, mc, pc, kc);
+                    for s in 0..mr_strips {
+                        let pa_strip = &pa[s * MR * kc..(s + 1) * MR * kc];
+                        for t in 0..nr_strips {
+                            let pb_strip = &pb[t * NR * kc..(t + 1) * NR * kc];
+                            let mut acc = [[0.0f32; NR]; MR];
+                            microkernel(pa_strip, pb_strip, &mut acc);
+                            store_tile(
+                                out,
+                                n,
+                                m,
+                                ic + s * MR,
+                                jc + t * NR,
+                                jc + nc,
+                                &acc,
+                                first,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // matmul family (row-major), all routed through the blocked kernel
 // ---------------------------------------------------------------------------
 
@@ -641,6 +768,60 @@ pub fn gather_gemm_into(
     }
 }
 
+/// How one row segment's aggregate arrives at a grouped gather-GEMM site —
+/// the serving plan's three execution strategies.
+#[derive(Clone, Copy)]
+pub enum GatherW<'a> {
+    /// Mask-weight row `[N]` over the bank slab: [`gather_gemm_into`]'s
+    /// fused-vs-materialize flop heuristic applies per segment.
+    Weights(&'a [f32]),
+    /// Pre-materialized aggregate `Ŵ [din, dout]`, row-major.
+    Materialized(&'a [f32]),
+    /// Cached prepacked form of `Ŵ` — the plan that wins whenever the
+    /// aggregate cache hits: no `Σ w_i·W_i` assembly and no `pack_b`.
+    Packed(&'a PackedPanels),
+}
+
+/// One contiguous row segment of a mixed-profile batch at an adapter site:
+/// rows `[lo, hi)` of `x` share one profile's aggregate.
+pub struct GatherSegment<'a> {
+    pub lo: usize,
+    pub hi: usize,
+    pub w: GatherW<'a>,
+}
+
+/// Grouped gather-GEMM: `out[lo..hi] = x[lo..hi] @ Ŵ_seg` per contiguous
+/// row segment, so a batch mixing many profiles runs one pass over `x`
+/// with per-profile aggregates dispatched per segment. `bank_layer` is
+/// required only when some segment carries [`GatherW::Weights`]. Rows not
+/// covered by any segment are left untouched.
+pub fn gather_gemm_grouped_into(
+    out: &mut [f32],
+    x: &[f32],
+    din: usize,
+    dout: usize,
+    segs: &[GatherSegment<'_>],
+    bank_layer: Option<&[f32]>,
+) {
+    for seg in segs {
+        debug_assert!(seg.lo <= seg.hi && seg.hi * din <= x.len());
+        let rows = seg.hi - seg.lo;
+        let xs = &x[seg.lo * din..seg.hi * din];
+        let os = &mut out[seg.lo * dout..seg.hi * dout];
+        match seg.w {
+            GatherW::Weights(w) => {
+                let bank = bank_layer.expect("Weights segments need the bank slab");
+                gather_gemm_into(os, xs, rows, din, dout, w, bank);
+            }
+            GatherW::Materialized(m) => matmul_into(os, xs, m, rows, din, dout),
+            GatherW::Packed(p) => {
+                debug_assert_eq!((p.kdim, p.ncols), (din, dout));
+                gemm_packed_into(os, rows, xs, din, 1, p);
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // adapter blocks (mirrors python/compile/kernels/ref.py)
 // ---------------------------------------------------------------------------
@@ -830,6 +1011,90 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The cached-prepacked plan must match the blocked GEMM (and, through
+    /// the existing oracle tests, the scalar kernels) on shapes that are
+    /// not multiples of any tile AND cross every blocking boundary — the
+    /// prepacked panels are consumed in exactly the order `gemm_strided`
+    /// packs them, so the results should agree to rounding.
+    #[test]
+    fn packed_gemm_matches_blocked_on_odd_shapes() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 4),
+            (7, 17, 9),
+            (4, 16, 16),
+            (33, 64, 15),
+            (128, 64, 8),    // the serving adapter down-projection shape
+            (65, 257, 31),   // crosses MC and KC
+            (130, 300, 129), // crosses MC, KC and NC
+        ];
+        let mut rng = Rng::new(77);
+        for &(m, k, n) in &shapes {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let packed = pack_b_panels(&b, k, n);
+            assert!(packed.data.len() >= k * n, "{m}x{k}x{n}: panels cover the matrix");
+            assert_eq!(
+                packed.data.len(),
+                packed_panels_len(k, n),
+                "{m}x{k}x{n}: projected length matches the packed form"
+            );
+            let mut got = vec![0.0f32; m * n];
+            gemm_packed_into(&mut got, m, &a, k, 1, &packed);
+            let want = matmul(&a, &b, m, k, n);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-6 * (1.0 + w.abs()),
+                    "{m}x{k}x{n} [{i}]: packed {g} vs blocked {w}"
+                );
+            }
+        }
+    }
+
+    /// All three grouped-gather segment forms (weights / materialized /
+    /// prepacked) must agree with the per-row oracle `x_row @ Ŵ_seg`, and
+    /// rows outside every segment must stay untouched.
+    #[test]
+    fn grouped_gather_matches_per_segment_oracle() {
+        let mut rng = Rng::new(31);
+        let (din, dout, n, rows) = (8usize, 6usize, 10usize, 9usize);
+        let bank = randv(&mut rng, n * din * dout);
+        let x = randv(&mut rng, rows * din);
+        // three profiles with distinct masks
+        let mut weights: Vec<Vec<f32>> = Vec::new();
+        for p in 0..3usize {
+            let mut w = vec![0.0f32; n];
+            for i in 0..(2 + p) {
+                w[(i * 3 + p) % n] = 0.5 + i as f32;
+            }
+            weights.push(w);
+        }
+        let hats: Vec<Vec<f32>> =
+            weights.iter().map(|w| aggregate_bank(w, &bank, din * dout)).collect();
+        let packed = pack_b_panels(&hats[2], din, dout);
+        let segs = [
+            GatherSegment { lo: 0, hi: 4, w: GatherW::Weights(&weights[0]) },
+            GatherSegment { lo: 4, hi: 5, w: GatherW::Materialized(&hats[1]) },
+            GatherSegment { lo: 5, hi: 8, w: GatherW::Packed(&packed) },
+        ];
+        let sentinel = -7.25f32;
+        let mut got = vec![sentinel; rows * dout];
+        gather_gemm_grouped_into(&mut got, &x, din, dout, &segs, Some(&bank));
+        for (r, seg_w) in [(0usize, 0usize), (3, 0), (4, 1), (5, 2), (7, 2)] {
+            let want =
+                scalar::matmul(&x[r * din..(r + 1) * din], &hats[seg_w], 1, din, dout);
+            for (j, w) in want.iter().enumerate() {
+                let g = got[r * dout + j];
+                assert!(
+                    (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                    "row {r} col {j}: grouped {g} vs oracle {w}"
+                );
+            }
+        }
+        // row 8 is covered by no segment: untouched
+        assert!(got[8 * dout..].iter().all(|&v| v == sentinel));
     }
 
     #[test]

@@ -33,7 +33,7 @@ use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
 
-use super::backend::{validate_inputs, Backend, Program};
+use super::backend::{validate_inputs, Backend, Program, RoutingPlan};
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::Tensor;
 
@@ -92,6 +92,14 @@ impl Program for NativeProgram {
             "train" => model::run_train(&self.config, &self.spec, inputs, &self.arenas),
             _ => model::run_eval(&self.config, &self.spec, inputs, &self.arenas),
         }
+    }
+
+    fn run_routed(&self, inputs: &[&Tensor], routing: &RoutingPlan<'_>) -> Result<Vec<Tensor>> {
+        validate_inputs(&self.spec, inputs)?;
+        if self.spec.program != "eval" {
+            bail!("artifact {}: routed execution is an eval-only path", self.spec.name);
+        }
+        model::run_eval_routed(&self.config, &self.spec, inputs, &self.arenas, routing)
     }
 }
 

@@ -34,6 +34,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::masks::topk_indices;
+use crate::runtime::backend::RoutingPlan;
 use crate::runtime::manifest::{ArtifactSpec, Group, TensorSpec};
 use crate::runtime::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -144,9 +145,44 @@ fn plm_view<'a>(inp: &Inputs<'a>, layers: usize) -> Result<Plm<'a>> {
     })
 }
 
+/// One row-segment's aggregate source at a single adapter site of a
+/// routed (mixed-profile) eval — the three serving execution plans.
+#[derive(Clone, Copy)]
+enum RouteMat<'a> {
+    /// Cache hit: `Ŵ` prepacked in the blocked-GEMM B-panel layout.
+    Packed(&'a k::PackedPanels),
+    /// Cache miss, materialize won the flop heuristic: `Ŵ [din, dout]`.
+    Mat(&'a [f32]),
+    /// Cache miss, fused won: mask-weight row `[N]` over the bank slab.
+    Fused(&'a [f32]),
+}
+
+impl<'a> RouteMat<'a> {
+    fn gather(&self) -> k::GatherW<'a> {
+        match *self {
+            RouteMat::Packed(p) => k::GatherW::Packed(p),
+            RouteMat::Mat(m) => k::GatherW::Materialized(m),
+            RouteMat::Fused(w) => k::GatherW::Weights(w),
+        }
+    }
+}
+
+/// One profile's row range at one layer of a routed eval shard. Token-row
+/// ranges are relative to the shard's own `x`.
+struct RouteSite<'a> {
+    lo: usize,
+    hi: usize,
+    a: RouteMat<'a>,
+    b: RouteMat<'a>,
+    ln_s: &'a [f32],
+    ln_b: &'a [f32],
+}
+
 /// Per-layer adapter configuration: Â/B̂ aggregated from the bank under
 /// mask weights (training), the profile's own matrices, the *un*assembled
-/// masked form (eval — drives the fused gather-GEMM directly), or absent.
+/// masked form (eval — drives the fused gather-GEMM directly), the
+/// mixed-profile routed form (serving — per-segment aggregates dispatched
+/// by a grouped gather-GEMM), or absent.
 enum Adapter<'a> {
     Assembled { a_hat: Vec<f32>, b_hat: Vec<f32>, ln_s: &'a [f32], ln_b: &'a [f32] },
     Borrowed { a: &'a [f32], b: &'a [f32], ln_s: &'a [f32], ln_b: &'a [f32] },
@@ -158,17 +194,19 @@ enum Adapter<'a> {
         ln_s: &'a [f32],
         ln_b: &'a [f32],
     },
+    Routed { sites: Vec<RouteSite<'a>>, bank_a: &'a [f32], bank_b: &'a [f32] },
     None,
 }
 
 impl<'a> Adapter<'a> {
-    /// Materialized matrices — what the backward pass needs. `Masked` is
-    /// eval-only (no backward), so it reports `None` here like `None`.
+    /// Materialized matrices — what the backward pass needs. `Masked` and
+    /// `Routed` are eval-only (no backward), so they report `None` here
+    /// like `None`.
     fn parts(&self) -> Option<(&[f32], &[f32], &[f32], &[f32])> {
         match self {
             Adapter::Assembled { a_hat, b_hat, ln_s, ln_b } => Some((a_hat, b_hat, ln_s, ln_b)),
             Adapter::Borrowed { a, b, ln_s, ln_b } => Some((a, b, ln_s, ln_b)),
-            Adapter::Masked { .. } | Adapter::None => None,
+            Adapter::Masked { .. } | Adapter::Routed { .. } | Adapter::None => None,
         }
     }
 
@@ -177,7 +215,8 @@ impl<'a> Adapter<'a> {
             Adapter::Assembled { ln_s, ln_b, .. }
             | Adapter::Borrowed { ln_s, ln_b, .. }
             | Adapter::Masked { ln_s, ln_b, .. } => (ln_s, ln_b),
-            Adapter::None => (&[], &[]),
+            // Routed LN affine is per site; handled inside `apply_routed`.
+            Adapter::Routed { .. } | Adapter::None => (&[], &[]),
         }
     }
 }
@@ -359,6 +398,9 @@ fn apply_adapter<'ar>(
     if let Adapter::None = adapter {
         return (ar.alloc_copy(ffn_out), ar.alloc(0), ar.alloc(0), None);
     }
+    if let Adapter::Routed { sites, bank_a, bank_b } = adapter {
+        return apply_routed(sites, bank_a, bank_b, ffn_out, r, d, bneck, ar);
+    }
     let (ln_s, ln_b) = adapter.ln();
     let mut h_pre = ar.scratch(r * bneck);
     match adapter {
@@ -384,6 +426,52 @@ fn apply_adapter<'ar>(
         *o += f;
     }
     (out, h_pre, h, Some(stats))
+}
+
+/// The mixed-profile adapter site: `x + LN_seg(x @ Â_seg) @ B̂_seg` per
+/// contiguous row segment, via two grouped gather-GEMMs with a per-site
+/// LayerNorm (each profile's own adapter-LN affine) in between. Sites must
+/// tile `[0, r)` — `run_eval_routed` builds them that way. Eval-only, so
+/// no LN stats are kept.
+#[allow(clippy::too_many_arguments)]
+fn apply_routed<'ar>(
+    sites: &[RouteSite<'_>],
+    bank_a: &[f32],
+    bank_b: &[f32],
+    ffn_out: &[f32],
+    r: usize,
+    d: usize,
+    bneck: usize,
+    ar: &'ar Arena,
+) -> (Scratch<'ar>, Scratch<'ar>, Scratch<'ar>, Option<k::LnStats>) {
+    debug_assert!(sites.first().is_some_and(|s| s.lo == 0));
+    debug_assert!(sites.last().is_some_and(|s| s.hi == r));
+    let mut h_pre = ar.scratch(r * bneck);
+    let segs_a: Vec<k::GatherSegment<'_>> = sites
+        .iter()
+        .map(|s| k::GatherSegment { lo: s.lo, hi: s.hi, w: s.a.gather() })
+        .collect();
+    k::gather_gemm_grouped_into(&mut h_pre, ffn_out, d, bneck, &segs_a, Some(bank_a));
+    let mut h = ar.scratch(r * bneck);
+    for s in sites {
+        let _ = k::layer_norm_into(
+            &mut h[s.lo * bneck..s.hi * bneck],
+            &h_pre[s.lo * bneck..s.hi * bneck],
+            s.ln_s,
+            s.ln_b,
+            bneck,
+        );
+    }
+    let segs_b: Vec<k::GatherSegment<'_>> = sites
+        .iter()
+        .map(|s| k::GatherSegment { lo: s.lo, hi: s.hi, w: s.b.gather() })
+        .collect();
+    let mut out = ar.scratch(r * d);
+    k::gather_gemm_grouped_into(&mut out, &h, bneck, d, &segs_b, Some(bank_b));
+    for (o, &f) in out.iter_mut().zip(ffn_out) {
+        *o += f;
+    }
+    (out, h_pre, h, None)
 }
 
 /// Encoder forward over one shard's rows. Returns CLS rows `[B, d]` and,
@@ -1318,6 +1406,221 @@ pub(crate) fn run_eval(
     Ok(vec![Tensor::F32(logits)])
 }
 
+/// Mixed-profile serving forward: ONE trunk pass over a batch whose rows
+/// belong to many profiles. The routing plan's segments tile the live rows
+/// contiguously; the encoder trunk (attention + FFN) is profile-free, so
+/// rows shard over the pool exactly as in [`run_eval`], while every
+/// adapter site dispatches a grouped gather-GEMM over the shard's row
+/// segments and the head applies per segment. Rows past the last segment
+/// are padding and cost **nothing** — the per-profile path pays a full
+/// fixed-shape forward per profile, which is the cost this entry removes.
+///
+/// Per-segment plans: a prepacked cache entry (`RouteSegment::prepacked`)
+/// always wins (no aggregation, no `pack_b`); otherwise Â/B̂ materialize
+/// once per segment per layer unless the fused flop heuristic
+/// ([`k::gather_fused_wins`] at segment token-row scale) says the fused
+/// panel accumulation is cheaper.
+pub(crate) fn run_eval_routed(
+    cfg: &ModelConfig,
+    spec: &ArtifactSpec,
+    tensors: &[&Tensor],
+    arenas: &ArenaPool,
+    routing: &RoutingPlan<'_>,
+) -> Result<Vec<Tensor>> {
+    let inp = Inputs::new(spec, tensors);
+    if spec.mode != "xpeft" {
+        bail!("artifact {}: routed eval is an xpeft serving path", spec.name);
+    }
+    let out_w = out_width(cfg, spec.head.as_str());
+    let (t, d, bneck) = (cfg.seq, cfg.d, cfg.bottleneck);
+    let n = spec.n;
+    let slab = d * bneck;
+    let plm = plm_view(&inp, cfg.layers)?;
+    let tokens = inp.i32("tokens")?;
+    let pad_mask = inp.f32("pad_mask")?;
+    let bank_a = inp.f32("bank_a")?;
+    let bank_b = inp.f32("bank_b")?;
+    let bsz = tokens.len() / t;
+
+    // ---- validate the plan against the artifact dims ----
+    let mut next = 0usize;
+    for seg in &routing.segments {
+        if seg.rows.0 != next || seg.rows.1 <= seg.rows.0 {
+            bail!("routing segments must tile batch rows contiguously from 0");
+        }
+        if seg.mask_a.len() != cfg.layers * n || seg.mask_b.len() != cfg.layers * n {
+            bail!(
+                "segment mask weights have {} entries, artifact {} expects {}",
+                seg.mask_a.len(),
+                spec.name,
+                cfg.layers * n
+            );
+        }
+        if seg.ln_scale.len() != cfg.layers * bneck || seg.ln_bias.len() != cfg.layers * bneck {
+            bail!("segment adapter-LN affine must be [L={}, b={bneck}]", cfg.layers);
+        }
+        if seg.head_w.len() != d * out_w || seg.head_b.len() != out_w {
+            bail!("segment head must be [{d}, {out_w}] + [{out_w}]");
+        }
+        if let Some(layers) = seg.prepacked {
+            if layers.len() != cfg.layers {
+                bail!("cached aggregate has {} layers, model has {}", layers.len(), cfg.layers);
+            }
+            for (pa, pb) in layers {
+                if pa.kdim != d || pa.ncols != bneck || pb.kdim != bneck || pb.ncols != d {
+                    bail!("cached aggregate panel dims do not match the model");
+                }
+            }
+        }
+        next = seg.rows.1;
+    }
+    let active = next;
+    if active > bsz {
+        bail!("routing covers {active} rows, batch has {bsz}");
+    }
+    if active == 0 {
+        return Ok(vec![Tensor::F32(vec![0.0; bsz * out_w])]);
+    }
+
+    // ---- per-segment aggregates for cache misses (parallel over
+    // segments; empty vecs mark layers where the fused plan won) ----
+    let mats: Vec<Option<Vec<(Vec<f32>, Vec<f32>)>>> =
+        threadpool::map_indexed(routing.segments.len(), |si| {
+            let seg = &routing.segments[si];
+            if seg.prepacked.is_some() {
+                return None;
+            }
+            let rows_tok = (seg.rows.1 - seg.rows.0) * t;
+            let nnz = |w: &[f32]| w.iter().filter(|&&v| v != 0.0).count().max(1);
+            Some(
+                (0..cfg.layers)
+                    .map(|l| {
+                        let wal = &seg.mask_a[l * n..(l + 1) * n];
+                        let wbl = &seg.mask_b[l * n..(l + 1) * n];
+                        if k::gather_fused_wins(nnz(wal), rows_tok)
+                            && k::gather_fused_wins(nnz(wbl), rows_tok)
+                        {
+                            (Vec::new(), Vec::new())
+                        } else {
+                            (
+                                k::aggregate_bank(
+                                    wal,
+                                    &bank_a[l * n * slab..(l + 1) * n * slab],
+                                    slab,
+                                ),
+                                k::aggregate_bank(
+                                    wbl,
+                                    &bank_b[l * n * slab..(l + 1) * n * slab],
+                                    slab,
+                                ),
+                            )
+                        }
+                    })
+                    .collect(),
+            )
+        });
+
+    // ---- shard the LIVE rows over the pool; each shard builds routed
+    // adapters clipped to its row window ----
+    let shards = active.div_ceil(SHARD_ROWS);
+    let plm_ref = &plm;
+    let mats_ref = &mats;
+    let results = threadpool::map_indexed(shards, |si| -> Result<Vec<f32>> {
+        let lo = si * SHARD_ROWS;
+        let hi = ((si + 1) * SHARD_ROWS).min(active);
+        let sb = hi - lo;
+        let overlapping: Vec<(usize, usize, usize)> = routing
+            .segments
+            .iter()
+            .enumerate()
+            .filter_map(|(i, seg)| {
+                let s = seg.rows.0.max(lo);
+                let e = seg.rows.1.min(hi);
+                (s < e).then_some((i, s, e))
+            })
+            .collect();
+        let adapters: Vec<Adapter<'_>> = (0..cfg.layers)
+            .map(|l| {
+                let sites = overlapping
+                    .iter()
+                    .map(|&(i, s, e)| {
+                        let seg = &routing.segments[i];
+                        let (a, b) = match (seg.prepacked, &mats_ref[i]) {
+                            (Some(layers), _) => (
+                                RouteMat::Packed(&layers[l].0),
+                                RouteMat::Packed(&layers[l].1),
+                            ),
+                            (None, Some(ls)) => {
+                                let (ah, bh) = &ls[l];
+                                if ah.is_empty() {
+                                    (
+                                        RouteMat::Fused(&seg.mask_a[l * n..(l + 1) * n]),
+                                        RouteMat::Fused(&seg.mask_b[l * n..(l + 1) * n]),
+                                    )
+                                } else {
+                                    (RouteMat::Mat(ah.as_slice()), RouteMat::Mat(bh.as_slice()))
+                                }
+                            }
+                            (None, None) => unreachable!("miss segments always materialize"),
+                        };
+                        RouteSite {
+                            lo: (s - lo) * t,
+                            hi: (e - lo) * t,
+                            a,
+                            b,
+                            ln_s: &seg.ln_scale[l * bneck..(l + 1) * bneck],
+                            ln_b: &seg.ln_bias[l * bneck..(l + 1) * bneck],
+                        }
+                    })
+                    .collect();
+                Adapter::Routed {
+                    sites,
+                    bank_a: &bank_a[l * n * slab..(l + 1) * n * slab],
+                    bank_b: &bank_b[l * n * slab..(l + 1) * n * slab],
+                }
+            })
+            .collect();
+        let ar = arenas.acquire();
+        let shard: Result<Vec<f32>> = (|| {
+            let (cls, _) = encode(
+                cfg,
+                plm_ref,
+                &adapters,
+                &tokens[lo * t..hi * t],
+                &pad_mask[lo * t..hi * t],
+                false,
+                &ar,
+            )?;
+            // per-segment head over the shard's rows
+            let mut logits = vec![0.0f32; sb * out_w];
+            for &(i, s, e) in &overlapping {
+                let seg = &routing.segments[i];
+                let (r0, rn) = (s - lo, e - s);
+                k::matmul_into(
+                    &mut logits[r0 * out_w..(r0 + rn) * out_w],
+                    &cls[r0 * d..(r0 + rn) * d],
+                    seg.head_w,
+                    rn,
+                    d,
+                    out_w,
+                );
+                k::add_bias(&mut logits[r0 * out_w..(r0 + rn) * out_w], seg.head_b);
+            }
+            Ok(logits)
+        })();
+        arenas.release(ar);
+        shard
+    });
+    // padding rows (>= active) are never computed: their logits stay zero
+    let mut logits = vec![0.0f32; bsz * out_w];
+    for (si, res) in results.into_iter().enumerate() {
+        let part = res?;
+        let off = si * SHARD_ROWS * out_w;
+        logits[off..off + part.len()].copy_from_slice(&part);
+    }
+    Ok(vec![Tensor::F32(logits)])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1559,6 +1862,151 @@ mod tests {
         let logits = out[0].f32s().unwrap();
         assert_eq!(logits.len(), cfg.batch * cfg.c_max);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// The tentpole parity pin: a mixed-profile routed batch must
+    /// reproduce the per-profile eval **row for row** (≤1e-6), whether a
+    /// segment's aggregate is materialized on the fly (cache miss) or
+    /// served from the prepacked cache form (hit) — and padding rows past
+    /// the last segment must cost nothing (logits stay zero).
+    #[test]
+    fn routed_mixed_batch_matches_per_profile_eval() {
+        use crate::masks::MaskLogits;
+        use crate::runtime::backend::{RouteSegment, RoutingPlan};
+
+        let mut cfg = tiny_cfg();
+        cfg.batch = 8;
+        let m = Manifest::synthesize(cfg.clone(), Path::new("unused"));
+        let spec = m.find("xpeft_eval_cls_n100").unwrap().clone();
+        let base = build_inputs(&cfg, &spec, 51);
+        let n = spec.n;
+        let (d, bneck) = (cfg.d, cfg.bottleneck);
+        let slab = d * bneck;
+
+        struct Prof {
+            wa: Vec<f32>,
+            wb: Vec<f32>,
+            ln_s: Vec<f32>,
+            ln_b: Vec<f32>,
+            hw: Vec<f32>,
+            hb: Vec<f32>,
+        }
+        let profs: Vec<Prof> = (0..3u64)
+            .map(|p| {
+                let mut r = Rng::new(100 + p);
+                let logits = MaskLogits {
+                    layers: cfg.layers,
+                    n,
+                    a: r.normal_vec(cfg.layers * n, 1.0),
+                    b: r.normal_vec(cfg.layers * n, 1.0),
+                };
+                let w = logits.binarize(50).to_weights();
+                Prof {
+                    wa: w.a,
+                    wb: w.b,
+                    ln_s: r.normal_vec(cfg.layers * bneck, 0.3),
+                    ln_b: r.normal_vec(cfg.layers * bneck, 0.3),
+                    hw: r.normal_vec(d * cfg.c_max, 0.1),
+                    hb: r.normal_vec(cfg.c_max, 0.1),
+                }
+            })
+            .collect();
+        // mixed batch: p0 owns rows 0..3, p1 rows 3..4, p2 rows 4..7;
+        // row 7 is padding (not routed)
+        let ranges = [(0usize, 3usize), (3, 4), (4, 7)];
+
+        // per-profile oracle: run the whole batch as ONE profile, keep
+        // that profile's rows (row results depend only on the row's own
+        // tokens + that profile's tensors)
+        let out_w = cfg.c_max;
+        let mut want = vec![0.0f32; cfg.batch * out_w];
+        for (p, &(lo, hi)) in profs.iter().zip(&ranges) {
+            let mut tensors = base.clone();
+            for (name, vals) in [
+                ("mask_a_w", &p.wa),
+                ("mask_b_w", &p.wb),
+                ("ln_scale", &p.ln_s),
+                ("ln_bias", &p.ln_b),
+                ("head_w", &p.hw),
+                ("head_b", &p.hb),
+            ] {
+                tensors[spec.input_index(name).unwrap()] = Tensor::F32(vals.clone());
+            }
+            let refs: Vec<&Tensor> = tensors.iter().collect();
+            let full = run_eval(&cfg, &spec, &refs, &ArenaPool::new()).unwrap();
+            let full = full[0].f32s().unwrap();
+            want[lo * out_w..hi * out_w].copy_from_slice(&full[lo * out_w..hi * out_w]);
+        }
+
+        let refs: Vec<&Tensor> = base.iter().collect();
+        let inp = Inputs::new(&spec, &refs);
+        let bank_a = inp.f32("bank_a").unwrap();
+        let bank_b = inp.f32("bank_b").unwrap();
+        fn mk_plan<'a>(
+            profs: &'a [Prof],
+            ranges: &[(usize, usize)],
+            prepacked: Option<&'a [Vec<(k::PackedPanels, k::PackedPanels)>]>,
+        ) -> RoutingPlan<'a> {
+            RoutingPlan {
+                segments: profs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| RouteSegment {
+                        rows: ranges[i],
+                        mask_a: &p.wa,
+                        mask_b: &p.wb,
+                        ln_scale: &p.ln_s,
+                        ln_bias: &p.ln_b,
+                        head_w: &p.hw,
+                        head_b: &p.hb,
+                        prepacked: prepacked.map(|all| all[i].as_slice()),
+                    })
+                    .collect(),
+            }
+        }
+        let check = |label: &str, got: &[f32]| {
+            for (lo, hi) in ranges {
+                for i in lo * out_w..hi * out_w {
+                    let (g, w) = (got[i], want[i]);
+                    assert!(
+                        (g - w).abs() <= 1e-6 * (1.0 + w.abs()),
+                        "{label} logit [{i}]: routed {g} vs per-profile {w}"
+                    );
+                }
+            }
+            // padding row: never computed, logits pinned to zero
+            assert!(got[7 * out_w..].iter().all(|&v| v == 0.0), "{label}: padding row is free");
+        };
+
+        // cache-miss plan (per-segment materialize)
+        let plan = mk_plan(&profs, &ranges, None);
+        let got = run_eval_routed(&cfg, &spec, &refs, &ArenaPool::new(), &plan).unwrap();
+        check("miss", got[0].f32s().unwrap());
+
+        // cached-prepacked plan: aggregate once, prepack, serve from panels
+        let packed: Vec<Vec<(k::PackedPanels, k::PackedPanels)>> = profs
+            .iter()
+            .map(|p| {
+                (0..cfg.layers)
+                    .map(|l| {
+                        let a_hat = k::aggregate_bank(
+                            &p.wa[l * n..(l + 1) * n],
+                            &bank_a[l * n * slab..(l + 1) * n * slab],
+                            slab,
+                        );
+                        let b_hat = k::aggregate_bank(
+                            &p.wb[l * n..(l + 1) * n],
+                            &bank_b[l * n * slab..(l + 1) * n * slab],
+                            slab,
+                        );
+                        (k::pack_b_panels(&a_hat, d, bneck), k::pack_b_panels(&b_hat, bneck, d))
+                    })
+                    .collect()
+            })
+            .collect();
+        let plan = mk_plan(&profs, &ranges, Some(&packed));
+        let got = run_eval_routed(&cfg, &spec, &refs, &ArenaPool::new(), &plan).unwrap();
+        check("hit", got[0].f32s().unwrap());
     }
 
     /// The fused gather-GEMM eval path (`Adapter::Masked`) must agree with

@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::adapters::AdapterBank;
 use crate::config::Mode;
+use crate::coordinator::profile_store::AuxParams;
 use crate::data::batch::{Batch, Batcher};
 use crate::data::{Dataset, Label, MetricKind};
 use crate::masks::MaskWeights;
@@ -15,7 +16,7 @@ use crate::metrics::Scores;
 use crate::runtime::manifest::{DType, Group, Manifest};
 use crate::runtime::params;
 use crate::runtime::tensor::Tensor;
-use crate::runtime::{Engine, Program};
+use crate::runtime::{Engine, Program, RoutingPlan};
 use crate::train::TrainState;
 use crate::util::rng::Rng;
 
@@ -88,23 +89,77 @@ impl Evaluator {
         weights: Option<&MaskWeights>,
         batch: &Batch,
     ) -> Result<Vec<f32>> {
-        let program = self.program.clone();
-        let spec = program.spec();
+        self.assemble_and_run(
+            batch,
+            |ts| match ts.name.as_str() {
+                "mask_a_w" => {
+                    let w = weights.context("xpeft eval needs mask weights")?;
+                    Ok(Tensor::F32(w.a.clone()))
+                }
+                "mask_b_w" => {
+                    let w = weights.context("xpeft eval needs mask weights")?;
+                    Ok(Tensor::F32(w.b.clone()))
+                }
+                name => Ok(Tensor::F32(state.get(name)?.to_vec())),
+            },
+            None,
+        )
+    }
+
+    /// Serving forward: aux tensors come straight off the profile store's
+    /// shared `Arc<AuxParams>` — no per-batch `TrainState` scaffolding
+    /// (names + trainable Vec-of-Vecs) and one copy per tensor instead of
+    /// two (the few-KB clone the old path paid per batch), the copy being
+    /// the one the `Program` host-tensor contract requires.
+    pub fn forward_serving(
+        &self,
+        aux: &AuxParams,
+        weights: Option<&MaskWeights>,
+        batch: &Batch,
+    ) -> Result<Vec<f32>> {
+        self.assemble_and_run(
+            batch,
+            |ts| {
+                Ok(Tensor::F32(match ts.name.as_str() {
+                    "mask_a_w" => weights.context("xpeft eval needs mask weights")?.a.clone(),
+                    "mask_b_w" => weights.context("xpeft eval needs mask weights")?.b.clone(),
+                    "head_w" => aux.head_w.clone(),
+                    "head_b" => aux.head_b.clone(),
+                    "ln_scale" => aux.ln_scale.clone(),
+                    "ln_bias" => aux.ln_bias.clone(),
+                    other => bail!("unexpected serving trainable '{other}'"),
+                }))
+            },
+            None,
+        )
+    }
+
+    /// Mixed-profile serving forward: ONE trunk pass over a batch whose
+    /// rows span many profiles. Per-profile tensors travel in `routing`
+    /// (plain borrows of the store's `Arc`-backed state — nothing is
+    /// cloned per profile); the artifact's per-profile trainable slots are
+    /// filled with zeros to satisfy the input contract and ignored by the
+    /// routed program. Rows past the last segment are padding and are not
+    /// computed (their logits return as zeros).
+    pub fn forward_routed(&self, batch: &Batch, routing: &RoutingPlan<'_>) -> Result<Vec<f32>> {
+        self.assemble_and_run(batch, |ts| Ok(Tensor::zeros_like(ts)), Some(routing))
+    }
+
+    /// Shared input assembly: `trainable` fills the per-profile slots, the
+    /// cached frozen PLM/bank tensors splice in by index, and the program
+    /// runs plain or routed.
+    fn assemble_and_run(
+        &self,
+        batch: &Batch,
+        mut trainable: impl FnMut(&crate::runtime::TensorSpec) -> Result<Tensor>,
+        routing: Option<&RoutingPlan<'_>>,
+    ) -> Result<Vec<f32>> {
+        let spec = self.program.spec();
         let mut owned: Vec<Option<Tensor>> = (0..spec.inputs.len()).map(|_| None).collect();
         for (i, ts) in spec.inputs.iter().enumerate() {
             let t = match ts.group {
                 Group::Plm | Group::Bank => continue,
-                Group::Trainable => match ts.name.as_str() {
-                    "mask_a_w" => {
-                        let w = weights.context("xpeft eval needs mask weights")?;
-                        Tensor::F32(w.a.clone())
-                    }
-                    "mask_b_w" => {
-                        let w = weights.context("xpeft eval needs mask weights")?;
-                        Tensor::F32(w.b.clone())
-                    }
-                    name => Tensor::F32(state.get(name)?.to_vec()),
-                },
+                Group::Trainable => trainable(ts)?,
                 Group::Data => match (ts.name.as_str(), ts.dtype) {
                     ("tokens", DType::I32) => Tensor::I32(batch.tokens.clone()),
                     ("pad_mask", DType::F32) => Tensor::F32(batch.pad_mask.clone()),
@@ -124,7 +179,10 @@ impl Evaluator {
             }
             refs.into_iter().map(Option::unwrap).collect()
         };
-        let mut out = program.run(&inputs)?;
+        let mut out = match routing {
+            Some(r) => self.program.run_routed(&inputs, r)?,
+            None => self.program.run(&inputs)?,
+        };
         out.pop().context("eval program returned nothing")?.into_f32s()
     }
 

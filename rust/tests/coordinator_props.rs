@@ -343,6 +343,153 @@ fn service_end_to_end_smoke() {
     assert_eq!(st.per_shard.len(), st.shards);
 }
 
+/// The tentpole acceptance pin at system level: the SAME request stream
+/// served with per-profile batching and with mixed-profile batching (+
+/// aggregate cache) must produce identical predictions — mixed batching
+/// is a pure execution-plan change. Profiles alternate private/shared aux
+/// so per-segment aux routing is exercised too.
+#[test]
+fn mixed_batches_match_per_profile_predictions() {
+    use std::collections::HashMap;
+
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    let mk_store = || {
+        let store = Arc::new(ProfileStore::new(64));
+        for pid in 1..=6u64 {
+            let aux = (pid % 2 == 0).then(|| {
+                let mut r = Rng::new(700 + pid);
+                std::sync::Arc::new(AuxParams {
+                    ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+                    ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+                    head_w: r.normal_vec(mc.d * mc.c_max, 0.05),
+                    head_b: vec![0.0; mc.c_max],
+                })
+            });
+            store
+                .insert(
+                    pid,
+                    ProfileRecord { masks: random_masks(mc.layers, 100, 50, pid), aux },
+                )
+                .unwrap();
+        }
+        store.set_shared_aux(shared_aux(&mc));
+        store
+    };
+    let texts = ["s42t3w1 s42t3w2 s42fw1", "s42t1w5 s42t2w2", "s42t9w9 s42fw0 s42t3w3"];
+    let mut preds: Vec<HashMap<(u64, usize), usize>> = Vec::new();
+    for mixed in [false, true] {
+        let cfg = ServeConfig {
+            mixed_batch: mixed,
+            max_batch: 8,
+            batch_deadline_us: 500,
+            mask_cache: 64,
+            ..ServeConfig::default()
+        };
+        let svc = Service::start(engine.clone(), mk_store(), bank.clone(), cfg, 15, 42).unwrap();
+        let mut key_of: HashMap<u64, (u64, usize)> = HashMap::new();
+        for (ti, text) in texts.iter().enumerate() {
+            for pid in 1..=6u64 {
+                let id = svc.submit(pid, text).unwrap();
+                key_of.insert(id, (pid, ti));
+            }
+        }
+        let total = texts.len() * 6;
+        let mut got: HashMap<(u64, usize), usize> = HashMap::new();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while got.len() < total && Instant::now() < deadline {
+            if let Some(resp) = svc.recv_timeout(Duration::from_millis(200)) {
+                got.insert(key_of[&resp.request_id], resp.prediction);
+            }
+        }
+        assert_eq!(got.len(), total, "mixed={mixed}: every request answered");
+        let snap = svc.shutdown();
+        if mixed {
+            assert_eq!(snap.mixed_batches, snap.batches, "mixed mode: every batch is mixed");
+            assert!(snap.mean_profiles_per_batch >= 1.0);
+            let st = snap.store.expect("store stats attached");
+            assert!(st.agg_entries > 0, "the aggregate cache warmed up");
+            assert!(st.agg_hits + st.agg_misses > 0);
+        } else {
+            assert_eq!(snap.mixed_batches, 0);
+        }
+        assert_eq!(snap.trunk_forwards, snap.batches, "one trunk forward per executor batch");
+        preds.push(got);
+    }
+    assert_eq!(preds[0], preds[1], "mixed-profile serving must not change any prediction");
+}
+
+/// Re-tune → epoch bump → the mixed path really serves the FRESH
+/// aggregate: after overwriting a profile's masks, its prediction matches
+/// a reference service that only ever saw the new masks.
+#[test]
+fn retuned_profile_serves_fresh_aggregates_in_mixed_mode() {
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    let text = "s42t3w1 s42t2w5 s42fw0";
+    let new_masks = random_masks(mc.layers, 100, 50, 999);
+
+    // reference: a per-profile service over a store holding ONLY the new
+    // masks (no aggregate cache involved)
+    let ref_store = Arc::new(ProfileStore::new(16));
+    ref_store
+        .insert(1, ProfileRecord { masks: new_masks.clone(), aux: None })
+        .unwrap();
+    ref_store.set_shared_aux(shared_aux(&mc));
+    let ref_svc = Service::start(
+        engine.clone(),
+        ref_store,
+        bank.clone(),
+        ServeConfig {
+            mixed_batch: false,
+            max_batch: 4,
+            batch_deadline_us: 300,
+            ..ServeConfig::default()
+        },
+        15,
+        42,
+    )
+    .unwrap();
+    ref_svc.submit(1, text).unwrap();
+    let want = ref_svc.recv_timeout(Duration::from_secs(30)).expect("reference served").prediction;
+
+    // live store starts on the OLD masks; the first mixed batch warms the
+    // prepacked aggregate cache
+    let store = Arc::new(ProfileStore::new(16));
+    store
+        .insert(1, ProfileRecord { masks: random_masks(mc.layers, 100, 50, 1), aux: None })
+        .unwrap();
+    store.set_shared_aux(shared_aux(&mc));
+    let svc = Service::start(
+        engine.clone(),
+        store.clone(),
+        bank.clone(),
+        ServeConfig {
+            mixed_batch: true,
+            max_batch: 4,
+            batch_deadline_us: 300,
+            ..ServeConfig::default()
+        },
+        15,
+        42,
+    )
+    .unwrap();
+    svc.submit(1, text).unwrap();
+    let _ = svc.recv_timeout(Duration::from_secs(30)).expect("warmup served");
+    assert!(store.stats().agg_entries >= 1, "first batch warmed the aggregate cache");
+
+    // re-tune: overwrite the masks — the epoch bump orphans the cached Â/B̂
+    store.insert(1, ProfileRecord { masks: new_masks, aux: None }).unwrap();
+    assert_eq!(store.mask_epoch(1).unwrap(), 1);
+    svc.submit(1, text).unwrap();
+    let got = svc.recv_timeout(Duration::from_secs(30)).expect("post-re-tune served").prediction;
+    assert_eq!(got, want, "the re-tuned profile serves from a fresh aggregate");
+    let st = store.stats();
+    assert!(st.agg_misses >= 2, "the post-re-tune lookup missed and re-materialized");
+}
+
 /// Many threads submitting concurrently: every request is answered exactly
 /// once with a valid prediction (the ingress path is thread-safe).
 #[test]
