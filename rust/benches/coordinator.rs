@@ -55,6 +55,7 @@ fn main() {
                 profile_id: i % 32,
                 tokens: vec![1; 32],
                 pad_mask: vec![1.0; 32],
+                num_classes: 0,
                 submitted: t,
             });
         }

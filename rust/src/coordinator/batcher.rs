@@ -24,6 +24,9 @@ pub struct Request {
     pub profile_id: u64,
     pub tokens: Vec<u32>,
     pub pad_mask: Vec<f32>,
+    /// Label-space width to argmax over; 0 means the service default.
+    /// Lets one mixed batch span tasks with different class counts.
+    pub num_classes: usize,
     pub submitted: Instant,
 }
 
@@ -208,7 +211,14 @@ mod tests {
     use super::*;
 
     fn req(id: u64, pid: u64, at: Instant) -> Request {
-        Request { id, profile_id: pid, tokens: vec![1], pad_mask: vec![1.0], submitted: at }
+        Request {
+            id,
+            profile_id: pid,
+            tokens: vec![1],
+            pad_mask: vec![1.0],
+            num_classes: 0,
+            submitted: at,
+        }
     }
 
     #[test]

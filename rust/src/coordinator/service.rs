@@ -91,6 +91,15 @@ struct ResolvedSegment<'a> {
     agg: Option<Arc<ProfileAggregates>>,
 }
 
+/// Label-space width a request's logits are argmaxed over: the request's
+/// own `num_classes` when set (0 means the service default), clamped to
+/// the head's materialized width. Lets one mixed batch span tasks with
+/// different class counts without mis-ranking over untrained columns.
+fn class_width(r: &Request, default: usize, out_w: usize) -> usize {
+    let nc = if r.num_classes == 0 { default } else { r.num_classes };
+    nc.min(out_w).max(1)
+}
+
 impl Service {
     /// Start the serving loop for one (head, N) deployment.
     pub fn start(
@@ -283,7 +292,8 @@ impl Service {
             .iter()
             .enumerate()
             .map(|(row, r)| {
-                let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + num_classes];
+                let nc = class_width(r, num_classes, evaluator.out_w);
+                let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + nc];
                 Response {
                     request_id: r.id,
                     profile_id: r.profile_id,
@@ -442,7 +452,8 @@ impl Service {
         let mut row = 0usize;
         for s in &segs {
             for r in s.reqs {
-                let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + num_classes];
+                let nc = class_width(r, num_classes, evaluator.out_w);
+                let slice = &logits[row * evaluator.out_w..row * evaluator.out_w + nc];
                 out.push(Response {
                     request_id: r.id,
                     profile_id: r.profile_id,
@@ -458,6 +469,20 @@ impl Service {
     /// Submit raw text for a profile; returns the request id.
     pub fn submit(&self, profile_id: u64, text: &str) -> Result<u64> {
         let (tokens, pad_mask) = self.tokenizer.encode(text, self.seq);
+        self.submit_tokens(profile_id, tokens, pad_mask, 0)
+    }
+
+    /// Submit a pre-tokenized request, optionally overriding the
+    /// label-space width to argmax over (`num_classes`; 0 keeps the
+    /// service default). The suite uses this to serve tasks with
+    /// heterogeneous class counts through one deployment.
+    pub fn submit_tokens(
+        &self,
+        profile_id: u64,
+        tokens: Vec<u32>,
+        pad_mask: Vec<f32>,
+        num_classes: usize,
+    ) -> Result<u64> {
         let id = {
             let mut next = self.next_id.lock().unwrap();
             *next += 1;
@@ -469,6 +494,7 @@ impl Service {
                 profile_id,
                 tokens,
                 pad_mask,
+                num_classes,
                 submitted: Instant::now(),
             }))
             .context("service worker gone")?;

@@ -5,6 +5,8 @@
 //! train-set size are tuned so the *relative* paper shape reproduces:
 //! cola is hardest (MCC ~0.4), sst2 easiest (acc ~0.9), wnli near-chance.
 
+use anyhow::{bail, ensure, Result};
+
 use crate::data::textgen::{TopicWorld, TOPICS};
 use crate::data::tokenizer::Tokenizer;
 use crate::data::{Dataset, Example, Label, MetricKind};
@@ -22,8 +24,8 @@ struct Gen {
     metric: MetricKind,
 }
 
-fn spec(task: &str) -> Gen {
-    match task {
+fn spec(task: &str) -> Result<Gen> {
+    Ok(match task {
         // (sizes scaled from the real GLUE proportions; noise sets the
         // ceiling so relative difficulty matches Table 2)
         "cola" => Gen { train: 1200, dev: 320, noise: 0.22, classes: 2, metric: MetricKind::Mcc },
@@ -35,22 +37,30 @@ fn spec(task: &str) -> Gen {
         "qnli" => Gen { train: 2000, dev: 320, noise: 0.08, classes: 2, metric: MetricKind::Acc },
         "rte" => Gen { train: 500, dev: 224, noise: 0.25, classes: 2, metric: MetricKind::Acc },
         "wnli" => Gen { train: 120, dev: 64, noise: 0.45, classes: 2, metric: MetricKind::Acc },
-        _ => panic!("unknown GLUE task {task}"),
-    }
+        _ => bail!("unknown GLUE task '{task}' (expected one of {GLUE_TASKS:?})"),
+    })
 }
 
 /// Build a synthetic GLUE task. `seq` must match the artifact batch shape.
+/// Panicking wrapper over [`try_build`] for callers with static inputs.
 pub fn build(task: &str, seq: usize, vocab: usize, seed: u64) -> Dataset {
-    let g = spec(task);
+    try_build(task, seq, vocab, seed).expect("glue build")
+}
+
+/// Fallible builder: unknown task names, truncated `seq`, or a vocab too
+/// small for the structured tokenizer come back as errors, not panics.
+pub fn try_build(task: &str, seq: usize, vocab: usize, seed: u64) -> Result<Dataset> {
+    let g = spec(task)?;
+    ensure!(seq >= 8, "glue '{task}': seq {seq} too short for pair encoding (need >= 8)");
     let world = TopicWorld::new(seed ^ 0x91u64);
-    let tok = Tokenizer::new(vocab);
+    let tok = Tokenizer::try_new(vocab)?;
     let mut rng = Rng::new(seed).fold_in(fnv(task));
     let make = |rng: &mut Rng, n: usize| -> Vec<Example> {
         (0..n).map(|_| gen_example(task, &g, &world, &tok, seq, rng)).collect()
     };
     let train = make(&mut rng, g.train);
     let dev = make(&mut rng, g.dev);
-    Dataset { name: task.to_string(), train, dev, num_classes: g.classes, metric: g.metric }
+    Ok(Dataset { name: task.to_string(), train, dev, num_classes: g.classes, metric: g.metric })
 }
 
 fn fnv(s: &str) -> u64 {

@@ -8,6 +8,8 @@
 //! Fig 3's t-SNE clusters and Fig 6's heatmaps visualize). Docs/author are
 //! long-tailed like the real data (paper: mean 52.65, min 6, max 640).
 
+use anyhow::{ensure, Result};
+
 use crate::data::textgen::{TopicWorld, TOPICS};
 use crate::data::tokenizer::Tokenizer;
 use crate::data::{Example, Label};
@@ -70,6 +72,7 @@ fn make_author(rng: &mut Rng, archetype: usize) -> Author {
 
 /// Generate the corpus: `num_authors` profiles (paper: 323), long-tailed
 /// article counts, 30% holdout per profile (paper Fig 4 evaluates on 30%).
+/// Panicking wrapper over [`try_generate`] for callers with static inputs.
 pub fn generate(
     num_authors: usize,
     seq: usize,
@@ -78,8 +81,27 @@ pub fn generate(
     min_docs: usize,
     max_docs: usize,
 ) -> LampCorpus {
+    try_generate(num_authors, seq, vocab, seed, min_docs, max_docs).expect("lamp generate")
+}
+
+/// Fallible generator: degenerate author/doc counts, a truncated `seq`, or
+/// a vocab too small for the structured tokenizer come back as errors.
+pub fn try_generate(
+    num_authors: usize,
+    seq: usize,
+    vocab: usize,
+    seed: u64,
+    min_docs: usize,
+    max_docs: usize,
+) -> Result<LampCorpus> {
+    ensure!(num_authors >= 1, "lamp: need at least one author");
+    ensure!(
+        min_docs >= 2 && min_docs <= max_docs,
+        "lamp: docs/author range [{min_docs}, {max_docs}] is degenerate (need 2 <= min <= max)"
+    );
+    ensure!(seq >= 4, "lamp: seq {seq} too short (need >= 4)");
     let world = TopicWorld::new(seed ^ 0x1a3f);
-    let tok = Tokenizer::new(vocab);
+    let tok = Tokenizer::try_new(vocab)?;
     let mut rng = Rng::new(seed).fold_in(0x7a31);
     let mut articles = Vec::new();
     let mut profiles = Vec::new();
@@ -128,7 +150,7 @@ pub fn generate(
         });
     }
 
-    LampCorpus { articles, profiles, num_authors }
+    Ok(LampCorpus { articles, profiles, num_authors })
 }
 
 #[cfg(test)]

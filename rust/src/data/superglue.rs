@@ -5,6 +5,8 @@
 //! trained on rte — `build` returns their dev sets with an rte-shaped
 //! train split for convenience.
 
+use anyhow::{bail, ensure, Result};
+
 use crate::data::textgen::{TopicWorld, TOPICS};
 use crate::data::tokenizer::Tokenizer;
 use crate::data::{Dataset, Example, Label, MetricKind};
@@ -12,14 +14,25 @@ use crate::util::rng::Rng;
 
 pub const SUPERGLUE_TASKS: [&str; 4] = ["cb", "boolq", "axb", "axg"];
 
+/// Panicking wrapper over [`try_build`] for callers with static inputs.
 pub fn build(task: &str, seq: usize, vocab: usize, seed: u64) -> Dataset {
-    match task {
+    try_build(task, seq, vocab, seed).expect("superglue build")
+}
+
+/// Fallible builder: unknown task names, truncated `seq`, or a vocab too
+/// small for the structured tokenizer come back as errors, not panics.
+pub fn try_build(task: &str, seq: usize, vocab: usize, seed: u64) -> Result<Dataset> {
+    ensure!(seq >= 8, "superglue '{task}': seq {seq} too short for pair encoding (need >= 8)");
+    // validate vocab once up front; the private builders below then share
+    // the panicking constructor
+    let _ = Tokenizer::try_new(vocab)?;
+    Ok(match task {
         "cb" => nli(task, seq, vocab, seed, 250, 56, 3, 0.20, MetricKind::Acc),
         "boolq" => boolq(seq, vocab, seed),
         "axb" => nli(task, seq, vocab, seed, 500, 250, 2, 0.40, MetricKind::Mcc),
         "axg" => axg(seq, vocab, seed),
-        _ => panic!("unknown SuperGLUE task {task}"),
-    }
+        _ => bail!("unknown SuperGLUE task '{task}' (expected one of {SUPERGLUE_TASKS:?})"),
+    })
 }
 
 fn fnv(s: &str) -> u64 {

@@ -46,8 +46,18 @@ pub struct Tokenizer {
 
 impl Tokenizer {
     pub fn new(vocab: usize) -> Self {
-        assert!(vocab as u32 > HASH_BASE + 8, "vocab too small for layout");
-        Tokenizer { vocab: vocab as u32 }
+        Self::try_new(vocab).expect("vocab too small for layout")
+    }
+
+    /// Fallible constructor: the vocabulary must leave room for the hash
+    /// tail above the structured regions.
+    pub fn try_new(vocab: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            vocab as u32 > HASH_BASE + 8,
+            "vocab {vocab} too small for the tokenizer layout (need > {})",
+            HASH_BASE + 8
+        );
+        Ok(Tokenizer { vocab: vocab as u32 })
     }
 
     /// Structured id for topic-world words; FNV-1a tail hash otherwise.
@@ -118,6 +128,39 @@ impl Tokenizer {
             ids.push(self.word_id(w));
         }
         self.finish(ids, seq)
+    }
+
+    /// Canonical surface form for a token id. Structured regions invert
+    /// exactly (topic/function/gender words come back in the shared
+    /// `s0…` spelling `structured_id` treats as identical to any seed
+    /// prefix); hash-tail ids are not invertible and come back as a `u<id>`
+    /// placeholder that re-encodes into the same hash bucket only by
+    /// accident — round-trip guarantees hold for topic-world text only.
+    pub fn word_for(&self, id: u32) -> String {
+        if let Some(topic) = token_topic(id) {
+            let slot = (id - TOPIC_BASE) % TOPIC_WORDS;
+            return format!("s0t{topic}w{slot}");
+        }
+        if (FUNC_BASE..GENDER_M).contains(&id) {
+            return format!("s0fw{}", id - FUNC_BASE);
+        }
+        match id {
+            GENDER_M => "s0gm".to_string(),
+            GENDER_F => "s0gf".to_string(),
+            _ => format!("u{id}"),
+        }
+    }
+
+    /// Decode a token row back to text, skipping PAD/CLS/SEP/UNK. For
+    /// structured-vocabulary text, `encode(decode(ids))` reproduces `ids`
+    /// (the canonicalization fixpoint the round-trip tests pin).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let words: Vec<String> = ids
+            .iter()
+            .filter(|&&id| id >= FIRST_WORD_ID)
+            .map(|&id| self.word_for(id))
+            .collect();
+        words.join(" ")
     }
 
     fn finish(&self, mut ids: Vec<u32>, seq: usize) -> (Vec<u32>, Vec<f32>) {

@@ -5,13 +5,11 @@
 
 use anyhow::Result;
 
-use crate::coordinator::profile_store::{ProfileRecord, ProfileStore};
 use crate::masks::accounting::Dims;
-use crate::masks::{MaskLogits, ProfileMasks};
+use crate::suite::report::measured_byte_series;
 use crate::util::cli::Args;
 use crate::util::human_bytes;
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 
 pub fn run(args: &Args) -> Result<()> {
     let paper = Dims::PAPER_TABLE1;
@@ -38,38 +36,15 @@ pub fn run(args: &Args) -> Result<()> {
         rows.push(row);
     }
 
-    // measured series from a live profile store (tiny dims, N=150, k=50)
+    // measured series from a live profile store (tiny dims, N=150, k=50),
+    // shared with the suite's accounting section — including the
+    // cross-check of the store walk against the accounting formula
     let tiny = Dims { d: 64, b: 8, layers: 4 };
-    let store = ProfileStore::new(16);
-    let mut measured = Vec::new();
-    let mut rng = Rng::new(7);
-    for pid in 0..1000u64 {
-        let logits = MaskLogits {
-            layers: tiny.layers,
-            n: bank_n,
-            a: rng.normal_vec(tiny.layers * bank_n, 1.0),
-            b: rng.normal_vec(tiny.layers * bank_n, 1.0),
-        };
-        store.insert(pid, ProfileRecord {
-            masks: ProfileMasks::Hard(logits.binarize(50)),
-            aux: None,
-        })?;
-        if [1, 10, 100, 1000].contains(&(pid + 1)) {
-            let mut row = Json::obj();
-            row.set("profiles", Json::Num((pid + 1) as f64));
-            row.set("measured_bytes", Json::Num(store.total_profile_bytes() as f64));
-            measured.push(row);
-        }
-    }
+    let measured = measured_byte_series(&tiny, bank_n, 50, 1000, &[1, 10, 100, 1000])?;
     println!(
-        "\nmeasured (tiny dims, live ProfileStore): 1000 profiles → {} total, {:.0} B/profile",
-        human_bytes(store.total_profile_bytes() as f64),
-        store.mean_profile_bytes()
-    );
-    // cross-check against the formula
-    assert_eq!(
-        store.total_profile_bytes(),
-        1000 * tiny.xpeft_hard_bytes(bank_n) as u64
+        "\nmeasured (tiny dims, live ProfileStore): 1000 profiles → {} total, {} B/profile",
+        human_bytes(1000.0 * tiny.xpeft_hard_bytes(bank_n) as f64),
+        tiny.xpeft_hard_bytes(bank_n)
     );
 
     let mut out = Json::obj();

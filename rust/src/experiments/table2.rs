@@ -4,8 +4,8 @@
 use anyhow::Result;
 
 use crate::data::glue;
-use crate::data::MetricKind;
 use crate::experiments::{config_grid, config_label, Env};
+use crate::suite::{report, run_grid_cell};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -46,31 +46,17 @@ pub fn run(args: &Args) -> Result<()> {
                 times[ci].push(f64::NAN);
                 continue;
             }
-            let (mut scores, outcome, trainer) = env.run_config(&dataset, &cfg)?;
-            if let (Some(mm), MetricKind::AccMatchedMismatched) = (&mismatched, dataset.metric) {
-                let bank = cfg.mode.is_xpeft().then(|| env.bank(cfg.n, env.seed));
-                let s2 = crate::train::eval::evaluate(
-                    &env.engine, cfg.mode, &trainer, mm, bank.as_deref(), cfg.n, cfg.k, env.plm_seed,
-                )?;
-                scores.acc_mm = s2.acc;
-            }
-            results[ci].push(scores.combined());
-            times[ci].push(outcome.wallclock_s);
+            // shared grid-cell path (also the suite's parity baseline):
+            // the mnli matched/mismatched special case lives in there
+            let cell = run_grid_cell(&env, &dataset, mismatched.as_ref(), &cfg)?;
+            results[ci].push(cell.scores.combined());
+            times[ci].push(cell.wallclock_s);
 
-            let mut row = Json::obj();
+            let mut row = report::scores_json(&cell.scores);
             row.set("task", Json::Str(task.clone()));
-            row.set("config", Json::Str(config_label(&cfg)));
-            row.set("combined", Json::Num(scores.combined()));
-            for (name, v) in [
-                ("acc", scores.acc), ("f1", scores.f1), ("mcc", scores.mcc),
-                ("pcc", scores.pcc), ("src", scores.src), ("acc_mm", scores.acc_mm),
-            ] {
-                if let Some(v) = v {
-                    row.set(name, Json::Num(v));
-                }
-            }
-            row.set("train_seconds", Json::Num(outcome.wallclock_s));
-            row.set("final_loss", Json::Num(*outcome.losses.last().unwrap() as f64));
+            row.set("config", Json::Str(cell.label.clone()));
+            row.set("train_seconds", Json::Num(cell.wallclock_s));
+            row.set("final_loss", Json::Num(cell.final_loss));
             out_rows.push(row);
         }
     }

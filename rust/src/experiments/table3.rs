@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::data::superglue;
 use crate::experiments::{config_grid, config_label, Env};
+use crate::suite::{report, run_grid_cell};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -35,25 +36,16 @@ pub fn run(args: &Args) -> Result<()> {
     for task in &tasks {
         let dataset = superglue::build(task, mc.seq, mc.vocab, env.seed);
         for (ci, cfg) in grid.iter().enumerate() {
-            let (scores, outcome, _) = env.run_config(&dataset, cfg)?;
-            table[ci].push(format!("{:>7.2}", scores.combined()));
+            // shared grid-cell path with the suite's parity baselines
+            let cell = run_grid_cell(&env, &dataset, None, cfg)?;
+            table[ci].push(format!("{:>7.2}", cell.scores.combined()));
             if task == "axg" {
-                table[ci].push(format!("{:>7.1}", scores.gps.unwrap_or(f64::NAN)));
+                table[ci].push(format!("{:>7.1}", cell.scores.gps.unwrap_or(f64::NAN)));
             }
-            let mut row = Json::obj();
+            let mut row = report::scores_json(&cell.scores);
             row.set("task", Json::Str(task.clone()));
-            row.set("config", Json::Str(config_label(cfg)));
-            row.set("combined", Json::Num(scores.combined()));
-            if let Some(g) = scores.gps {
-                row.set("gps", Json::Num(g));
-            }
-            if let Some(m) = scores.mcc {
-                row.set("mcc", Json::Num(m));
-            }
-            if let Some(a) = scores.acc {
-                row.set("acc", Json::Num(a));
-            }
-            row.set("train_seconds", Json::Num(outcome.wallclock_s));
+            row.set("config", Json::Str(cell.label.clone()));
+            row.set("train_seconds", Json::Num(cell.wallclock_s));
             out_rows.push(row);
         }
     }

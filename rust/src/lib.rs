@@ -25,6 +25,9 @@
 //! * [`masks`], [`adapters`], [`data`], [`metrics`], [`train`],
 //!   [`analysis`] are the substrates the paper's evaluation needs.
 //! * [`experiments`] regenerates every table and figure.
+//! * [`suite`] is the scenario harness: a task-trait eval suite that runs
+//!   tune → commit-to-store → serve → score end-to-end over the
+//!   coordinator stack and writes `SUITE_report.json`.
 //!
 //! ## Quickstart
 //!
@@ -56,5 +59,6 @@ pub mod experiments;
 pub mod masks;
 pub mod metrics;
 pub mod runtime;
+pub mod suite;
 pub mod train;
 pub mod util;

@@ -2,6 +2,7 @@
 //!
 //! Commands:
 //!   repro <exp>        regenerate a paper table/figure (or `all`)
+//!   suite [--smoke]    task-trait scenario suite: tune→store→serve→score
 //!   train-profile      tune masks for one profile on a synthetic task
 //!   serve              run the multi-profile serving demo
 //!   bench              quick micro-bench suite (full suites: cargo bench)
@@ -44,6 +45,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let exp = args.positional.first().map(String::as_str).unwrap_or("all");
             experiments::run(exp, args)
         }
+        "suite" => suite_cmd(args),
         "train-profile" => train_profile(args),
         "serve" => serve(args),
         "info" => show_info(args),
@@ -65,6 +67,12 @@ USAGE: xpeft <command> [options]
 COMMANDS
   repro <exp>       regenerate paper results: table1 table2 table3 table4
                     table8 fig1 fig3 fig4 fig5a fig5b fig5c fig6 fig7 | all
+  suite             scenario suite, tune→store→serve→score per task:
+                    --smoke (CI-sized run) --tasks textgen,lamp,sst2,cb
+                    --profiles 2 --n 100 --k 50 --steps 60 --max-eval 64
+                    --sparsity-ks 16,50,80 --cold-start 2 --no-parity
+                    --max-train 96; writes SUITE_report.json (deterministic)
+                    and SUITE_telemetry.json (timing) under --out
   train-profile     tune one profile: --task sst2 --mode soft|hard|sa|ho
                     --n 100 --k 50 --steps 300 --lr 0.02 --seed 42
   serve             multi-profile serving demo: --profiles 8 --requests 256
@@ -282,6 +290,76 @@ fn serve(args: &Args) -> Result<()> {
             st.agg_evictions
         );
     }
+    Ok(())
+}
+
+/// Run the scenario suite: every selected task goes tune → commit-to-store
+/// → serve (mixed batching + agg cache) → score through the coordinator
+/// stack, then the deterministic report and the timing telemetry are
+/// written under `--out`.
+fn suite_cmd(args: &Args) -> Result<()> {
+    use xpeft::suite::{default_tasks, SuiteConfig, SuiteRunner};
+
+    let smoke = args.flag("smoke");
+    let base = if smoke { SuiteConfig::smoke() } else { SuiteConfig::default() };
+    let cfg = SuiteConfig {
+        n: args.get_usize("n", base.n)?,
+        k: args.get_usize("k", base.k)?,
+        steps: args.get_usize("steps", base.steps)?,
+        seed: args.get_u64("seed", base.seed)?,
+        plm_seed: args.get_u64("plm-seed", base.plm_seed)?,
+        max_eval: args.get_usize("max-eval", base.max_eval)?,
+        cold_start_profiles: args.get_usize("cold-start", base.cold_start_profiles)?,
+        sparsity_ks: args.get_usize_list("sparsity-ks", &base.sparsity_ks)?,
+        parity: (base.parity || args.flag("parity")) && !args.flag("no-parity"),
+        serve: ServeConfig::default().override_from_args(args)?,
+    };
+    Engine::set_threads(cfg.serve.threads);
+    let engine = Arc::new(Engine::new(&std::path::PathBuf::from(
+        args.get_str("artifacts", "artifacts"),
+    ))?);
+    let mc = engine.manifest.config.clone();
+
+    let profiles = args.get_usize("profiles", 2)?;
+    let max_train = args.get_usize("max-train", if smoke { 24 } else { 96 })?;
+    let names: Vec<String> = match args.get("tasks") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        None => Vec::new(),
+    };
+    let tasks = default_tasks(mc.seq, mc.vocab, cfg.seed, &names, profiles, max_train)?;
+    info!(
+        "suite",
+        "{} tasks × {profiles} profiles, n={} k={} steps={}{}",
+        tasks.len(),
+        cfg.n,
+        cfg.k,
+        cfg.steps,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let report = SuiteRunner::new(engine, cfg).run(&tasks)?;
+    println!("\nsuite results:");
+    for row in report.report.get("tasks")?.as_arr()? {
+        println!(
+            "  {:<10} combined {:.3}  ({} profiles, {} classes, {})",
+            row.str_field("name")?,
+            row.f64_field("combined")?,
+            row.usize_field("profiles")?,
+            row.usize_field("num_classes")?,
+            row.str_field("metric")?,
+        );
+    }
+    let acct = report.report.get("accounting")?;
+    println!(
+        "  per-profile state: {:.0} B measured; paper-dims ratio {:.0}x vs adapters",
+        acct.f64_field("measured_bytes_per_profile")?,
+        acct.get("paper_dims")?.f64_field("bytes_ratio")?,
+    );
+    let out = std::path::PathBuf::from(args.get_str("out", "results"));
+    let (rp, tp) = report.write(&out)?;
+    println!("wrote {} and {}", rp.display(), tp.display());
     Ok(())
 }
 

@@ -1,0 +1,126 @@
+//! Scenario harness: task-trait eval suite over the full serving stack.
+//!
+//! The paper's headline claim — X-PEFT matches per-profile adapter tuning
+//! at ~10⁴× less per-profile memory — only becomes checkable when the data
+//! generators, trainer, profile store and serving path run **as one
+//! pipeline**. This module provides that pipeline: a [`Task`] trait
+//! implemented by thin adapters over the existing LaMP / GLUE / SuperGLUE /
+//! textgen data modules, and a [`SuiteRunner`] that drives each task
+//! through the *existing* coordinator stack (no parallel code path):
+//!
+//! ```text
+//!   tune (Scheduler, wave-parallel over util::threadpool)
+//!     → commit-to-store (ProfileStore, bit-packed hard masks + aux)
+//!       → serve (ONE Service: mixed cross-task batching + agg cache)
+//!         → score (per-task paper metrics from the served predictions)
+//! ```
+//!
+//! One run emits `SUITE_report.json` (fully deterministic: per-task
+//! accuracy, per-profile parameter/byte accounting via
+//! [`masks::accounting`](crate::masks::accounting), scenario-axis results)
+//! plus `SUITE_telemetry.json` (wallclock, latency quantiles, batch/cache
+//! counters — everything timing-dependent lives here so the report file is
+//! byte-identical across reruns and thread counts).
+//!
+//! Scenario axes the paper never tried, as harness configs:
+//! * **cross-task mixtures** — eval requests of all tasks interleave into
+//!   the same `Service`, so one mixed batch routinely spans profiles of
+//!   different tasks (exercising per-segment routing with heterogeneous
+//!   heads and per-request class counts);
+//! * **cold-start profiles** — untrained random mask + aux records inserted
+//!   straight into the store and served next to tuned neighbors;
+//! * **mask-sparsity sweep** — the same profile re-tuned at several `k`,
+//!   accuracy vs a byte cost that does not move (hard-mask bytes are
+//!   `2·⌈N/8⌉·L` regardless of `k`).
+
+pub mod report;
+pub mod runner;
+pub mod tasks;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::{Example, MetricKind};
+use crate::experiments::Env;
+use crate::metrics::Scores;
+use crate::train::eval::{self, Pred};
+
+pub use report::SuiteReport;
+pub use runner::{SuiteConfig, SuiteRunner};
+pub use tasks::default_tasks;
+
+/// One benchmark task: a source of per-profile train/eval splits plus the
+/// paper metric that scores it. Implementations adapt the existing data
+/// modules; the harness owns everything else (tuning, storage, serving).
+pub trait Task: Send + Sync {
+    /// Task name as it appears in the report and `--tasks` selection.
+    fn name(&self) -> String;
+
+    /// Number of profiles this task tunes (each gets its own masks).
+    fn profiles(&self) -> usize;
+
+    /// Training split for one profile, batched downstream by the
+    /// fixed-shape `Batcher` inside the scheduler's train jobs.
+    fn train_batches(&self, profile: usize) -> Vec<Example>;
+
+    /// Held-out split for one profile, served through the `Service` and
+    /// scored against each example's label.
+    fn eval_batches(&self, profile: usize) -> Vec<Example>;
+
+    /// Label space size. The suite serves the `"cls"` head, so this must
+    /// be in `2..=c_max`.
+    fn num_classes(&self) -> usize;
+
+    /// Paper metric for this task.
+    fn metric(&self) -> MetricKind;
+
+    /// Fold served predictions (in `eval_batches` order) into the task's
+    /// metric bundle. The default goes through the shared scorer used by
+    /// `repro table2/3`.
+    fn score(&self, preds: &[Pred], truth: &[Example]) -> Scores {
+        eval::score(self.metric(), self.num_classes().max(2), preds, truth)
+    }
+}
+
+/// One tune+eval cell of a `repro table2/3`-style grid, run through the
+/// shared experiment environment. This is the single code path behind the
+/// experiment tables *and* the suite's parity baselines — the mnli
+/// matched/mismatched special case lives here instead of being copied into
+/// each table driver.
+pub struct GridCell {
+    pub label: String,
+    pub scores: Scores,
+    pub wallclock_s: f64,
+    pub final_loss: f64,
+}
+
+/// Train + evaluate one config on one dataset (optionally scoring a second
+/// "mismatched" dev split into `acc_mm`, the mnli convention).
+pub fn run_grid_cell(
+    env: &Env,
+    dataset: &crate::data::Dataset,
+    mismatched: Option<&crate::data::Dataset>,
+    cfg: &TrainConfig,
+) -> Result<GridCell> {
+    let (mut scores, outcome, trainer) = env.run_config(dataset, cfg)?;
+    if let (Some(mm), MetricKind::AccMatchedMismatched) = (mismatched, dataset.metric) {
+        let bank = cfg.mode.is_xpeft().then(|| env.bank(cfg.n, env.seed));
+        let s2 = eval::evaluate(
+            &env.engine,
+            cfg.mode,
+            &trainer,
+            mm,
+            bank.as_deref(),
+            cfg.n,
+            cfg.k,
+            env.plm_seed,
+        )?;
+        scores.acc_mm = s2.acc;
+    }
+    Ok(GridCell {
+        label: crate::experiments::config_label(cfg),
+        scores,
+        wallclock_s: outcome.wallclock_s,
+        final_loss: *outcome.losses.last().unwrap_or(&f32::NAN) as f64,
+    })
+}

@@ -1,0 +1,188 @@
+//! Suite report assembly and serialization.
+//!
+//! A run produces two files with a hard split between them:
+//! * `SUITE_report.json` — everything deterministic (scores, accounting,
+//!   scenario results, config). Byte-identical across reruns with the same
+//!   seed at any thread count; the determinism test pins this.
+//! * `SUITE_telemetry.json` — everything timing-dependent (latency
+//!   quantiles, batch/cache counters, wallclock).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::profile_store::{ProfileRecord, ProfileStore};
+use crate::coordinator::Snapshot;
+use crate::masks::accounting::Dims;
+use crate::masks::{MaskLogits, ProfileMasks};
+use crate::metrics::Scores;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Schema tag written into every report; bump on breaking layout changes.
+pub const SCHEMA: &str = "xpeft-suite-report/v1";
+
+/// The two halves of a suite run's output.
+pub struct SuiteReport {
+    /// Deterministic results (`SUITE_report.json`).
+    pub report: Json,
+    /// Timing-dependent counters (`SUITE_telemetry.json`).
+    pub telemetry: Json,
+}
+
+impl SuiteReport {
+    /// Write both files under `dir`, returning (report_path, telemetry_path).
+    pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let report_path = dir.join("SUITE_report.json");
+        let telemetry_path = dir.join("SUITE_telemetry.json");
+        std::fs::write(&report_path, self.report.to_string_pretty())?;
+        std::fs::write(&telemetry_path, self.telemetry.to_string_pretty())?;
+        Ok((report_path, telemetry_path))
+    }
+}
+
+/// Model dimensions as a report section.
+pub fn model_json(mc: &ModelConfig) -> Json {
+    let mut o = Json::obj();
+    o.set("vocab", Json::Num(mc.vocab as f64));
+    o.set("d", Json::Num(mc.d as f64));
+    o.set("layers", Json::Num(mc.layers as f64));
+    o.set("heads", Json::Num(mc.heads as f64));
+    o.set("ffn", Json::Num(mc.ffn as f64));
+    o.set("seq", Json::Num(mc.seq as f64));
+    o.set("bottleneck", Json::Num(mc.bottleneck as f64));
+    o.set("c_max", Json::Num(mc.c_max as f64));
+    o
+}
+
+/// Per-profile parameter/byte accounting: measured bytes from the live
+/// store at this deployment's dims, plus the analytic Table 1 numbers at
+/// paper dims (where the ≥10³× headline ratio lives — tiny test dims
+/// shrink the adapter numerator far more than the mask denominator).
+pub fn accounting_json(
+    tiny: &Dims,
+    n: usize,
+    k: usize,
+    profiles: usize,
+    measured_total: u64,
+    measured_mean: f64,
+) -> Json {
+    let paper = Dims::PAPER_TABLE1;
+    let mut o = Json::obj();
+    o.set("profiles_in_store", Json::Num(profiles as f64));
+    o.set("measured_total_bytes", Json::Num(measured_total as f64));
+    o.set("measured_bytes_per_profile", Json::Num(measured_mean));
+    let mut t = Json::obj();
+    t.set("d", Json::Num(tiny.d as f64));
+    t.set("bottleneck", Json::Num(tiny.b as f64));
+    t.set("layers", Json::Num(tiny.layers as f64));
+    t.set("xpeft_hard_bytes", Json::Num(tiny.xpeft_hard_bytes(n) as f64));
+    t.set("adapter_bytes", Json::Num(tiny.adapter_bytes() as f64));
+    t.set("xpeft_trainable_params", Json::Num(tiny.xpeft_trainable_params(n) as f64));
+    t.set("adapter_trainable_params", Json::Num(tiny.adapter_trainable_params() as f64));
+    o.set("deployment_dims", t);
+    let mut p = Json::obj();
+    p.set("d", Json::Num(paper.d as f64));
+    p.set("bottleneck", Json::Num(paper.b as f64));
+    p.set("layers", Json::Num(paper.layers as f64));
+    p.set("xpeft_hard_bytes", Json::Num(paper.xpeft_hard_bytes(n) as f64));
+    p.set("adapter_bytes", Json::Num(paper.adapter_bytes() as f64));
+    p.set(
+        "bytes_ratio",
+        Json::Num(paper.adapter_bytes() as f64 / paper.xpeft_hard_bytes(n) as f64),
+    );
+    o.set("paper_dims", p);
+    o.set("n", Json::Num(n as f64));
+    o.set("k", Json::Num(k as f64));
+    o
+}
+
+/// Scores as a report object — only the metrics the task actually produced.
+pub fn scores_json(s: &Scores) -> Json {
+    let mut o = Json::obj();
+    let mut put = |key: &str, v: Option<f64>| {
+        if let Some(x) = v {
+            o.set(key, Json::Num(x));
+        }
+    };
+    put("acc", s.acc);
+    put("f1", s.f1);
+    put("mcc", s.mcc);
+    put("pcc", s.pcc);
+    put("src", s.src);
+    put("acc_mm", s.acc_mm);
+    put("gps", s.gps);
+    o.set("combined", Json::Num(s.combined()));
+    o
+}
+
+/// Serve-path telemetry snapshot as a report object. Everything in here is
+/// timing-dependent and therefore excluded from `SUITE_report.json`.
+pub fn telemetry_json(s: &Snapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("requests", Json::Num(s.requests as f64));
+    o.set("responses", Json::Num(s.responses as f64));
+    o.set("batches", Json::Num(s.batches as f64));
+    o.set("trunk_forwards", Json::Num(s.trunk_forwards as f64));
+    o.set("mixed_batches", Json::Num(s.mixed_batches as f64));
+    o.set("mean_batch", Json::Num(s.mean_batch));
+    o.set("mean_profiles_per_batch", Json::Num(s.mean_profiles_per_batch));
+    o.set("trunk_forwards_per_1k_requests", Json::Num(s.trunk_forwards_per_1k_requests()));
+    o.set("p50_latency_us", Json::Num(s.p50_latency_us));
+    o.set("p95_latency_us", Json::Num(s.p95_latency_us));
+    o.set("p99_latency_us", Json::Num(s.p99_latency_us));
+    if let Some(st) = &s.store {
+        let mut so = Json::obj();
+        so.set("profiles", Json::Num(st.profiles as f64));
+        so.set("cache_hits", Json::Num(st.cache_hits as f64));
+        so.set("cache_misses", Json::Num(st.cache_misses as f64));
+        so.set("agg_hits", Json::Num(st.agg_hits as f64));
+        so.set("agg_misses", Json::Num(st.agg_misses as f64));
+        so.set("agg_entries", Json::Num(st.agg_entries as f64));
+        so.set("agg_bytes", Json::Num(st.agg_bytes as f64));
+        o.set("store", so);
+    }
+    o
+}
+
+/// Populate a live `ProfileStore` with `profiles` bit-packed hard-mask
+/// records and sample its measured total bytes at `samples` counts,
+/// cross-checking the final total against the accounting formula. Shared
+/// by `repro fig1` and the suite's accounting section so "measured" always
+/// means the same store walk.
+pub fn measured_byte_series(
+    dims: &Dims,
+    bank_n: usize,
+    k: usize,
+    profiles: u64,
+    samples: &[u64],
+) -> Result<Vec<Json>> {
+    let store = ProfileStore::new(16);
+    let mut measured = Vec::new();
+    let mut rng = Rng::new(7);
+    for pid in 0..profiles {
+        let logits = MaskLogits {
+            layers: dims.layers,
+            n: bank_n,
+            a: rng.normal_vec(dims.layers * bank_n, 1.0),
+            b: rng.normal_vec(dims.layers * bank_n, 1.0),
+        };
+        store.insert(
+            pid,
+            ProfileRecord { masks: ProfileMasks::Hard(logits.binarize(k)), aux: None },
+        )?;
+        if samples.contains(&(pid + 1)) {
+            let mut row = Json::obj();
+            row.set("profiles", Json::Num((pid + 1) as f64));
+            row.set("measured_bytes", Json::Num(store.total_profile_bytes() as f64));
+            measured.push(row);
+        }
+    }
+    ensure!(
+        store.total_profile_bytes() == profiles * dims.xpeft_hard_bytes(bank_n) as u64,
+        "measured store bytes diverge from the accounting formula"
+    );
+    Ok(measured)
+}

@@ -1,0 +1,633 @@
+//! The suite runner: tune → commit-to-store → serve → score, end-to-end
+//! over the existing coordinator stack, plus the scenario axes (cold-start
+//! profiles, mask-sparsity sweep, parity baseline) the report captures.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::adapters::AdapterBank;
+use crate::config::{Mode, ServeConfig, TrainConfig};
+use crate::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use crate::coordinator::scheduler::{JobStatus, Scheduler, TrainJob};
+use crate::coordinator::Service;
+use crate::data::textgen::TOPICS;
+use crate::data::{Dataset, Example, MetricKind};
+use crate::masks::accounting::Dims;
+use crate::masks::{MaskLogits, ProfileMasks};
+use crate::metrics::Scores;
+use crate::runtime::Engine;
+use crate::suite::report::{self, SuiteReport};
+use crate::suite::{tasks::TextgenTask, Task};
+use crate::train::eval::{self, Pred};
+use crate::train::{self};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Profile-id block reserved for cold-start (never-tuned) profiles.
+const COLD_BASE: u64 = 900_000;
+
+/// Knobs for one suite run. Everything here is deterministic configuration;
+/// thread count is process-global (`Engine::set_threads`) and deliberately
+/// NOT part of the config or the report, so reports compare byte-identical
+/// across thread counts.
+#[derive(Debug, Clone)]
+pub struct SuiteConfig {
+    /// Adapter-bank size (must have synthesized cls artifacts).
+    pub n: usize,
+    /// Hard-mask sparsity (adapters kept per row).
+    pub k: usize,
+    /// Tuning steps per profile.
+    pub steps: usize,
+    pub seed: u64,
+    pub plm_seed: u64,
+    /// Cap on served eval examples per profile.
+    pub max_eval: usize,
+    /// Untrained random profiles inserted straight into the store and
+    /// served next to tuned ones (scenario axis: cold start).
+    pub cold_start_profiles: usize,
+    /// Re-tune the reference profile at each of these `k` values
+    /// (scenario axis: mask sparsity; empty disables the sweep).
+    pub sparsity_ks: Vec<usize>,
+    /// Also train a per-profile `single_adapter` baseline on the reference
+    /// task and record the paper-parity comparison.
+    pub parity: bool,
+    /// Serving knobs (mixed batching + aggregate cache are the defaults).
+    pub serve: ServeConfig,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            n: 100,
+            k: 50,
+            steps: 60,
+            seed: 42,
+            plm_seed: 42,
+            max_eval: 64,
+            cold_start_profiles: 2,
+            sparsity_ks: vec![16, 50, 80],
+            parity: true,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+impl SuiteConfig {
+    /// CI-sized configuration: small synthesized tasks, few steps, still
+    /// covering every phase (tune, cold start, serve, sweep) end-to-end.
+    pub fn smoke() -> Self {
+        SuiteConfig {
+            steps: 10,
+            max_eval: 16,
+            cold_start_profiles: 1,
+            sparsity_ks: vec![16, 50],
+            parity: false,
+            ..SuiteConfig::default()
+        }
+    }
+}
+
+/// Per-profile outcome of one task, as served and scored.
+struct ProfileResult {
+    profile: usize,
+    final_loss: f64,
+    scores: Scores,
+}
+
+struct TaskResult {
+    name: String,
+    num_classes: usize,
+    metric: MetricKind,
+    profiles: Vec<ProfileResult>,
+}
+
+pub struct SuiteRunner {
+    engine: Arc<Engine>,
+    cfg: SuiteConfig,
+}
+
+impl SuiteRunner {
+    pub fn new(engine: Arc<Engine>, cfg: SuiteConfig) -> SuiteRunner {
+        SuiteRunner { engine, cfg }
+    }
+
+    /// Run every task through tune→store→serve→score and assemble the
+    /// report. Fails loudly on any failed train job, dropped request, or
+    /// shape mismatch — a green suite run means the whole stack composed.
+    pub fn run(&self, tasks: &[Box<dyn Task>]) -> Result<SuiteReport> {
+        let cfg = &self.cfg;
+        let mc = self.engine.manifest.config.clone();
+        ensure!(!tasks.is_empty(), "suite needs at least one task");
+        for t in tasks {
+            ensure!(
+                (2..=mc.c_max).contains(&t.num_classes()),
+                "task '{}': num_classes {} outside the cls head's 2..={}",
+                t.name(),
+                t.num_classes(),
+                mc.c_max
+            );
+            ensure!(t.profiles() >= 1, "task '{}' has no profiles", t.name());
+            ensure!(t.profiles() < 1000, "task '{}': profile-id block is 1000 wide", t.name());
+        }
+        let available = self.engine.manifest.available_ns("cls");
+        ensure!(
+            available.contains(&cfg.n),
+            "no cls artifacts for N={} (available: {available:?})",
+            cfg.n
+        );
+
+        let bank =
+            Arc::new(AdapterBank::random(mc.layers, cfg.n, mc.d, mc.bottleneck, cfg.seed));
+        let store = Arc::new(ProfileStore::with_config(cfg.serve.store_config()));
+
+        // --- phase 1: tune every profile through the scheduler -----------
+        let t_tune = Instant::now();
+        let final_losses = self.tune(tasks, &bank, &store)?;
+        let tune_s = t_tune.elapsed().as_secs_f64();
+
+        // --- phase 2: cold-start profiles go straight into the store -----
+        let cold_eval = self.insert_cold_profiles(&store, &mc)?;
+
+        // --- phase 3: serve every task's eval split, interleaved ---------
+        let t_serve = Instant::now();
+        let (task_results, cold_scores, snapshot) =
+            self.serve(tasks, &bank, &store, &final_losses, &cold_eval)?;
+        let serve_s = t_serve.elapsed().as_secs_f64();
+
+        // --- phase 4: scenario sweeps + parity baseline ------------------
+        let sweep = self.sparsity_sweep(tasks, &bank)?;
+        let parity = if cfg.parity { Some(self.parity(tasks, &bank, &store)?) } else { None };
+
+        // --- assemble ----------------------------------------------------
+        let tiny = Dims { d: mc.d, b: mc.bottleneck, layers: mc.layers };
+        let mut rep = Json::obj();
+        rep.set("schema", Json::Str(report::SCHEMA.into()));
+        rep.set("config", self.config_json(tasks));
+        rep.set("model", report::model_json(&mc));
+        let mut task_rows = Vec::new();
+        for tr in &task_results {
+            task_rows.push(task_json(tr));
+        }
+        rep.set("tasks", Json::Arr(task_rows));
+        rep.set(
+            "accounting",
+            report::accounting_json(
+                &tiny,
+                cfg.n,
+                cfg.k,
+                store.len(),
+                store.total_profile_bytes(),
+                store.mean_profile_bytes(),
+            ),
+        );
+        let mut scen = Json::obj();
+        scen.set("cross_task_serving", {
+            let mut o = Json::obj();
+            o.set("tasks_interleaved", Json::Num(tasks.len() as f64));
+            o.set(
+                "profiles_served",
+                Json::Num(tasks.iter().map(|t| t.profiles()).sum::<usize>() as f64),
+            );
+            o
+        });
+        if let Some(cold) = cold_scores {
+            let mut o = Json::obj();
+            o.set("profiles", Json::Num(cfg.cold_start_profiles as f64));
+            o.set("accuracy", Json::Num(cold.acc.unwrap_or(f64::NAN)));
+            o.set("chance", Json::Num(1.0 / TOPICS as f64));
+            scen.set("cold_start", o);
+        }
+        if !sweep.is_empty() {
+            let rows: Vec<Json> = sweep
+                .iter()
+                .map(|(k, combined)| {
+                    let mut o = Json::obj();
+                    o.set("k", Json::Num(*k as f64));
+                    o.set("combined", Json::Num(*combined));
+                    o.set(
+                        "profile_bytes",
+                        Json::Num(tiny.xpeft_hard_bytes(cfg.n) as f64),
+                    );
+                    o
+                })
+                .collect();
+            scen.set("sparsity_sweep", Json::Arr(rows));
+        }
+        rep.set("scenarios", scen);
+        if let Some(p) = parity {
+            rep.set("parity", p);
+        }
+
+        let mut tel = report::telemetry_json(&snapshot);
+        tel.set("tune_seconds", Json::Num(tune_s));
+        tel.set("serve_seconds", Json::Num(serve_s));
+        Ok(SuiteReport { report: rep, telemetry: tel })
+    }
+
+    fn pid(task_index: usize, profile: usize) -> u64 {
+        ((task_index + 1) * 1000 + profile) as u64
+    }
+
+    fn tune(
+        &self,
+        tasks: &[Box<dyn Task>],
+        bank: &Arc<AdapterBank>,
+        store: &Arc<ProfileStore>,
+    ) -> Result<HashMap<u64, f64>> {
+        let cfg = &self.cfg;
+        let scheduler =
+            Scheduler::start(self.engine.clone(), bank.clone(), store.clone(), cfg.plm_seed);
+        let mut pids = Vec::new();
+        for (t, task) in tasks.iter().enumerate() {
+            for j in 0..task.profiles() {
+                let pid = Self::pid(t, j);
+                scheduler.submit(TrainJob {
+                    profile_id: pid,
+                    dataset: Dataset {
+                        name: format!("{}/p{j}", task.name()),
+                        train: task.train_batches(j),
+                        dev: Vec::new(),
+                        num_classes: task.num_classes(),
+                        metric: task.metric(),
+                    },
+                    cfg: TrainConfig {
+                        mode: Mode::XpeftHard,
+                        n: cfg.n,
+                        k: cfg.k,
+                        steps: cfg.steps,
+                        seed: cfg.seed ^ pid,
+                        ..Default::default()
+                    },
+                    keep_aux: true,
+                })?;
+                pids.push((task.name(), pid));
+            }
+        }
+        scheduler.wait_all();
+        let mut final_losses = HashMap::new();
+        for (name, pid) in pids {
+            match scheduler.status(pid) {
+                Some(JobStatus::Done { final_loss, .. }) => {
+                    final_losses.insert(pid, final_loss as f64);
+                }
+                Some(JobStatus::Failed(e)) => bail!("tune failed for {name} profile {pid}: {e}"),
+                other => bail!("tune job {pid} ({name}) not terminal: {other:?}"),
+            }
+        }
+        scheduler.shutdown();
+        Ok(final_losses)
+    }
+
+    /// Insert `cold_start_profiles` untrained records (random k-hot masks,
+    /// random head) and return the reference eval split they are served on.
+    fn insert_cold_profiles(
+        &self,
+        store: &Arc<ProfileStore>,
+        mc: &crate::config::ModelConfig,
+    ) -> Result<Vec<Example>> {
+        let cfg = &self.cfg;
+        if cfg.cold_start_profiles == 0 {
+            return Ok(Vec::new());
+        }
+        for j in 0..cfg.cold_start_profiles {
+            let mut r = Rng::new(cfg.seed).fold_in(0xC01D).fold_in(j as u64);
+            let logits = MaskLogits {
+                layers: mc.layers,
+                n: cfg.n,
+                a: r.normal_vec(mc.layers * cfg.n, 1.0),
+                b: r.normal_vec(mc.layers * cfg.n, 1.0),
+            };
+            let aux = AuxParams {
+                ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+                ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+                head_w: r.normal_vec(mc.d * mc.c_max, 0.05),
+                head_b: vec![0.0; mc.c_max],
+            };
+            store.insert(
+                COLD_BASE + j as u64,
+                ProfileRecord {
+                    masks: ProfileMasks::Hard(logits.binarize(cfg.k)),
+                    aux: Some(Arc::new(aux)),
+                },
+            )?;
+        }
+        let reference =
+            TextgenTask::new(mc.seq, mc.vocab, cfg.seed ^ 0xC01D, 1, 1, cfg.max_eval.max(8));
+        Ok(reference.eval_batches(0))
+    }
+
+    /// Serve every profile's eval split through ONE `Service`, interleaving
+    /// submissions across tasks so mixed batches span tasks, then score.
+    #[allow(clippy::type_complexity)]
+    fn serve(
+        &self,
+        tasks: &[Box<dyn Task>],
+        bank: &Arc<AdapterBank>,
+        store: &Arc<ProfileStore>,
+        final_losses: &HashMap<u64, f64>,
+        cold_eval: &[Example],
+    ) -> Result<(Vec<TaskResult>, Option<Scores>, crate::coordinator::Snapshot)> {
+        let cfg = &self.cfg;
+        let mc = &self.engine.manifest.config;
+        // eval_sets[t][j]: task t, profile j (cold profiles appended as a
+        // pseudo-task at index tasks.len())
+        let mut eval_sets: Vec<Vec<Vec<Example>>> = tasks
+            .iter()
+            .map(|t| {
+                (0..t.profiles())
+                    .map(|j| {
+                        let mut e = t.eval_batches(j);
+                        e.truncate(cfg.max_eval);
+                        e
+                    })
+                    .collect()
+            })
+            .collect();
+        if cfg.cold_start_profiles > 0 {
+            eval_sets.push(vec![cold_eval.to_vec(); cfg.cold_start_profiles]);
+        }
+        let nc_of = |t: usize| -> usize {
+            if t < tasks.len() { tasks[t].num_classes() } else { TOPICS }
+        };
+        let pid_of = |t: usize, j: usize| -> u64 {
+            if t < tasks.len() { Self::pid(t, j) } else { COLD_BASE + j as u64 }
+        };
+
+        let svc = Service::start(
+            self.engine.clone(),
+            store.clone(),
+            bank.clone(),
+            cfg.serve.clone(),
+            mc.c_max,
+            cfg.plm_seed,
+        )?;
+        // round-robin over (case, task, profile): adjacent submissions hit
+        // different tasks, so one mixed batch routinely spans tasks
+        let max_cases = eval_sets
+            .iter()
+            .flat_map(|p| p.iter().map(Vec::len))
+            .max()
+            .unwrap_or(0);
+        let mut id_map: HashMap<u64, (usize, usize, usize)> = HashMap::new();
+        for case in 0..max_cases {
+            for (t, profiles) in eval_sets.iter().enumerate() {
+                for (j, examples) in profiles.iter().enumerate() {
+                    if let Some(ex) = examples.get(case) {
+                        let id = svc.submit_tokens(
+                            pid_of(t, j),
+                            ex.tokens.clone(),
+                            ex.pad_mask.clone(),
+                            nc_of(t),
+                        )?;
+                        id_map.insert(id, (t, j, case));
+                    }
+                }
+            }
+        }
+        let total = id_map.len();
+        let mut preds: Vec<Vec<Vec<Option<Pred>>>> = eval_sets
+            .iter()
+            .map(|p| p.iter().map(|e| vec![None; e.len()]).collect())
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(600);
+        let mut received = 0usize;
+        while received < total {
+            match svc.recv_timeout(Duration::from_secs(1)) {
+                Some(r) => {
+                    let &(t, j, case) = id_map
+                        .get(&r.request_id)
+                        .context("service returned an unknown request id")?;
+                    preds[t][j][case] = Some(Pred::Class(r.prediction));
+                    received += 1;
+                }
+                None => {
+                    ensure!(
+                        Instant::now() < deadline,
+                        "serve phase timed out: {received}/{total} responses"
+                    );
+                }
+            }
+        }
+        let snapshot = svc.shutdown();
+
+        let mut results = Vec::new();
+        for (t, task) in tasks.iter().enumerate() {
+            let mut profiles = Vec::new();
+            for (j, examples) in eval_sets[t].iter().enumerate() {
+                let pv: Vec<Pred> = preds[t][j]
+                    .iter()
+                    .map(|p| p.context("missing prediction"))
+                    .collect::<Result<_>>()?;
+                profiles.push(ProfileResult {
+                    profile: j,
+                    final_loss: *final_losses
+                        .get(&Self::pid(t, j))
+                        .context("missing train outcome")?,
+                    scores: task.score(&pv, examples),
+                });
+            }
+            results.push(TaskResult {
+                name: task.name(),
+                num_classes: task.num_classes(),
+                metric: task.metric(),
+                profiles,
+            });
+        }
+        let cold_scores = if cfg.cold_start_profiles > 0 {
+            let t = tasks.len();
+            let mut all_preds = Vec::new();
+            let mut all_truth = Vec::new();
+            for (j, examples) in eval_sets[t].iter().enumerate() {
+                for (p, ex) in preds[t][j].iter().zip(examples) {
+                    all_preds.push(p.context("missing cold-start prediction")?);
+                    all_truth.push(ex.clone());
+                }
+            }
+            Some(eval::score(MetricKind::Acc, TOPICS, &all_preds, &all_truth))
+        } else {
+            None
+        };
+        Ok((results, cold_scores, snapshot))
+    }
+
+    /// Reference dataset for the sweep and parity phases: the first task's
+    /// first profile.
+    fn reference_dataset(&self, tasks: &[Box<dyn Task>]) -> Dataset {
+        let task = &tasks[0];
+        let mut dev = task.eval_batches(0);
+        dev.truncate(self.cfg.max_eval.max(32));
+        Dataset {
+            name: format!("{}/reference", task.name()),
+            train: task.train_batches(0),
+            dev,
+            num_classes: task.num_classes(),
+            metric: task.metric(),
+        }
+    }
+
+    fn sparsity_sweep(
+        &self,
+        tasks: &[Box<dyn Task>],
+        bank: &Arc<AdapterBank>,
+    ) -> Result<Vec<(usize, f64)>> {
+        let cfg = &self.cfg;
+        if cfg.sparsity_ks.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ds = self.reference_dataset(tasks);
+        let mut rows = Vec::new();
+        for &k in &cfg.sparsity_ks {
+            ensure!(k >= 1 && k <= cfg.n, "sparsity sweep k={k} outside 1..=N");
+            let tc = TrainConfig {
+                mode: Mode::XpeftHard,
+                n: cfg.n,
+                k,
+                steps: cfg.steps,
+                seed: cfg.seed,
+                ..Default::default()
+            };
+            let (trainer, _) =
+                train::train_profile(&self.engine, &tc, &ds, Some(bank.as_ref()), cfg.plm_seed)?;
+            let scores = eval::evaluate(
+                &self.engine,
+                Mode::XpeftHard,
+                &trainer,
+                &ds,
+                Some(bank.as_ref()),
+                cfg.n,
+                k,
+                cfg.plm_seed,
+            )?;
+            rows.push((k, scores.combined()));
+        }
+        Ok(rows)
+    }
+
+    /// Paper-parity comparison on the reference task: X-PEFT hard vs a
+    /// per-profile `single_adapter` baseline, plus the Table 1 byte
+    /// accounting at paper dims (where the ≥10³× headline lives) and at
+    /// this deployment's dims (measured from the live store).
+    fn parity(
+        &self,
+        tasks: &[Box<dyn Task>],
+        bank: &Arc<AdapterBank>,
+        store: &Arc<ProfileStore>,
+    ) -> Result<Json> {
+        let cfg = &self.cfg;
+        let ds = self.reference_dataset(tasks);
+        let xp_cfg = TrainConfig {
+            mode: Mode::XpeftHard,
+            n: cfg.n,
+            k: cfg.k,
+            steps: cfg.steps,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let (xp_trainer, _) =
+            train::train_profile(&self.engine, &xp_cfg, &ds, Some(bank.as_ref()), cfg.plm_seed)?;
+        let xp = eval::evaluate(
+            &self.engine,
+            Mode::XpeftHard,
+            &xp_trainer,
+            &ds,
+            Some(bank.as_ref()),
+            cfg.n,
+            cfg.k,
+            cfg.plm_seed,
+        )?;
+        let ad_cfg = TrainConfig {
+            mode: Mode::SingleAdapter,
+            steps: cfg.steps,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let (ad_trainer, _) =
+            train::train_profile(&self.engine, &ad_cfg, &ds, None, cfg.plm_seed)?;
+        let ad = eval::evaluate(
+            &self.engine,
+            Mode::SingleAdapter,
+            &ad_trainer,
+            &ds,
+            None,
+            cfg.n,
+            cfg.k,
+            cfg.plm_seed,
+        )?;
+
+        let paper = Dims::PAPER_TABLE1;
+        let mut o = Json::obj();
+        o.set("task", Json::Str(ds.name.clone()));
+        o.set("xpeft_combined", Json::Num(xp.combined()));
+        o.set("adapter_combined", Json::Num(ad.combined()));
+        o.set("delta", Json::Num(xp.combined() - ad.combined()));
+        o.set(
+            "paper_adapter_bytes_per_profile",
+            Json::Num(paper.adapter_bytes() as f64),
+        );
+        o.set(
+            "paper_xpeft_bytes_per_profile",
+            Json::Num(paper.xpeft_hard_bytes(cfg.n) as f64),
+        );
+        o.set(
+            "paper_bytes_ratio",
+            Json::Num(paper.adapter_bytes() as f64 / paper.xpeft_hard_bytes(cfg.n) as f64),
+        );
+        o.set("measured_bytes_per_profile", Json::Num(store.mean_profile_bytes()));
+        Ok(o)
+    }
+
+    fn config_json(&self, tasks: &[Box<dyn Task>]) -> Json {
+        let cfg = &self.cfg;
+        let mut o = Json::obj();
+        o.set("n", Json::Num(cfg.n as f64));
+        o.set("k", Json::Num(cfg.k as f64));
+        o.set("steps", Json::Num(cfg.steps as f64));
+        o.set("seed", Json::Num(cfg.seed as f64));
+        o.set("plm_seed", Json::Num(cfg.plm_seed as f64));
+        o.set("max_eval", Json::Num(cfg.max_eval as f64));
+        o.set("cold_start_profiles", Json::Num(cfg.cold_start_profiles as f64));
+        o.set(
+            "sparsity_ks",
+            Json::Arr(cfg.sparsity_ks.iter().map(|&k| Json::Num(k as f64)).collect()),
+        );
+        o.set("parity", Json::Bool(cfg.parity));
+        o.set(
+            "tasks",
+            Json::Arr(tasks.iter().map(|t| Json::Str(t.name())).collect()),
+        );
+        let mut serve = Json::obj();
+        serve.set("mixed_batch", Json::Bool(cfg.serve.mixed_batch));
+        serve.set("max_batch", Json::Num(cfg.serve.max_batch as f64));
+        serve.set("agg_cache_mb", Json::Num(cfg.serve.agg_cache_mb as f64));
+        o.set("serve", serve);
+        o
+    }
+}
+
+fn task_json(tr: &TaskResult) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(tr.name.clone()));
+    o.set("profiles", Json::Num(tr.profiles.len() as f64));
+    o.set("num_classes", Json::Num(tr.num_classes as f64));
+    o.set("metric", Json::Str(format!("{:?}", tr.metric)));
+    let mean = |f: &dyn Fn(&ProfileResult) -> f64| -> f64 {
+        tr.profiles.iter().map(|p| f(p)).sum::<f64>() / tr.profiles.len() as f64
+    };
+    o.set("combined", Json::Num(mean(&|p| p.scores.combined())));
+    o.set("mean_final_loss", Json::Num(mean(&|p| p.final_loss)));
+    let rows: Vec<Json> = tr
+        .profiles
+        .iter()
+        .map(|p| {
+            let mut r = report::scores_json(&p.scores);
+            r.set("profile", Json::Num(p.profile as f64));
+            r.set("final_loss", Json::Num(p.final_loss));
+            r
+        })
+        .collect();
+    o.set("per_profile", Json::Arr(rows));
+    o
+}

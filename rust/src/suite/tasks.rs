@@ -1,0 +1,285 @@
+//! [`Task`] adapters over the existing data modules. Each adapter is a thin
+//! deterministic view: profiles regenerate their splits from seeds, so a
+//! task can be rebuilt byte-identically in another process or thread count.
+
+use anyhow::{bail, Result};
+
+use crate::data::textgen::{TopicWorld, TOPICS};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::{glue, lamp, superglue, Dataset, Example, Label, MetricKind};
+use crate::suite::Task;
+use crate::util::rng::Rng;
+
+/// Direct topic classification on the synthetic topic world — the simplest
+/// possible task (no label remapping), used as the suite's reference task
+/// for the sparsity sweep and cold-start comparisons.
+pub struct TextgenTask {
+    seq: usize,
+    vocab: usize,
+    seed: u64,
+    profiles: usize,
+    train_per_profile: usize,
+    eval_per_profile: usize,
+}
+
+impl TextgenTask {
+    pub fn new(
+        seq: usize,
+        vocab: usize,
+        seed: u64,
+        profiles: usize,
+        train_per_profile: usize,
+        eval_per_profile: usize,
+    ) -> TextgenTask {
+        TextgenTask { seq, vocab, seed, profiles, train_per_profile, eval_per_profile }
+    }
+
+    /// Deterministic split generation: each (profile, split) pair owns an
+    /// independent stream, so train/eval never alias.
+    fn generate(&self, profile: usize, split: u64, count: usize) -> Vec<Example> {
+        let world = TopicWorld::new(self.seed ^ (profile as u64).wrapping_mul(0x9e37_79b9));
+        let tok = Tokenizer::new(self.vocab);
+        let mut rng = Rng::new(self.seed).fold_in(0x7e47).fold_in(profile as u64).fold_in(split);
+        let len = self.seq.saturating_sub(2).max(1);
+        (0..count)
+            .map(|_| {
+                let topic = rng.below(TOPICS);
+                let text = world.topical_sentence(&mut rng, topic, 0.9, len);
+                let (tokens, pad_mask) = tok.encode(&text, self.seq);
+                Example { tokens, pad_mask, label: Label::Class(topic), pair_id: None }
+            })
+            .collect()
+    }
+}
+
+impl Task for TextgenTask {
+    fn name(&self) -> String {
+        "textgen".into()
+    }
+
+    fn profiles(&self) -> usize {
+        self.profiles
+    }
+
+    fn train_batches(&self, profile: usize) -> Vec<Example> {
+        self.generate(profile, 0, self.train_per_profile)
+    }
+
+    fn eval_batches(&self, profile: usize) -> Vec<Example> {
+        self.generate(profile, 1, self.eval_per_profile)
+    }
+
+    fn num_classes(&self) -> usize {
+        TOPICS
+    }
+
+    fn metric(&self) -> MetricKind {
+        MetricKind::Acc
+    }
+}
+
+/// LaMP-2-style personalized news categorization: each profile is one
+/// author with an author-specific topic→category criterion (the paper's
+/// primary multi-profile workload).
+pub struct LampTask {
+    corpus: lamp::LampCorpus,
+}
+
+impl LampTask {
+    pub fn new(
+        profiles: usize,
+        seq: usize,
+        vocab: usize,
+        seed: u64,
+        min_docs: usize,
+        max_docs: usize,
+    ) -> Result<LampTask> {
+        Ok(LampTask { corpus: lamp::try_generate(profiles, seq, vocab, seed, min_docs, max_docs)? })
+    }
+}
+
+impl Task for LampTask {
+    fn name(&self) -> String {
+        "lamp".into()
+    }
+
+    fn profiles(&self) -> usize {
+        self.corpus.profiles.len()
+    }
+
+    fn train_batches(&self, profile: usize) -> Vec<Example> {
+        self.corpus.profiles[profile].train.clone()
+    }
+
+    fn eval_batches(&self, profile: usize) -> Vec<Example> {
+        self.corpus.profiles[profile].dev.clone()
+    }
+
+    fn num_classes(&self) -> usize {
+        lamp::CATEGORIES
+    }
+
+    fn metric(&self) -> MetricKind {
+        MetricKind::Acc
+    }
+}
+
+/// A GLUE or SuperGLUE classification task as a multi-profile workload:
+/// profile `p` tunes on its own seed-shifted world variant of the task
+/// (per-profile synthesized data, the suite analog of per-user tuning).
+pub struct DatasetTask {
+    name: String,
+    datasets: Vec<Dataset>,
+    max_train: usize,
+}
+
+impl DatasetTask {
+    pub fn glue(
+        task: &str,
+        profiles: usize,
+        seq: usize,
+        vocab: usize,
+        seed: u64,
+        max_train: usize,
+    ) -> Result<DatasetTask> {
+        let datasets = (0..profiles)
+            .map(|p| glue::try_build(task, seq, vocab, seed.wrapping_add(31 * p as u64)))
+            .collect::<Result<Vec<_>>>()?;
+        Self::classification(task, datasets, max_train)
+    }
+
+    pub fn superglue(
+        task: &str,
+        profiles: usize,
+        seq: usize,
+        vocab: usize,
+        seed: u64,
+        max_train: usize,
+    ) -> Result<DatasetTask> {
+        let datasets = (0..profiles)
+            .map(|p| superglue::try_build(task, seq, vocab, seed.wrapping_add(31 * p as u64)))
+            .collect::<Result<Vec<_>>>()?;
+        Self::classification(task, datasets, max_train)
+    }
+
+    fn classification(task: &str, datasets: Vec<Dataset>, max_train: usize) -> Result<DatasetTask> {
+        let Some(first) = datasets.first() else {
+            bail!("task '{task}' needs at least one profile");
+        };
+        if first.is_regression() {
+            bail!("task '{task}' is a regression task; the suite serves the classification head");
+        }
+        Ok(DatasetTask { name: task.to_string(), datasets, max_train })
+    }
+}
+
+impl Task for DatasetTask {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn profiles(&self) -> usize {
+        self.datasets.len()
+    }
+
+    fn train_batches(&self, profile: usize) -> Vec<Example> {
+        let train = &self.datasets[profile].train;
+        train[..train.len().min(self.max_train)].to_vec()
+    }
+
+    fn eval_batches(&self, profile: usize) -> Vec<Example> {
+        self.datasets[profile].dev.clone()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.datasets[0].num_classes
+    }
+
+    fn metric(&self) -> MetricKind {
+        self.datasets[0].metric
+    }
+}
+
+/// Build the task list for a suite run. `names` empty selects the default
+/// mix (one adapter per data module); otherwise each name is resolved as
+/// textgen | lamp | any GLUE / SuperGLUE classification task.
+pub fn default_tasks(
+    seq: usize,
+    vocab: usize,
+    seed: u64,
+    names: &[String],
+    profiles_per_task: usize,
+    max_train: usize,
+) -> Result<Vec<Box<dyn Task>>> {
+    let selected: Vec<String> = if names.is_empty() {
+        ["textgen", "lamp", "sst2", "cb"].iter().map(|s| s.to_string()).collect()
+    } else {
+        names.to_vec()
+    };
+    let mut out: Vec<Box<dyn Task>> = Vec::new();
+    for name in &selected {
+        let task: Box<dyn Task> = match name.as_str() {
+            "textgen" => Box::new(TextgenTask::new(
+                seq,
+                vocab,
+                seed,
+                profiles_per_task,
+                max_train,
+                64,
+            )),
+            "lamp" => Box::new(LampTask::new(profiles_per_task, seq, vocab, seed, 12, 48)?),
+            t if glue::GLUE_TASKS.contains(&t) => {
+                Box::new(DatasetTask::glue(t, profiles_per_task, seq, vocab, seed, max_train)?)
+            }
+            t if superglue::SUPERGLUE_TASKS.contains(&t) => {
+                Box::new(DatasetTask::superglue(t, profiles_per_task, seq, vocab, seed, max_train)?)
+            }
+            other => bail!("unknown suite task '{other}' (textgen|lamp|<glue>|<superglue>)"),
+        };
+        out.push(task);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn textgen_task_splits_are_deterministic_and_disjoint_streams() {
+        let t = TextgenTask::new(32, 1024, 7, 2, 8, 8);
+        assert_eq!(t.train_batches(0)[0].tokens, t.train_batches(0)[0].tokens);
+        assert_ne!(t.train_batches(0)[0].tokens, t.eval_batches(0)[0].tokens);
+        assert_ne!(t.train_batches(0)[0].tokens, t.train_batches(1)[0].tokens);
+        for ex in t.train_batches(1) {
+            assert!(ex.label.class() < TOPICS);
+        }
+    }
+
+    #[test]
+    fn dataset_task_caps_train_split() {
+        let t = DatasetTask::glue("sst2", 1, 32, 1024, 42, 10).unwrap();
+        assert_eq!(t.train_batches(0).len(), 10);
+        assert!(!t.eval_batches(0).is_empty());
+        assert_eq!(t.num_classes(), 2);
+    }
+
+    #[test]
+    fn regression_tasks_are_rejected() {
+        assert!(DatasetTask::glue("stsb", 1, 32, 1024, 42, 10).is_err());
+    }
+
+    #[test]
+    fn default_task_mix_has_at_least_three_tasks() {
+        let tasks = default_tasks(32, 1024, 42, &[], 1, 16).unwrap();
+        assert!(tasks.len() >= 3);
+        let names: Vec<String> = tasks.iter().map(|t| t.name()).collect();
+        assert!(names.contains(&"textgen".to_string()));
+        assert!(names.contains(&"lamp".to_string()));
+    }
+
+    #[test]
+    fn unknown_task_name_errors() {
+        assert!(default_tasks(32, 1024, 42, &["nope".to_string()], 1, 16).is_err());
+    }
+}

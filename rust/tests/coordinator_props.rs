@@ -21,7 +21,14 @@ use xpeft::runtime::Engine;
 use xpeft::util::rng::Rng;
 
 fn req(id: u64, pid: u64, at: Instant) -> Request {
-    Request { id, profile_id: pid, tokens: vec![1, 9, 9], pad_mask: vec![1.0; 3], submitted: at }
+    Request {
+        id,
+        profile_id: pid,
+        tokens: vec![1, 9, 9],
+        pad_mask: vec![1.0; 3],
+        num_classes: 0,
+        submitted: at,
+    }
 }
 
 fn random_masks(layers: usize, n: usize, k: usize, seed: u64) -> ProfileMasks {

@@ -1,0 +1,135 @@
+//! Data-module contracts: loaders *error* (never panic) on malformed
+//! input, the fallible and panicking constructors agree on valid input,
+//! and tokenizer encode→batch→decode round-trips at the boundary lengths
+//! (empty, exactly-max, over-max).
+
+use xpeft::data::batch::Batcher;
+use xpeft::data::tokenizer::{Tokenizer, CLS, PAD};
+use xpeft::data::{glue, lamp, superglue, Example, Label};
+
+// ---------------------------------------------------------------- loaders
+
+#[test]
+fn glue_rejects_malformed_input_without_panicking() {
+    assert!(glue::try_build("nope", 32, 1024, 42).is_err(), "unknown task");
+    assert!(glue::try_build("sst2", 4, 1024, 42).is_err(), "seq too short");
+    assert!(glue::try_build("sst2", 32, 100, 42).is_err(), "vocab too small");
+    let err = glue::try_build("nope", 32, 1024, 42).unwrap_err().to_string();
+    assert!(err.contains("unknown"), "error should name the problem: {err}");
+}
+
+#[test]
+fn superglue_rejects_malformed_input_without_panicking() {
+    assert!(superglue::try_build("nope", 32, 1024, 42).is_err());
+    assert!(superglue::try_build("cb", 4, 1024, 42).is_err());
+    assert!(superglue::try_build("boolq", 32, 600, 7).is_err());
+}
+
+#[test]
+fn lamp_rejects_malformed_input_without_panicking() {
+    assert!(lamp::try_generate(0, 32, 1024, 42, 2, 4).is_err(), "no authors");
+    assert!(lamp::try_generate(4, 32, 1024, 42, 5, 3).is_err(), "min > max");
+    assert!(lamp::try_generate(4, 32, 1024, 42, 1, 4).is_err(), "min_docs < 2");
+    assert!(lamp::try_generate(4, 2, 1024, 42, 2, 4).is_err(), "seq too short");
+    assert!(lamp::try_generate(2, 32, 600, 42, 2, 4).is_err(), "vocab too small");
+}
+
+#[test]
+fn fallible_and_panicking_constructors_agree() {
+    for task in glue::GLUE_TASKS {
+        let a = glue::try_build(task, 32, 1024, 42).unwrap();
+        let b = glue::build(task, 32, 1024, 42);
+        assert_eq!(a.train.len(), b.train.len(), "{task}");
+        assert_eq!(a.train[0].tokens, b.train[0].tokens, "{task}");
+        assert_eq!(a.num_classes, b.num_classes, "{task}");
+    }
+    for task in superglue::SUPERGLUE_TASKS {
+        let a = superglue::try_build(task, 32, 1024, 7).unwrap();
+        let b = superglue::build(task, 32, 1024, 7);
+        assert_eq!(a.train.len(), b.train.len(), "{task}");
+        assert_eq!(a.train[0].tokens, b.train[0].tokens, "{task}");
+    }
+    let a = lamp::try_generate(3, 32, 1024, 11, 3, 6).unwrap();
+    let b = lamp::generate(3, 32, 1024, 11, 3, 6);
+    assert_eq!(a.num_authors, b.num_authors);
+    assert_eq!(a.articles.len(), b.articles.len());
+}
+
+#[test]
+fn tokenizer_rejects_vocab_without_hash_tail() {
+    assert!(Tokenizer::try_new(100).is_err());
+    assert!(Tokenizer::try_new(770).is_err());
+    assert!(Tokenizer::try_new(1024).is_ok());
+}
+
+// ----------------------------------------------------------- round-trips
+
+/// Canonical topic-world sentence of exactly `n` words.
+fn sentence(n: usize) -> String {
+    (0..n)
+        .map(|i| {
+            if i % 4 == 3 {
+                format!("s0fw{}", i % 7)
+            } else {
+                format!("s0t{}w{}", i % 15, i % 40)
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[test]
+fn encode_decode_round_trips_at_boundary_lengths() {
+    let t = Tokenizer::new(1024);
+    let seq = 16;
+    // empty, one word, exactly-max (seq-1 words + CLS), over-max
+    for words in [0usize, 1, seq - 1, seq + 5, 3 * seq] {
+        let text = sentence(words);
+        let (ids, mask) = t.encode(&text, seq);
+        assert_eq!(ids.len(), seq);
+        assert_eq!(ids[0], CLS);
+        let used = 1 + words.min(seq - 1);
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), used, "{words} words");
+        assert!(ids[used..].iter().all(|&i| i == PAD));
+
+        // decode → re-encode is a fixpoint (one truncation already applied)
+        let decoded = t.decode(&ids);
+        let (ids2, mask2) = t.encode(&decoded, seq);
+        assert_eq!(ids2, ids, "round-trip at {words} words");
+        assert_eq!(mask2, mask);
+        // and the surface form is stable from then on
+        assert_eq!(t.decode(&ids2), decoded);
+    }
+}
+
+#[test]
+fn empty_text_round_trips_to_empty() {
+    let t = Tokenizer::new(1024);
+    let (ids, _) = t.encode("", 8);
+    assert_eq!(ids[0], CLS);
+    assert!(ids[1..].iter().all(|&i| i == PAD));
+    assert_eq!(t.decode(&ids), "");
+}
+
+#[test]
+fn batch_rows_round_trip_through_decode() {
+    let t = Tokenizer::new(1024);
+    let seq = 16;
+    let examples: Vec<Example> = [0usize, 3, seq - 1, seq + 9]
+        .iter()
+        .map(|&words| {
+            let (tokens, pad_mask) = t.encode(&sentence(words), seq);
+            Example { tokens, pad_mask, label: Label::Class(0), pair_id: None }
+        })
+        .collect();
+    let batches = Batcher::new(3, seq).sequential(&examples);
+    assert_eq!(batches.len(), 2);
+    let mut row_iter = batches.iter().flat_map(|b| (0..b.size).map(move |r| (b, r)));
+    for ex in &examples {
+        let (b, r) = row_iter.next().unwrap();
+        let row: Vec<u32> = b.tokens[r * seq..(r + 1) * seq].iter().map(|&x| x as u32).collect();
+        assert_eq!(row, ex.tokens, "batch row must carry the example's ids");
+        let (re, _) = t.encode(&t.decode(&row), seq);
+        assert_eq!(re, ex.tokens, "decode(batch row) must re-encode to the same ids");
+    }
+}
