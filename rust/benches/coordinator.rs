@@ -57,6 +57,7 @@ fn main() {
                 pad_mask: vec![1.0; 32],
                 num_classes: 0,
                 submitted: t,
+                deadline: None,
             });
         }
         let later = t + Duration::from_millis(5);
@@ -354,6 +355,123 @@ fn main() {
                 r.with_extra("trunk_forwards_per_1k_requests", tf1k)
                     .with_extra("p50_latency_us", snap.p50_latency_us),
             );
+        }
+    }
+
+    // ---- overload behavior over the wire (loadgen vs the TCP front end)
+    // A real loopback server behind admission control, driven open-loop at
+    // 1x/2x/4x the closed-loop capacity with zipfian profile popularity.
+    // The robustness claim measured here: goodput holds (2x within ~20% of
+    // 1x) and p95 stays bounded, because excess load is shed cheaply
+    // (Overloaded frames + deadline shedding) instead of queueing.
+    {
+        use xpeft::config::NetConfig;
+        use xpeft::coordinator::net::{loadgen, NetServer};
+
+        let profiles: u64 = if smoke { 32 } else { 256 };
+        println!("\n== overload: TCP front end, {profiles} profiles, zipfian open-loop ==");
+        let engine = Arc::new(Engine::native());
+        let mc = engine.manifest.config.clone();
+        let n = 100usize;
+        let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+        let store = Arc::new(ProfileStore::with_config(StoreConfig {
+            shards: 64,
+            cache_capacity: 2 * profiles as usize,
+            ..StoreConfig::default()
+        }));
+        for pid in 0..profiles {
+            let mut r = Rng::new(7000 + pid);
+            let lg = MaskLogits {
+                layers: mc.layers,
+                n,
+                a: r.normal_vec(mc.layers * n, 1.0),
+                b: r.normal_vec(mc.layers * n, 1.0),
+            };
+            store
+                .insert(pid, ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None })
+                .unwrap();
+        }
+        store.set_shared_aux(AuxParams {
+            ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+            ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+            head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+            head_b: vec![0.0; mc.c_max],
+        });
+        let svc = Arc::new(
+            Service::start(
+                engine,
+                store,
+                bank,
+                ServeConfig {
+                    mixed_batch: true,
+                    max_batch: 32,
+                    batch_deadline_us: 400,
+                    mask_cache: 2 * profiles as usize,
+                    ..ServeConfig::default()
+                },
+                15,
+                42,
+            )
+            .unwrap(),
+        );
+        let net = NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            deadline_ms: 500,
+            ..NetConfig::default()
+        };
+        let server = NetServer::start(Arc::clone(&svc), net).unwrap();
+        let base = loadgen::LoadgenConfig {
+            addr: server.local_addr().to_string(),
+            conns: 4,
+            duration: Duration::from_secs(if smoke { 1 } else { 4 }),
+            profiles,
+            zipf_s: 1.0,
+            deadline_ms: 500,
+            burst: 4,
+            text: "s42t3w1 s42t2w5 s42fw0".to_string(),
+            ..loadgen::LoadgenConfig::default()
+        };
+        let runs = loadgen::overload_suite(&base, &[1.0, 2.0, 4.0]).unwrap();
+        for (m, rep) in &runs {
+            let (label, name) = if *m <= 0.0 {
+                (
+                    "capacity probe (closed-loop)".to_string(),
+                    format!("overload probe closed-loop ({profiles} profiles, zipf 1.0)"),
+                )
+            } else {
+                (
+                    format!("{m:.0}x offered load"),
+                    format!(
+                        "overload {m:.0}x offered ({profiles} profiles, zipf 1.0, deadline 500ms)"
+                    ),
+                )
+            };
+            println!("   {label}: {}", rep.summary());
+            suite.add(
+                timed(&name, rep.ok as usize, rep.elapsed)
+                    .with_extra("p95_latency_us", rep.p95_us)
+                    .with_extra("p99_latency_us", rep.p99_us)
+                    .with_extra("shed_rate", rep.shed_rate())
+                    .with_extra("offered_per_s", rep.offered as f64 / rep.elapsed.as_secs_f64()),
+            );
+        }
+        server.shutdown();
+        let snap = match Arc::try_unwrap(svc) {
+            Ok(s) => s.shutdown(),
+            Err(s) => s.telemetry(),
+        };
+        println!(
+            "   telemetry: admitted {}, overloaded {}, shed {}, evicted {}, frame errors {}",
+            snap.admitted,
+            snap.rejected_overload,
+            snap.shed_expired,
+            snap.evicted_slow_clients,
+            snap.frame_errors
+        );
+        let find = |target: f64| runs.iter().find(|(m, _)| (*m - target).abs() < 1e-9);
+        if let (Some((_, one)), Some((_, two))) = (find(1.0), find(2.0)) {
+            let ratio = two.goodput_per_s() / one.goodput_per_s().max(1.0);
+            println!("   goodput 2x/1x ratio: {ratio:.2} (graceful degradation wants >= 0.8)");
         }
     }
 

@@ -212,6 +212,10 @@ pub struct ServeConfig {
     /// this (via `Engine::set_threads`) — `Service::start` deliberately
     /// does not. Never changes numeric results — only wallclock.
     pub threads: usize,
+    /// Opt-in store durability (`--fsync`): `sync_all` after every
+    /// committed profile record, so an acknowledged tune survives power
+    /// loss. Default off — appends stay page-cache-buffered.
+    pub fsync: bool,
 }
 
 impl Default for ServeConfig {
@@ -226,6 +230,7 @@ impl Default for ServeConfig {
             compact_min_dead: 1024,
             compact_dead_ratio: 0.5,
             threads: 0,
+            fsync: false,
         }
     }
 }
@@ -246,6 +251,9 @@ impl ServeConfig {
         self.compact_min_dead = args.get_usize("compact-min-dead", self.compact_min_dead)?;
         self.compact_dead_ratio = args.get_f64("compact-ratio", self.compact_dead_ratio)?;
         self.threads = args.get_usize("threads", self.threads)?;
+        if args.flag("fsync") {
+            self.fsync = true;
+        }
         if self.max_batch == 0 {
             bail!("max-batch must be positive");
         }
@@ -263,7 +271,83 @@ impl ServeConfig {
             compact_min_dead: self.compact_min_dead,
             compact_dead_ratio: self.compact_dead_ratio,
             agg_cache_bytes: self.agg_cache_mb.saturating_mul(1 << 20),
+            fsync: self.fsync,
         }
+    }
+}
+
+/// Wire front-end configuration (`xpeft serve --listen ...`): admission
+/// control, deadlines, and per-connection robustness knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Listen address (`--listen HOST:PORT`; port 0 picks a free port).
+    pub listen: String,
+    /// Per-profile sustained rate limit in req/s (`--rate-limit`, 0 = off).
+    pub rate_limit: f64,
+    /// Per-profile burst allowance in requests (`--rate-burst`).
+    pub rate_burst: f64,
+    /// Bound on admitted-but-unanswered requests (`--admission-queue`;
+    /// beyond it new requests are rejected with `Overloaded`).
+    pub admission_queue: usize,
+    /// Default request deadline in ms (`--deadline-ms`), applied when a
+    /// request carries none; expired work is shed with `Expired`.
+    pub deadline_ms: u64,
+    /// A connection that cannot complete one frame within this window is a
+    /// slow-loris writer and is evicted (`--read-deadline-ms`).
+    pub read_deadline_ms: u64,
+    /// Per-write socket deadline (`--write-deadline-ms`).
+    pub write_deadline_ms: u64,
+    /// A connection with no traffic at all for this long is presumed
+    /// half-open and closed (`--idle-timeout-ms`).
+    pub idle_timeout_ms: u64,
+    /// Per-connection bounded outbox in frames (`--outbox`); a client that
+    /// lets it fill is evicted rather than wedging the dispatcher.
+    pub outbox: usize,
+    /// Max simultaneous connections (`--max-conns`).
+    pub max_conns: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: String::new(),
+            rate_limit: 0.0,
+            rate_burst: 8.0,
+            admission_queue: 256,
+            deadline_ms: 2_000,
+            read_deadline_ms: 2_000,
+            write_deadline_ms: 2_000,
+            idle_timeout_ms: 30_000,
+            outbox: 128,
+            max_conns: 1024,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn override_from_args(mut self, args: &Args) -> Result<NetConfig> {
+        if let Some(addr) = args.get("listen") {
+            self.listen = addr.to_string();
+        }
+        self.rate_limit = args.get_f64("rate-limit", self.rate_limit)?;
+        self.rate_burst = args.get_f64("rate-burst", self.rate_burst)?;
+        self.admission_queue = args.get_usize("admission-queue", self.admission_queue)?;
+        self.deadline_ms = args.get_u64("deadline-ms", self.deadline_ms)?;
+        self.read_deadline_ms = args.get_u64("read-deadline-ms", self.read_deadline_ms)?;
+        self.write_deadline_ms = args.get_u64("write-deadline-ms", self.write_deadline_ms)?;
+        self.idle_timeout_ms = args.get_u64("idle-timeout-ms", self.idle_timeout_ms)?;
+        self.outbox = args.get_usize("outbox", self.outbox)?;
+        self.max_conns = args.get_usize("max-conns", self.max_conns)?;
+        if self.rate_limit < 0.0 || !self.rate_limit.is_finite() {
+            bail!("rate-limit must be a finite non-negative rate");
+        }
+        if self.deadline_ms == 0 || self.read_deadline_ms == 0 || self.write_deadline_ms == 0 {
+            bail!("deadline-ms, read-deadline-ms and write-deadline-ms must be positive");
+        }
+        if self.outbox == 0 || self.max_conns == 0 {
+            bail!("outbox and max-conns must be positive");
+        }
+        Ok(self)
     }
 }
 
@@ -357,6 +441,40 @@ mod tests {
             .override_from_args(&args("serve --no-mixed-batch"))
             .unwrap();
         assert!(!off.mixed_batch);
+    }
+
+    #[test]
+    fn fsync_flag_flows_to_store_config() {
+        let sc = ServeConfig::default().override_from_args(&args("serve --fsync")).unwrap();
+        assert!(sc.fsync);
+        assert!(sc.store_config().fsync);
+        let off = ServeConfig::default().override_from_args(&args("serve")).unwrap();
+        assert!(!off.fsync, "durability is opt-in");
+        assert!(!off.store_config().fsync);
+    }
+
+    #[test]
+    fn net_overrides_and_validation() {
+        let nc = NetConfig::default()
+            .override_from_args(&args(
+                "serve --listen 127.0.0.1:0 --rate-limit 50 --rate-burst 4 \
+                 --admission-queue 32 --deadline-ms 250 --outbox 16 --max-conns 64",
+            ))
+            .unwrap();
+        assert_eq!(nc.listen, "127.0.0.1:0");
+        assert!((nc.rate_limit - 50.0).abs() < 1e-12);
+        assert!((nc.rate_burst - 4.0).abs() < 1e-12);
+        assert_eq!(nc.admission_queue, 32);
+        assert_eq!(nc.deadline_ms, 250);
+        assert_eq!(nc.outbox, 16);
+        assert_eq!(nc.max_conns, 64);
+        assert!(NetConfig::default()
+            .override_from_args(&args("serve --deadline-ms 0"))
+            .is_err());
+        assert!(NetConfig::default().override_from_args(&args("serve --outbox 0")).is_err());
+        assert!(NetConfig::default()
+            .override_from_args(&args("serve --rate-limit -1"))
+            .is_err());
     }
 
     #[test]

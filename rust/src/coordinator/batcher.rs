@@ -28,6 +28,17 @@ pub struct Request {
     /// Lets one mixed batch span tasks with different class counts.
     pub num_classes: usize,
     pub submitted: Instant,
+    /// Absolute deadline after which the response is worthless. `None`
+    /// means "never expires" (the in-process callers). The serving loop
+    /// sheds expired rows *before* they cost a trunk forward.
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    /// True when the request's deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// A flushed group: all requests share one profile.
@@ -192,6 +203,41 @@ impl DynamicBatcher {
         out
     }
 
+    /// Remove every queued request whose deadline has passed at `now` and
+    /// return them, keeping queue/pending accounting consistent. Called by
+    /// the serving loop before each poll so a request that can no longer
+    /// meet its deadline is answered `Expired` instead of occupying a row
+    /// in a trunk forward (deadline-aware load shedding).
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut shed: Vec<Request> = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            let pid = self.pending[i];
+            let q = self.queues.get_mut(&pid).expect("pending profiles have queues");
+            if q.iter().any(|r| r.expired(now)) {
+                // Drain-and-rebuild: VecDeque::retain cannot move the
+                // rejected elements out.
+                let mut kept: VecDeque<Request> = VecDeque::with_capacity(q.len());
+                for r in q.drain(..) {
+                    if r.expired(now) {
+                        shed.push(r);
+                    } else {
+                        kept.push_back(r);
+                    }
+                }
+                *q = kept;
+            }
+            if q.is_empty() {
+                self.queues.remove(&pid);
+                let _ = self.pending.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        self.queued -= shed.len();
+        shed
+    }
+
     /// Time until the oldest pending request expires (for sleep control).
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.pending
@@ -218,7 +264,12 @@ mod tests {
             pad_mask: vec![1.0],
             num_classes: 0,
             submitted: at,
+            deadline: None,
         }
+    }
+
+    fn req_dl(id: u64, pid: u64, at: Instant, dl: Instant) -> Request {
+        Request { deadline: Some(dl), ..req(id, pid, at) }
     }
 
     #[test]
@@ -462,6 +513,73 @@ mod tests {
         let total: usize = batches.iter().map(|mb| mb.requests.len()).sum();
         assert_eq!(total, 11);
         assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn shed_expired_removes_only_expired_rows() {
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(10));
+        let t = Instant::now();
+        let soon = t + Duration::from_millis(5);
+        let late = t + Duration::from_secs(60);
+        b.push(req_dl(1, 1, t, soon)); // expires
+        b.push(req_dl(2, 1, t, late)); // survives
+        b.push(req(3, 2, t)); //          no deadline: survives
+        b.push(req_dl(4, 3, t, soon)); // expires, leaves profile 3 empty
+        let shed = b.shed_expired(t + Duration::from_millis(6));
+        let mut ids: Vec<u64> = shed.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 4]);
+        assert_eq!(b.queued(), 2);
+        // profile 3 fully shed: no ghost entry in pending
+        let later = t + Duration::from_secs(120);
+        let mut survivors = Vec::new();
+        while let Some(mb) = b.poll_mixed(later) {
+            survivors.extend(mb.requests.iter().map(|r| r.id).collect::<Vec<_>>());
+        }
+        survivors.sort_unstable();
+        assert_eq!(survivors, vec![2, 3]);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn shed_expired_noop_without_deadlines() {
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(10));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, i % 2, t));
+        }
+        assert!(b.shed_expired(t + Duration::from_secs(3600)).is_empty());
+        assert_eq!(b.queued(), 5);
+    }
+
+    #[test]
+    fn shed_expired_property_accounting_stays_consistent() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(55);
+        for trial in 0..20 {
+            let mut b = DynamicBatcher::new(1 + rng.below(6), Duration::from_millis(1));
+            let t = Instant::now();
+            let n = 1 + rng.below(40);
+            let mut expect_shed = 0usize;
+            for i in 0..n {
+                let pid = rng.below(5) as u64;
+                if rng.below(2) == 0 {
+                    expect_shed += 1;
+                    b.push(req_dl(i as u64, pid, t, t + Duration::from_millis(1)));
+                } else {
+                    b.push(req(i as u64, pid, t));
+                }
+            }
+            let shed = b.shed_expired(t + Duration::from_millis(2));
+            assert_eq!(shed.len(), expect_shed, "trial {trial}");
+            assert_eq!(b.queued(), n - expect_shed, "trial {trial}");
+            let mut seen = 0usize;
+            let later = t + Duration::from_secs(1);
+            while let Some(mb) = b.poll_mixed(later) {
+                seen += mb.requests.len();
+            }
+            assert_eq!(seen, n - expect_shed, "trial {trial}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! per-shard + latency telemetry.
 
 pub mod batcher;
+pub mod net;
 pub mod profile_store;
 pub mod scheduler;
 pub mod service;
@@ -18,6 +19,7 @@ pub use batcher::{DynamicBatcher, MixedBatch, ProfileBatch, Request};
 pub use profile_store::{
     AuxParams, ProfileAggregates, ProfileRecord, ProfileStore, ShardStats, StoreConfig, StoreStats,
 };
+pub use net::NetServer;
 pub use scheduler::{JobStatus, Scheduler, TrainJob};
-pub use service::{Response, Service};
+pub use service::{Response, ResponseStatus, Service};
 pub use telemetry::{Snapshot, Telemetry};

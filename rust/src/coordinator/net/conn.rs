@@ -1,0 +1,273 @@
+//! Per-connection state and I/O threads.
+//!
+//! Each accepted socket gets a **reader** thread (poll-timeout reads →
+//! incremental frame decode → hand frames to the server) and a **writer**
+//! thread draining a *bounded* outbox. The bound is the whole point: a
+//! client that stops reading fills its outbox and is evicted — the
+//! dispatcher never blocks on a slow socket, so one bad client cannot
+//! wedge responses for everyone else.
+//!
+//! Robustness policies enforced here:
+//! * **Slow-loris**: a frame that stays partial longer than the read
+//!   deadline gets the connection evicted, even if bytes keep trickling.
+//! * **Idle / half-open**: a connection with no traffic for the idle
+//!   timeout is closed (a peer that vanished without FIN never EOFs).
+//! * **Half-close**: EOF with responses still in flight defers the close
+//!   until the last one is written, so `shutdown(Write)` clients get their
+//!   answers.
+//! * Torn or corrupt frames terminate the connection — after a framing
+//!   error the byte stream can no longer be trusted to be aligned.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::frame::{Decoder, FrameKind};
+use super::server::ServerInner;
+
+/// Socket poll interval for the reader/writer loops: short enough that
+/// deadline/idle checks and shutdown flags are honored promptly, long
+/// enough to stay out of the way.
+const POLL: Duration = Duration::from_millis(20);
+
+/// Why a connection was closed (telemetry wants evictions separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Orderly close: EOF, idle timeout, server shutdown.
+    Orderly,
+    /// Protocol violation: torn/oversized/corrupt frame.
+    FrameError,
+    /// Slow client: outbox overflow or a frame stalled past the read
+    /// deadline.
+    Evicted,
+}
+
+pub struct ConnHandle {
+    pub id: u64,
+    /// Clone used only to force-shutdown the socket from other threads.
+    stream: TcpStream,
+    outbox: SyncSender<Vec<u8>>,
+    /// Responses admitted for this connection and not yet dispatched.
+    outstanding: AtomicUsize,
+    /// Reader saw EOF: close once `outstanding` drains to zero.
+    close_when_drained: AtomicBool,
+    closed: AtomicBool,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ConnHandle {
+    /// Spawn reader + writer threads for an accepted stream.
+    pub(crate) fn spawn(
+        id: u64,
+        stream: TcpStream,
+        inner: Arc<ServerInner>,
+    ) -> std::io::Result<Arc<ConnHandle>> {
+        let cfg = inner.cfg();
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_write_timeout(Some(Duration::from_millis(cfg.write_deadline_ms)))?;
+        let wstream = stream.try_clone()?;
+        let cstream = stream.try_clone()?;
+        let (tx, rx) = sync_channel::<Vec<u8>>(cfg.outbox.max(1));
+        let handle = Arc::new(ConnHandle {
+            id,
+            stream: cstream,
+            outbox: tx,
+            outstanding: AtomicUsize::new(0),
+            close_when_drained: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+            threads: Mutex::new(Vec::new()),
+        });
+        let writer = {
+            let h = Arc::clone(&handle);
+            let srv = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("xpeft-net-w{id}"))
+                .spawn(move || writer_loop(wstream, rx, h, srv))?
+        };
+        let reader = {
+            let h = Arc::clone(&handle);
+            let srv = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("xpeft-net-r{id}"))
+                .spawn(move || reader_loop(stream, h, srv))?
+        };
+        handle.threads.lock().unwrap().extend([reader, writer]);
+        Ok(handle)
+    }
+
+    pub(crate) fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Queue an encoded frame without ever blocking. A full outbox means
+    /// the client is not draining responses: evict it. Returns false when
+    /// the frame could not be queued.
+    pub(crate) fn send(self: &Arc<Self>, inner: &Arc<ServerInner>, bytes: Vec<u8>) -> bool {
+        match self.outbox.try_send(bytes) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                self.close(inner, CloseReason::Evicted);
+                false
+            }
+            // writer already gone; the close path has run or is running
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    pub(crate) fn request_started(&self) {
+        self.outstanding.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// One in-flight request dispatched; returns how many remain.
+    pub(crate) fn request_done(&self) -> usize {
+        self.outstanding.fetch_sub(1, Ordering::AcqRel) - 1
+    }
+
+    pub(crate) fn defer_close_until_drained(&self) {
+        self.close_when_drained.store(true, Ordering::Release);
+    }
+
+    pub(crate) fn wants_close_after_drain(&self) -> bool {
+        self.close_when_drained.load(Ordering::Acquire)
+            && self.outstanding.load(Ordering::Acquire) == 0
+    }
+
+    /// Idempotent close: shut the socket down (unblocking both I/O
+    /// threads) and tell the server to drop its handle + count it.
+    pub(crate) fn close(self: &Arc<Self>, inner: &Arc<ServerInner>, reason: CloseReason) {
+        if self.closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let _ = self.stream.shutdown(Shutdown::Both);
+        inner.on_conn_closed(self.id, reason);
+    }
+
+    /// Join the I/O threads (server shutdown path; never called from the
+    /// connection's own threads).
+    pub(crate) fn join_io_threads(&self) {
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<Vec<u8>>,
+    h: Arc<ConnHandle>,
+    inner: Arc<ServerInner>,
+) {
+    loop {
+        match rx.recv_timeout(POLL) {
+            Ok(bytes) => {
+                // write_all under the socket write deadline: a peer whose
+                // receive window stays closed times the write out and gets
+                // evicted instead of blocking this thread forever
+                if let Err(e) = stream.write_all(&bytes).and_then(|_| stream.flush()) {
+                    let reason = match e.kind() {
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                            CloseReason::Evicted
+                        }
+                        _ => CloseReason::Orderly,
+                    };
+                    h.close(&inner, reason);
+                    return;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if h.is_closed() {
+                    return;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, h: Arc<ConnHandle>, inner: Arc<ServerInner>) {
+    let cfg = inner.cfg();
+    let read_deadline = Duration::from_millis(cfg.read_deadline_ms);
+    let idle_timeout = Duration::from_millis(cfg.idle_timeout_ms);
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 4096];
+    let mut last_activity = Instant::now();
+    // Set when the buffered bytes form a partial frame; a frame that stays
+    // partial past the read deadline is a slow-loris writer.
+    let mut partial_since: Option<Instant> = None;
+    loop {
+        if h.is_closed() {
+            return;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                // EOF. A half-closing client may still be reading: keep the
+                // write side open until the last in-flight response lands.
+                h.defer_close_until_drained();
+                if h.outstanding.load(Ordering::Acquire) == 0 {
+                    h.close(&inner, CloseReason::Orderly);
+                }
+                return;
+            }
+            Ok(n) => {
+                last_activity = Instant::now();
+                if let Err(e) = dec.push(&buf[..n]) {
+                    inner.on_frame_error(&h, &e);
+                    return;
+                }
+                loop {
+                    match dec.next() {
+                        Ok(Some(frame)) => {
+                            if frame.kind == FrameKind::Ping {
+                                let pong = super::frame::encode(FrameKind::Pong, &[]);
+                                h.send(&inner, pong);
+                            } else {
+                                inner.handle_frame(&h, frame);
+                            }
+                            if h.is_closed() {
+                                return;
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            inner.on_frame_error(&h, &e);
+                            return;
+                        }
+                    }
+                }
+                partial_since = if dec.has_partial() {
+                    Some(partial_since.unwrap_or(last_activity))
+                } else {
+                    None
+                };
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                h.close(&inner, CloseReason::Orderly);
+                return;
+            }
+        }
+        let now = Instant::now();
+        // Slow-loris: bytes may keep trickling, but a single frame may not
+        // stay incomplete past the read deadline.
+        if let Some(t0) = partial_since {
+            if now.duration_since(t0) >= read_deadline {
+                h.close(&inner, CloseReason::Evicted);
+                return;
+            }
+        }
+        // Half-open/dead peer: no traffic at all for the idle window.
+        if partial_since.is_none() && now.duration_since(last_activity) >= idle_timeout {
+            h.close(&inner, CloseReason::Orderly);
+            return;
+        }
+    }
+}

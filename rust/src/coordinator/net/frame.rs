@@ -1,0 +1,605 @@
+//! Length-framed wire protocol for the TCP serving front end.
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"XPNF"
+//! 4       1     version (currently 1)
+//! 5       1     kind    (1=Request, 2=Response, 3=Ping, 4=Pong)
+//! 6       4     payload length (u32 LE), <= MAX_PAYLOAD
+//! 10      4     checksum: fnv1a32 over version byte || kind byte || payload
+//! 14      len   payload
+//! ```
+//!
+//! The checksum covers the version and kind bytes as well as the payload so a
+//! single-byte flip anywhere except the magic/length fields (which are caught
+//! by their own validation) is detected. The decoder is incremental, bounded,
+//! and returns typed errors — it never panics and never reads past the frame
+//! it was handed.
+
+use std::fmt;
+
+/// Frame magic: "X-PEFT Net Frame".
+pub const MAGIC: [u8; 4] = *b"XPNF";
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes (magic + version + kind + len + crc).
+pub const HEADER_LEN: usize = 14;
+/// Upper bound on payload size. Anything larger is rejected before buffering.
+pub const MAX_PAYLOAD: usize = 64 * 1024;
+
+/// Frame kinds carried on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Request,
+    Response,
+    Ping,
+    Pong,
+}
+
+impl FrameKind {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+            FrameKind::Ping => 3,
+            FrameKind::Pong => 4,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            3 => Some(FrameKind::Ping),
+            4 => Some(FrameKind::Pong),
+            _ => None,
+        }
+    }
+}
+
+/// Typed decode errors. All are terminal for the connection: after any of
+/// these the byte stream can no longer be trusted to be frame-aligned.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes were not the protocol magic.
+    BadMagic([u8; 4]),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Kind byte did not map to a known frame kind.
+    UnknownKind(u8),
+    /// Declared payload length exceeds `MAX_PAYLOAD`.
+    Oversized(usize),
+    /// Checksum mismatch — the frame was corrupted in flight.
+    BadChecksum { expected: u32, got: u32 },
+    /// Payload did not decode as the expected message shape.
+    Malformed(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {:?}", m),
+            FrameError::BadVersion(v) => write!(f, "unsupported protocol version {}", v),
+            FrameError::UnknownKind(k) => write!(f, "unknown frame kind {}", k),
+            FrameError::Oversized(n) => {
+                write!(f, "payload of {} bytes exceeds max {}", n, MAX_PAYLOAD)
+            }
+            FrameError::BadChecksum { expected, got } => {
+                write!(f, "checksum mismatch: expected {:#010x}, got {:#010x}", expected, got)
+            }
+            FrameError::Malformed(why) => write!(f, "malformed payload: {}", why),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A decoded frame: kind plus owned payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+fn fnv1a32(seed: u32, bytes: &[u8]) -> u32 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+const FNV_OFFSET: u32 = 0x811c_9dc5;
+
+fn frame_checksum(version: u8, kind: u8, payload: &[u8]) -> u32 {
+    let h = fnv1a32(FNV_OFFSET, &[version, kind]);
+    fnv1a32(h, payload)
+}
+
+/// Encode a frame into a fresh buffer.
+pub fn encode(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "encode: payload too large");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind.to_byte());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&frame_checksum(VERSION, kind.to_byte(), payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Incremental frame decoder. Feed bytes with [`Decoder::push`], pull frames
+/// with [`Decoder::next`]. Internal buffering is bounded by the max frame
+/// size: a peer that streams garbage cannot grow memory without bound.
+#[derive(Debug, Default)]
+pub struct Decoder {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl Decoder {
+    pub fn new() -> Decoder {
+        Decoder { buf: Vec::new(), start: 0 }
+    }
+
+    /// Number of buffered, not-yet-consumed bytes.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// True when a partial frame is sitting in the buffer (used by the
+    /// connection layer to detect slow-loris writers).
+    pub fn has_partial(&self) -> bool {
+        self.buffered() > 0
+    }
+
+    /// Append bytes from the wire. Errors with `Oversized` if the buffer
+    /// would exceed one maximal frame plus one header — a well-formed peer
+    /// never needs more than that in flight before `next` drains it.
+    pub fn push(&mut self, bytes: &[u8]) -> Result<(), FrameError> {
+        if self.start > 0 && (self.start >= 4096 || self.start == self.buf.len()) {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        if self.buffered() + bytes.len() > 2 * (HEADER_LEN + MAX_PAYLOAD) {
+            return Err(FrameError::Oversized(self.buffered() + bytes.len()));
+        }
+        self.buf.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Try to decode the next complete frame. `Ok(None)` means "need more
+    /// bytes"; errors are terminal for the stream.
+    pub fn next(&mut self) -> Result<Option<Frame>, FrameError> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < HEADER_LEN {
+            // Validate what we do have of the magic eagerly so garbage is
+            // rejected without waiting for a full header.
+            let n = avail.len().min(4);
+            if avail[..n] != MAGIC[..n] {
+                let mut m = [0u8; 4];
+                m[..n].copy_from_slice(&avail[..n]);
+                return Err(FrameError::BadMagic(m));
+            }
+            return Ok(None);
+        }
+        if avail[..4] != MAGIC {
+            let mut m = [0u8; 4];
+            m.copy_from_slice(&avail[..4]);
+            return Err(FrameError::BadMagic(m));
+        }
+        let version = avail[4];
+        if version != VERSION {
+            return Err(FrameError::BadVersion(version));
+        }
+        let kind_byte = avail[5];
+        let kind = FrameKind::from_byte(kind_byte).ok_or(FrameError::UnknownKind(kind_byte))?;
+        let len = u32::from_le_bytes([avail[6], avail[7], avail[8], avail[9]]) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(FrameError::Oversized(len));
+        }
+        let crc = u32::from_le_bytes([avail[10], avail[11], avail[12], avail[13]]);
+        if avail.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload = &avail[HEADER_LEN..HEADER_LEN + len];
+        let expected = frame_checksum(version, kind_byte, payload);
+        if expected != crc {
+            return Err(FrameError::BadChecksum { expected, got: crc });
+        }
+        let frame = Frame { kind, payload: payload.to_vec() };
+        self.start += HEADER_LEN + len;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
+/// Strict one-shot decode: the bytes must contain exactly one complete frame,
+/// nothing less and nothing more. Used by tests (truncation sweeps) and by
+/// callers that already know message boundaries.
+pub fn decode_exact(bytes: &[u8]) -> Result<Frame, FrameError> {
+    let mut dec = Decoder::new();
+    dec.push(bytes)?;
+    match dec.next()? {
+        Some(frame) => {
+            if dec.buffered() != 0 {
+                return Err(FrameError::Malformed(format!(
+                    "{} trailing bytes after frame",
+                    dec.buffered()
+                )));
+            }
+            Ok(frame)
+        }
+        None => Err(FrameError::Malformed(format!(
+            "incomplete frame: {} bytes",
+            bytes.len()
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message payloads
+// ---------------------------------------------------------------------------
+
+/// Response status codes carried in `WireResponse`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Overloaded,
+    Expired,
+    RateLimited,
+    Error,
+    ShuttingDown,
+}
+
+impl Status {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Overloaded => 1,
+            Status::Expired => 2,
+            Status::RateLimited => 3,
+            Status::Error => 4,
+            Status::ShuttingDown => 5,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Option<Status> {
+        match b {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Overloaded),
+            2 => Some(Status::Expired),
+            3 => Some(Status::RateLimited),
+            4 => Some(Status::Error),
+            5 => Some(Status::ShuttingDown),
+            _ => None,
+        }
+    }
+}
+
+/// A classification request as carried on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed back in the response.
+    pub client_req_id: u64,
+    /// Target profile.
+    pub profile_id: u64,
+    /// Per-request deadline in milliseconds from receipt; 0 = server default.
+    pub deadline_ms: u32,
+    /// Number of output classes (0 = server default).
+    pub num_classes: u32,
+    /// UTF-8 input text.
+    pub text: String,
+}
+
+/// A response as carried on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireResponse {
+    pub client_req_id: u64,
+    pub status: Status,
+    pub prediction: u32,
+    pub latency_us: u32,
+    /// Human-readable detail for non-Ok statuses.
+    pub message: String,
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Cursor<'a> {
+        Cursor { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.pos + n > self.data.len() {
+            return Err(FrameError::Malformed(format!(
+                "truncated payload: wanted {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.data.len()
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn finish(&self) -> Result<(), FrameError> {
+        if self.pos != self.data.len() {
+            return Err(FrameError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.data.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl WireRequest {
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let text = self.text.as_bytes();
+        let mut out = Vec::with_capacity(28 + text.len());
+        out.extend_from_slice(&self.client_req_id.to_le_bytes());
+        out.extend_from_slice(&self.profile_id.to_le_bytes());
+        out.extend_from_slice(&self.deadline_ms.to_le_bytes());
+        out.extend_from_slice(&self.num_classes.to_le_bytes());
+        out.extend_from_slice(&(text.len() as u32).to_le_bytes());
+        out.extend_from_slice(text);
+        out
+    }
+
+    /// Encode into a complete Request frame.
+    pub fn encode_frame(&self) -> Vec<u8> {
+        encode(FrameKind::Request, &self.encode_payload())
+    }
+
+    pub fn decode_payload(payload: &[u8]) -> Result<WireRequest, FrameError> {
+        let mut c = Cursor::new(payload);
+        let client_req_id = c.u64()?;
+        let profile_id = c.u64()?;
+        let deadline_ms = c.u32()?;
+        let num_classes = c.u32()?;
+        let text_len = c.u32()? as usize;
+        let text_bytes = c.take(text_len)?;
+        c.finish()?;
+        let text = std::str::from_utf8(text_bytes)
+            .map_err(|e| FrameError::Malformed(format!("request text not utf-8: {}", e)))?
+            .to_string();
+        Ok(WireRequest { client_req_id, profile_id, deadline_ms, num_classes, text })
+    }
+}
+
+impl WireResponse {
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let msg = self.message.as_bytes();
+        let mut out = Vec::with_capacity(21 + msg.len());
+        out.extend_from_slice(&self.client_req_id.to_le_bytes());
+        out.push(self.status.to_byte());
+        out.extend_from_slice(&self.prediction.to_le_bytes());
+        out.extend_from_slice(&self.latency_us.to_le_bytes());
+        out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+        out.extend_from_slice(msg);
+        out
+    }
+
+    /// Encode into a complete Response frame.
+    pub fn encode_frame(&self) -> Vec<u8> {
+        encode(FrameKind::Response, &self.encode_payload())
+    }
+
+    pub fn decode_payload(payload: &[u8]) -> Result<WireResponse, FrameError> {
+        let mut c = Cursor::new(payload);
+        let client_req_id = c.u64()?;
+        let status_byte = c.u8()?;
+        let status = Status::from_byte(status_byte)
+            .ok_or_else(|| FrameError::Malformed(format!("bad status byte {}", status_byte)))?;
+        let prediction = c.u32()?;
+        let latency_us = c.u32()?;
+        let msg_len = c.u32()? as usize;
+        let msg_bytes = c.take(msg_len)?;
+        c.finish()?;
+        let message = std::str::from_utf8(msg_bytes)
+            .map_err(|e| FrameError::Malformed(format!("response message not utf-8: {}", e)))?
+            .to_string();
+        Ok(WireResponse { client_req_id, status, prediction, latency_us, message })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            client_req_id: 42,
+            profile_id: 7,
+            deadline_ms: 250,
+            num_classes: 2,
+            text: "the movie was delightful".to_string(),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let req = sample_request();
+        let frame = decode_exact(&req.encode_frame()).unwrap();
+        assert_eq!(frame.kind, FrameKind::Request);
+        let back = WireRequest::decode_payload(&frame.payload).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = WireResponse {
+            client_req_id: 42,
+            status: Status::Overloaded,
+            prediction: 0,
+            latency_us: 1234,
+            message: "admission queue full".to_string(),
+        };
+        let frame = decode_exact(&resp.encode_frame()).unwrap();
+        assert_eq!(frame.kind, FrameKind::Response);
+        let back = WireResponse::decode_payload(&frame.payload).unwrap();
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn decoder_handles_split_delivery() {
+        let bytes = sample_request().encode_frame();
+        let mut dec = Decoder::new();
+        // Byte-at-a-time delivery must produce exactly one frame at the end.
+        for (i, b) in bytes.iter().enumerate() {
+            dec.push(&[*b]).unwrap();
+            let got = dec.next().unwrap();
+            if i + 1 < bytes.len() {
+                assert!(got.is_none(), "frame completed early at byte {}", i);
+            } else {
+                assert!(got.is_some(), "frame missing after all bytes");
+            }
+        }
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn decoder_handles_back_to_back_frames() {
+        let a = sample_request().encode_frame();
+        let b = WireResponse {
+            client_req_id: 1,
+            status: Status::Ok,
+            prediction: 1,
+            latency_us: 10,
+            message: String::new(),
+        }
+        .encode_frame();
+        let mut joined = a.clone();
+        joined.extend_from_slice(&b);
+        let mut dec = Decoder::new();
+        dec.push(&joined).unwrap();
+        assert_eq!(dec.next().unwrap().unwrap().kind, FrameKind::Request);
+        assert_eq!(dec.next().unwrap().unwrap().kind, FrameKind::Response);
+        assert!(dec.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected_eagerly() {
+        let mut dec = Decoder::new();
+        dec.push(b"HTTP").unwrap();
+        assert!(matches!(dec.next(), Err(FrameError::BadMagic(_))));
+        // Even a single wrong first byte is rejected without a full header.
+        let mut dec = Decoder::new();
+        dec.push(b"G").unwrap();
+        assert!(matches!(dec.next(), Err(FrameError::BadMagic(_))));
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_buffering_payload() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(VERSION);
+        bytes.push(FrameKind::Request.to_byte());
+        bytes.extend_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let mut dec = Decoder::new();
+        dec.push(&bytes).unwrap();
+        assert!(matches!(dec.next(), Err(FrameError::Oversized(_))));
+    }
+
+    #[test]
+    fn push_is_bounded() {
+        let mut dec = Decoder::new();
+        let chunk = vec![b'X'; HEADER_LEN + MAX_PAYLOAD];
+        dec.push(&chunk).unwrap();
+        dec.push(&chunk).unwrap();
+        assert!(matches!(dec.push(&[0u8]), Err(FrameError::Oversized(_))));
+    }
+
+    #[test]
+    fn truncation_sweep_every_prefix_errors() {
+        // Satellite: every strict decode of a proper prefix must error —
+        // never panic, never claim success.
+        let bytes = sample_request().encode_frame();
+        for n in 0..bytes.len() {
+            let err = decode_exact(&bytes[..n]);
+            assert!(err.is_err(), "prefix of {} bytes decoded successfully", n);
+        }
+        assert!(decode_exact(&bytes).is_ok());
+    }
+
+    #[test]
+    fn corruption_flips_detected() {
+        // Satellite: deterministic sweep — flip each byte through a few
+        // patterns; decode must either error or (only for the length field
+        // shrinking the frame) report an incomplete/trailing mismatch.
+        let bytes = sample_request().encode_frame();
+        for i in 0..bytes.len() {
+            for flip in [0x01u8, 0x80, 0xff] {
+                let mut corrupted = bytes.clone();
+                corrupted[i] ^= flip;
+                let res = decode_exact(&corrupted);
+                assert!(
+                    res.is_err(),
+                    "corruption at byte {} flip {:#x} went undetected: {:?}",
+                    i,
+                    flip,
+                    res
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_corruption_never_panics() {
+        use crate::util::rng::Rng;
+        let bytes = sample_request().encode_frame();
+        let mut rng = Rng::new(0xfeed_beef);
+        for _ in 0..2000 {
+            let mut corrupted = bytes.clone();
+            let i = rng.below(corrupted.len());
+            let v = (rng.below(255) as u8).wrapping_add(1);
+            corrupted[i] = corrupted[i].wrapping_add(v);
+            // Any outcome but a panic/over-read is acceptable; a mutation
+            // that lands back on the original byte decodes fine.
+            let _ = decode_exact(&corrupted);
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected_by_exact_decode() {
+        let mut bytes = sample_request().encode_frame();
+        bytes.push(0);
+        assert!(matches!(decode_exact(&bytes), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn malformed_payload_rejected() {
+        // A checksummed frame whose payload is too short for a request.
+        let frame = encode(FrameKind::Request, &[1, 2, 3]);
+        let decoded = decode_exact(&frame).unwrap();
+        assert!(WireRequest::decode_payload(&decoded.payload).is_err());
+    }
+}

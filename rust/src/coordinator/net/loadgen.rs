@@ -1,0 +1,485 @@
+//! Load-generator client for the TCP front end (`xpeft loadgen`).
+//!
+//! Open-loop arrivals (requests are sent on a fixed schedule whether or
+//! not earlier ones have been answered — the honest way to measure an
+//! overloaded server, since closed-loop clients self-throttle and hide
+//! collapse), zipfian profile popularity (a few hot profiles, a long cold
+//! tail — the realistic multi-profile mix), optional bursts and connection
+//! churn. `rate == 0` switches to closed-loop mode with a small
+//! outstanding window, which finds the server's sustainable capacity —
+//! [`overload_suite`] uses that to calibrate 1×/2×/4× offered load.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::frame::{Decoder, FrameKind, Status, WireRequest, WireResponse};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Concurrent client connections.
+    pub conns: usize,
+    /// Offered load in req/s across all connections; 0 = closed-loop.
+    pub rate: f64,
+    /// How long to generate load.
+    pub duration: Duration,
+    /// Profile-id space `[0, profiles)`.
+    pub profiles: u64,
+    /// Zipf exponent for profile popularity (1.0 ≈ classic web skew).
+    pub zipf_s: f64,
+    /// Per-request deadline sent on the wire (ms; 0 = server default).
+    pub deadline_ms: u32,
+    /// Open-loop burst size: requests sent back-to-back per schedule tick.
+    pub burst: usize,
+    /// Reconnect a connection after this many requests (0 = never).
+    pub churn_every: usize,
+    /// Request text (tokenized server-side).
+    pub text: String,
+    /// Label-space width (0 = server default).
+    pub num_classes: u32,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            conns: 4,
+            rate: 0.0,
+            duration: Duration::from_secs(5),
+            profiles: 64,
+            zipf_s: 1.0,
+            deadline_ms: 0,
+            burst: 1,
+            churn_every: 0,
+            text: "the profile requests a prediction".to_string(),
+            num_classes: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregated outcome of one load-generation run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Requests the schedule wanted to send (open-loop offered load).
+    pub offered: u64,
+    /// Requests actually written to a socket.
+    pub sent: u64,
+    pub ok: u64,
+    pub overloaded: u64,
+    pub rate_limited: u64,
+    pub expired: u64,
+    pub errors: u64,
+    pub shutting_down: u64,
+    /// Sent requests never answered (connection died / drain cut off).
+    pub lost: u64,
+    /// Connect failures + connections dropped mid-run.
+    pub conn_errors: u64,
+    pub elapsed: Duration,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl LoadReport {
+    /// Ok responses per second of wall clock — the survival metric under
+    /// overload: it must degrade gracefully, not collapse.
+    pub fn goodput_per_s(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / secs
+    }
+
+    /// Fraction of sent requests answered with a shed/reject status.
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            return 0.0;
+        }
+        (self.overloaded + self.rate_limited + self.expired + self.shutting_down) as f64
+            / self.sent as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "offered {} sent {} ok {} (goodput {:.1}/s) overloaded {} rate-limited {} \
+             expired {} errors {} lost {} p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs",
+            self.offered,
+            self.sent,
+            self.ok,
+            self.goodput_per_s(),
+            self.overloaded,
+            self.rate_limited,
+            self.expired,
+            self.errors,
+            self.lost,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us
+        )
+    }
+}
+
+#[derive(Default)]
+struct Tally {
+    offered: AtomicU64,
+    sent: AtomicU64,
+    ok: AtomicU64,
+    overloaded: AtomicU64,
+    rate_limited: AtomicU64,
+    expired: AtomicU64,
+    errors: AtomicU64,
+    shutting_down: AtomicU64,
+    lost: AtomicU64,
+    conn_errors: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+/// Precomputed zipfian CDF over ranks `0..n`: weight(r) ∝ 1/(r+1)^s.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: u64, s: f64) -> Zipf {
+        let n = n.max(1).min(1 << 20) as usize;
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for r in 0..n {
+            total += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.uniform();
+        // first rank whose cumulative mass covers u
+        let mut lo = 0usize;
+        let mut hi = self.cdf.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cdf[mid] < u {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u64
+    }
+}
+
+/// Closed-loop outstanding window (rate == 0): enough to keep batches
+/// forming without turning the probe into an overload test itself.
+const CLOSED_LOOP_WINDOW: usize = 8;
+/// Socket read poll for the client loop.
+const READ_POLL: Duration = Duration::from_millis(2);
+
+/// Run one load-generation pass against a live server.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.conns == 0 {
+        anyhow::bail!("loadgen needs at least one connection");
+    }
+    let tally = Arc::new(Tally::default());
+    let zipf = Arc::new(Zipf::new(cfg.profiles, cfg.zipf_s));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..cfg.conns {
+            let tally = Arc::clone(&tally);
+            let zipf = Arc::clone(&zipf);
+            scope.spawn(move || run_conn(cfg, c, &zipf, &tally));
+        }
+    });
+    let elapsed = t0.elapsed();
+    let lat = tally.latencies_us.lock().unwrap();
+    Ok(LoadReport {
+        offered: tally.offered.load(Ordering::Relaxed),
+        sent: tally.sent.load(Ordering::Relaxed),
+        ok: tally.ok.load(Ordering::Relaxed),
+        overloaded: tally.overloaded.load(Ordering::Relaxed),
+        rate_limited: tally.rate_limited.load(Ordering::Relaxed),
+        expired: tally.expired.load(Ordering::Relaxed),
+        errors: tally.errors.load(Ordering::Relaxed),
+        shutting_down: tally.shutting_down.load(Ordering::Relaxed),
+        lost: tally.lost.load(Ordering::Relaxed),
+        conn_errors: tally.conn_errors.load(Ordering::Relaxed),
+        elapsed,
+        p50_us: stats::quantile(&lat, 0.5),
+        p95_us: stats::quantile(&lat, 0.95),
+        p99_us: stats::quantile(&lat, 0.99),
+    })
+}
+
+/// One client connection's send/receive loop (reconnects on churn/error).
+fn run_conn(cfg: &LoadgenConfig, index: usize, zipf: &Zipf, tally: &Tally) {
+    let mut rng = Rng::new(cfg.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let t_end = Instant::now() + cfg.duration;
+    let per_conn_rate = cfg.rate / cfg.conns as f64;
+    let open_loop = cfg.rate > 0.0;
+    let tick = if open_loop {
+        Duration::from_secs_f64(cfg.burst.max(1) as f64 / per_conn_rate)
+    } else {
+        Duration::ZERO
+    };
+    let mut client_req_id: u64 = 0;
+    let mut next_tick = Instant::now();
+    while Instant::now() < t_end {
+        let Ok(stream) = TcpStream::connect(&cfg.addr) else {
+            tally.conn_errors.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        };
+        stream.set_nodelay(true).ok();
+        if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+            tally.conn_errors.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let dropped = drive_connection(
+            cfg,
+            stream,
+            zipf,
+            tally,
+            &mut rng,
+            &mut client_req_id,
+            &mut next_tick,
+            t_end,
+            open_loop,
+            tick,
+        );
+        if dropped {
+            tally.conn_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Drive one connection until churn, error, or the end of the run.
+/// Returns true if the connection died underneath us.
+#[allow(clippy::too_many_arguments)]
+fn drive_connection(
+    cfg: &LoadgenConfig,
+    mut stream: TcpStream,
+    zipf: &Zipf,
+    tally: &Tally,
+    rng: &mut Rng,
+    client_req_id: &mut u64,
+    next_tick: &mut Instant,
+    t_end: Instant,
+    open_loop: bool,
+    tick: Duration,
+) -> bool {
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 4096];
+    let mut pending: HashMap<u64, Instant> = HashMap::new();
+    let mut sent_on_conn = 0usize;
+    let mut dropped = false;
+    'conn: loop {
+        let now = Instant::now();
+        if now >= t_end {
+            break;
+        }
+        // churn: hang up mid-conversation and reconnect (in-flight
+        // requests on this conn become `lost` — deliberately rude)
+        if cfg.churn_every > 0 && sent_on_conn >= cfg.churn_every {
+            let _ = stream.shutdown(Shutdown::Both);
+            break;
+        }
+        // send phase
+        let want_send = if open_loop {
+            if now >= *next_tick {
+                *next_tick += tick;
+                cfg.burst.max(1)
+            } else {
+                0
+            }
+        } else {
+            usize::from(pending.len() < CLOSED_LOOP_WINDOW)
+        };
+        for _ in 0..want_send {
+            tally.offered.fetch_add(1, Ordering::Relaxed);
+            *client_req_id += 1;
+            let req = WireRequest {
+                client_req_id: *client_req_id,
+                profile_id: zipf.sample(rng).min(cfg.profiles.saturating_sub(1)),
+                deadline_ms: cfg.deadline_ms,
+                num_classes: cfg.num_classes,
+                text: cfg.text.clone(),
+            };
+            if stream.write_all(&req.encode_frame()).is_err() {
+                dropped = true;
+                break 'conn;
+            }
+            pending.insert(*client_req_id, Instant::now());
+            tally.sent.fetch_add(1, Ordering::Relaxed);
+            sent_on_conn += 1;
+        }
+        // receive phase (bounded poll, so the schedule stays on time)
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                dropped = true;
+                break 'conn;
+            }
+            Ok(n) => {
+                if dec.push(&buf[..n]).is_err() {
+                    dropped = true;
+                    break 'conn;
+                }
+                loop {
+                    match dec.next() {
+                        Ok(Some(frame)) => {
+                            if frame.kind == FrameKind::Response {
+                                if let Ok(resp) = WireResponse::decode_payload(&frame.payload) {
+                                    record_response(tally, &mut pending, &resp);
+                                }
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(_) => {
+                            dropped = true;
+                            break 'conn;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                dropped = true;
+                break 'conn;
+            }
+        }
+    }
+    // drain what we can, briefly, then count the rest as lost
+    let drain_end = Instant::now() + Duration::from_millis(500);
+    while !pending.is_empty() && Instant::now() < drain_end {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if dec.push(&buf[..n]).is_err() {
+                    break;
+                }
+                while let Ok(Some(frame)) = dec.next() {
+                    if frame.kind == FrameKind::Response {
+                        if let Ok(resp) = WireResponse::decode_payload(&frame.payload) {
+                            record_response(tally, &mut pending, &resp);
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+    }
+    tally.lost.fetch_add(pending.len() as u64, Ordering::Relaxed);
+    dropped
+}
+
+fn record_response(tally: &Tally, pending: &mut HashMap<u64, Instant>, resp: &WireResponse) {
+    let Some(sent_at) = pending.remove(&resp.client_req_id) else { return };
+    match resp.status {
+        Status::Ok => {
+            tally.ok.fetch_add(1, Ordering::Relaxed);
+            let us = sent_at.elapsed().as_secs_f64() * 1e6;
+            tally.latencies_us.lock().unwrap().push(us);
+        }
+        Status::Overloaded => {
+            tally.overloaded.fetch_add(1, Ordering::Relaxed);
+        }
+        Status::RateLimited => {
+            tally.rate_limited.fetch_add(1, Ordering::Relaxed);
+        }
+        Status::Expired => {
+            tally.expired.fetch_add(1, Ordering::Relaxed);
+        }
+        Status::Error => {
+            tally.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        Status::ShuttingDown => {
+            tally.shutting_down.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Calibrate capacity with a short closed-loop probe, then drive open-loop
+/// runs at the given multiples of it. Returns `(multiplier, report)` per
+/// step, probe first (multiplier 0 = closed loop).
+pub fn overload_suite(
+    base: &LoadgenConfig,
+    multipliers: &[f64],
+) -> Result<Vec<(f64, LoadReport)>> {
+    let mut probe_cfg = base.clone();
+    probe_cfg.rate = 0.0;
+    let probe = run(&probe_cfg).context("closed-loop capacity probe")?;
+    let capacity = probe.goodput_per_s().max(1.0);
+    let mut out = vec![(0.0, probe)];
+    for &m in multipliers {
+        let mut cfg = base.clone();
+        cfg.rate = capacity * m;
+        cfg.seed = base.seed.wrapping_add((m * 1000.0) as u64);
+        let report = run(&cfg).with_context(|| format!("open-loop run at {m}x"))?;
+        out.push((m, report));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(100, 1.0);
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 100];
+        for _ in 0..20_000 {
+            let r = z.sample(&mut rng) as usize;
+            assert!(r < 100);
+            counts[r] += 1;
+        }
+        // rank 0 must dominate the tail decisively
+        assert!(counts[0] > counts[50] * 5, "head {} tail {}", counts[0], counts[50]);
+        // and the tail still gets traffic
+        assert!(counts.iter().filter(|&&c| c > 0).count() > 60);
+    }
+
+    #[test]
+    fn zipf_handles_degenerate_sizes() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn report_rates() {
+        let r = LoadReport {
+            sent: 100,
+            ok: 80,
+            overloaded: 15,
+            expired: 5,
+            elapsed: Duration::from_secs(2),
+            ..LoadReport::default()
+        };
+        assert!((r.goodput_per_s() - 40.0).abs() < 1e-9);
+        assert!((r.shed_rate() - 0.20).abs() < 1e-9);
+        assert!(!r.summary().is_empty());
+    }
+}

@@ -1,0 +1,36 @@
+//! Overload-safe TCP serving front end for the coordinator [`Service`].
+//!
+//! A std-only network layer — no async runtime, no protocol crates — that
+//! puts admission control between the socket and the trunk:
+//!
+//! * [`frame`] — length-framed wire protocol (magic + version + checksum,
+//!   bounded frame size). The decoder is incremental and never panics or
+//!   over-reads on hostile bytes.
+//! * [`conn`] — per-connection reader/writer threads with read/write
+//!   deadlines, idle timeout, and slow-client eviction via a bounded
+//!   outbox; one stalled client can never wedge the server.
+//! * [`admission`] — per-profile token-bucket rate limiting plus a bounded
+//!   global in-flight cap. Work beyond the cap is rejected *cheaply*
+//!   (`Overloaded` on the wire) instead of queueing without bound.
+//! * [`server`] — accept loop, request routing (wire request → service
+//!   submit → response dispatch), graceful drain-then-stop shutdown.
+//! * [`loadgen`] — zipfian open-loop load generator + closed-loop capacity
+//!   probe used by `xpeft loadgen` and the overload bench.
+//!
+//! Deadline-aware shedding lives in the batcher/service: every wire
+//! request carries a deadline, and work that expires while queued is shed
+//! *before* costing a trunk forward, answered with `Expired`.
+//!
+//! [`Service`]: crate::coordinator::Service
+
+pub mod admission;
+pub mod conn;
+pub mod frame;
+pub mod loadgen;
+pub mod server;
+
+pub use admission::{Admission, AdmissionConfig, Admit, Permit};
+pub use conn::CloseReason;
+pub use frame::{Decoder, Frame, FrameError, FrameKind, Status, WireRequest, WireResponse};
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use server::NetServer;

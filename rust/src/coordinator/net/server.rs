@@ -1,0 +1,359 @@
+//! The TCP serving front end: a std-only listener in front of the
+//! in-process [`Service`].
+//!
+//! Thread layout (no async runtime offline):
+//! * one **accept** thread — non-blocking listener polled on a short
+//!   sleep so shutdown can interrupt it; enforces the connection cap;
+//! * one **reader + writer** pair per connection (see [`super::conn`]) —
+//!   connection I/O needs dedicated blocking threads, while the *compute*
+//!   already fans over `util::threadpool` inside the service executor;
+//! * one **dispatcher** thread — drains the service's response channel,
+//!   looks up which connection asked, and queues the encoded response on
+//!   that connection's bounded outbox.
+//!
+//! Every admitted request holds an admission [`Permit`] inside its route
+//! entry; the service answers every request exactly once (Ok / Expired /
+//! Failed), so the permit releases exactly once no matter how the request
+//! ends. Rejections (`Overloaded`, `RateLimited`, `ShuttingDown`) are
+//! answered inline from the reader thread and cost one response frame,
+//! never a trunk forward.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::NetConfig;
+use crate::coordinator::service::{Response, ResponseStatus, Service};
+use crate::coordinator::telemetry::Telemetry;
+
+use super::admission::{Admission, AdmissionConfig, Admit, Permit};
+use super::conn::{CloseReason, ConnHandle};
+use super::frame::{Frame, FrameError, FrameKind, Status, WireRequest, WireResponse};
+
+/// Accept-loop poll interval (the listener is non-blocking so shutdown can
+/// interrupt it).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// How long graceful shutdown waits for in-flight requests to drain.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// An admitted request waiting for its service response.
+struct Route {
+    conn: Arc<ConnHandle>,
+    client_req_id: u64,
+    /// Released (exactly once) when this route is dropped.
+    _permit: Permit,
+}
+
+pub(crate) struct ServerInner {
+    svc: Arc<Service>,
+    cfg: NetConfig,
+    admission: Arc<Admission>,
+    tel: Arc<Telemetry>,
+    conns: Mutex<HashMap<u64, Arc<ConnHandle>>>,
+    /// service request id → who asked. Holding the permit here ties the
+    /// admission bound to "admitted but unanswered".
+    routes: Mutex<HashMap<u64, Route>>,
+    stopping: AtomicBool,
+}
+
+impl ServerInner {
+    pub(crate) fn cfg(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    /// A connection closed; drop its handle and count it once.
+    pub(crate) fn on_conn_closed(&self, conn_id: u64, reason: CloseReason) {
+        self.conns.lock().unwrap().remove(&conn_id);
+        self.tel.record_conn_closed();
+        if reason == CloseReason::Evicted {
+            self.tel.record_evicted_slow_client();
+        }
+    }
+
+    /// Framing error: the stream is no longer trustably aligned. Count it
+    /// and drop the connection.
+    pub(crate) fn on_frame_error(self: &Arc<Self>, conn: &Arc<ConnHandle>, err: &FrameError) {
+        self.tel.record_frame_error();
+        crate::warn_log!("net", "conn {}: frame error, closing: {}", conn.id, err);
+        conn.close(self, CloseReason::FrameError);
+    }
+
+    /// A complete, checksum-valid frame arrived (reader thread).
+    pub(crate) fn handle_frame(self: &Arc<Self>, conn: &Arc<ConnHandle>, frame: Frame) {
+        match frame.kind {
+            FrameKind::Request => match WireRequest::decode_payload(&frame.payload) {
+                Ok(req) => self.handle_request(conn, req),
+                Err(e) => self.on_frame_error(conn, &e),
+            },
+            // Ping is answered in the reader; a client sending Response or
+            // Pong frames is odd but harmless — ignore.
+            FrameKind::Ping | FrameKind::Pong | FrameKind::Response => {}
+        }
+    }
+
+    fn handle_request(self: &Arc<Self>, conn: &Arc<ConnHandle>, req: WireRequest) {
+        let now = Instant::now();
+        let deadline_ms =
+            if req.deadline_ms == 0 { self.cfg.deadline_ms } else { u64::from(req.deadline_ms) };
+        let deadline = now + Duration::from_millis(deadline_ms);
+        let reject = |status: Status, msg: &str| {
+            let wire = WireResponse {
+                client_req_id: req.client_req_id,
+                status,
+                prediction: 0,
+                latency_us: 0,
+                message: msg.to_string(),
+            };
+            conn.send(self, wire.encode_frame());
+        };
+        match self.admission.try_admit(req.profile_id, now) {
+            Admit::Admitted(permit) => {
+                self.tel.record_admitted();
+                // Hold the routes lock across submit so the dispatcher
+                // cannot see the response before the route exists.
+                let mut routes = self.routes.lock().unwrap();
+                match self.svc.submit_deadline(
+                    req.profile_id,
+                    &req.text,
+                    req.num_classes as usize,
+                    Some(deadline),
+                ) {
+                    Ok(id) => {
+                        conn.request_started();
+                        routes.insert(
+                            id,
+                            Route {
+                                conn: Arc::clone(conn),
+                                client_req_id: req.client_req_id,
+                                _permit: permit,
+                            },
+                        );
+                    }
+                    Err(_) => {
+                        drop(routes);
+                        reject(Status::Error, "service unavailable");
+                        // permit drops here: the slot frees immediately
+                    }
+                }
+            }
+            Admit::Overloaded => {
+                self.tel.record_rejected_overload();
+                reject(Status::Overloaded, "admission queue full");
+            }
+            Admit::RateLimited => {
+                self.tel.record_rejected_rate_limited();
+                reject(Status::RateLimited, "profile rate limit exceeded");
+            }
+            Admit::ShuttingDown => {
+                reject(Status::ShuttingDown, "server draining");
+            }
+        }
+    }
+
+    /// Dispatcher thread: route one service response back to its socket.
+    fn dispatch_response(self: &Arc<Self>, resp: Response) {
+        let route = self.routes.lock().unwrap().remove(&resp.request_id);
+        // No route: an in-process caller's response, or the connection was
+        // evicted with the permit already released alongside its route.
+        let Some(route) = route else { return };
+        let (status, message) = match resp.status {
+            ResponseStatus::Ok => (Status::Ok, String::new()),
+            ResponseStatus::Expired => {
+                (Status::Expired, "deadline passed before execution; shed".to_string())
+            }
+            ResponseStatus::Failed => {
+                (Status::Error, "execution failed (unknown profile or eval error)".to_string())
+            }
+        };
+        let wire = WireResponse {
+            client_req_id: route.client_req_id,
+            status,
+            prediction: resp.prediction as u32,
+            latency_us: resp.latency.as_micros().min(u128::from(u32::MAX)) as u32,
+            message,
+        };
+        route.conn.send(self, wire.encode_frame());
+        let left = route.conn.request_done();
+        if left == 0 && route.conn.wants_close_after_drain() {
+            route.conn.close(self, CloseReason::Orderly);
+        }
+        // route drops → permit releases → admission slot frees
+    }
+
+    fn routes_len(&self) -> usize {
+        self.routes.lock().unwrap().len()
+    }
+}
+
+/// The running TCP front end. Dropping it (or calling
+/// [`NetServer::shutdown`]) stops accepting, drains in-flight work, closes
+/// every connection, and joins all threads.
+pub struct NetServer {
+    inner: Arc<ServerInner>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    dispatch: Option<JoinHandle<()>>,
+    dispatch_stop: Arc<AtomicBool>,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen` and start serving `svc` over the wire.
+    pub fn start(svc: Arc<Service>, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let local_addr = listener.local_addr().context("listener local addr")?;
+        let admission = Admission::new(AdmissionConfig {
+            rate_limit: cfg.rate_limit,
+            rate_burst: cfg.rate_burst,
+            queue_limit: cfg.admission_queue,
+            default_deadline: Duration::from_millis(cfg.deadline_ms),
+        });
+        let tel = svc.telemetry_shared();
+        let inner = Arc::new(ServerInner {
+            svc: Arc::clone(&svc),
+            cfg,
+            admission,
+            tel,
+            conns: Mutex::new(HashMap::new()),
+            routes: Mutex::new(HashMap::new()),
+            stopping: AtomicBool::new(false),
+        });
+
+        let accept = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("xpeft-net-accept".to_string())
+                .spawn(move || accept_loop(listener, inner))
+                .context("spawning accept thread")?
+        };
+        let dispatch_stop = Arc::new(AtomicBool::new(false));
+        let dispatch = {
+            let inner = Arc::clone(&inner);
+            let stop = Arc::clone(&dispatch_stop);
+            std::thread::Builder::new()
+                .name("xpeft-net-dispatch".to_string())
+                .spawn(move || {
+                    loop {
+                        match inner.svc.recv_timeout(Duration::from_millis(5)) {
+                            Some(resp) => inner.dispatch_response(resp),
+                            None => {
+                                if stop.load(Ordering::Acquire) {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                })
+                .context("spawning dispatch thread")?
+        };
+        Ok(NetServer { inner, local_addr, accept: Some(accept), dispatch: Some(dispatch), dispatch_stop })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Currently open connections.
+    pub fn connections(&self) -> usize {
+        self.inner.conns.lock().unwrap().len()
+    }
+
+    /// Admitted-but-unanswered requests.
+    pub fn in_flight(&self) -> usize {
+        self.inner.routes_len()
+    }
+
+    /// Graceful shutdown: refuse new admissions, stop accepting, drain
+    /// in-flight requests (bounded wait), then close every connection and
+    /// join all threads. Telemetry lives in the service — snapshot it
+    /// there after this returns.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        // 1. refuse new admissions (clients get ShuttingDown, not silence)
+        self.inner.admission.drain();
+        // 2. stop accepting
+        self.inner.stopping.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // 3. drain in-flight batches: every admitted request either
+        // completes or is shed by its own deadline; bound the wait anyway
+        let t0 = Instant::now();
+        while self.inner.routes_len() > 0 && t0.elapsed() < DRAIN_TIMEOUT {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // 4. close every connection and join its I/O threads
+        let handles: Vec<Arc<ConnHandle>> =
+            self.inner.conns.lock().unwrap().values().cloned().collect();
+        for h in &handles {
+            h.close(&self.inner, CloseReason::Orderly);
+        }
+        for h in &handles {
+            h.join_io_threads();
+        }
+        // 5. stop the dispatcher once nothing can produce responses for it
+        self.dispatch_stop.store(true, Ordering::Release);
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+        // drop any routes stranded past the drain timeout: their permits
+        // release here
+        self.inner.routes.lock().unwrap().clear();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() || self.dispatch.is_some() {
+            self.stop();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
+    let mut next_id: u64 = 0;
+    loop {
+        if inner.stopping.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let open = inner.conns.lock().unwrap().len();
+                if open >= inner.cfg.max_conns {
+                    // over the cap: refuse at the door (the stream drops
+                    // here, which closes it)
+                    crate::warn_log!("net", "connection cap {} reached, refusing", inner.cfg.max_conns);
+                    continue;
+                }
+                next_id += 1;
+                let conn_id = next_id;
+                match ConnHandle::spawn(conn_id, stream, Arc::clone(&inner)) {
+                    Ok(handle) => {
+                        inner.conns.lock().unwrap().insert(conn_id, handle);
+                        inner.tel.record_conn_opened();
+                    }
+                    Err(e) => {
+                        crate::warn_log!("net", "conn {conn_id}: spawn failed: {e}");
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                crate::warn_log!("net", "accept error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}

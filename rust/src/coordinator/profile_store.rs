@@ -125,6 +125,11 @@ pub struct StoreConfig {
     /// Byte budget for the prepacked aggregate-adapter cache
     /// (`--agg-cache-mb`), split evenly across shards. 0 disables it.
     pub agg_cache_bytes: usize,
+    /// Opt-in durability (`--fsync`): `sync_all` after every committed
+    /// record append, so an acknowledged insert survives power loss, not
+    /// just process death. Default off — appends are page-cache-buffered
+    /// and per-record fsync serializes tuning on the disk.
+    pub fsync: bool,
 }
 
 impl Default for StoreConfig {
@@ -135,6 +140,7 @@ impl Default for StoreConfig {
             compact_min_dead: 1024,
             compact_dead_ratio: 0.5,
             agg_cache_bytes: 64 << 20,
+            fsync: false,
         }
     }
 }
@@ -568,6 +574,20 @@ impl ProfileStore {
                 }
                 return Err(e)
                     .with_context(|| format!("appending to {}", log.path.display()));
+            }
+            if self.cfg.fsync {
+                // Durability knob honored per record: the insert is only
+                // acknowledged once the bytes are on stable storage. A
+                // failed sync rolls back exactly like a failed write —
+                // the caller must not believe a record the disk may not
+                // hold.
+                if let Err(e) = log.file.sync_all() {
+                    if log.file.set_len(log.len).is_err() {
+                        log.poisoned = true;
+                    }
+                    return Err(e)
+                        .with_context(|| format!("fsync of {}", log.path.display()));
+                }
             }
             log.len += frame.len() as u64;
             shard.appended_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
@@ -1847,6 +1867,31 @@ mod tests {
         let s = ProfileStore::open(&dir, cfg).unwrap();
         assert_eq!(s.len(), 2);
         assert!(s.contains(1) && s.contains(2));
+    }
+
+    #[test]
+    fn fsync_knob_is_honored_and_data_survives_reopen() {
+        // `--fsync` on: every committed insert is synced before returning.
+        // The observable contract: inserts still succeed, bytes land in the
+        // right shard segment identically to the default path, and the
+        // records recover on reopen — with the flag actually plumbed
+        // through StoreConfig (not dropped on the floor).
+        let dir = tmp_dir("fsync_knob");
+        let cfg = StoreConfig { shards: 2, fsync: true, ..StoreConfig::default() };
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            assert!(s.config().fsync, "fsync flag must survive open()");
+            s.insert(1, hard_rec(1)).unwrap();
+            s.insert(2, hard_rec(2)).unwrap();
+            // overwrite: synced appends interleave fine with dead-record
+            // accounting
+            s.insert(1, hard_rec(3)).unwrap();
+        }
+        let s = ProfileStore::open(&dir, cfg).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(1) && s.contains(2));
+        // and the default stays off (the documented buffered-append mode)
+        assert!(!StoreConfig::default().fsync);
     }
 
     #[test]

@@ -110,19 +110,7 @@ impl Scheduler {
                     Msg::Shutdown => shutdown = true,
                 }
             }
-            crate::util::threadpool::run(wave.len(), |i| {
-                let job = &wave[i];
-                let pid = job.profile_id;
-                bd.set(pid, JobStatus::Running);
-                match run_job(&engine, &bank, &store, job, plm_seed) {
-                    Ok((final_loss, steps, wallclock_s)) => {
-                        bd.set(pid, JobStatus::Done { final_loss, steps, wallclock_s });
-                    }
-                    Err(e) => {
-                        bd.set(pid, JobStatus::Failed(format!("{e:#}")));
-                    }
-                }
-            });
+            run_wave(&wave, &bd, |job| run_job(&engine, &bank, &store, job, plm_seed));
             if shutdown {
                 return;
             }
@@ -170,6 +158,51 @@ impl Drop for Scheduler {
     }
 }
 
+/// Run one wave of jobs over the worker pool with **fault containment**:
+/// a job that returns `Err` records `Failed`, and a job that PANICS is
+/// caught here — its status also turns `Failed` (with the panic message)
+/// instead of the panic propagating into `threadpool::run`, which would
+/// re-panic in the dispatcher thread, kill the scheduler, and leave
+/// `wait_all` waiting forever on a status that never turns terminal.
+/// Every job in the wave reaches a terminal status, so the Condvar
+/// accounting stays correct no matter what the job body does.
+fn run_wave<F>(wave: &[TrainJob], board: &StatusBoard, runner: F)
+where
+    F: Fn(&TrainJob) -> Result<(f32, usize, f64)> + Sync,
+{
+    crate::util::threadpool::run(wave.len(), |i| {
+        let job = &wave[i];
+        let pid = job.profile_id;
+        board.set(pid, JobStatus::Running);
+        // AssertUnwindSafe: on panic we only write a fresh Failed status;
+        // no state the job half-mutated is read back.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(job)));
+        match outcome {
+            Ok(Ok((final_loss, steps, wallclock_s))) => {
+                board.set(pid, JobStatus::Done { final_loss, steps, wallclock_s });
+            }
+            Ok(Err(e)) => {
+                board.set(pid, JobStatus::Failed(format!("{e:#}")));
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                crate::warn_log!("scheduler", "job for profile {pid} panicked: {msg}");
+                board.set(pid, JobStatus::Failed(format!("panicked: {msg}")));
+            }
+        }
+    });
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Synchronous job execution (also used directly by experiments).
 pub fn run_job(
     engine: &Engine,
@@ -200,4 +233,78 @@ pub fn run_job(
         job.profile_id, outcome.steps, final_loss, outcome.wallclock_s
     );
     Ok((final_loss, outcome.steps, outcome.wallclock_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, MetricKind};
+
+    fn stub_job(pid: u64) -> TrainJob {
+        TrainJob {
+            profile_id: pid,
+            dataset: Dataset {
+                name: "stub".to_string(),
+                train: Vec::new(),
+                dev: Vec::new(),
+                num_classes: 2,
+                metric: MetricKind::Acc,
+            },
+            cfg: TrainConfig::default(),
+            keep_aux: false,
+        }
+    }
+
+    fn board() -> Arc<StatusBoard> {
+        Arc::new(StatusBoard { statuses: Mutex::new(HashMap::new()), done_cv: Condvar::new() })
+    }
+
+    #[test]
+    fn run_wave_contains_panics_and_errors() {
+        // One panicking job and one Err job among healthy ones: every job
+        // still reaches a terminal status and the healthy ones complete.
+        let wave: Vec<TrainJob> = (0..4).map(stub_job).collect();
+        let bd = board();
+        for j in &wave {
+            bd.set(j.profile_id, JobStatus::Queued);
+        }
+        run_wave(&wave, &bd, |job| match job.profile_id {
+            1 => panic!("deliberate test panic"),
+            2 => anyhow::bail!("deliberate test error"),
+            _ => Ok((0.5, 3, 0.01)),
+        });
+        let st = bd.statuses.lock().unwrap();
+        assert!(st.values().all(JobStatus::is_terminal), "all terminal: {st:?}");
+        assert!(matches!(st[&0], JobStatus::Done { .. }));
+        assert!(matches!(st[&3], JobStatus::Done { .. }));
+        match &st[&1] {
+            JobStatus::Failed(msg) => assert!(msg.contains("deliberate test panic"), "{msg}"),
+            other => panic!("panicking job should be Failed, got {other:?}"),
+        }
+        match &st[&2] {
+            JobStatus::Failed(msg) => assert!(msg.contains("deliberate test error"), "{msg}"),
+            other => panic!("erroring job should be Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_wave_notifies_condvar_for_failed_jobs() {
+        // wait_all-style loop must wake even when the wave's LAST terminal
+        // transition is a failure.
+        let wave = vec![stub_job(9)];
+        let bd = board();
+        bd.set(9, JobStatus::Queued);
+        std::thread::scope(|scope| {
+            let bd2 = bd.clone();
+            let waiter = scope.spawn(move || {
+                let mut st = bd2.statuses.lock().unwrap();
+                while !st.values().all(JobStatus::is_terminal) {
+                    st = bd2.done_cv.wait(st).unwrap();
+                }
+            });
+            run_wave(&wave, &bd, |_| panic!("boom"));
+            waiter.join().unwrap();
+        });
+        assert!(matches!(bd.statuses.lock().unwrap()[&9], JobStatus::Failed(_)));
+    }
 }

@@ -39,7 +39,7 @@
 //!   → executor: sharded-store state lookup (+ aggregate cache) + eval
 //!   → Response {prediction, latency}
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -58,12 +58,39 @@ use crate::masks::MaskWeights;
 use crate::runtime::{Engine, RouteSegment, RoutingPlan};
 use crate::train::eval::{argmax, Evaluator};
 
+/// Outcome of a submitted request. The service answers EVERY submitted
+/// request exactly once — failures become `Failed`/`Expired` responses
+/// rather than silent drops, so a wire front end can always route an answer
+/// (and release its admission permit) per request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResponseStatus {
+    /// Prediction is valid.
+    Ok,
+    /// Deadline passed before the request reached a trunk forward; shed.
+    Expired,
+    /// Unknown profile, shape mismatch, or eval error; see service logs.
+    Failed,
+}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub request_id: u64,
     pub profile_id: u64,
+    pub status: ResponseStatus,
     pub prediction: usize,
     pub latency: Duration,
+}
+
+impl Response {
+    fn terminal(r: &Request, status: ResponseStatus, now: Instant) -> Response {
+        Response {
+            request_id: r.id,
+            profile_id: r.profile_id,
+            status,
+            prediction: 0,
+            latency: now.duration_since(r.submitted),
+        }
+    }
 }
 
 enum Ingress {
@@ -78,7 +105,7 @@ pub struct Service {
     store: Arc<ProfileStore>,
     tokenizer: Tokenizer,
     seq: usize,
-    next_id: Mutex<u64>,
+    next_id: AtomicU64,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -169,6 +196,16 @@ impl Service {
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                 }
                 let now = Instant::now();
+                // Deadline-aware load shedding: anything already expired is
+                // answered `Expired` NOW, before it can occupy a row in a
+                // trunk forward. The batcher is fed only viable work.
+                let shed = batcher.shed_expired(now);
+                if !shed.is_empty() {
+                    tel.record_shed_expired(shed.len());
+                    for r in &shed {
+                        let _ = tx_out.send(Response::terminal(r, ResponseStatus::Expired, now));
+                    }
+                }
                 // Concurrent ready batches fan out over the worker pool.
                 // Each batch clones the response Sender and sends its own
                 // responses the moment it finishes — a fast batch must not
@@ -191,7 +228,10 @@ impl Service {
                             );
                             let tx = tx_out.clone();
                             for resp in responses {
-                                tel.record_response(resp.latency);
+                                match resp.status {
+                                    ResponseStatus::Ok => tel.record_response(resp.latency),
+                                    _ => tel.record_failure(),
+                                }
                                 let _ = tx.send(resp);
                             }
                         });
@@ -211,7 +251,10 @@ impl Service {
                             );
                             let tx = tx_out.clone();
                             for resp in responses {
-                                tel.record_response(resp.latency);
+                                match resp.status {
+                                    ResponseStatus::Ok => tel.record_response(resp.latency),
+                                    _ => tel.record_failure(),
+                                }
                                 let _ = tx.send(resp);
                             }
                         });
@@ -227,7 +270,7 @@ impl Service {
             store,
             tokenizer: Tokenizer::new(mc.vocab),
             seq,
-            next_id: Mutex::new(0),
+            next_id: AtomicU64::new(0),
             worker: Some(worker),
         })
     }
@@ -253,8 +296,17 @@ impl Service {
         // concurrent re-tune can't tear the pair
         let (weights, aux) = match store.serving_state(pb.profile_id) {
             Ok(pair) => pair,
-            // unknown profile / missing aux: drop (responses time out)
-            Err(_) => return Vec::new(),
+            // unknown profile / missing aux: answer Failed rather than
+            // dropping — a wire client gets an error frame instead of a
+            // timeout, and its admission permit releases promptly
+            Err(_) => {
+                let now = Instant::now();
+                return pb
+                    .requests
+                    .iter()
+                    .map(|r| Response::terminal(r, ResponseStatus::Failed, now))
+                    .collect();
+            }
         };
         // assemble the fixed-shape executor batch
         let mut batch = Batch {
@@ -280,7 +332,12 @@ impl Service {
             Ok(l) => l,
             Err(e) => {
                 crate::warn_log!("service", "eval failed for profile {}: {e:#}", pb.profile_id);
-                return Vec::new();
+                let now = Instant::now();
+                return pb
+                    .requests
+                    .iter()
+                    .map(|r| Response::terminal(r, ResponseStatus::Failed, now))
+                    .collect();
             }
         };
         // counted only on success, mirroring the mixed path: the batch /
@@ -297,6 +354,7 @@ impl Service {
                 Response {
                     request_id: r.id,
                     profile_id: r.profile_id,
+                    status: ResponseStatus::Ok,
                     prediction: argmax(slice),
                     latency: now.duration_since(r.submitted),
                 }
@@ -337,10 +395,22 @@ impl Service {
         }
         let (lb, out_w) = (bank.layers * bank.b, evaluator.out_w);
         let mut segs: Vec<ResolvedSegment<'_>> = Vec::with_capacity(mb.segments.len());
+        // Dropped segments (unknown profile, shape mismatch) still answer:
+        // every request gets exactly one response, Failed here.
+        let mut failed: Vec<Response> = Vec::new();
+        fn fail_segment(failed: &mut Vec<Response>, reqs: &[Request]) {
+            let now = Instant::now();
+            for r in reqs {
+                failed.push(Response::terminal(r, ResponseStatus::Failed, now));
+            }
+        }
         for &(pid, lo, hi) in &mb.segments {
             let (weights, aux, epoch, agg) = match store.serving_state_with_agg(pid) {
                 Ok(x) => x,
-                Err(_) => continue,
+                Err(_) => {
+                    fail_segment(&mut failed, &mb.requests[lo..hi]);
+                    continue;
+                }
             };
             if weights.layers != bank.layers || weights.n != bank.n {
                 crate::warn_log!(
@@ -351,6 +421,7 @@ impl Service {
                     bank.layers,
                     bank.n
                 );
+                fail_segment(&mut failed, &mb.requests[lo..hi]);
                 continue;
             }
             if aux.ln_scale.len() != lb
@@ -362,6 +433,7 @@ impl Service {
                     "service",
                     "profile {pid}: aux shapes do not match the deployment — dropping"
                 );
+                fail_segment(&mut failed, &mb.requests[lo..hi]);
                 continue;
             }
             let agg = match agg {
@@ -381,7 +453,7 @@ impl Service {
         }
         let rows: usize = segs.iter().map(|s| s.reqs.len()).sum();
         if rows == 0 {
-            return Vec::new();
+            return failed;
         }
         // assemble the fixed-shape batch; rows past `rows` are padding the
         // routed eval never computes, so they stay zero
@@ -431,7 +503,7 @@ impl Service {
                      per-profile execution: {e:#}",
                     segs.len()
                 );
-                let mut out = Vec::new();
+                let mut out = failed;
                 for s in &segs {
                     let pb = ProfileBatch {
                         profile_id: s.reqs[0].profile_id,
@@ -448,7 +520,8 @@ impl Service {
         tel.record_mixed_batch(segs.len());
         tel.record_trunk_forward();
         let now = Instant::now();
-        let mut out = Vec::with_capacity(rows);
+        let mut out = Vec::with_capacity(rows + failed.len());
+        out.append(&mut failed);
         let mut row = 0usize;
         for s in &segs {
             for r in s.reqs {
@@ -457,6 +530,7 @@ impl Service {
                 out.push(Response {
                     request_id: r.id,
                     profile_id: r.profile_id,
+                    status: ResponseStatus::Ok,
                     prediction: argmax(slice),
                     latency: now.duration_since(r.submitted),
                 });
@@ -483,11 +557,23 @@ impl Service {
         pad_mask: Vec<f32>,
         num_classes: usize,
     ) -> Result<u64> {
-        let id = {
-            let mut next = self.next_id.lock().unwrap();
-            *next += 1;
-            *next
-        };
+        self.submit_tokens_deadline(profile_id, tokens, pad_mask, num_classes, None)
+    }
+
+    /// Submit a pre-tokenized request with an absolute deadline. The serving
+    /// loop sheds it with an `Expired` response if the deadline passes
+    /// before the request reaches a trunk forward. The id allocation is a
+    /// lock-free atomic increment, so submission never serializes on a
+    /// mutex even under many ingress threads.
+    pub fn submit_tokens_deadline(
+        &self,
+        profile_id: u64,
+        tokens: Vec<u32>,
+        pad_mask: Vec<f32>,
+        num_classes: usize,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         self.tx
             .send(Ingress::Req(Request {
                 id,
@@ -496,9 +582,22 @@ impl Service {
                 pad_mask,
                 num_classes,
                 submitted: Instant::now(),
+                deadline,
             }))
             .context("service worker gone")?;
         Ok(id)
+    }
+
+    /// Submit raw text with a deadline (the wire front end's entry point).
+    pub fn submit_deadline(
+        &self,
+        profile_id: u64,
+        text: &str,
+        num_classes: usize,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
+        let (tokens, pad_mask) = self.tokenizer.encode(text, self.seq);
+        self.submit_tokens_deadline(profile_id, tokens, pad_mask, num_classes, deadline)
     }
 
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
@@ -507,6 +606,19 @@ impl Service {
 
     pub fn telemetry(&self) -> Snapshot {
         self.telemetry.snapshot_with_store(&self.store)
+    }
+
+    /// Shared handle to the live telemetry, so the wire front end can
+    /// record admission/eviction counters into the same sink the serving
+    /// loop uses.
+    pub fn telemetry_shared(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.telemetry)
+    }
+
+    /// Sequence length requests are tokenized to (wire clients size text
+    /// accordingly; longer inputs truncate).
+    pub fn seq_len(&self) -> usize {
+        self.seq
     }
 
     /// Drain and stop. Returns final telemetry (including store stats).

@@ -24,6 +24,27 @@ pub struct Telemetry {
     pub trunk_forwards: AtomicU64,
     /// Mixed (cross-profile) batches executed.
     pub mixed_batches: AtomicU64,
+    // --- TCP front-end / overload counters ------------------------------
+    /// Requests admitted past admission control.
+    pub admitted: AtomicU64,
+    /// Requests rejected with `Overloaded` (admission queue full).
+    pub rejected_overload: AtomicU64,
+    /// Requests rejected by a per-profile token bucket.
+    pub rejected_rate_limited: AtomicU64,
+    /// Queued requests shed because their deadline passed before a batch
+    /// could close (answered `Expired`, never cost a trunk forward).
+    pub shed_expired: AtomicU64,
+    /// Requests answered `Failed` (unknown profile, shape mismatch, eval
+    /// error) instead of silently dropped.
+    pub failures: AtomicU64,
+    /// Connections evicted because their outbox stayed full (slow client)
+    /// or a frame stalled past the read deadline (slow-loris writer).
+    pub evicted_slow_clients: AtomicU64,
+    /// TCP connections accepted / closed (difference = currently open).
+    pub conns_opened: AtomicU64,
+    pub conns_closed: AtomicU64,
+    /// Frames rejected by the decoder (torn/oversized/corrupt).
+    pub frame_errors: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     profiles_per_batch: Mutex<Vec<f64>>,
@@ -37,6 +58,15 @@ pub struct Snapshot {
     pub train_jobs: u64,
     pub trunk_forwards: u64,
     pub mixed_batches: u64,
+    pub admitted: u64,
+    pub rejected_overload: u64,
+    pub rejected_rate_limited: u64,
+    pub shed_expired: u64,
+    pub failures: u64,
+    pub evicted_slow_clients: u64,
+    pub conns_opened: u64,
+    pub conns_closed: u64,
+    pub frame_errors: u64,
     pub mean_batch: f64,
     /// Mean distinct profiles per mixed batch (0 when mixed mode is off).
     pub mean_profiles_per_batch: f64,
@@ -94,6 +124,43 @@ impl Telemetry {
         self.profiles_per_batch.lock().unwrap().push(profiles as f64);
     }
 
+    pub fn record_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected_overload(&self) {
+        self.rejected_overload.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected_rate_limited(&self) {
+        self.rejected_rate_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` queued requests shed for expired deadlines.
+    pub fn record_shed_expired(&self, n: usize) {
+        self.shed_expired.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_evicted_slow_client(&self) {
+        self.evicted_slow_clients.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_conn_opened(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_conn_closed(&self) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_frame_error(&self) {
+        self.frame_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.latencies_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
@@ -105,6 +172,15 @@ impl Telemetry {
             train_jobs: self.train_jobs.load(Ordering::Relaxed),
             trunk_forwards: self.trunk_forwards.load(Ordering::Relaxed),
             mixed_batches: self.mixed_batches.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_overload: self.rejected_overload.load(Ordering::Relaxed),
+            rejected_rate_limited: self.rejected_rate_limited.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            evicted_slow_clients: self.evicted_slow_clients.load(Ordering::Relaxed),
+            conns_opened: self.conns_opened.load(Ordering::Relaxed),
+            conns_closed: self.conns_closed.load(Ordering::Relaxed),
+            frame_errors: self.frame_errors.load(Ordering::Relaxed),
             mean_batch: stats::mean(&sizes),
             mean_profiles_per_batch: stats::mean(&ppb),
             p50_latency_us: stats::quantile(&lat, 0.5),
@@ -150,6 +226,32 @@ mod tests {
         assert_eq!(s.trunk_forwards_per_1k_requests(), 20.0);
         assert!(s.p50_latency_us > 40.0 && s.p50_latency_us < 60.0);
         assert!(s.p99_latency_us >= s.p95_latency_us);
+    }
+
+    #[test]
+    fn overload_counters_round_trip() {
+        let t = Telemetry::new();
+        t.record_admitted();
+        t.record_admitted();
+        t.record_rejected_overload();
+        t.record_rejected_rate_limited();
+        t.record_shed_expired(3);
+        t.record_failure();
+        t.record_evicted_slow_client();
+        t.record_conn_opened();
+        t.record_conn_opened();
+        t.record_conn_closed();
+        t.record_frame_error();
+        let s = t.snapshot();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rejected_overload, 1);
+        assert_eq!(s.rejected_rate_limited, 1);
+        assert_eq!(s.shed_expired, 3);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.evicted_slow_clients, 1);
+        assert_eq!(s.conns_opened, 2);
+        assert_eq!(s.conns_closed, 1);
+        assert_eq!(s.frame_errors, 1);
     }
 
     #[test]

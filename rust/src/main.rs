@@ -5,6 +5,9 @@
 //!   suite [--smoke]    task-trait scenario suite: tune→store→serve→score
 //!   train-profile      tune masks for one profile on a synthetic task
 //!   serve              run the multi-profile serving demo
+//!                      (--listen ADDR exposes it over TCP instead)
+//!   loadgen            drive a TCP server with zipfian open-loop load
+//!                      (--smoke self-hosts a loopback server in-process)
 //!   bench              quick micro-bench suite (full suites: cargo bench)
 //!   info               show artifact/manifest inventory
 
@@ -13,7 +16,8 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use xpeft::adapters::AdapterBank;
-use xpeft::config::{Mode, ServeConfig, TrainConfig};
+use xpeft::config::{Mode, NetConfig, ServeConfig, TrainConfig};
+use xpeft::coordinator::net::{loadgen, NetServer};
 use xpeft::coordinator::profile_store::ProfileStore;
 use xpeft::coordinator::scheduler::{Scheduler, TrainJob};
 use xpeft::coordinator::Service;
@@ -48,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "suite" => suite_cmd(args),
         "train-profile" => train_profile(args),
         "serve" => serve(args),
+        "loadgen" => loadgen_cmd(args),
         "info" => show_info(args),
         "bench" => quick_bench(args),
         "" | "help" => {
@@ -83,7 +88,20 @@ COMMANDS
                     --no-mixed-batch (per-profile batching; mixed
                     cross-profile batches are the default — one trunk
                     forward per batch) --agg-cache-mb 64 (prepacked
-                    aggregate-adapter cache; 0 disables)
+                    aggregate-adapter cache; 0 disables) --fsync (fsync the
+                    append log on every commit)
+                    --listen HOST:PORT serves over TCP instead of the demo
+                    stream: --serve-secs N (0 = until killed) plus overload
+                    knobs --rate-limit R --rate-burst B --admission-queue Q
+                    --deadline-ms D --read-deadline-ms --write-deadline-ms
+                    --idle-timeout-ms --outbox --max-conns
+  loadgen           drive a TCP server: --addr HOST:PORT --conns 4
+                    --rate R (req/s; 0 = closed-loop capacity probe)
+                    --secs 5 --profiles 64 --zipf 1.0 --deadline-ms 0
+                    --burst 1 --churn-every 0 --num-classes 0 --seed 42
+                    --suite (closed-loop probe, then 1x/2x/4x offered load)
+                    --smoke (self-host a loopback server and exercise the
+                    wire end-to-end; used by CI)
   info              artifact inventory from artifacts/manifest.json
   bench             quick micro-bench suite (full: cargo bench)
 
@@ -217,7 +235,16 @@ fn serve(args: &Args) -> Result<()> {
         store.mean_profile_bytes()
     );
 
-    // 2) serve a request stream drawn from the corpus
+    // 2a) --listen: expose the service over TCP behind admission control
+    // instead of driving the built-in demo stream
+    if args.get("listen").is_some() {
+        let net_cfg = NetConfig::default().override_from_args(args)?;
+        let svc =
+            Arc::new(Service::start(engine, store, bank, serve_cfg, lamp::CATEGORIES, env.plm_seed)?);
+        return serve_listen(svc, net_cfg, args);
+    }
+
+    // 2b) serve a request stream drawn from the corpus
     let svc = Service::start(engine, store, bank, serve_cfg, lamp::CATEGORIES, env.plm_seed)?;
     let t0 = std::time::Instant::now();
     let mut submitted = 0usize;
@@ -400,4 +427,169 @@ fn quick_bench(args: &Args) -> Result<()> {
         store.weights(i).unwrap()
     }));
     Ok(())
+}
+
+/// Serve over TCP until `--serve-secs` elapses (0 = until killed), then
+/// drain gracefully and print the overload telemetry.
+fn serve_listen(svc: Arc<Service>, net_cfg: NetConfig, args: &Args) -> Result<()> {
+    let secs = args.get_u64("serve-secs", 0)?;
+    let server = NetServer::start(Arc::clone(&svc), net_cfg)?;
+    println!("listening on {}", server.local_addr());
+    if secs == 0 {
+        info!("serve", "serving until killed (bound the run with --serve-secs N)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(secs));
+    info!("serve", "--serve-secs elapsed; draining");
+    server.shutdown();
+    let snap = match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(s) => s.telemetry(),
+    };
+    print_overload_counters(&snap);
+    Ok(())
+}
+
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    if args.flag("smoke") {
+        return loadgen_smoke(args);
+    }
+    let cfg = loadgen_config(args, args.require("addr")?.to_string())?;
+    if args.flag("suite") {
+        for (m, report) in loadgen::overload_suite(&cfg, &[1.0, 2.0, 4.0])? {
+            let label = if m <= 0.0 {
+                "probe (closed-loop)".to_string()
+            } else {
+                format!("{m:.0}x offered")
+            };
+            println!("{label:<20} {}", report.summary());
+        }
+        return Ok(());
+    }
+    let report = loadgen::run(&cfg)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn loadgen_config(args: &Args, addr: String) -> Result<loadgen::LoadgenConfig> {
+    let base = loadgen::LoadgenConfig::default();
+    Ok(loadgen::LoadgenConfig {
+        addr,
+        conns: args.get_usize("conns", base.conns)?,
+        rate: args.get_f64("rate", base.rate)?,
+        duration: std::time::Duration::from_secs(args.get_u64("secs", 5)?),
+        profiles: args.get_u64("profiles", base.profiles)?,
+        zipf_s: args.get_f64("zipf", base.zipf_s)?,
+        deadline_ms: args.get_u64("deadline-ms", base.deadline_ms as u64)? as u32,
+        burst: args.get_usize("burst", base.burst)?,
+        churn_every: args.get_usize("churn-every", base.churn_every)?,
+        text: args.get_str("text", &base.text),
+        num_classes: args.get_u64("num-classes", base.num_classes as u64)? as u32,
+        seed: args.get_u64("seed", base.seed)?,
+    })
+}
+
+/// Self-hosted loopback check used by CI: boot a service with random
+/// hard-mask profiles, expose it on 127.0.0.1:0, drive real TCP load
+/// through the loadgen client, and fail unless the closed-loop pass
+/// produced goodput and the overload pass kept getting answers.
+fn loadgen_smoke(args: &Args) -> Result<()> {
+    use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord};
+    use xpeft::masks::{MaskLogits, ProfileMasks};
+    use xpeft::util::rng::Rng;
+
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let n = 100usize;
+    let profiles = args.get_u64("profiles", 16)?;
+    let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+    let store = Arc::new(ProfileStore::new(64));
+    for pid in 0..profiles {
+        let mut r = Rng::new(5000 + pid);
+        let lg = MaskLogits {
+            layers: mc.layers,
+            n,
+            a: r.normal_vec(mc.layers * n, 1.0),
+            b: r.normal_vec(mc.layers * n, 1.0),
+        };
+        store.insert(pid, ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None })?;
+    }
+    store.set_shared_aux(AuxParams {
+        ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+        ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+        head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+        head_b: vec![0.0; mc.c_max],
+    });
+    let svc = Arc::new(Service::start(
+        engine,
+        store,
+        bank,
+        ServeConfig {
+            max_batch: 16,
+            batch_deadline_us: 300,
+            mask_cache: 64,
+            ..ServeConfig::default()
+        },
+        15,
+        42,
+    )?);
+    let mut net_cfg = NetConfig::default().override_from_args(args)?;
+    if net_cfg.listen.is_empty() {
+        net_cfg.listen = "127.0.0.1:0".to_string();
+    }
+    let server = NetServer::start(Arc::clone(&svc), net_cfg)?;
+    let addr = server.local_addr().to_string();
+    info!("loadgen", "smoke server on {addr}");
+
+    // closed-loop pass: the wire path must produce goodput
+    let mut cfg = loadgen_config(args, addr)?;
+    cfg.profiles = profiles;
+    cfg.text = "s42t3w1 s42t2w5 s42fw0".to_string();
+    cfg.duration = std::time::Duration::from_secs(args.get_u64("secs", 2)?);
+    cfg.rate = 0.0;
+    cfg.churn_every = 0;
+    let probe = loadgen::run(&cfg)?;
+    println!("closed-loop  {}", probe.summary());
+
+    // overload pass: 4x the measured capacity with bursts and connection
+    // churn — the server must keep answering (Ok or a shed status) and
+    // must not hang, crash, or leak connections
+    let mut hot = cfg.clone();
+    hot.rate = (probe.goodput_per_s() * 4.0).max(50.0);
+    hot.burst = 4;
+    hot.churn_every = 64;
+    hot.seed = cfg.seed.wrapping_add(1);
+    let stress = loadgen::run(&hot)?;
+    println!("4x overload  {}", stress.summary());
+
+    server.shutdown();
+    let snap = match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(s) => s.telemetry(),
+    };
+    print_overload_counters(&snap);
+    if probe.ok == 0 {
+        bail!("loadgen smoke: no successful responses on the closed-loop pass");
+    }
+    let answered =
+        stress.ok + stress.overloaded + stress.rate_limited + stress.expired + stress.shutting_down;
+    if answered == 0 {
+        bail!("loadgen smoke: overload pass got no answers at all");
+    }
+    println!("loadgen smoke OK");
+    Ok(())
+}
+
+fn print_overload_counters(snap: &xpeft::coordinator::Snapshot) {
+    println!("overload telemetry:");
+    println!("  admitted           {}", snap.admitted);
+    println!("  rejected overload  {}", snap.rejected_overload);
+    println!("  rejected rate-lim  {}", snap.rejected_rate_limited);
+    println!("  shed expired       {}", snap.shed_expired);
+    println!("  failures           {}", snap.failures);
+    println!("  evicted slow       {}", snap.evicted_slow_clients);
+    println!("  conns open/closed  {}/{}", snap.conns_opened, snap.conns_closed);
+    println!("  frame errors       {}", snap.frame_errors);
 }

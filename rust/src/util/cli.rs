@@ -89,6 +89,11 @@ impl Args {
         }
     }
 
+    /// Millisecond option surfaced as a `Duration` (`--idle-timeout-ms 500`).
+    pub fn get_duration_ms(&self, name: &str, default_ms: u64) -> Result<std::time::Duration> {
+        Ok(std::time::Duration::from_millis(self.get_u64(name, default_ms)?))
+    }
+
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
     }
@@ -150,5 +155,19 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("x --n abc");
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn duration_ms_option() {
+        let a = parse("x --idle-timeout-ms 250");
+        assert_eq!(
+            a.get_duration_ms("idle-timeout-ms", 1000).unwrap(),
+            std::time::Duration::from_millis(250)
+        );
+        assert_eq!(
+            a.get_duration_ms("missing", 1000).unwrap(),
+            std::time::Duration::from_secs(1)
+        );
+        assert!(parse("x --t abc").get_duration_ms("t", 0).is_err());
     }
 }

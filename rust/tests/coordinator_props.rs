@@ -28,6 +28,7 @@ fn req(id: u64, pid: u64, at: Instant) -> Request {
         pad_mask: vec![1.0; 3],
         num_classes: 0,
         submitted: at,
+        deadline: None,
     }
 }
 
@@ -537,4 +538,117 @@ fn concurrent_submit_from_many_threads() {
     }
     answered.sort_unstable();
     assert_eq!(answered, submitted, "every submitted request answered exactly once");
+}
+
+/// Deadline shedding is deterministic at the service level: a request whose
+/// deadline has already passed when the worker sees it is answered with
+/// `Expired` (prediction 0, no trunk forward spent), while fresh requests
+/// in the same stream are served normally.
+#[test]
+fn expired_requests_are_shed_with_expired_status() {
+    use xpeft::coordinator::ResponseStatus;
+
+    let (svc, classes) = start_service(2);
+    let text = "s42t3w1 s42t2w5 s42fw0";
+    let mut expired_ids = Vec::new();
+    let mut live_ids = Vec::new();
+    let (tokens, pad) = {
+        // submit_tokens_deadline needs pre-tokenized input; reuse the
+        // service's own seq length so shapes line up
+        let seq = svc.seq_len();
+        (vec![1u32; seq], vec![1.0f32; seq])
+    };
+    for i in 0..4u64 {
+        // deadline == now: by the time the worker polls, it has passed
+        let id = svc
+            .submit_tokens_deadline(
+                1 + (i % 2),
+                tokens.clone(),
+                pad.clone(),
+                0,
+                Some(Instant::now()),
+            )
+            .unwrap();
+        expired_ids.push(id);
+    }
+    for i in 0..4u64 {
+        let id = svc.submit(1 + (i % 2), text).unwrap();
+        live_ids.push(id);
+    }
+    let total = expired_ids.len() + live_ids.len();
+    let mut statuses: std::collections::HashMap<u64, (ResponseStatus, usize)> =
+        std::collections::HashMap::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while statuses.len() < total && Instant::now() < deadline {
+        if let Some(resp) = svc.recv_timeout(Duration::from_millis(200)) {
+            statuses.insert(resp.request_id, (resp.status, resp.prediction));
+        }
+    }
+    assert_eq!(statuses.len(), total, "every request answered, shed or served");
+    for id in &expired_ids {
+        let (status, prediction) = statuses[id];
+        assert_eq!(status, ResponseStatus::Expired, "past-deadline request {id} shed");
+        assert_eq!(prediction, 0);
+    }
+    for id in &live_ids {
+        let (status, prediction) = statuses[id];
+        assert_eq!(status, ResponseStatus::Ok, "fresh request {id} served");
+        assert!(prediction < classes);
+    }
+    let snap = svc.telemetry();
+    assert!(snap.shed_expired >= expired_ids.len() as u64);
+}
+
+/// Unknown profiles fail loudly, not silently: the service answers with a
+/// `Failed` terminal response instead of dropping the request.
+#[test]
+fn unknown_profile_gets_failed_response() {
+    use xpeft::coordinator::ResponseStatus;
+
+    let (svc, _classes) = start_service(1);
+    let id = svc.submit(777, "s42t3w1 s42t2w5").unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match svc.recv_timeout(Duration::from_millis(200)) {
+            Some(resp) if resp.request_id == id => {
+                assert_eq!(resp.status, ResponseStatus::Failed);
+                break;
+            }
+            Some(_) => {}
+            None => assert!(Instant::now() < deadline, "unknown profile never answered"),
+        }
+    }
+    assert!(svc.telemetry().failures >= 1);
+}
+
+/// Fault containment through the REAL scheduler: a job that cannot build
+/// its training program (bad `n` — no such artifact) fails terminally
+/// without wedging `wait_all` or the healthy jobs sharing its wave.
+#[test]
+fn failing_job_does_not_wedge_scheduler_wave() {
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    let store = Arc::new(ProfileStore::new(16));
+    let scheduler = Scheduler::start(engine, bank, store.clone(), 42);
+    scheduler.submit(tiny_job(&mc, 1)).unwrap();
+    let mut bad = tiny_job(&mc, 2);
+    bad.cfg.n = 777; // no artifact at this n: program lookup must fail
+    scheduler.submit(bad).unwrap();
+    scheduler.submit(tiny_job(&mc, 3)).unwrap();
+    // must return — a wedged wave would hang the test harness here
+    scheduler.wait_all();
+    for pid in [1u64, 3] {
+        assert!(
+            matches!(scheduler.status(pid), Some(JobStatus::Done { .. })),
+            "healthy job {pid}: {:?}",
+            scheduler.status(pid)
+        );
+        assert!(store.contains(pid), "healthy job {pid} committed its masks");
+    }
+    match scheduler.status(2) {
+        Some(JobStatus::Failed(msg)) => assert!(!msg.is_empty()),
+        other => panic!("bad job should be Failed, got {other:?}"),
+    }
+    assert!(!store.contains(2), "failed job must not commit masks");
 }

@@ -1,0 +1,405 @@
+//! Fault-injection tests for the TCP serving front end: hostile and
+//! unlucky clients (torn frames, slow-loris writers, mid-request
+//! disconnects, connection churn, half-open sockets, non-draining
+//! readers, floods) against a live server over real loopback sockets.
+//! The invariant under every fault is the same: the server answers or
+//! evicts, never hangs, never panics, and its counters stay consistent.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use xpeft::adapters::AdapterBank;
+use xpeft::config::{NetConfig, ServeConfig};
+use xpeft::coordinator::net::frame::{
+    encode, Decoder, FrameKind, Status, WireRequest, WireResponse,
+};
+use xpeft::coordinator::net::NetServer;
+use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use xpeft::coordinator::Service;
+use xpeft::masks::{MaskLogits, ProfileMasks};
+use xpeft::runtime::Engine;
+use xpeft::util::rng::Rng;
+
+const TEXT: &str = "s42t3w1 s42t3w2 s42fw1";
+
+fn random_masks(layers: usize, n: usize, k: usize, seed: u64) -> ProfileMasks {
+    let mut r = Rng::new(seed);
+    let logits = MaskLogits {
+        layers,
+        n,
+        a: r.normal_vec(layers * n, 1.0),
+        b: r.normal_vec(layers * n, 1.0),
+    };
+    ProfileMasks::Hard(logits.binarize(k))
+}
+
+/// Boot a service with `profiles` random hard-mask profiles (ids 1..=P)
+/// and a TCP front end on an ephemeral loopback port.
+fn start_net(profiles: u64, net: NetConfig) -> (NetServer, Arc<Service>) {
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    let store = Arc::new(ProfileStore::new(64));
+    for pid in 1..=profiles {
+        store
+            .insert(pid, ProfileRecord { masks: random_masks(mc.layers, 100, 50, pid), aux: None })
+            .unwrap();
+    }
+    store.set_shared_aux(AuxParams {
+        ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+        ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+        head_w: Rng::new(5).normal_vec(mc.d * mc.c_max, 0.05),
+        head_b: vec![0.0; mc.c_max],
+    });
+    let cfg = ServeConfig {
+        max_batch: 8,
+        batch_deadline_us: 300,
+        mask_cache: 64,
+        ..ServeConfig::default()
+    };
+    let svc = Arc::new(Service::start(engine, store, bank, cfg, 15, 42).unwrap());
+    let net = NetConfig { listen: "127.0.0.1:0".to_string(), ..net };
+    let server = NetServer::start(Arc::clone(&svc), net).unwrap();
+    (server, svc)
+}
+
+fn connect(server: &NetServer) -> TcpStream {
+    let s = TcpStream::connect(server.local_addr()).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    s
+}
+
+fn request_frame(client_req_id: u64, profile_id: u64, deadline_ms: u32) -> Vec<u8> {
+    WireRequest {
+        client_req_id,
+        profile_id,
+        deadline_ms,
+        num_classes: 0,
+        text: TEXT.to_string(),
+    }
+    .encode_frame()
+}
+
+/// Read responses until `want` arrive or `timeout` elapses.
+fn read_responses(stream: &mut TcpStream, want: usize, timeout: Duration) -> Vec<WireResponse> {
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 4096];
+    let mut out = Vec::new();
+    let deadline = Instant::now() + timeout;
+    while out.len() < want && Instant::now() < deadline {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                dec.push(&buf[..n]).unwrap();
+                while let Some(frame) = dec.next().unwrap() {
+                    if frame.kind == FrameKind::Response {
+                        out.push(WireResponse::decode_payload(&frame.payload).unwrap());
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+    }
+    out
+}
+
+/// One request → one response over a fresh connection (liveness probe).
+fn round_trip(server: &NetServer, id: u64) -> WireResponse {
+    let mut s = connect(server);
+    s.write_all(&request_frame(id, 1, 0)).unwrap();
+    let resp = read_responses(&mut s, 1, Duration::from_secs(30));
+    assert_eq!(resp.len(), 1, "liveness round-trip answered");
+    resp.into_iter().next().unwrap()
+}
+
+/// Did a read result indicate the peer closed the connection? (Poll
+/// timeouts are "not yet", data is "no".)
+fn read_saw_close(r: std::io::Result<usize>) -> bool {
+    match r {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => {
+            e.kind() != std::io::ErrorKind::WouldBlock && e.kind() != std::io::ErrorKind::TimedOut
+        }
+    }
+}
+
+/// Wait until `cond` holds or panic after `secs` seconds.
+fn wait_for(secs: u64, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn torn_and_corrupt_frames_close_that_conn_only() {
+    let (server, svc) = start_net(2, NetConfig::default());
+
+    // garbage bytes: not even a valid magic
+    let mut s1 = connect(&server);
+    s1.write_all(b"this is definitely not a frame").unwrap();
+    let mut buf = [0u8; 64];
+    wait_for(5, "garbage conn closed", || read_saw_close(s1.read(&mut buf)));
+
+    // corrupt checksum: valid header shape, flipped payload byte
+    let mut good = request_frame(1, 1, 0);
+    let last = good.len() - 1;
+    good[last] ^= 0xff;
+    let mut s2 = connect(&server);
+    s2.write_all(&good).unwrap();
+    wait_for(5, "corrupt conn closed", || read_saw_close(s2.read(&mut buf)));
+
+    // the server is unharmed: a clean connection still gets served
+    let resp = round_trip(&server, 7);
+    assert_eq!(resp.status, Status::Ok);
+    server.shutdown();
+    let snap = svc.telemetry();
+    assert!(snap.frame_errors >= 2, "both bad conns counted: {}", snap.frame_errors);
+}
+
+#[test]
+fn slow_loris_writer_is_evicted_within_deadline() {
+    let net = NetConfig { read_deadline_ms: 200, ..NetConfig::default() };
+    let (server, svc) = start_net(1, net);
+    let mut s = connect(&server);
+    let frame = request_frame(1, 1, 0);
+    // trickle one byte every 50 ms: activity never stops, but the frame
+    // never completes — the per-frame deadline must fire anyway
+    let t0 = Instant::now();
+    let mut evicted_at = None;
+    for byte in frame.iter() {
+        if s.write_all(std::slice::from_ref(byte)).is_err() {
+            evicted_at = Some(t0.elapsed());
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let mut buf = [0u8; 16];
+        match s.read(&mut buf) {
+            Ok(0) => {
+                evicted_at = Some(t0.elapsed());
+                break;
+            }
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                evicted_at = Some(t0.elapsed());
+                break;
+            }
+        }
+    }
+    let evicted_at = evicted_at.expect("slow-loris connection was closed by the server");
+    assert!(
+        evicted_at < Duration::from_secs(3),
+        "eviction took {evicted_at:?}, read deadline is 200ms"
+    );
+    // server still serves honest clients
+    assert_eq!(round_trip(&server, 2).status, Status::Ok);
+    server.shutdown();
+    assert!(svc.telemetry().evicted_slow_clients >= 1);
+}
+
+#[test]
+fn mid_request_disconnect_does_not_leak_in_flight() {
+    let (server, svc) = start_net(2, NetConfig::default());
+    for i in 0..8u64 {
+        let mut s = connect(&server);
+        s.write_all(&request_frame(i, 1, 0)).unwrap();
+        // hang up before the answer arrives
+        let _ = s.shutdown(Shutdown::Both);
+        drop(s);
+    }
+    // routes must drain even though every client vanished (the response
+    // dispatch path releases the permit whether or not the send lands)
+    wait_for(30, "in-flight drained after disconnects", || server.in_flight() == 0);
+    assert_eq!(round_trip(&server, 99).status, Status::Ok);
+    server.shutdown();
+    let snap = svc.telemetry();
+    assert!(snap.admitted >= 8, "disconnected requests were admitted: {}", snap.admitted);
+}
+
+#[test]
+fn connection_churn_serves_every_request_and_drops_no_fd() {
+    let fd_count = || -> Option<usize> {
+        if cfg!(target_os = "linux") {
+            std::fs::read_dir("/proc/self/fd").ok().map(|d| d.count())
+        } else {
+            None
+        }
+    };
+    let (server, svc) = start_net(4, NetConfig::default());
+    let fds_before = fd_count();
+    for i in 0..50u64 {
+        let resp = round_trip(&server, i);
+        assert_eq!(resp.client_req_id, i);
+        assert_eq!(resp.status, Status::Ok);
+    }
+    wait_for(10, "all churned conns reaped", || server.connections() == 0);
+    if let (Some(before), Some(after)) = (fds_before, fd_count()) {
+        assert!(
+            after <= before + 4,
+            "fd leak across churn: {before} before, {after} after"
+        );
+    }
+    server.shutdown();
+    let snap = svc.telemetry();
+    assert!(snap.conns_opened >= 50);
+    assert!(snap.conns_closed >= 50);
+}
+
+#[test]
+fn non_draining_reader_is_evicted_not_wedging() {
+    // tiny outbox + short write deadline: once the client stops reading
+    // and the socket buffers fill, the server must cut it loose
+    let net = NetConfig { outbox: 4, write_deadline_ms: 200, ..NetConfig::default() };
+    let (server, svc) = start_net(1, net);
+    let s = connect(&server);
+    let mut w = s.try_clone().unwrap();
+    // flood pings and never read a pong; stop as soon as the server
+    // hangs up on us (capped so a broken server can't hang the test)
+    let ping = encode(FrameKind::Ping, &[]);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut cut_off = false;
+    for _ in 0..2_000_000 {
+        if w.write_all(&ping).is_err() {
+            cut_off = true;
+            break;
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+    }
+    if !cut_off {
+        // writes may still be succeeding into a dying socket; the
+        // authoritative signal is the eviction counter
+        wait_for(30, "slow client evicted", || svc.telemetry().evicted_slow_clients >= 1);
+    }
+    // the service itself is fine
+    assert_eq!(round_trip(&server, 1).status, Status::Ok);
+    server.shutdown();
+    assert!(svc.telemetry().evicted_slow_clients >= 1);
+}
+
+#[test]
+fn half_open_idle_connection_is_reaped() {
+    let net = NetConfig { idle_timeout_ms: 200, ..NetConfig::default() };
+    let (server, svc) = start_net(1, net);
+    let mut s = connect(&server);
+    // send nothing at all — simulate a peer that died without FIN
+    let mut buf = [0u8; 16];
+    let t0 = Instant::now();
+    wait_for(5, "idle conn reaped", || read_saw_close(s.read(&mut buf)));
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    wait_for(5, "conn table empty", || server.connections() == 0);
+    server.shutdown();
+    assert!(svc.telemetry().conns_closed >= 1);
+}
+
+#[test]
+fn flood_gets_overloaded_rejections_not_a_hang() {
+    // in-flight cap of 1: a burst must see cheap Overloaded rejections
+    let net = NetConfig { admission_queue: 1, ..NetConfig::default() };
+    let (server, svc) = start_net(2, net);
+    let mut s = connect(&server);
+    let total = 64u64;
+    for i in 0..total {
+        s.write_all(&request_frame(i, 1 + (i % 2), 0)).unwrap();
+    }
+    let resps = read_responses(&mut s, total as usize, Duration::from_secs(60));
+    assert_eq!(resps.len(), total as usize, "every flooded request was answered");
+    let ok = resps.iter().filter(|r| r.status == Status::Ok).count();
+    let overloaded = resps.iter().filter(|r| r.status == Status::Overloaded).count();
+    assert_eq!(ok + overloaded, total as usize, "only Ok/Overloaded under flood");
+    assert!(ok >= 1, "cap 1 still admits work");
+    assert!(overloaded >= 1, "a 64-deep burst against cap 1 must shed");
+    server.shutdown();
+    let snap = svc.telemetry();
+    assert_eq!(snap.rejected_overload, overloaded as u64);
+}
+
+#[test]
+fn per_profile_rate_limit_rejects_excess_cheaply() {
+    let net = NetConfig { rate_limit: 2.0, rate_burst: 1.0, ..NetConfig::default() };
+    let (server, _svc) = start_net(2, net);
+    let mut s = connect(&server);
+    for i in 0..10u64 {
+        s.write_all(&request_frame(i, 1, 0)).unwrap();
+    }
+    let resps = read_responses(&mut s, 10, Duration::from_secs(60));
+    assert_eq!(resps.len(), 10);
+    let limited = resps.iter().filter(|r| r.status == Status::RateLimited).count();
+    let ok = resps.iter().filter(|r| r.status == Status::Ok).count();
+    assert!(ok >= 1, "burst of 1 admits the first request");
+    assert!(limited >= 1, "10 instant requests at 2/s must rate-limit");
+    // a different profile has its own bucket
+    s.write_all(&request_frame(100, 2, 0)).unwrap();
+    let other = read_responses(&mut s, 1, Duration::from_secs(30));
+    assert_eq!(other.len(), 1);
+    assert_eq!(other[0].status, Status::Ok, "profile 2's bucket is untouched");
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_and_refuses() {
+    let (server, svc) = start_net(2, NetConfig::default());
+    let addr = server.local_addr();
+    let mut s = connect(&server);
+    s.write_all(&request_frame(1, 1, 0)).unwrap();
+    let resp = read_responses(&mut s, 1, Duration::from_secs(30));
+    assert_eq!(resp.len(), 1);
+    server.shutdown();
+    // after shutdown the port no longer accepts (or resets immediately)
+    let refused = match TcpStream::connect(addr) {
+        Err(_) => true,
+        Ok(mut post) => {
+            post.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            let _ = post.write_all(&request_frame(2, 1, 0));
+            let mut buf = [0u8; 16];
+            read_saw_close(post.read(&mut buf))
+        }
+    };
+    assert!(refused, "shutdown server no longer serves");
+    let snap = svc.telemetry();
+    assert!(snap.admitted >= 1);
+}
+
+#[test]
+fn wire_deadline_flows_end_to_end() {
+    // a generous wire deadline serves normally; the deterministic
+    // past-deadline shed path is covered at the service level in
+    // coordinator_props (wire deadlines race real execution here)
+    let (server, _svc) = start_net(1, NetConfig::default());
+    let mut s = connect(&server);
+    s.write_all(&request_frame(1, 1, 30_000)).unwrap();
+    let resps = read_responses(&mut s, 1, Duration::from_secs(30));
+    assert_eq!(resps.len(), 1);
+    assert_eq!(resps[0].status, Status::Ok);
+    assert!(resps[0].latency_us > 0);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_profile_fails_cleanly_over_the_wire() {
+    let (server, svc) = start_net(1, NetConfig::default());
+    let mut s = connect(&server);
+    s.write_all(&request_frame(1, 999, 0)).unwrap();
+    let resps = read_responses(&mut s, 1, Duration::from_secs(30));
+    assert_eq!(resps.len(), 1);
+    assert_eq!(resps[0].status, Status::Error);
+    // the connection survives an application-level failure
+    s.write_all(&request_frame(2, 1, 0)).unwrap();
+    let ok = read_responses(&mut s, 1, Duration::from_secs(30));
+    assert_eq!(ok.len(), 1);
+    assert_eq!(ok[0].status, Status::Ok);
+    server.shutdown();
+    assert!(svc.telemetry().failures >= 1);
+}
