@@ -358,6 +358,119 @@ fn main() {
         }
     }
 
+    // ---- quantized aggregate cache at an equal byte budget -------------
+    // Same mixed-profile load, same agg-cache budget in bytes, storage
+    // codec f32 vs int8. At 24 KiB per f32 entry (testbed dims) the budget
+    // holds ~1/3 of the fan-out working set per shard and the FIFO cache
+    // thrashes under the cyclic access pattern; int8 entries are ~6 KiB,
+    // the whole working set fits, and the hit rate — and with it goodput
+    // (requests/s, the entry's `throughput_per_s`) — climbs.
+    {
+        use xpeft::runtime::native::kernels::Quant;
+
+        let fan: usize = if smoke { 128 } else { 1024 };
+        let budget_mb: usize = if smoke { 1 } else { 8 };
+        let reqs_per_iter: usize = 2 * fan;
+        println!(
+            "\n== quantized agg cache at equal budget ({fan} profiles, {budget_mb} MB, f32 vs int8) =="
+        );
+        let engine = Arc::new(Engine::native());
+        let mc = engine.manifest.config.clone();
+        let n = 100usize;
+        let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+        let shared = AuxParams {
+            ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+            ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+            head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+            head_b: vec![0.0; mc.c_max],
+        };
+        let iters = if smoke { 1 } else { 3 };
+        for quant in [Quant::F32, Quant::Int8] {
+            let store = Arc::new(ProfileStore::with_config(StoreConfig {
+                shards: 64,
+                cache_capacity: 2 * fan,
+                agg_cache_bytes: budget_mb << 20,
+                quant,
+                ..StoreConfig::default()
+            }));
+            for pid in 0..fan as u64 {
+                let mut r = Rng::new(5000 + pid);
+                let lg = MaskLogits {
+                    layers: mc.layers,
+                    n,
+                    a: r.normal_vec(mc.layers * n, 1.0),
+                    b: r.normal_vec(mc.layers * n, 1.0),
+                };
+                store
+                    .insert(
+                        pid,
+                        ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None },
+                    )
+                    .unwrap();
+            }
+            store.set_shared_aux(shared.clone());
+            let svc = Service::start(
+                engine.clone(),
+                store,
+                bank.clone(),
+                ServeConfig {
+                    mixed_batch: true,
+                    max_batch: 32,
+                    batch_deadline_us: 400,
+                    mask_cache: 2 * fan,
+                    agg_cache_mb: budget_mb,
+                    quant,
+                    ..ServeConfig::default()
+                },
+                15,
+                42,
+            )
+            .unwrap();
+            let r = Bench { warmup: 1, iters, items_per_iter: Some(reqs_per_iter) }.run(
+                &format!(
+                    "serve mixed quant={} {fan} profiles (agg budget {budget_mb} MB)",
+                    quant.label()
+                ),
+                || {
+                    for i in 0..reqs_per_iter {
+                        svc.submit((i % fan) as u64, "s42t3w1 s42t2w5 s42fw0").unwrap();
+                    }
+                    let mut got = 0;
+                    while got < reqs_per_iter {
+                        if svc.recv_timeout(Duration::from_secs(60)).is_some() {
+                            got += 1;
+                        } else {
+                            panic!("quant serving bench timed out ({})", quant.label());
+                        }
+                    }
+                    got
+                },
+            );
+            let snap = svc.shutdown();
+            let (entries, hit_rate, saved) = snap
+                .store
+                .as_ref()
+                .map(|st| {
+                    let looks = (st.agg_hits + st.agg_misses).max(1) as f64;
+                    (st.agg_entries, st.agg_hits as f64 / looks, st.agg_bytes_saved)
+                })
+                .unwrap_or((0, 0.0, 0));
+            println!(
+                "   quant={}: {entries} agg entries, hit rate {:.2}, {:.0} KiB saved, p50 {:.2}ms",
+                quant.label(),
+                hit_rate,
+                saved as f64 / 1024.0,
+                snap.p50_latency_us / 1e3
+            );
+            suite.add(
+                r.with_extra("agg_entries", entries as f64)
+                    .with_extra("agg_hit_rate", hit_rate)
+                    .with_extra("agg_bytes_saved", saved as f64)
+                    .with_extra("p50_latency_us", snap.p50_latency_us),
+            );
+        }
+    }
+
     // ---- overload behavior over the wire (loadgen vs the TCP front end)
     // A real loopback server behind admission control, driven open-loop at
     // 1x/2x/4x the closed-loop capacity with zipfian profile popularity.

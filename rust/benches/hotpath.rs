@@ -155,6 +155,29 @@ fn main() {
             &format!("adapter site {rows}x{}x{} (cached prepacked)", mc.d, mc.bottleneck),
             || kernels::gemm_packed_into(&mut out, rows, &x, mc.d, 1, &packed),
         ));
+        // the quantized storage tier at the same site: cache entries held
+        // int8 (per-panel scales) / f16, dequantized panel-at-a-time inside
+        // the micro-kernel — memory-bandwidth relief vs the f32 panels
+        for codec in [kernels::Quant::Int8, kernels::Quant::F16] {
+            let q = kernels::quantize_b_panels(&a_hat, mc.d, mc.bottleneck, codec);
+            suite.add(kern_bench(flops).run(
+                &format!(
+                    "adapter site {rows}x{}x{} (cached {} quant)",
+                    mc.d,
+                    mc.bottleneck,
+                    codec.label()
+                ),
+                || kernels::gemm_quant_into(&mut out, rows, &x, mc.d, 1, &q),
+            ));
+        }
+        // bank aggregation from quantized slabs: Â = Σ wᵢ·Âᵢ where the bank
+        // is stored int8 per-slab — the cache-miss path at --quant int8
+        let slabs = kernels::quantize_slabs(&bank_a, n, mc.d * mc.bottleneck, kernels::Quant::Int8);
+        let mut agg = vec![0.0f32; mc.d * mc.bottleneck];
+        suite.add(kern_bench(50).run(
+            &format!("aggregate hard N={n} k=50 (int8 bank)"),
+            || kernels::aggregate_quant_bank_into(&mut agg, &w, &slabs, 0),
+        ));
     }
 
     // thread scaling: same train/eval step at 1 lane vs every lane — the

@@ -12,6 +12,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::native::kernels::{
+    aggregate_quant_bank_into, quantize_slabs, Quant, QuantData, QuantSlabs,
+};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -157,6 +160,203 @@ impl AdapterBank {
     }
 }
 
+/// The shared bank in a reduced-precision storage codec (`--quant f16|int8`):
+/// both sub-module tensors held as [`QuantSlabs`] with rows = `L·N` adapter
+/// slabs of `d·b` weights and (for int8) one scale per adapter, so each
+/// adapter's dynamic range quantizes independently. Serving aggregates
+/// `Â = Σ w_i·A_i` straight from this form ([`Self::aggregate_a_into`]) —
+/// only the k gathered slabs are ever dequantized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedBank {
+    pub layers: usize,
+    pub n: usize,
+    pub d: usize,
+    pub b: usize,
+    /// [L·N, d·b] quantized slabs of `bank_a`.
+    pub slabs_a: QuantSlabs,
+    /// [L·N, b·d] quantized slabs of `bank_b`.
+    pub slabs_b: QuantSlabs,
+}
+
+/// Versioned quantized-bank file: magic carries the format version, a codec
+/// tag byte follows the dims. The legacy f32 format ([`MAGIC`]) has no tag
+/// and always decodes as f32 via [`AdapterBank::load`].
+const MAGIC_Q: &[u8; 8] = b"XPFTBKQ1";
+
+impl QuantizedBank {
+    /// Quantize a full-precision bank. `codec` must be a reduced-precision
+    /// tier — at `Quant::F32` callers should keep the [`AdapterBank`].
+    pub fn quantize(bank: &AdapterBank, codec: Quant) -> Result<QuantizedBank> {
+        if codec == Quant::F32 {
+            bail!("f32 is the AdapterBank tier; QuantizedBank needs f16 or int8");
+        }
+        let rows = bank.layers * bank.n;
+        let slab = bank.d * bank.b;
+        Ok(QuantizedBank {
+            layers: bank.layers,
+            n: bank.n,
+            d: bank.d,
+            b: bank.b,
+            slabs_a: quantize_slabs(&bank.bank_a, rows, slab, codec),
+            slabs_b: quantize_slabs(&bank.bank_b, rows, slab, codec),
+        })
+    }
+
+    pub fn codec(&self) -> Quant {
+        self.slabs_a.codec()
+    }
+
+    /// Bank bytes if persisted (values + per-adapter scales) — the Fig 1
+    /// bookkeeping at this codec: ~2× (f16) / ~4× (int8) below f32.
+    pub fn stored_bytes(&self) -> usize {
+        self.slabs_a.bytes() + self.slabs_b.bytes()
+    }
+
+    /// `Σ_i w[i]·A_i^{(l)}` into `out [d·b]`, dequantizing only the rows
+    /// with non-zero weight.
+    pub fn aggregate_a_into(&self, l: usize, weights: &[f32], out: &mut [f32]) {
+        assert_eq!(weights.len(), self.n);
+        aggregate_quant_bank_into(out, weights, &self.slabs_a, l * self.n);
+    }
+
+    /// `Σ_i w[i]·B_i^{(l)}` into `out [b·d]`.
+    pub fn aggregate_b_into(&self, l: usize, weights: &[f32], out: &mut [f32]) {
+        assert_eq!(weights.len(), self.n);
+        aggregate_quant_bank_into(out, weights, &self.slabs_b, l * self.n);
+    }
+
+    /// Lossy inverse of [`Self::quantize`] — parity harnesses and the
+    /// fallback path when a consumer needs the f32 layout.
+    pub fn dequantize(&self) -> AdapterBank {
+        AdapterBank {
+            layers: self.layers,
+            n: self.n,
+            d: self.d,
+            b: self.b,
+            bank_a: self.slabs_a.dequantize(),
+            bank_b: self.slabs_b.dequantize(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC_Q)?;
+        f.write_all(&[codec_tag(self.codec())])?;
+        for v in [self.layers as u32, self.n as u32, self.d as u32, self.b as u32] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for slabs in [&self.slabs_a, &self.slabs_b] {
+            match &slabs.q {
+                QuantData::F16(vals) => {
+                    for h in vals {
+                        f.write_all(&h.to_le_bytes())?;
+                    }
+                }
+                QuantData::Int8 { data, scales } => {
+                    for s in scales {
+                        f.write_all(&s.to_le_bytes())?;
+                    }
+                    // i8 → u8 is a bit-preserving cast
+                    let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+                    f.write_all(&bytes)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<QuantizedBank> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC_Q {
+            bail!("{} is not a quantized bank file", path.display());
+        }
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let codec = codec_from_tag(tag[0])
+            .with_context(|| format!("unknown codec tag {} in {}", tag[0], path.display()))?;
+        if codec == Quant::F32 {
+            bail!("f32 banks use the legacy XPFTBANK format");
+        }
+        let mut hdr = [0u8; 16];
+        f.read_exact(&mut hdr)?;
+        let rd = |i: usize| u32::from_le_bytes(hdr[i..i + 4].try_into().unwrap()) as usize;
+        let (layers, n, d, b) = (rd(0), rd(4), rd(8), rd(12));
+        let rows = layers
+            .checked_mul(n)
+            .with_context(|| format!("bank rows {layers}×{n} overflow"))?;
+        let slab = d.checked_mul(b).with_context(|| format!("slab {d}×{b} overflows"))?;
+        let count = rows
+            .checked_mul(slab)
+            .with_context(|| format!("bank dims {layers}×{n}×{d}×{b} overflow"))?;
+        let section = match codec {
+            Quant::F16 => count.checked_mul(2),
+            Quant::Int8 => rows.checked_mul(4).and_then(|s| s.checked_add(count)),
+            Quant::F32 => unreachable!(),
+        }
+        .with_context(|| format!("bank payload size for {count} weights overflows"))?;
+        let payload = section
+            .checked_mul(2)
+            .with_context(|| "bank payload size overflows".to_string())?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        if buf.len() != payload {
+            bail!(
+                "quant bank payload mismatch: {} bytes on disk, header implies {payload}",
+                buf.len()
+            );
+        }
+        let decode = |bytes: &[u8]| -> QuantSlabs {
+            let q = match codec {
+                Quant::F16 => QuantData::F16(
+                    bytes
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                Quant::Int8 => {
+                    let scales: Vec<f32> = bytes[..rows * 4]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    let data: Vec<i8> = bytes[rows * 4..].iter().map(|&v| v as i8).collect();
+                    QuantData::Int8 { data, scales }
+                }
+                Quant::F32 => unreachable!(),
+            };
+            QuantSlabs { rows, slab, q }
+        };
+        Ok(QuantizedBank {
+            layers, n, d, b,
+            slabs_a: decode(&buf[..section]),
+            slabs_b: decode(&buf[section..]),
+        })
+    }
+}
+
+/// Codec tag byte shared by the quantized-bank file and the profile-store
+/// append-log record header: 0 = f32 (legacy/identity), 1 = f16, 2 = int8.
+pub fn codec_tag(q: Quant) -> u8 {
+    match q {
+        Quant::F32 => 0,
+        Quant::F16 => 1,
+        Quant::Int8 => 2,
+    }
+}
+
+/// Inverse of [`codec_tag`]; `None` for bytes written by a newer format.
+pub fn codec_from_tag(tag: u8) -> Option<Quant> {
+    match tag {
+        0 => Some(Quant::F32),
+        1 => Some(Quant::F16),
+        2 => Some(Quant::Int8),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,5 +478,96 @@ mod tests {
         let full = std::fs::read(&path3).unwrap();
         std::fs::write(&path3, &full[..full.len() - 5]).unwrap();
         assert!(AdapterBank::load(&path3).is_err());
+    }
+
+    #[test]
+    fn quantized_bank_aggregation_matches_f32_within_codec_bound() {
+        let bank = AdapterBank::random(2, 6, 8, 4, 77);
+        let weights = [0.4f32, 0.0, -0.3, 0.0, 0.9, 0.1];
+        for codec in [Quant::F16, Quant::Int8] {
+            let qb = QuantizedBank::quantize(&bank, codec).unwrap();
+            assert_eq!(qb.codec(), codec);
+            assert!(qb.stored_bytes() < bank.stored_bytes());
+            for l in 0..2 {
+                let want = bank.aggregate_a(l, &weights);
+                let mut got = vec![0.0f32; 8 * 4];
+                qb.aggregate_a_into(l, &weights, &mut got);
+                // per-element bound: Σ|w_i|·(maxabs slab_i)/254 at int8;
+                // f16 is far tighter — use the int8 bound for both
+                let wsum: f32 = weights.iter().map(|w| w.abs()).sum();
+                let maxabs = bank.bank_a.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let bound = wsum * maxabs / 254.0 + 1e-6;
+                for (j, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= bound,
+                        "{} layer {l} elem {j}: {g} vs {w}",
+                        codec.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_bank_rejects_f32_codec() {
+        assert!(QuantizedBank::quantize(&tiny(), Quant::F32).is_err());
+    }
+
+    #[test]
+    fn quantized_bank_save_load_roundtrip_per_codec() {
+        let bank = AdapterBank::random(3, 4, 8, 4, 19);
+        let dir = std::env::temp_dir().join("xpeft_test_bank");
+        std::fs::create_dir_all(&dir).unwrap();
+        for codec in [Quant::F16, Quant::Int8] {
+            let qb = QuantizedBank::quantize(&bank, codec).unwrap();
+            let path = dir.join(format!("bank_{}.bin", codec.label()));
+            qb.save(&path).unwrap();
+            let back = QuantizedBank::load(&path).unwrap();
+            assert_eq!(qb, back, "{} round-trip", codec.label());
+            // and the quantized values decode to the same f32 bank
+            assert_eq!(qb.dequantize(), back.dequantize());
+        }
+    }
+
+    #[test]
+    fn quantized_bank_load_rejects_bad_files() {
+        let dir = std::env::temp_dir().join("xpeft_test_bank");
+        std::fs::create_dir_all(&dir).unwrap();
+        // legacy f32 file is not a quant file (and vice versa)
+        let legacy = dir.join("legacy.bin");
+        tiny().save(&legacy).unwrap();
+        assert!(QuantizedBank::load(&legacy).is_err());
+        assert!(AdapterBank::load(&legacy).is_ok(), "legacy f32 must keep loading");
+        let qpath = dir.join("q.bin");
+        QuantizedBank::quantize(&tiny(), Quant::Int8).unwrap().save(&qpath).unwrap();
+        assert!(AdapterBank::load(&qpath).is_err());
+        // unknown codec tag from a future format
+        let mut bytes = std::fs::read(&qpath).unwrap();
+        bytes[8] = 9;
+        let future = dir.join("future.bin");
+        std::fs::write(&future, &bytes).unwrap();
+        assert!(QuantizedBank::load(&future).is_err());
+        // truncated payload
+        let full = std::fs::read(&qpath).unwrap();
+        let trunc = dir.join("qtrunc.bin");
+        std::fs::write(&trunc, &full[..full.len() - 3]).unwrap();
+        assert!(QuantizedBank::load(&trunc).is_err());
+        // hostile dims: overflow must error, not abort
+        let hostile = dir.join("qhostile.bin");
+        let mut hb = MAGIC_Q.to_vec();
+        hb.push(2);
+        for v in [u32::MAX, u32::MAX, u32::MAX, u32::MAX] {
+            hb.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&hostile, &hb).unwrap();
+        assert!(QuantizedBank::load(&hostile).is_err());
+    }
+
+    #[test]
+    fn codec_tags_round_trip() {
+        for q in [Quant::F32, Quant::F16, Quant::Int8] {
+            assert_eq!(codec_from_tag(codec_tag(q)), Some(q));
+        }
+        assert_eq!(codec_from_tag(7), None);
     }
 }

@@ -216,6 +216,12 @@ pub struct ServeConfig {
     /// committed profile record, so an acknowledged tune survives power
     /// loss. Default off — appends stay page-cache-buffered.
     pub fsync: bool,
+    /// Storage codec for the shared serving state (`--quant {f32,f16,int8}`,
+    /// default f32 for bit-exact parity): the prepacked aggregate cache and
+    /// persisted aux records are held in this precision, and the serving
+    /// GEMM dequantizes panel-at-a-time inside the micro-kernel. int8
+    /// (per-panel scales) fits ~4× the hot profiles per `--agg-cache-mb`.
+    pub quant: crate::runtime::native::kernels::Quant,
 }
 
 impl Default for ServeConfig {
@@ -231,6 +237,7 @@ impl Default for ServeConfig {
             compact_dead_ratio: 0.5,
             threads: 0,
             fsync: false,
+            quant: crate::runtime::native::kernels::Quant::F32,
         }
     }
 }
@@ -254,6 +261,10 @@ impl ServeConfig {
         if args.flag("fsync") {
             self.fsync = true;
         }
+        if let Some(q) = args.get("quant") {
+            self.quant = crate::runtime::native::kernels::Quant::parse(q)
+                .ok_or_else(|| anyhow::anyhow!("--quant expects f32, f16 or int8, got '{q}'"))?;
+        }
         if self.max_batch == 0 {
             bail!("max-batch must be positive");
         }
@@ -272,6 +283,7 @@ impl ServeConfig {
             compact_dead_ratio: self.compact_dead_ratio,
             agg_cache_bytes: self.agg_cache_mb.saturating_mul(1 << 20),
             fsync: self.fsync,
+            quant: self.quant,
         }
     }
 }
@@ -441,6 +453,21 @@ mod tests {
             .override_from_args(&args("serve --no-mixed-batch"))
             .unwrap();
         assert!(!off.mixed_batch);
+    }
+
+    #[test]
+    fn quant_knob_parses_and_flows_to_store_config() {
+        use crate::runtime::native::kernels::Quant;
+        let sc = ServeConfig::default().override_from_args(&args("serve --quant int8")).unwrap();
+        assert_eq!(sc.quant, Quant::Int8);
+        assert_eq!(sc.store_config().quant, Quant::Int8);
+        let f16 = ServeConfig::default().override_from_args(&args("serve --quant f16")).unwrap();
+        assert_eq!(f16.quant, Quant::F16);
+        let default = ServeConfig::default().override_from_args(&args("serve")).unwrap();
+        assert_eq!(default.quant, Quant::F32, "f32 stays the parity default");
+        assert!(ServeConfig::default()
+            .override_from_args(&args("serve --quant int4"))
+            .is_err());
     }
 
     #[test]

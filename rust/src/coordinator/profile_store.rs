@@ -72,9 +72,9 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::adapters::AdapterBank;
+use crate::adapters::{codec_from_tag, codec_tag, AdapterBank};
 use crate::masks::{HardMask, MaskWeights, ProfileMasks};
-use crate::runtime::native::kernels::{self, PackedPanels};
+use crate::runtime::native::kernels::{self, AggPanels, Quant};
 
 const LOG_MAGIC: &[u8; 8] = b"XPFTLOG1";
 const LEGACY_MAGIC: &[u8; 8] = b"XPFTPROF";
@@ -130,6 +130,12 @@ pub struct StoreConfig {
     /// just process death. Default off — appends are page-cache-buffered
     /// and per-record fsync serializes tuning on the disk.
     pub fsync: bool,
+    /// Storage codec (`--quant {f32,f16,int8}`) for the prepacked
+    /// aggregate cache and persisted aux tensors. Default f32 — exact
+    /// parity with the tuned numerics; f16/int8 fit ~2×/~4× more cached
+    /// profiles per `agg_cache_bytes`. Masks are always stored exact
+    /// (they ARE the per-profile state the paper counts).
+    pub quant: Quant,
 }
 
 impl Default for StoreConfig {
@@ -141,6 +147,7 @@ impl Default for StoreConfig {
             compact_dead_ratio: 0.5,
             agg_cache_bytes: 64 << 20,
             fsync: false,
+            quant: Quant::F32,
         }
     }
 }
@@ -152,21 +159,36 @@ impl Default for StoreConfig {
 /// tunings, so the entry stays valid until the profile's mask `epoch` is
 /// bumped by a re-tune.
 ///
-/// Memory: ~`2·L·d·b·4` bytes per profile (plus NR-strip padding when a
-/// projection width is not a multiple of the tile — see
-/// [`PackedPanels`]) vs the `2·N·L` floats of the unpacked mask weights.
+/// Memory: ~`2·L·d·b·4` bytes per profile at f32 (plus NR-strip padding
+/// when a projection width is not a multiple of the tile), halved at f16
+/// and quartered at int8 — vs the `2·N·L` floats of the unpacked mask
+/// weights.
 #[derive(Debug, Clone)]
 pub struct ProfileAggregates {
     /// Mask epoch this aggregate was materialized at.
     pub epoch: u64,
-    /// Per layer: (`Â` packed `[d → b]`, `B̂` packed `[b → d]`).
-    pub layers: Vec<(PackedPanels, PackedPanels)>,
+    /// Per layer: (`Â` packed `[d → b]`, `B̂` packed `[b → d]`) in the
+    /// configured storage tier.
+    pub layers: AggPanels,
 }
 
 impl ProfileAggregates {
-    /// Materialize + prepack a profile's aggregates from its mask weights
-    /// and the shared bank. `weights` must match the bank's `(L, N)`.
+    /// Materialize + prepack a profile's f32 aggregates from its mask
+    /// weights and the shared bank. `weights` must match the bank's
+    /// `(L, N)`.
     pub fn prepack(weights: &MaskWeights, bank: &AdapterBank, epoch: u64) -> ProfileAggregates {
+        Self::prepack_quant(weights, bank, epoch, Quant::F32)
+    }
+
+    /// Materialize a profile's aggregates and prepack them in the given
+    /// storage codec: f32 packs in place, f16/int8 quantize each layer's
+    /// panels (per-panel scales at int8) right after aggregation.
+    pub fn prepack_quant(
+        weights: &MaskWeights,
+        bank: &AdapterBank,
+        epoch: u64,
+        codec: Quant,
+    ) -> ProfileAggregates {
         assert_eq!(
             (weights.layers, weights.n),
             (bank.layers, bank.n),
@@ -174,38 +196,57 @@ impl ProfileAggregates {
         );
         let (d, b, n) = (bank.d, bank.b, bank.n);
         let slab = d * b;
-        let layers = (0..bank.layers)
-            .map(|l| {
-                let a_hat = kernels::aggregate_bank(
-                    &weights.a[l * n..(l + 1) * n],
-                    &bank.bank_a[l * n * slab..(l + 1) * n * slab],
-                    slab,
-                );
-                let b_hat = kernels::aggregate_bank(
-                    &weights.b[l * n..(l + 1) * n],
-                    &bank.bank_b[l * n * slab..(l + 1) * n * slab],
-                    slab,
-                );
-                (kernels::pack_b_panels(&a_hat, d, b), kernels::pack_b_panels(&b_hat, b, d))
-            })
-            .collect();
+        let packed = (0..bank.layers).map(|l| {
+            let a_hat = kernels::aggregate_bank(
+                &weights.a[l * n..(l + 1) * n],
+                &bank.bank_a[l * n * slab..(l + 1) * n * slab],
+                slab,
+            );
+            let b_hat = kernels::aggregate_bank(
+                &weights.b[l * n..(l + 1) * n],
+                &bank.bank_b[l * n * slab..(l + 1) * n * slab],
+                slab,
+            );
+            (kernels::pack_b_panels(&a_hat, d, b), kernels::pack_b_panels(&b_hat, b, d))
+        });
+        let layers = match codec {
+            Quant::F32 => AggPanels::F32(packed.collect()),
+            _ => AggPanels::Quant(
+                packed
+                    .map(|(pa, pb)| {
+                        (kernels::quantize_panels(&pa, codec), kernels::quantize_panels(&pb, codec))
+                    })
+                    .collect(),
+            ),
+        };
         ProfileAggregates { epoch, layers }
+    }
+
+    /// Storage codec of this entry.
+    pub fn codec(&self) -> Quant {
+        self.layers.codec()
     }
 
     /// Heap bytes this entry holds against the cache budget.
     pub fn bytes(&self) -> usize {
-        self.layers.iter().map(|(a, b)| a.bytes() + b.bytes()).sum()
+        self.layers.bytes()
     }
 
-    /// Bytes a prepacked entry for this bank WILL occupy (strip padding
-    /// included), computable without materializing anything — pair with
+    /// Bytes a prepacked f32 entry for this bank WILL occupy — see
+    /// [`Self::projected_bytes_at`].
+    pub fn projected_bytes(bank: &AdapterBank) -> usize {
+        Self::projected_bytes_at(bank, Quant::F32)
+    }
+
+    /// Bytes a prepacked entry for this bank WILL occupy at `codec`
+    /// (strip padding and int8 panel scales included), computable without
+    /// materializing anything — pair with
     /// [`ProfileStore::agg_cache_admits`] so the serving path never pays
     /// the prepack for an entry the budget can't ever hold.
-    pub fn projected_bytes(bank: &AdapterBank) -> usize {
+    pub fn projected_bytes_at(bank: &AdapterBank, codec: Quant) -> usize {
         bank.layers
-            * 4
-            * (kernels::packed_panels_len(bank.d, bank.b)
-                + kernels::packed_panels_len(bank.b, bank.d))
+            * (kernels::quant_panels_bytes(bank.d, bank.b, codec)
+                + kernels::quant_panels_bytes(bank.b, bank.d, codec))
     }
 }
 
@@ -246,6 +287,10 @@ pub struct StoreStats {
     pub agg_evictions: u64,
     pub agg_entries: usize,
     pub agg_bytes: usize,
+    /// Bytes the resident aggregate entries would occupy at f32 minus
+    /// what they actually hold — 0 at `--quant f32`, ~3·agg_bytes at
+    /// int8: the cache-capacity gain made visible.
+    pub agg_bytes_saved: usize,
     pub per_shard: Vec<ShardStats>,
 }
 
@@ -551,7 +596,7 @@ impl ProfileStore {
         // the file append + map update
         let frame = self.persistent.then(|| {
             let mut f = Vec::new();
-            encode_record(profile_id, &rec, &mut f);
+            encode_record(profile_id, &rec, self.cfg.quant, &mut f);
             f
         });
         let mut st = shard.state.write().unwrap();
@@ -617,7 +662,7 @@ impl ProfileStore {
             // per-record fsync would serialize the scheduler on the disk)
             // and the old segment stays fully valid (compact_locked only
             // commits on success)
-            match compact_locked(&mut st) {
+            match compact_locked(&mut st, self.cfg.quant) {
                 Ok(()) => {
                     shard.compactions.fetch_add(1, Ordering::Relaxed);
                 }
@@ -908,6 +953,11 @@ impl ProfileStore {
             out.agg_evictions += sh.agg_evictions.load(Ordering::Relaxed);
             out.agg_entries += s.agg_entries;
             out.agg_bytes += s.agg_bytes;
+            out.agg_bytes_saved += st
+                .agg
+                .values()
+                .map(|e| e.layers.f32_equiv_bytes().saturating_sub(e.bytes()))
+                .sum::<usize>();
             out.per_shard.push(s);
         }
         out
@@ -1031,7 +1081,7 @@ impl ProfileStore {
             let mut st = shard.state.write().unwrap();
             if st.log.as_ref().is_some_and(|l| l.dead > 0) {
                 reclaimed += st.log.as_ref().map_or(0, |l| l.dead);
-                compact_locked(&mut st)?;
+                compact_locked(&mut st, self.cfg.quant)?;
                 shard.compactions.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -1050,7 +1100,7 @@ impl ProfileStore {
         out.extend_from_slice(LOG_MAGIC);
         for id in self.ids() {
             if let Ok(rec) = self.record(id) {
-                encode_record(id, &rec, &mut out);
+                encode_record(id, &rec, self.cfg.quant, &mut out);
             }
         }
         let tmp = path.with_extension("tmp");
@@ -1114,7 +1164,7 @@ fn shard_cache_cap(total: usize, shard: usize, shards: usize) -> usize {
 /// every fallible step succeeded: the append handle is opened on the temp
 /// file *before* the rename (the fd follows the inode across the rename),
 /// so any failure leaves the old segment and its handle fully intact.
-fn compact_locked(st: &mut ShardState) -> Result<()> {
+fn compact_locked(st: &mut ShardState, quant: Quant) -> Result<()> {
     let path = st.log.as_ref().expect("compact requires a log").path.clone();
     let tmp = path.with_extension("log.tmp");
     let mut out: Vec<u8> = Vec::new();
@@ -1122,7 +1172,7 @@ fn compact_locked(st: &mut ShardState) -> Result<()> {
     let mut ids: Vec<u64> = st.profiles.keys().copied().collect();
     ids.sort_unstable();
     for id in ids {
-        encode_record(id, &st.profiles[&id], &mut out);
+        encode_record(id, &st.profiles[&id], quant, &mut out);
     }
     std::fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
     let file = std::fs::OpenOptions::new()
@@ -1161,16 +1211,26 @@ fn fnv1a32(bytes: &[u8]) -> u32 {
 }
 
 /// Append one framed record (`len | checksum | payload`) to `out`.
-fn encode_record(id: u64, rec: &ProfileRecord, out: &mut Vec<u8>) {
+///
+/// Format versioning: the kind byte carries the mask kind in its low
+/// nibble and the **aux codec tag** ([`codec_tag`]) in its high nibble.
+/// Legacy records wrote plain kinds 0/1, whose high nibble is 0 = f32 —
+/// so every pre-quantization log decodes unchanged. Masks are always
+/// stored exact; only the aux tensors (LN affine + head) are quantized,
+/// as `u32 len | len·u16` at f16 and `u32 len | f32 scale | len·i8` at
+/// int8 (one scale per tensor).
+fn encode_record(id: u64, rec: &ProfileRecord, quant: Quant, out: &mut Vec<u8>) {
     let mut payload: Vec<u8> = Vec::new();
     payload.extend_from_slice(&id.to_le_bytes());
+    let aux_codec = if rec.aux.is_some() { quant } else { Quant::F32 };
+    let tag = codec_tag(aux_codec) << 4;
     let blob = match &rec.masks {
         ProfileMasks::Hard(h) => {
-            payload.push(0);
+            payload.push(tag);
             h.to_bytes()
         }
         ProfileMasks::Soft(w) => {
-            payload.push(1);
+            payload.push(tag | 1);
             let mut b = Vec::with_capacity(8 + 4 * (w.a.len() + w.b.len()));
             b.extend_from_slice(&(w.layers as u32).to_le_bytes());
             b.extend_from_slice(&(w.n as u32).to_le_bytes());
@@ -1188,8 +1248,26 @@ fn encode_record(id: u64, rec: &ProfileRecord, out: &mut Vec<u8>) {
             payload.push(1);
             for sect in [&a.ln_scale, &a.ln_bias, &a.head_w, &a.head_b] {
                 payload.extend_from_slice(&(sect.len() as u32).to_le_bytes());
-                for x in sect.iter() {
-                    payload.extend_from_slice(&x.to_le_bytes());
+                match aux_codec {
+                    Quant::F32 => {
+                        for x in sect.iter() {
+                            payload.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                    Quant::F16 => {
+                        for &x in sect.iter() {
+                            payload.extend_from_slice(&kernels::f32_to_f16(x).to_le_bytes());
+                        }
+                    }
+                    Quant::Int8 => {
+                        let maxabs = sect.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                        let scale = if maxabs == 0.0 { 0.0 } else { maxabs / 127.0 };
+                        payload.extend_from_slice(&scale.to_le_bytes());
+                        let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+                        for &x in sect.iter() {
+                            payload.push((x * inv).round().clamp(-127.0, 127.0) as i8 as u8);
+                        }
+                    }
                 }
             }
         }
@@ -1254,10 +1332,12 @@ fn decode_payload(payload: &[u8]) -> Result<(u64, ProfileRecord)> {
     let mut c = Cursor::new(payload);
     let id = c.u64()?;
     let kind = c.u8()?;
+    let aux_codec = codec_from_tag(kind >> 4)
+        .with_context(|| format!("profile {id}: unknown aux codec tag {}", kind >> 4))?;
     let blob_len = c.u32()? as usize;
     let blob = c.take(blob_len)?;
-    let masks = decode_mask_blob(kind, blob)?;
-    let aux = decode_aux(&mut c)?;
+    let masks = decode_mask_blob(kind & 0x0f, blob)?;
+    let aux = decode_aux(&mut c, aux_codec)?;
     if c.remaining() != 0 {
         bail!("record for profile {id} has {} trailing bytes", c.remaining());
     }
@@ -1285,14 +1365,30 @@ fn decode_mask_blob(kind: u8, blob: &[u8]) -> Result<ProfileMasks> {
     }
 }
 
-fn decode_aux(c: &mut Cursor) -> Result<Option<Arc<AuxParams>>> {
+fn decode_aux(c: &mut Cursor, codec: Quant) -> Result<Option<Arc<AuxParams>>> {
     if c.u8()? != 1 {
         return Ok(None);
     }
     let mut sections = Vec::with_capacity(4);
     for _ in 0..4 {
         let len = c.u32()? as usize;
-        sections.push(c.f32s(len)?);
+        let vals = match codec {
+            Quant::F32 => c.f32s(len)?,
+            Quant::F16 => {
+                let n = len
+                    .checked_mul(2)
+                    .with_context(|| format!("f16 aux section length {len} overflows"))?;
+                c.take(n)?
+                    .chunks_exact(2)
+                    .map(|b| kernels::f16_to_f32(u16::from_le_bytes(b.try_into().unwrap())))
+                    .collect()
+            }
+            Quant::Int8 => {
+                let scale = f32::from_le_bytes(c.take(4)?.try_into().unwrap());
+                c.take(len)?.iter().map(|&b| (b as i8) as f32 * scale).collect()
+            }
+        };
+        sections.push(vals);
     }
     let head_b = sections.pop().unwrap();
     let head_w = sections.pop().unwrap();
@@ -1378,8 +1474,9 @@ fn parse_legacy(bytes: &[u8]) -> Result<Vec<(u64, ProfileRecord)>> {
         let kind = c.u8()?;
         let blob_len = c.u32()? as usize;
         let blob = c.take(blob_len)?;
-        let masks = decode_mask_blob(kind, blob)?;
-        let aux = decode_aux(&mut c)?;
+        // legacy records have no codec tag: high nibble is always 0 = f32
+        let masks = decode_mask_blob(kind & 0x0f, blob)?;
+        let aux = decode_aux(&mut c, Quant::F32)?;
         out.push((id, ProfileRecord { masks, aux }));
     }
     Ok(out)
@@ -1579,10 +1676,10 @@ mod tests {
         assert_eq!(s.mask_epoch(1).unwrap(), 1);
         assert!(stale.is_none(), "re-tune invalidates the cached aggregate");
         let fresh = Arc::new(ProfileAggregates::prepack(&w2, &bank, epoch2));
-        assert_ne!(
-            fresh.layers[0].0.data, entry.layers[0].0.data,
-            "the fresh tune's aggregate really is different"
-        );
+        let (AggPanels::F32(fl), AggPanels::F32(el)) = (&fresh.layers, &entry.layers) else {
+            panic!("f32 prepack must produce f32 panels");
+        };
+        assert_ne!(fl[0].0.data, el[0].0.data, "the fresh tune's aggregate really is different");
         assert!(!s.agg_cache_put(1, entry), "stale-epoch entries are refused");
         assert!(s.agg_cache_put(1, Arc::clone(&fresh)));
         let (_, _, _, hit2) = s.serving_state_with_agg(1).unwrap();
@@ -1643,6 +1740,124 @@ mod tests {
         assert!(!off.agg_cache_enabled());
         let _ = off.serving_state_with_agg(9).unwrap();
         assert_eq!(off.stats().agg_misses, 0, "disabled cache records no misses");
+    }
+
+    #[test]
+    fn quant_agg_projection_matches_real_bytes_per_codec() {
+        let bank = test_bank();
+        let w = hard_rec(0).masks.to_weights();
+        for codec in [Quant::F32, Quant::F16, Quant::Int8] {
+            let entry = ProfileAggregates::prepack_quant(&w, &bank, 0, codec);
+            assert_eq!(entry.codec(), codec);
+            assert_eq!(
+                ProfileAggregates::projected_bytes_at(&bank, codec),
+                entry.bytes(),
+                "projection must match the real entry at {}",
+                codec.label()
+            );
+        }
+    }
+
+    #[test]
+    fn int8_agg_cache_holds_at_least_3x_more_profiles_at_equal_budget() {
+        let bank = test_bank();
+        let f32_bytes = ProfileAggregates::projected_bytes_at(&bank, Quant::F32);
+        let budget = 4 * f32_bytes; // room for exactly 4 f32 entries
+        let count_resident = |codec: Quant| {
+            let s = ProfileStore::with_config(StoreConfig {
+                shards: 1,
+                cache_capacity: 64,
+                agg_cache_bytes: budget,
+                quant: codec,
+                ..StoreConfig::default()
+            });
+            s.set_shared_aux(aux());
+            for id in 0..32u64 {
+                s.insert(id, hard_rec(id)).unwrap();
+                let (w, _, e, _) = s.serving_state_with_agg(id).unwrap();
+                s.agg_cache_put(id, Arc::new(ProfileAggregates::prepack_quant(&w, &bank, e, codec)));
+            }
+            s.stats()
+        };
+        let f32_stats = count_resident(Quant::F32);
+        let int8_stats = count_resident(Quant::Int8);
+        assert_eq!(f32_stats.agg_entries, 4);
+        assert!(
+            int8_stats.agg_entries >= 3 * f32_stats.agg_entries,
+            "int8 held {} entries vs {} at f32 under the same budget",
+            int8_stats.agg_entries,
+            f32_stats.agg_entries
+        );
+        assert_eq!(f32_stats.agg_bytes_saved, 0);
+        assert!(
+            int8_stats.agg_bytes_saved >= 2 * int8_stats.agg_bytes,
+            "int8 residents should report ~3× their bytes as saved: saved={} held={}",
+            int8_stats.agg_bytes_saved,
+            int8_stats.agg_bytes
+        );
+    }
+
+    #[test]
+    fn store_written_at_int8_reopens_and_legacy_f32_log_still_loads() {
+        let dir = std::env::temp_dir().join(format!("xpeft_store_quant_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = || StoreConfig {
+            shards: 2,
+            cache_capacity: 8,
+            quant: Quant::Int8,
+            ..StoreConfig::default()
+        };
+        let rec_aux = aux();
+        {
+            let s = ProfileStore::open(&dir, cfg()).unwrap();
+            s.insert(1, hard_rec(1)).unwrap();
+            s.insert(
+                2,
+                ProfileRecord { masks: hard_rec(2).masks, aux: Some(Arc::new(rec_aux.clone())) },
+            )
+            .unwrap();
+        }
+        let s = ProfileStore::open(&dir, cfg()).unwrap();
+        assert_eq!(s.len(), 2);
+        // masks survive exactly; aux round-trips within the int8 bound
+        assert_eq!(s.record(1).unwrap().masks, hard_rec(1).masks);
+        let back = s.record(2).unwrap();
+        let got = back.aux.as_ref().unwrap();
+        for (g, w) in [
+            (&got.ln_scale, &rec_aux.ln_scale),
+            (&got.ln_bias, &rec_aux.ln_bias),
+            (&got.head_w, &rec_aux.head_w),
+            (&got.head_b, &rec_aux.head_b),
+        ] {
+            let maxabs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = maxabs / 254.0 + 1e-7;
+            assert_eq!(g.len(), w.len());
+            for (&gv, &wv) in g.iter().zip(w) {
+                assert!((gv - wv).abs() <= bound, "aux value {wv} → {gv} past bound {bound}");
+            }
+        }
+        drop(s);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // a log written at the default f32 codec reopens under an int8
+        // config unchanged — the codec tag is per record, so legacy and
+        // mixed-codec segments always decode
+        let dir2 = std::env::temp_dir().join(format!("xpeft_store_legacy_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir2);
+        {
+            let s = ProfileStore::open(&dir2, StoreConfig { shards: 2, ..StoreConfig::default() })
+                .unwrap();
+            s.insert(
+                7,
+                ProfileRecord { masks: hard_rec(7).masks, aux: Some(Arc::new(rec_aux.clone())) },
+            )
+            .unwrap();
+        }
+        let s2 = ProfileStore::open(&dir2, cfg()).unwrap();
+        let rec = s2.record(7).unwrap();
+        assert_eq!(*rec.aux.as_ref().unwrap().as_ref(), rec_aux, "f32 records decode exactly");
+        drop(s2);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]
@@ -1844,7 +2059,7 @@ mod tests {
                 })
                 .collect();
             let mut frame = Vec::new();
-            encode_record(2, &hard_rec(2), &mut frame);
+            encode_record(2, &hard_rec(2), Quant::F32, &mut frame);
             s.insert(2, hard_rec(2)).unwrap();
             (sizes, frame.len() as u64)
         };

@@ -55,6 +55,7 @@ use crate::coordinator::telemetry::{Snapshot, Telemetry};
 use crate::data::batch::Batch;
 use crate::data::tokenizer::{Tokenizer, CLS};
 use crate::masks::MaskWeights;
+use crate::runtime::native::kernels::Quant;
 use crate::runtime::{Engine, RouteSegment, RoutingPlan};
 use crate::train::eval::{argmax, Evaluator};
 
@@ -150,15 +151,17 @@ impl Service {
         let mixed = cfg.mixed_batch;
         let seq = mc.seq;
         let bsz = mc.batch;
+        let quant = store.config().quant;
         if store.agg_cache_enabled()
-            && !store.agg_cache_admits(ProfileAggregates::projected_bytes(&bank))
+            && !store.agg_cache_admits(ProfileAggregates::projected_bytes_at(&bank, quant))
         {
             crate::warn_log!(
                 "service",
-                "aggregate cache budget admits no entry ({} B/shard < {} B/profile) — \
+                "aggregate cache budget admits no entry ({} B/shard < {} B/profile at {}) — \
                  effectively disabled; raise --agg-cache-mb or lower --shards",
                 store.config().agg_cache_bytes / store.shard_count().max(1),
-                ProfileAggregates::projected_bytes(&bank)
+                ProfileAggregates::projected_bytes_at(&bank, quant),
+                quant.label()
             );
         }
 
@@ -394,6 +397,7 @@ impl Service {
             return Vec::new();
         }
         let (lb, out_w) = (bank.layers * bank.b, evaluator.out_w);
+        let quant = store.config().quant;
         let mut segs: Vec<ResolvedSegment<'_>> = Vec::with_capacity(mb.segments.len());
         // Dropped segments (unknown profile, shape mismatch) still answer:
         // every request gets exactly one response, Failed here.
@@ -439,16 +443,28 @@ impl Service {
             let agg = match agg {
                 Some(a) => Some(a),
                 None if store.agg_cache_enabled()
-                    && store.agg_cache_admits(ProfileAggregates::projected_bytes(bank)) =>
+                    && store.agg_cache_admits(ProfileAggregates::projected_bytes_at(bank, quant)) =>
                 {
-                    let a = Arc::new(ProfileAggregates::prepack(&weights, bank, epoch));
+                    let a = Arc::new(ProfileAggregates::prepack_quant(&weights, bank, epoch, quant));
                     // a concurrently re-tuned entry is simply not cached;
                     // this batch still serves the fresh materialization
-                    let _ = store.agg_cache_put(pid, Arc::clone(&a));
+                    if store.agg_cache_put(pid, Arc::clone(&a)) {
+                        tel.record_agg_bytes_saved(
+                            ProfileAggregates::projected_bytes(bank).saturating_sub(a.bytes()),
+                        );
+                    }
                     Some(a)
                 }
                 None => None,
             };
+            // reduced-precision serving is configured but this segment has
+            // no aggregate in that codec (budget too small, or a stale f32
+            // entry from before a --quant change): it serves through the
+            // full-f32 materialize path — count it so the capacity win not
+            // materializing is observable instead of a mystery slowdown
+            if quant != Quant::F32 && !agg.as_ref().is_some_and(|a| a.codec() == quant) {
+                tel.record_quant_fallbacks(1);
+            }
             segs.push(ResolvedSegment { reqs: &mb.requests[lo..hi], weights, aux, agg });
         }
         let rows: usize = segs.iter().map(|s| s.reqs.len()).sum();
@@ -485,7 +501,7 @@ impl Service {
                 ln_bias: &s.aux.ln_bias,
                 head_w: &s.aux.head_w,
                 head_b: &s.aux.head_b,
-                prepacked: s.agg.as_ref().map(|a| a.layers.as_slice()),
+                prepacked: s.agg.as_ref().map(|a| &a.layers),
             });
         }
         let logits = match evaluator.forward_routed(&batch, &plan) {
@@ -497,6 +513,16 @@ impl Service {
                 // than dropping every request on the floor, and stop
                 // attempting mixed execution for the rest of this service
                 routed_ok.store(false, Ordering::Relaxed);
+                // segments whose quantized aggregate was counted on above
+                // now serve through the full-f32 per-profile path instead
+                // (the rest were already recorded at resolution time)
+                if quant != Quant::F32 {
+                    let n = segs
+                        .iter()
+                        .filter(|s| s.agg.as_ref().is_some_and(|a| a.codec() == quant))
+                        .count();
+                    tel.record_quant_fallbacks(n);
+                }
                 crate::warn_log!(
                     "service",
                     "mixed eval failed ({} profiles, {rows} rows), falling back to \

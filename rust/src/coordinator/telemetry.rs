@@ -45,6 +45,16 @@ pub struct Telemetry {
     pub conns_closed: AtomicU64,
     /// Frames rejected by the decoder (torn/oversized/corrupt).
     pub frame_errors: AtomicU64,
+    // --- reduced-precision serving counters -----------------------------
+    /// Mixed-batch segments served WITHOUT a quantized prepacked aggregate
+    /// while `--quant` is not f32 (cache budget too small, stale f32 entry,
+    /// or routed execution fell back to per-profile). A nonzero rate means
+    /// the configured codec is silently not paying off.
+    pub quant_dequant_fallbacks: AtomicU64,
+    /// Cumulative bytes the aggregate cache did NOT spend because entries
+    /// were admitted in a reduced-precision codec (f32-projected bytes
+    /// minus actual entry bytes, summed at admission).
+    pub agg_cache_bytes_saved: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     profiles_per_batch: Mutex<Vec<f64>>,
@@ -67,6 +77,8 @@ pub struct Snapshot {
     pub conns_opened: u64,
     pub conns_closed: u64,
     pub frame_errors: u64,
+    pub quant_dequant_fallbacks: u64,
+    pub agg_cache_bytes_saved: u64,
     pub mean_batch: f64,
     /// Mean distinct profiles per mixed batch (0 when mixed mode is off).
     pub mean_profiles_per_batch: f64,
@@ -161,6 +173,18 @@ impl Telemetry {
         self.frame_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `n` mixed-batch segments served without a quantized prepacked
+    /// aggregate while a reduced-precision codec is configured.
+    pub fn record_quant_fallbacks(&self, n: usize) {
+        self.quant_dequant_fallbacks.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Bytes the aggregate cache saved by admitting one reduced-precision
+    /// entry (f32-projected minus actual).
+    pub fn record_agg_bytes_saved(&self, bytes: usize) {
+        self.agg_cache_bytes_saved.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.latencies_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
@@ -181,6 +205,8 @@ impl Telemetry {
             conns_opened: self.conns_opened.load(Ordering::Relaxed),
             conns_closed: self.conns_closed.load(Ordering::Relaxed),
             frame_errors: self.frame_errors.load(Ordering::Relaxed),
+            quant_dequant_fallbacks: self.quant_dequant_fallbacks.load(Ordering::Relaxed),
+            agg_cache_bytes_saved: self.agg_cache_bytes_saved.load(Ordering::Relaxed),
             mean_batch: stats::mean(&sizes),
             mean_profiles_per_batch: stats::mean(&ppb),
             p50_latency_us: stats::quantile(&lat, 0.5),
@@ -242,7 +268,12 @@ mod tests {
         t.record_conn_opened();
         t.record_conn_closed();
         t.record_frame_error();
+        t.record_quant_fallbacks(2);
+        t.record_agg_bytes_saved(1024);
+        t.record_agg_bytes_saved(1024);
         let s = t.snapshot();
+        assert_eq!(s.quant_dequant_fallbacks, 2);
+        assert_eq!(s.agg_cache_bytes_saved, 2048);
         assert_eq!(s.admitted, 2);
         assert_eq!(s.rejected_overload, 1);
         assert_eq!(s.rejected_rate_limited, 1);

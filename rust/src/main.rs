@@ -76,8 +76,10 @@ COMMANDS
                     --smoke (CI-sized run) --tasks textgen,lamp,sst2,cb
                     --profiles 2 --n 100 --k 50 --steps 60 --max-eval 64
                     --sparsity-ks 16,50,80 --cold-start 2 --no-parity
-                    --max-train 96; writes SUITE_report.json (deterministic)
-                    and SUITE_telemetry.json (timing) under --out
+                    --max-train 96 --quant int8 (serve shared state
+                    reduced-precision); writes SUITE_report.json
+                    (deterministic) and SUITE_telemetry.json (timing)
+                    under --out
   train-profile     tune one profile: --task sst2 --mode soft|hard|sa|ho
                     --n 100 --k 50 --steps 300 --lr 0.02 --seed 42
   serve             multi-profile serving demo: --profiles 8 --requests 256
@@ -88,7 +90,10 @@ COMMANDS
                     --no-mixed-batch (per-profile batching; mixed
                     cross-profile batches are the default — one trunk
                     forward per batch) --agg-cache-mb 64 (prepacked
-                    aggregate-adapter cache; 0 disables) --fsync (fsync the
+                    aggregate-adapter cache; 0 disables) --quant f32|f16|int8
+                    (storage codec for cached aggregates + persisted aux;
+                    int8 fits ~4x the profiles per cache MiB, dequantized
+                    inside the serving GEMM; default f32) --fsync (fsync the
                     append log on every commit)
                     --listen HOST:PORT serves over TCP instead of the demo
                     stream: --serve-secs N (0 = until killed) plus overload
@@ -316,6 +321,13 @@ fn serve(args: &Args) -> Result<()> {
             if agg_total > 0 { st.agg_hits as f64 / agg_total as f64 } else { 0.0 },
             st.agg_evictions
         );
+        if st.agg_bytes_saved > 0 || snap.quant_dequant_fallbacks > 0 {
+            println!(
+                "  quant           {:.1} KiB saved vs f32 aggregates, {} dequant fallbacks",
+                st.agg_bytes_saved as f64 / 1024.0,
+                snap.quant_dequant_fallbacks
+            );
+        }
     }
     Ok(())
 }

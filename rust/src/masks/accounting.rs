@@ -48,6 +48,17 @@ impl Dims {
         self.adapter_trainable_params() * 4
     }
 
+    /// Aggregate-cache bytes per profile at a storage codec: the cached
+    /// Â/B̂ pair is `2·L·d·b` weights, held at `bytes_per_weight` each
+    /// (`4` f32, `2` f16, `1` int8 — int8's per-panel scales amortize to
+    /// noise and are excluded from this closed form; the store's
+    /// `projected_bytes_at` is the exact layout-aware figure). This is
+    /// the `--agg-cache-mb` capacity lever: int8 holds ~4× the hot
+    /// profiles of f32 in the same budget.
+    pub fn agg_cache_bytes(&self, codec: crate::runtime::native::kernels::Quant) -> usize {
+        2 * self.layers * self.d * self.b * codec.bytes_per_weight()
+    }
+
     /// Classification-head parameters (`d·c + c`).
     pub fn head_params(&self, c: usize) -> usize {
         self.d * c + c
@@ -137,6 +148,17 @@ mod tests {
             T1.cumulative_bytes_xpeft_hard(bank, bank),
             T1.cumulative_bytes_adapter(bank)
         );
+    }
+
+    #[test]
+    fn agg_cache_bytes_scale_with_codec() {
+        use crate::runtime::native::kernels::Quant;
+        // f32 cache entry = adapter_bytes (same 2·L·d·b weights at 4 B)
+        assert_eq!(T1.agg_cache_bytes(Quant::F32), T1.adapter_bytes());
+        assert_eq!(T1.agg_cache_bytes(Quant::F16) * 2, T1.agg_cache_bytes(Quant::F32));
+        assert_eq!(T1.agg_cache_bytes(Quant::Int8) * 4, T1.agg_cache_bytes(Quant::F32));
+        // bert-base: int8 turns the 3.5 MB f32 entry into ~0.9 MB
+        assert_eq!(T1.agg_cache_bytes(Quant::Int8), 884736);
     }
 
     #[test]

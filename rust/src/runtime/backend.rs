@@ -39,7 +39,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
-use super::native::kernels::PackedPanels;
+use super::native::kernels::AggPanels;
 use super::tensor::Tensor;
 
 /// One contiguous row segment of a mixed-profile serving batch: all rows
@@ -59,9 +59,10 @@ pub struct RouteSegment<'a> {
     pub head_w: &'a [f32],
     pub head_b: &'a [f32],
     /// Per-layer cached aggregates `(Â, B̂)`, prepacked in the blocked-GEMM
-    /// B-panel layout — when present, the site skips both `Σ w_i·W_i`
-    /// assembly and `pack_b` (the cached-prepacked plan).
-    pub prepacked: Option<&'a [(PackedPanels, PackedPanels)]>,
+    /// B-panel layout (f32 or a quantized codec, per the serving `--quant`
+    /// tier) — when present, the site skips both `Σ w_i·W_i` assembly and
+    /// `pack_b` (the cached-prepacked plan).
+    pub prepacked: Option<&'a AggPanels>,
 }
 
 /// Row→profile routing for one mixed-profile batch: segments must tile the

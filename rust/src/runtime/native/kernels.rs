@@ -289,20 +289,26 @@ pub fn pack_b_panels(b: &[f32], kdim: usize, ncols: usize) -> PackedPanels {
     PackedPanels { kdim, ncols, data }
 }
 
-/// Blocked GEMM `out[m, ncols] = A[m, kdim] @ B` where B arrives prepacked.
-/// Identical blocking, micro-kernel and accumulation order to
-/// [`gemm_strided`] — results are bitwise equal to the unpacked path —
-/// minus the per-call `pack_b` traffic. A strides express transposes as in
-/// `gemm_strided` (element `(i, kk)` at `a[i·ars + kk·acs]`).
-pub fn gemm_packed_into(
-    out: &mut [f32],
-    m: usize,
-    a: &[f32],
-    ars: usize,
-    acs: usize,
-    packed: &PackedPanels,
-) {
-    let (kdim, n) = (packed.kdim, packed.ncols);
+/// How a prepacked B-panel sequence is stored: full-precision f32 panels
+/// or a quantized codec that is dequantized panel-at-a-time at GEMM time.
+enum PanelSrc<'a> {
+    F32(&'a PackedPanels),
+    Quant(&'a QuantPanels),
+}
+
+/// Shared panel-walk driver behind [`gemm_packed_into`] and
+/// [`gemm_quant_into`]: identical blocking, micro-kernel and accumulation
+/// order to [`gemm_strided`], walking panels in the exact order
+/// [`pack_b_panels`] emitted them. The f32 arm consumes panels in place
+/// (bitwise equal to the unpacked path); the quant arm dequantizes each
+/// `KC×NC` panel into the thread-local B pack buffer just before the
+/// micro-kernel loop consumes it — one panel of f32 scratch at a time,
+/// never a full-matrix f32 copy.
+fn gemm_panels_into(out: &mut [f32], m: usize, a: &[f32], ars: usize, acs: usize, src: PanelSrc) {
+    let (kdim, n) = match &src {
+        PanelSrc::F32(p) => (p.kdim, p.ncols),
+        PanelSrc::Quant(q) => (q.kdim, q.ncols),
+    };
     debug_assert_eq!(out.len(), m * n);
     if m == 0 || n == 0 {
         return;
@@ -312,17 +318,28 @@ pub fn gemm_packed_into(
         return;
     }
     PACK.with(|cell| {
-        let (pa, _) = &mut *cell.borrow_mut();
+        let bufs = &mut *cell.borrow_mut();
+        let (pa, deq) = (&mut bufs.0, &mut bufs.1);
         pa.resize(MC * KC, 0.0);
+        deq.resize(KC * NC, 0.0);
         let mut cursor = 0usize;
+        let mut panel_idx = 0usize;
         for jc in (0..n).step_by(NC) {
             let nc = NC.min(n - jc);
             let nr_strips = nc.div_ceil(NR);
             for pc in (0..kdim).step_by(KC) {
                 let kc = KC.min(kdim - pc);
                 let first = pc == 0;
-                let pb = &packed.data[cursor..cursor + nr_strips * NR * kc];
-                cursor += nr_strips * NR * kc;
+                let len = nr_strips * NR * kc;
+                let pb: &[f32] = match &src {
+                    PanelSrc::F32(p) => &p.data[cursor..cursor + len],
+                    PanelSrc::Quant(q) => {
+                        q.dequant_panel_into(panel_idx, cursor, &mut deq[..len]);
+                        &deq[..len]
+                    }
+                };
+                cursor += len;
+                panel_idx += 1;
                 for ic in (0..m).step_by(MC) {
                     let mc = MC.min(m - ic);
                     let mr_strips = mc.div_ceil(MR);
@@ -351,50 +368,487 @@ pub fn gemm_packed_into(
     });
 }
 
+/// Blocked GEMM `out[m, ncols] = A[m, kdim] @ B` where B arrives prepacked.
+/// Identical blocking, micro-kernel and accumulation order to
+/// [`gemm_strided`] — results are bitwise equal to the unpacked path —
+/// minus the per-call `pack_b` traffic. A strides express transposes as in
+/// `gemm_strided` (element `(i, kk)` at `a[i·ars + kk·acs]`).
+pub fn gemm_packed_into(
+    out: &mut [f32],
+    m: usize,
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    packed: &PackedPanels,
+) {
+    gemm_panels_into(out, m, a, ars, acs, PanelSrc::F32(packed));
+}
+
+/// Blocked GEMM `out[m, ncols] = A[m, kdim] @ B` where B arrives as
+/// quantized prepacked panels ([`QuantPanels`]). Each panel is dequantized
+/// into the thread-local scratch arena immediately before the micro-kernel
+/// consumes it, so the working set is one `KC×NC` f32 panel regardless of
+/// the matrix size — the f32 blocked path ([`gemm_packed_into`]) is the
+/// parity oracle for this kernel.
+pub fn gemm_quant_into(
+    out: &mut [f32],
+    m: usize,
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    quant: &QuantPanels,
+) {
+    gemm_panels_into(out, m, a, ars, acs, PanelSrc::Quant(quant));
+}
+
+// ---------------------------------------------------------------------------
+// reduced-precision storage tier (f16 / int8 with per-panel scales)
+// ---------------------------------------------------------------------------
+
+/// Storage codec for the shared serving state (adapter bank + aggregate
+/// cache). `F32` is the identity tier: full precision, exact parity with
+/// the training numerics. `F16` halves the bytes; `Int8` quarters them
+/// with one f32 scale per quantization group (GEMM panel or bank slab).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Quant {
+    #[default]
+    F32,
+    F16,
+    Int8,
+}
+
+impl Quant {
+    /// Parse the `--quant {f32,f16,int8}` CLI value.
+    pub fn parse(s: &str) -> Option<Quant> {
+        match s {
+            "f32" => Some(Quant::F32),
+            "f16" => Some(Quant::F16),
+            "int8" => Some(Quant::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Quant::F32 => "f32",
+            Quant::F16 => "f16",
+            Quant::Int8 => "int8",
+        }
+    }
+
+    /// Stored bytes per weight (scales excluded — they amortize over a
+    /// whole panel/slab).
+    pub fn bytes_per_weight(self) -> usize {
+        match self {
+            Quant::F32 => 4,
+            Quant::F16 => 2,
+            Quant::Int8 => 1,
+        }
+    }
+}
+
+/// f32 → IEEE-754 binary16, round-to-nearest-even, with subnormal halves
+/// produced on underflow (values below 2⁻²⁵ round to ±0; overflow clamps
+/// to ±∞; NaN payloads keep a set mantissa bit).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp8 = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp8 == 255 {
+        // Inf / NaN; keep NaN ≠ Inf by forcing a mantissa bit
+        let payload = (man >> 13) as u16 | u16::from(man != 0);
+        return sign | 0x7c00 | payload;
+    }
+    let exp = exp8 - 127 + 15;
+    if exp >= 31 {
+        return sign | 0x7c00; // overflow → ±Inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → ±0
+        }
+        // subnormal half: shift the implicit-1 mantissa into 10 bits
+        let m = man | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        // rounding may carry into the smallest normal (0x0400) — still valid
+        return sign | (half + u32::from(round_up)) as u16;
+    }
+    let half = man >> 13;
+    let rem = man & 0x1fff;
+    let mut out = ((exp as u32) << 10) | half;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        out += 1; // carry may bump the exponent (and 30→31 is a clean ±Inf)
+    }
+    sign | out as u16
+}
+
+/// IEEE-754 binary16 → f32 (exact: every half value, subnormals included,
+/// is representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal half = man·2⁻²⁴: renormalize into an f32 exponent
+            let lead = 31 - man.leading_zeros(); // 0..=9
+            let e = lead + 103; // (lead − 24) + 127
+            let m = (man << (23 - lead)) & 0x007f_ffff;
+            sign | (e << 23) | m
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize `src` into int8 with a single shared scale (`maxabs/127`),
+/// returning the scale. Symmetric, round-to-nearest; an all-zero group
+/// stores zeros with scale 0.
+fn quantize_i8(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let maxabs = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if maxabs == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / maxabs;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    maxabs / 127.0
+}
+
+/// Quantized payload shared by [`QuantPanels`] (per-GEMM-panel scales) and
+/// [`QuantSlabs`] (per-adapter-slab scales).
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantData {
+    /// IEEE binary16, elementwise (no scales needed).
+    F16(Vec<u16>),
+    /// Symmetric int8 with one f32 scale per quantization group.
+    Int8 { data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl QuantData {
+    pub fn codec(&self) -> Quant {
+        match self {
+            QuantData::F16(_) => Quant::F16,
+            QuantData::Int8 { .. } => Quant::Int8,
+        }
+    }
+
+    /// Heap bytes held (values + scales) — the cache-accounting figure.
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantData::F16(d) => d.len() * 2,
+            QuantData::Int8 { data, scales } => data.len() + scales.len() * 4,
+        }
+    }
+
+    /// Dequantize `len` elements starting at `offset`, group `group`.
+    fn dequant_into(&self, group: usize, offset: usize, out: &mut [f32]) {
+        match self {
+            QuantData::F16(d) => {
+                for (o, &h) in out.iter_mut().zip(&d[offset..offset + out.len()]) {
+                    *o = f16_to_f32(h);
+                }
+            }
+            QuantData::Int8 { data, scales } => {
+                let s = scales[group];
+                for (o, &v) in out.iter_mut().zip(&data[offset..offset + out.len()]) {
+                    *o = v as f32 * s;
+                }
+            }
+        }
+    }
+}
+
+/// [`PackedPanels`] in a reduced-precision codec: same panel order and
+/// strip layout, values stored f16 or int8 (one scale per `KC×NC` panel),
+/// dequantized panel-at-a-time inside [`gemm_quant_into`]. This is the
+/// aggregate-cache representation under `--quant f16|int8` — 2×/4× more
+/// cached profiles per `--agg-cache-mb` than the f32 panels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantPanels {
+    pub kdim: usize,
+    pub ncols: usize,
+    pub q: QuantData,
+}
+
+impl QuantPanels {
+    pub fn codec(&self) -> Quant {
+        self.q.codec()
+    }
+
+    /// Heap bytes held by the quantized form (values + panel scales).
+    pub fn bytes(&self) -> usize {
+        self.q.bytes()
+    }
+
+    /// Dequantize one packed panel (`panel`-th in emit order, starting at
+    /// flat `offset`) into `out`.
+    fn dequant_panel_into(&self, panel: usize, offset: usize, out: &mut [f32]) {
+        self.q.dequant_into(panel, offset, out);
+    }
+
+    /// Full dequantization back to f32 panels — the parity/round-trip
+    /// helper (tests, fallbacks); the GEMM path never calls this.
+    pub fn dequantize(&self) -> PackedPanels {
+        let len = packed_panels_len(self.kdim, self.ncols);
+        let mut data = vec![0.0f32; len];
+        let mut cursor = 0usize;
+        for (panel, (_, plen)) in panel_spans(self.kdim, self.ncols).enumerate() {
+            self.q
+                .dequant_into(panel, cursor, &mut data[cursor..cursor + plen]);
+            cursor += plen;
+        }
+        PackedPanels { kdim: self.kdim, ncols: self.ncols, data }
+    }
+}
+
+/// `(offset, len)` of each packed panel in [`pack_b_panels`] emit order.
+fn panel_spans(kdim: usize, ncols: usize) -> impl Iterator<Item = (usize, usize)> {
+    let mut spans = Vec::new();
+    let mut offset = 0usize;
+    for jc in (0..ncols).step_by(NC) {
+        let nc = NC.min(ncols - jc);
+        let strips = nc.div_ceil(NR);
+        for pc in (0..kdim).step_by(KC) {
+            let kc = KC.min(kdim - pc);
+            let len = strips * NR * kc;
+            spans.push((offset, len));
+            offset += len;
+        }
+    }
+    spans.into_iter()
+}
+
+/// Exact stored-byte count of [`quantize_b_panels`]' output for a
+/// `[kdim, ncols]` matrix at `codec` — the quantized analogue of
+/// [`packed_panels_len`], so callers can budget a quantized aggregate
+/// without materializing it. `Quant::F32` reports the f32 packed bytes.
+pub fn quant_panels_bytes(kdim: usize, ncols: usize, codec: Quant) -> usize {
+    let elems = packed_panels_len(kdim, ncols);
+    match codec {
+        Quant::F32 => elems * 4,
+        Quant::F16 => elems * 2,
+        Quant::Int8 => elems + panel_spans(kdim, ncols).count() * 4,
+    }
+}
+
+/// Quantize an already-packed panel sequence, one scale per panel (int8).
+pub fn quantize_panels(packed: &PackedPanels, codec: Quant) -> QuantPanels {
+    let q = match codec {
+        Quant::F32 => panic!("Quant::F32 is the PackedPanels tier, not a QuantPanels codec"),
+        Quant::F16 => QuantData::F16(packed.data.iter().map(|&v| f32_to_f16(v)).collect()),
+        Quant::Int8 => {
+            let mut data = vec![0i8; packed.data.len()];
+            let mut scales = Vec::new();
+            for (offset, len) in panel_spans(packed.kdim, packed.ncols) {
+                scales.push(quantize_i8(
+                    &packed.data[offset..offset + len],
+                    &mut data[offset..offset + len],
+                ));
+            }
+            QuantData::Int8 { data, scales }
+        }
+    };
+    QuantPanels { kdim: packed.kdim, ncols: packed.ncols, q }
+}
+
+/// Prepack a row-major `[kdim, ncols]` matrix straight into quantized
+/// panels — [`pack_b_panels`] followed by per-panel quantization.
+pub fn quantize_b_panels(b: &[f32], kdim: usize, ncols: usize, codec: Quant) -> QuantPanels {
+    quantize_panels(&pack_b_panels(b, kdim, ncols), codec)
+}
+
+/// A quantized `[rows, slab]` bank tensor (row-major adapter slabs), one
+/// scale per row so each adapter's dynamic range quantizes independently.
+/// This is the `--quant` storage form of the shared adapter bank; the
+/// serving aggregation `Â = Σ w_i·A_i` dequantizes only the k gathered
+/// rows ([`aggregate_quant_bank_into`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSlabs {
+    pub rows: usize,
+    pub slab: usize,
+    pub q: QuantData,
+}
+
+impl QuantSlabs {
+    pub fn codec(&self) -> Quant {
+        self.q.codec()
+    }
+
+    /// Heap bytes held (values + per-row scales).
+    pub fn bytes(&self) -> usize {
+        self.q.bytes()
+    }
+
+    /// Dequantize one adapter row (slab) into `out [slab]`.
+    pub fn dequant_row_into(&self, row: usize, out: &mut [f32]) {
+        self.q.dequant_into(row, row * self.slab, out);
+    }
+
+    /// Full dequantization back to the row-major f32 tensor.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.slab];
+        for r in 0..self.rows {
+            self.q
+                .dequant_into(r, r * self.slab, &mut out[r * self.slab..(r + 1) * self.slab]);
+        }
+        out
+    }
+}
+
+/// Quantize a row-major `[rows, slab]` tensor with one scale per row.
+pub fn quantize_slabs(data: &[f32], rows: usize, slab: usize, codec: Quant) -> QuantSlabs {
+    debug_assert_eq!(data.len(), rows * slab);
+    let q = match codec {
+        Quant::F32 => panic!("Quant::F32 is the plain f32 tier, not a QuantSlabs codec"),
+        Quant::F16 => QuantData::F16(data.iter().map(|&v| f32_to_f16(v)).collect()),
+        Quant::Int8 => {
+            let mut qd = vec![0i8; data.len()];
+            let mut scales = Vec::with_capacity(rows);
+            for r in 0..rows {
+                scales.push(quantize_i8(
+                    &data[r * slab..(r + 1) * slab],
+                    &mut qd[r * slab..(r + 1) * slab],
+                ));
+            }
+            QuantData::Int8 { data: qd, scales }
+        }
+    };
+    QuantSlabs { rows, slab, q }
+}
+
+/// Quantized-bank aggregation: `out = Σ_i w[i] · dequant(slabs[row0+i])`
+/// over `weights.len()` rows starting at `row0`, overwriting `out [slab]`.
+/// Zero weights skip their slab entirely (the k-hot gather), and the
+/// dequantization folds into the accumulation (`w·s` per int8 row) — no
+/// f32 copy of any slab is materialized.
+pub fn aggregate_quant_bank_into(
+    out: &mut [f32],
+    weights: &[f32],
+    slabs: &QuantSlabs,
+    row0: usize,
+) {
+    let slab = slabs.slab;
+    debug_assert_eq!(out.len(), slab);
+    debug_assert!(row0 + weights.len() <= slabs.rows);
+    out.fill(0.0);
+    for (i, &w) in weights.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        let row = row0 + i;
+        match &slabs.q {
+            QuantData::F16(d) => {
+                let src = &d[row * slab..(row + 1) * slab];
+                for (o, &h) in out.iter_mut().zip(src) {
+                    *o += w * f16_to_f32(h);
+                }
+            }
+            QuantData::Int8 { data, scales } => {
+                let ws = w * scales[row];
+                let src = &data[row * slab..(row + 1) * slab];
+                for (o, &v) in out.iter_mut().zip(src) {
+                    *o += ws * v as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Allocating wrapper over [`aggregate_quant_bank_into`].
+pub fn aggregate_quant_bank(weights: &[f32], slabs: &QuantSlabs, row0: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; slabs.slab];
+    aggregate_quant_bank_into(&mut out, weights, slabs, row0);
+    out
+}
+
 // ---------------------------------------------------------------------------
 // matmul family (row-major), all routed through the blocked kernel
 // ---------------------------------------------------------------------------
 
+/// Which of the three row-major matmul variants a call means. Each variant
+/// is just a pair of operand stride tuples for [`gemm_strided`]; keeping
+/// the mapping in one place ([`matmul_kind_into`]) is what stops every new
+/// storage tier (packed, f16, int8) from re-tripling the wrapper surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatKind {
+    /// `a [m,k] @ b [k,n]` — the forward product.
+    AB,
+    /// `aᵀ @ b` for `a [k,m]`, `b [k,n]` — gradient of weights.
+    AtB,
+    /// `a @ bᵀ` for `a [m,k]`, `b [n,k]` — gradient of activations.
+    ABt,
+}
+
+/// The single strided entry point behind the whole `matmul*` family:
+/// `out [m,n] = op(a, b)` per [`MatKind`], overwriting `out`.
+pub fn matmul_kind_into(
+    kind: MatKind,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let ((ars, acs, alen), (brs, bcs, blen)) = match kind {
+        MatKind::AB => ((k, 1, m * k), (n, 1, k * n)),
+        MatKind::AtB => ((1, m, k * m), (n, 1, k * n)),
+        MatKind::ABt => ((k, 1, m * k), (1, k, n * k)),
+    };
+    debug_assert_eq!(a.len(), alen);
+    debug_assert_eq!(b.len(), blen);
+    gemm_strided(out, m, n, k, a, ars, acs, b, brs, bcs);
+}
+
+/// Allocating wrapper over [`matmul_kind_into`].
+pub fn matmul_kind(kind: MatKind, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_kind_into(kind, &mut out, a, b, m, k, n);
+    out
+}
+
 /// `out = a [m,k] @ b [k,n]`, overwriting `out [m,n]`.
 pub fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    gemm_strided(out, m, n, k, a, k, 1, b, n, 1);
+    matmul_kind_into(MatKind::AB, out, a, b, m, k, n);
 }
 
 /// `out = aᵀ @ b` for `a [k,m]`, `b [k,n]` (gradient of weights).
 pub fn matmul_at_b_into(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    gemm_strided(out, m, n, k, a, 1, m, b, n, 1);
+    matmul_kind_into(MatKind::AtB, out, a, b, m, k, n);
 }
 
 /// `out = a @ bᵀ` for `a [m,k]`, `b [n,k]` (gradient of activations).
 pub fn matmul_a_bt_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    gemm_strided(out, m, n, k, a, k, 1, b, 1, k);
+    matmul_kind_into(MatKind::ABt, out, a, b, m, k, n);
 }
 
 /// `a [m,k] @ b [k,n] -> [m,n]` (allocating convenience wrapper).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    matmul_into(&mut out, a, b, m, k, n);
-    out
+    matmul_kind(MatKind::AB, a, b, m, k, n)
 }
 
 /// `aᵀ @ b` for `a [k,m]`, `b [k,n]` -> `[m,n]`.
 pub fn matmul_at_b(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    matmul_at_b_into(&mut out, a, b, k, m, n);
-    out
+    matmul_kind(MatKind::AtB, a, b, m, k, n)
 }
 
 /// `a @ bᵀ` for `a [m,k]`, `b [n,k]` -> `[m,n]`.
 pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    matmul_a_bt_into(&mut out, a, b, m, k, n);
-    out
+    matmul_kind(MatKind::ABt, a, b, m, k, n)
 }
 
 /// Broadcast-add a `[n]` bias over `[rows, n]`.
@@ -780,6 +1234,10 @@ pub enum GatherW<'a> {
     /// Cached prepacked form of `Ŵ` — the plan that wins whenever the
     /// aggregate cache hits: no `Σ w_i·W_i` assembly and no `pack_b`.
     Packed(&'a PackedPanels),
+    /// Cached prepacked aggregate in a reduced-precision codec
+    /// ([`QuantPanels`]): same no-assembly/no-pack win as `Packed`, with
+    /// panels dequantized inside the micro-kernel loop.
+    Quant(&'a QuantPanels),
 }
 
 /// One contiguous row segment of a mixed-profile batch at an adapter site:
@@ -818,6 +1276,83 @@ pub fn gather_gemm_grouped_into(
                 debug_assert_eq!((p.kdim, p.ncols), (din, dout));
                 gemm_packed_into(os, rows, xs, din, 1, p);
             }
+            GatherW::Quant(q) => {
+                debug_assert_eq!((q.kdim, q.ncols), (din, dout));
+                gemm_quant_into(os, rows, xs, din, 1, q);
+            }
+        }
+    }
+}
+
+/// A profile's prepacked per-layer `(Â, B̂)` aggregates in whichever
+/// storage tier the serving config selected — the aggregate-cache value
+/// type shared by the store, the router, and the model. Each layer pair is
+/// `(Â [d, b], B̂ [b, d])` in [`pack_b_panels`] panel order.
+#[derive(Debug, Clone)]
+pub enum AggPanels {
+    /// Full-precision tier (`--quant f32`, the parity default).
+    F32(Vec<(PackedPanels, PackedPanels)>),
+    /// Reduced-precision tier (`--quant f16|int8`).
+    Quant(Vec<(QuantPanels, QuantPanels)>),
+}
+
+impl AggPanels {
+    pub fn codec(&self) -> Quant {
+        match self {
+            AggPanels::F32(_) => Quant::F32,
+            AggPanels::Quant(layers) => layers
+                .first()
+                .map(|(a, _)| a.codec())
+                .unwrap_or(Quant::F32),
+        }
+    }
+
+    /// Number of layers held.
+    pub fn len(&self) -> usize {
+        match self {
+            AggPanels::F32(layers) => layers.len(),
+            AggPanels::Quant(layers) => layers.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(Â.kdim, Â.ncols, B̂.kdim, B̂.ncols)` of layer `l` — the shape
+    /// check serving runs before trusting a cached aggregate.
+    pub fn dims(&self, l: usize) -> (usize, usize, usize, usize) {
+        match self {
+            AggPanels::F32(layers) => {
+                let (a, b) = &layers[l];
+                (a.kdim, a.ncols, b.kdim, b.ncols)
+            }
+            AggPanels::Quant(layers) => {
+                let (a, b) = &layers[l];
+                (a.kdim, a.ncols, b.kdim, b.ncols)
+            }
+        }
+    }
+
+    /// Heap bytes held across all layers (values + scales).
+    pub fn bytes(&self) -> usize {
+        match self {
+            AggPanels::F32(layers) => layers.iter().map(|(a, b)| a.bytes() + b.bytes()).sum(),
+            AggPanels::Quant(layers) => layers.iter().map(|(a, b)| a.bytes() + b.bytes()).sum(),
+        }
+    }
+
+    /// Bytes an equivalent f32 entry would hold — the baseline the
+    /// "bytes saved by quantization" accounting subtracts from.
+    pub fn f32_equiv_bytes(&self) -> usize {
+        match self {
+            AggPanels::F32(_) => self.bytes(),
+            AggPanels::Quant(layers) => layers
+                .iter()
+                .map(|(a, b)| {
+                    4 * (packed_panels_len(a.kdim, a.ncols) + packed_panels_len(b.kdim, b.ncols))
+                })
+                .sum(),
         }
     }
 }
@@ -1311,5 +1846,217 @@ mod tests {
         let zeros = vec![0.0; bneck];
         let out = adapter_forward(&x, rows, d, bneck, &a, &b, &ones, &zeros);
         assert_eq!(out, x);
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_for_representable_values() {
+        // Every binary16 bit pattern (normals, subnormals, zeros, infs)
+        // must survive f16 → f32 → f16 bit-for-bit; NaNs stay NaN.
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32(h);
+            if f.is_nan() {
+                assert!(f32_to_f16(f) & 0x7c00 == 0x7c00 && f32_to_f16(f) & 0x03ff != 0);
+                continue;
+            }
+            assert_eq!(f32_to_f16(f), h, "pattern {h:#06x} → {f} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn f16_quantization_error_is_relatively_bounded() {
+        // Normal-range values round to within 2⁻¹¹ relative error
+        // (half a ulp of a 10-bit mantissa).
+        let mut rng = Rng::new(21);
+        for _ in 0..10_000 {
+            let v = rng.uniform_in(-1000.0, 1000.0);
+            let back = f16_to_f32(f32_to_f16(v));
+            assert!(
+                (back - v).abs() <= v.abs() * (1.0 / 2048.0) + 1e-24,
+                "{v} → {back}"
+            );
+        }
+        // Subnormal half territory: absolute error bounded by half the
+        // subnormal step 2⁻²⁴.
+        for &v in &[1.0e-5f32, 5.0e-6, 5.9e-8, -3.1e-7, 2.0f32.powi(-24)] {
+            let back = f16_to_f32(f32_to_f16(v));
+            assert!((back - v).abs() <= 2.0f32.powi(-25), "{v} → {back}");
+        }
+        // Below half the smallest subnormal → ±0, overflow → ±Inf.
+        assert_eq!(f16_to_f32(f32_to_f16(2.0f32.powi(-26))), 0.0);
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1.0e6)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn int8_panel_round_trip_error_within_per_panel_bound() {
+        // int8 with a per-panel scale: worst-case error is half a
+        // quantization step, i.e. maxabs(panel)/254.
+        let mut rng = Rng::new(33);
+        for &(kdim, ncols) in &[(7usize, 5usize), (64, 8), (300, 130)] {
+            let b = randv(&mut rng, kdim * ncols);
+            let packed = pack_b_panels(&b, kdim, ncols);
+            let q = quantize_panels(&packed, Quant::Int8);
+            assert_eq!(q.bytes(), quant_panels_bytes(kdim, ncols, Quant::Int8));
+            let deq = q.dequantize();
+            assert_eq!(deq.data.len(), packed.data.len());
+            for (offset, len) in panel_spans(kdim, ncols) {
+                let panel = &packed.data[offset..offset + len];
+                let maxabs = panel.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let bound = maxabs / 254.0 + 1e-7;
+                for (idx, (&orig, &back)) in
+                    panel.iter().zip(&deq.data[offset..offset + len]).enumerate()
+                {
+                    assert!(
+                        (back - orig).abs() <= bound,
+                        "panel@{offset} elem {idx}: {orig} → {back} (bound {bound})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_all_zero_panel_round_trips_exactly() {
+        let packed = pack_b_panels(&vec![0.0f32; 40 * 20], 40, 20);
+        let q = quantize_panels(&packed, Quant::Int8);
+        assert_eq!(q.dequantize().data, packed.data);
+    }
+
+    #[test]
+    fn gemm_quant_f16_matches_dequantized_oracle_bitwise() {
+        // The quant GEMM must equal running the f32 blocked GEMM on the
+        // dequantized panels — dequantization order/placement must not
+        // perturb the accumulation.
+        let mut rng = Rng::new(41);
+        for &(m, k, n) in &[(4usize, 8usize, 16usize), (33, 130, 140), (100, 64, 8)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            for codec in [Quant::F16, Quant::Int8] {
+                let q = quantize_b_panels(&b, k, n, codec);
+                let mut got = vec![0.0f32; m * n];
+                gemm_quant_into(&mut got, m, &a, k, 1, &q);
+                let deq = q.dequantize();
+                let mut want = vec![0.0f32; m * n];
+                gemm_packed_into(&mut want, m, &a, k, 1, &deq);
+                assert_eq!(got, want, "codec {} shape {m}x{k}x{n}", codec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_quant_int8_close_to_f32_reference() {
+        // End-to-end error bound vs the exact f32 GEMM: per output element
+        // the quantization error accumulates over k terms, each bounded by
+        // |a|·maxabs(B)/254.
+        let mut rng = Rng::new(47);
+        let (m, k, n) = (16usize, 64usize, 48usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let q = quantize_b_panels(&b, k, n, Quant::Int8);
+        let mut got = vec![0.0f32; m * n];
+        gemm_quant_into(&mut got, m, &a, k, 1, &q);
+        let want = matmul(&a, &b, m, k, n);
+        let bmax = b.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+        for i in 0..m {
+            let arow_l1: f32 = a[i * k..(i + 1) * k].iter().map(|v| v.abs()).sum();
+            let bound = arow_l1 * bmax / 254.0 + 1e-5;
+            for j in 0..n {
+                let (g, w) = (got[i * n + j], want[i * n + j]);
+                assert!((g - w).abs() <= bound, "({i},{j}): {g} vs {w} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_gather_quant_segment_matches_packed_oracle() {
+        let mut rng = Rng::new(53);
+        let (din, dout, rows) = (24usize, 20usize, 9usize);
+        let x = randv(&mut rng, rows * din);
+        let w = randv(&mut rng, din * dout);
+        let packed = pack_b_panels(&w, din, dout);
+        let sentinel = -7.25f32;
+        for codec in [Quant::F16, Quant::Int8] {
+            let q = quantize_panels(&packed, codec);
+            let mut got = vec![sentinel; rows * dout];
+            let mut want = vec![sentinel; rows * dout];
+            // rows [2,7) through the quant plan, rest untouched
+            let qsegs = [GatherSegment { lo: 2, hi: 7, w: GatherW::Quant(&q) }];
+            gather_gemm_grouped_into(&mut got, &x, din, dout, &qsegs, None);
+            let deq = q.dequantize();
+            let psegs = [GatherSegment { lo: 2, hi: 7, w: GatherW::Packed(&deq) }];
+            gather_gemm_grouped_into(&mut want, &x, din, dout, &psegs, None);
+            assert_eq!(got, want, "codec {}", codec.label());
+            assert!(got[..2 * dout].iter().all(|&v| v == sentinel));
+            assert!(got[7 * dout..].iter().all(|&v| v == sentinel));
+        }
+    }
+
+    #[test]
+    fn quant_slab_aggregation_matches_dequantized_oracle() {
+        // Σ w_i·dequant(row_i) must equal aggregating the dequantized f32
+        // bank — zero weights skip rows, per-row scales fold into w.
+        let mut rng = Rng::new(59);
+        let (rows, slab) = (12usize, 40usize);
+        let bank = randv(&mut rng, rows * slab);
+        let mut weights = randv(&mut rng, 6);
+        weights[1] = 0.0;
+        weights[4] = 0.0;
+        let row0 = 3usize;
+        for codec in [Quant::F16, Quant::Int8] {
+            let slabs = quantize_slabs(&bank, rows, slab, codec);
+            assert!(slabs.bytes() < rows * slab * 4, "quantized must shrink");
+            let got = aggregate_quant_bank(&weights, &slabs, row0);
+            let deq = slabs.dequantize();
+            let mut want = vec![0.0f32; slab];
+            aggregate_bank_into(&mut want, &weights, &deq[row0 * slab..(row0 + 6) * slab], slab);
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                    "codec {} elem {i}: {g} vs {w}",
+                    codec.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_slab_row_round_trip_within_per_row_bound() {
+        let mut rng = Rng::new(61);
+        let (rows, slab) = (5usize, 33usize);
+        let bank = randv(&mut rng, rows * slab);
+        let slabs = quantize_slabs(&bank, rows, slab, Quant::Int8);
+        let mut row = vec![0.0f32; slab];
+        for r in 0..rows {
+            slabs.dequant_row_into(r, &mut row);
+            let orig = &bank[r * slab..(r + 1) * slab];
+            let maxabs = orig.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = maxabs / 254.0 + 1e-7;
+            for (&o, &b) in orig.iter().zip(&row) {
+                assert!((b - o).abs() <= bound, "row {r}: {o} → {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn agg_panels_reports_codec_dims_and_bytes() {
+        let mut rng = Rng::new(67);
+        let (d, bneck) = (16usize, 8usize);
+        let a_hat = randv(&mut rng, d * bneck);
+        let b_hat = randv(&mut rng, bneck * d);
+        let pa = pack_b_panels(&a_hat, d, bneck);
+        let pb = pack_b_panels(&b_hat, bneck, d);
+        let f32_bytes = pa.bytes() + pb.bytes();
+        let agg = AggPanels::F32(vec![(pa.clone(), pb.clone())]);
+        assert_eq!(agg.codec(), Quant::F32);
+        assert_eq!(agg.len(), 1);
+        assert_eq!(agg.dims(0), (d, bneck, bneck, d));
+        assert_eq!(agg.bytes(), f32_bytes);
+        let qagg = AggPanels::Quant(vec![(
+            quantize_panels(&pa, Quant::Int8),
+            quantize_panels(&pb, Quant::Int8),
+        )]);
+        assert_eq!(qagg.codec(), Quant::Int8);
+        assert_eq!(qagg.dims(0), (d, bneck, bneck, d));
+        assert!(qagg.bytes() * 3 < f32_bytes, "int8 should be ~4× smaller");
     }
 }

@@ -151,6 +151,9 @@ fn plm_view<'a>(inp: &Inputs<'a>, layers: usize) -> Result<Plm<'a>> {
 enum RouteMat<'a> {
     /// Cache hit: `Ŵ` prepacked in the blocked-GEMM B-panel layout.
     Packed(&'a k::PackedPanels),
+    /// Cache hit in a reduced-precision tier: quantized panels,
+    /// dequantized inside the micro-kernel loop.
+    Quant(&'a k::QuantPanels),
     /// Cache miss, materialize won the flop heuristic: `Ŵ [din, dout]`.
     Mat(&'a [f32]),
     /// Cache miss, fused won: mask-weight row `[N]` over the bank slab.
@@ -161,6 +164,7 @@ impl<'a> RouteMat<'a> {
     fn gather(&self) -> k::GatherW<'a> {
         match *self {
             RouteMat::Packed(p) => k::GatherW::Packed(p),
+            RouteMat::Quant(q) => k::GatherW::Quant(q),
             RouteMat::Mat(m) => k::GatherW::Materialized(m),
             RouteMat::Fused(w) => k::GatherW::Weights(w),
         }
@@ -1462,12 +1466,12 @@ pub(crate) fn run_eval_routed(
         if seg.head_w.len() != d * out_w || seg.head_b.len() != out_w {
             bail!("segment head must be [{d}, {out_w}] + [{out_w}]");
         }
-        if let Some(layers) = seg.prepacked {
-            if layers.len() != cfg.layers {
-                bail!("cached aggregate has {} layers, model has {}", layers.len(), cfg.layers);
+        if let Some(agg) = seg.prepacked {
+            if agg.len() != cfg.layers {
+                bail!("cached aggregate has {} layers, model has {}", agg.len(), cfg.layers);
             }
-            for (pa, pb) in layers {
-                if pa.kdim != d || pa.ncols != bneck || pb.kdim != bneck || pb.ncols != d {
+            for l in 0..agg.len() {
+                if agg.dims(l) != (d, bneck, bneck, d) {
                     bail!("cached aggregate panel dims do not match the model");
                 }
             }
@@ -1546,9 +1550,13 @@ pub(crate) fn run_eval_routed(
                     .map(|&(i, s, e)| {
                         let seg = &routing.segments[i];
                         let (a, b) = match (seg.prepacked, &mats_ref[i]) {
-                            (Some(layers), _) => (
+                            (Some(k::AggPanels::F32(layers)), _) => (
                                 RouteMat::Packed(&layers[l].0),
                                 RouteMat::Packed(&layers[l].1),
+                            ),
+                            (Some(k::AggPanels::Quant(layers)), _) => (
+                                RouteMat::Quant(&layers[l].0),
+                                RouteMat::Quant(&layers[l].1),
                             ),
                             (None, Some(ls)) => {
                                 let (ah, bh) = &ls[l];
@@ -1945,7 +1953,7 @@ mod tests {
         fn mk_plan<'a>(
             profs: &'a [Prof],
             ranges: &[(usize, usize)],
-            prepacked: Option<&'a [Vec<(k::PackedPanels, k::PackedPanels)>]>,
+            prepacked: Option<&'a [k::AggPanels]>,
         ) -> RoutingPlan<'a> {
             RoutingPlan {
                 segments: profs
@@ -1959,7 +1967,7 @@ mod tests {
                         ln_bias: &p.ln_b,
                         head_w: &p.hw,
                         head_b: &p.hb,
-                        prepacked: prepacked.map(|all| all[i].as_slice()),
+                        prepacked: prepacked.map(|all| &all[i]),
                     })
                     .collect(),
             }
@@ -1984,29 +1992,234 @@ mod tests {
         check("miss", got[0].f32s().unwrap());
 
         // cached-prepacked plan: aggregate once, prepack, serve from panels
-        let packed: Vec<Vec<(k::PackedPanels, k::PackedPanels)>> = profs
+        let packed: Vec<k::AggPanels> = profs
             .iter()
             .map(|p| {
-                (0..cfg.layers)
-                    .map(|l| {
-                        let a_hat = k::aggregate_bank(
-                            &p.wa[l * n..(l + 1) * n],
-                            &bank_a[l * n * slab..(l + 1) * n * slab],
-                            slab,
-                        );
-                        let b_hat = k::aggregate_bank(
-                            &p.wb[l * n..(l + 1) * n],
-                            &bank_b[l * n * slab..(l + 1) * n * slab],
-                            slab,
-                        );
-                        (k::pack_b_panels(&a_hat, d, bneck), k::pack_b_panels(&b_hat, bneck, d))
-                    })
-                    .collect()
+                k::AggPanels::F32(
+                    (0..cfg.layers)
+                        .map(|l| {
+                            let a_hat = k::aggregate_bank(
+                                &p.wa[l * n..(l + 1) * n],
+                                &bank_a[l * n * slab..(l + 1) * n * slab],
+                                slab,
+                            );
+                            let b_hat = k::aggregate_bank(
+                                &p.wb[l * n..(l + 1) * n],
+                                &bank_b[l * n * slab..(l + 1) * n * slab],
+                                slab,
+                            );
+                            (
+                                k::pack_b_panels(&a_hat, d, bneck),
+                                k::pack_b_panels(&b_hat, bneck, d),
+                            )
+                        })
+                        .collect(),
+                )
             })
             .collect();
         let plan = mk_plan(&profs, &ranges, Some(&packed));
         let got = run_eval_routed(&cfg, &spec, &refs, &ArenaPool::new(), &plan).unwrap();
         check("hit", got[0].f32s().unwrap());
+
+        // quantized-prepacked plan (int8 per-panel scales): same routed
+        // serve, but every cached aggregate dequantizes inside the GEMM.
+        // Tolerance widens to the int8 step; predictions must not flip.
+        let quant: Vec<k::AggPanels> = profs
+            .iter()
+            .map(|p| {
+                k::AggPanels::Quant(
+                    (0..cfg.layers)
+                        .map(|l| {
+                            let a_hat = k::aggregate_bank(
+                                &p.wa[l * n..(l + 1) * n],
+                                &bank_a[l * n * slab..(l + 1) * n * slab],
+                                slab,
+                            );
+                            let b_hat = k::aggregate_bank(
+                                &p.wb[l * n..(l + 1) * n],
+                                &bank_b[l * n * slab..(l + 1) * n * slab],
+                                slab,
+                            );
+                            (
+                                k::quantize_b_panels(&a_hat, d, bneck, k::Quant::Int8),
+                                k::quantize_b_panels(&b_hat, bneck, d, k::Quant::Int8),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let plan = mk_plan(&profs, &ranges, Some(&quant));
+        let got = run_eval_routed(&cfg, &spec, &refs, &ArenaPool::new(), &plan).unwrap();
+        let got = got[0].f32s().unwrap();
+        let mut flips = 0usize;
+        for (lo, hi) in ranges {
+            for r in lo..hi {
+                let row_g = &got[r * out_w..(r + 1) * out_w];
+                let row_w = &want[r * out_w..(r + 1) * out_w];
+                for (g, w) in row_g.iter().zip(row_w) {
+                    assert!(
+                        (g - w).abs() <= 0.05 * (1.0 + w.abs()),
+                        "int8 routed logit drifted past bound: {g} vs {w}"
+                    );
+                }
+                let am = |v: &[f32]| {
+                    v.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0
+                };
+                if am(row_g) != am(row_w) {
+                    flips += 1;
+                }
+            }
+        }
+        assert_eq!(flips, 0, "int8 prepacked serving flipped predictions");
+    }
+
+    /// Accuracy pin for the quantized storage tier on REAL suite eval
+    /// batches (not synthetic tokens): one sst2 dev batch and one LaMP
+    /// author batch, served routed from f32 vs int8 prepacked aggregates.
+    /// Logit error must stay inside the per-panel int8 step and the
+    /// argmax prediction must never flip.
+    #[test]
+    fn quantized_serving_accuracy_on_real_eval_batches() {
+        use crate::data::batch::Batcher;
+        use crate::data::{glue, lamp};
+        use crate::masks::MaskLogits;
+        use crate::runtime::backend::{RouteSegment, RoutingPlan};
+
+        // big enough for the structured tokenizer (vocab) and GLUE pair
+        // encoding (seq >= 8); c_max covers LaMP's 15 categories
+        let cfg = ModelConfig {
+            vocab: 800,
+            d: 16,
+            layers: 2,
+            heads: 2,
+            ffn: 32,
+            seq: 8,
+            batch: 8,
+            bottleneck: 4,
+            c_max: 16,
+        };
+        let m = Manifest::synthesize(cfg.clone(), Path::new("unused"));
+        let spec = m.find("xpeft_eval_cls_n100").unwrap().clone();
+        let n = spec.n;
+        let (d, bneck) = (cfg.d, cfg.bottleneck);
+        let slab = d * bneck;
+
+        let sst2 = glue::build("sst2", cfg.seq, cfg.vocab, 17);
+        let corpus = lamp::generate(3, cfg.seq, cfg.vocab, 17, 4, 8);
+        let batcher = Batcher::new(cfg.batch, cfg.seq);
+        let batches = [
+            ("sst2", batcher.sequential(&sst2.dev).remove(0)),
+            ("lamp", batcher.sequential(&corpus.profiles[0].dev).remove(0)),
+        ];
+
+        for (task, data) in &batches {
+            let mut tensors = build_inputs(&cfg, &spec, 91);
+            tensors[spec.input_index("tokens").unwrap()] = Tensor::I32(data.tokens.clone());
+            tensors[spec.input_index("pad_mask").unwrap()] = Tensor::F32(data.pad_mask.clone());
+            let refs: Vec<&Tensor> = tensors.iter().collect();
+            let inp = Inputs::new(&spec, &refs);
+            let bank_a = inp.f32("bank_a").unwrap().to_vec();
+            let bank_b = inp.f32("bank_b").unwrap().to_vec();
+
+            let mut r = Rng::new(400);
+            let logits = MaskLogits {
+                layers: cfg.layers,
+                n,
+                a: r.normal_vec(cfg.layers * n, 1.0),
+                b: r.normal_vec(cfg.layers * n, 1.0),
+            };
+            let w = logits.binarize(50).to_weights();
+            let ln_s = r.normal_vec(cfg.layers * bneck, 0.3);
+            let ln_b = r.normal_vec(cfg.layers * bneck, 0.3);
+            let hw = r.normal_vec(d * cfg.c_max, 0.1);
+            let hb = r.normal_vec(cfg.c_max, 0.1);
+            let rows = (0usize, data.size);
+
+            let hats: Vec<(Vec<f32>, Vec<f32>)> = (0..cfg.layers)
+                .map(|l| {
+                    (
+                        k::aggregate_bank(
+                            &w.a[l * n..(l + 1) * n],
+                            &bank_a[l * n * slab..(l + 1) * n * slab],
+                            slab,
+                        ),
+                        k::aggregate_bank(
+                            &w.b[l * n..(l + 1) * n],
+                            &bank_b[l * n * slab..(l + 1) * n * slab],
+                            slab,
+                        ),
+                    )
+                })
+                .collect();
+            let packed = k::AggPanels::F32(
+                hats.iter()
+                    .map(|(a, b)| {
+                        (k::pack_b_panels(a, d, bneck), k::pack_b_panels(b, bneck, d))
+                    })
+                    .collect(),
+            );
+            let quant = k::AggPanels::Quant(
+                hats.iter()
+                    .map(|(a, b)| {
+                        (
+                            k::quantize_b_panels(a, d, bneck, k::Quant::Int8),
+                            k::quantize_b_panels(b, bneck, d, k::Quant::Int8),
+                        )
+                    })
+                    .collect(),
+            );
+
+            let run = |agg: &k::AggPanels| -> Vec<f32> {
+                let plan = RoutingPlan {
+                    segments: vec![RouteSegment {
+                        rows,
+                        mask_a: &w.a,
+                        mask_b: &w.b,
+                        ln_scale: &ln_s,
+                        ln_bias: &ln_b,
+                        head_w: &hw,
+                        head_b: &hb,
+                        prepacked: Some(agg),
+                    }],
+                };
+                let out = run_eval_routed(&cfg, &spec, &refs, &ArenaPool::new(), &plan).unwrap();
+                out[0].f32s().unwrap().to_vec()
+            };
+            let f32_logits = run(&packed);
+            let i8_logits = run(&quant);
+
+            let out_w = cfg.c_max;
+            let mut flips = 0usize;
+            let mut max_err = 0.0f32;
+            for row in 0..data.size {
+                let rf = &f32_logits[row * out_w..(row + 1) * out_w];
+                let rq = &i8_logits[row * out_w..(row + 1) * out_w];
+                for (g, f) in rq.iter().zip(rf) {
+                    let err = (g - f).abs() / (1.0 + f.abs());
+                    max_err = max_err.max(err);
+                    assert!(
+                        err <= 0.05,
+                        "{task}: int8 logit error {err} past bound ({g} vs {f})"
+                    );
+                }
+                let am = |v: &[f32]| {
+                    v.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0
+                };
+                if am(rq) != am(rf) {
+                    flips += 1;
+                }
+            }
+            assert_eq!(flips, 0, "{task}: int8 serving flipped predictions (max_err {max_err})");
+        }
     }
 
     /// The fused gather-GEMM eval path (`Adapter::Masked`) must agree with

@@ -142,8 +142,11 @@ pub fn telemetry_json(s: &Snapshot) -> Json {
         so.set("agg_misses", Json::Num(st.agg_misses as f64));
         so.set("agg_entries", Json::Num(st.agg_entries as f64));
         so.set("agg_bytes", Json::Num(st.agg_bytes as f64));
+        so.set("agg_bytes_saved", Json::Num(st.agg_bytes_saved as f64));
         o.set("store", so);
     }
+    o.set("quant_dequant_fallbacks", Json::Num(s.quant_dequant_fallbacks as f64));
+    o.set("agg_cache_bytes_saved", Json::Num(s.agg_cache_bytes_saved as f64));
     o
 }
 

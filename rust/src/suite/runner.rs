@@ -183,6 +183,32 @@ impl SuiteRunner {
                 store.mean_profile_bytes(),
             ),
         );
+        rep.set("agg_cache", {
+            // deterministic capacity accounting for the prepacked
+            // aggregate cache at the configured storage codec: this is
+            // where the int8 ~4× profiles-per-MiB gain is visible without
+            // reading timing-dependent telemetry
+            use crate::coordinator::profile_store::ProfileAggregates;
+            let codec = cfg.serve.quant;
+            let entry = ProfileAggregates::projected_bytes_at(&bank, codec);
+            let entry_f32 = ProfileAggregates::projected_bytes(&bank);
+            let budget = cfg.serve.agg_cache_mb.saturating_mul(1 << 20);
+            let mut o = Json::obj();
+            o.set("quant", Json::Str(codec.label().into()));
+            o.set("budget_mb", Json::Num(cfg.serve.agg_cache_mb as f64));
+            o.set("entry_bytes", Json::Num(entry as f64));
+            o.set("entry_bytes_f32", Json::Num(entry_f32 as f64));
+            o.set("bytes_saved_per_entry", Json::Num(entry_f32.saturating_sub(entry) as f64));
+            o.set(
+                "profiles_per_budget",
+                Json::Num(if entry > 0 { (budget / entry) as f64 } else { 0.0 }),
+            );
+            o.set(
+                "profiles_per_budget_f32",
+                Json::Num(if entry_f32 > 0 { (budget / entry_f32) as f64 } else { 0.0 }),
+            );
+            o
+        });
         let mut scen = Json::obj();
         scen.set("cross_task_serving", {
             let mut o = Json::obj();
@@ -602,6 +628,7 @@ impl SuiteRunner {
         serve.set("mixed_batch", Json::Bool(cfg.serve.mixed_batch));
         serve.set("max_batch", Json::Num(cfg.serve.max_batch as f64));
         serve.set("agg_cache_mb", Json::Num(cfg.serve.agg_cache_mb as f64));
+        serve.set("quant", Json::Str(cfg.serve.quant.label().into()));
         o.set("serve", serve);
         o
     }

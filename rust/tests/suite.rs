@@ -102,6 +102,39 @@ fn paper_parity_gate() {
     assert_eq!(tasks[0].usize_field("profiles").unwrap(), 2);
     let served = tasks[0].f64_field("combined").unwrap();
     assert!(served > 0.5, "served accuracy should beat chance: {served}");
+
+    // reduced-precision gate: the same seed served through the int8
+    // storage tier must land within 0.02 absolute of the f32 run — a codec
+    // regression (bad scales, broken dequant) goes red here, not in prod
+    let i8_cfg = SuiteConfig {
+        steps: 60,
+        max_eval: 32,
+        cold_start_profiles: 1,
+        sparsity_ks: Vec::new(),
+        parity: false,
+        serve: ServeConfig {
+            quant: xpeft::runtime::native::kernels::Quant::Int8,
+            ..ServeConfig::default()
+        },
+        ..SuiteConfig::default()
+    };
+    let i8_rep = run_suite(i8_cfg, &["sst2"], 2, 64).report;
+    let i8_tasks = i8_rep.get("tasks").unwrap().as_arr().unwrap();
+    let served_i8 = i8_tasks[0].f64_field("combined").unwrap();
+    assert!(
+        (served_i8 - served).abs() <= 0.02,
+        "int8 served accuracy ({served_i8:.4}) drifted past 0.02 of f32 ({served:.4})"
+    );
+    // the capacity lever actually engaged: an int8 entry is < half the f32
+    // projection (f16 would be exactly half; int8 with scales is ~0.26×)
+    let agg = i8_rep.get("agg_cache").unwrap();
+    assert_eq!(agg.str_field("quant").unwrap(), "int8");
+    let entry = agg.f64_field("entry_bytes").unwrap();
+    let entry_f32 = agg.f64_field("entry_bytes_f32").unwrap();
+    assert!(
+        entry * 2.0 < entry_f32,
+        "int8 aggregate entry ({entry}) not smaller than half the f32 entry ({entry_f32})"
+    );
 }
 
 /// Two full runs with the same seed produce byte-identical reports — and a
