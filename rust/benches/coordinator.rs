@@ -588,6 +588,151 @@ fn main() {
         }
     }
 
+    // ---- replication overhead: the same closed-loop read load against a
+    // standalone leader vs an identical leader shipping every commit to one
+    // caught-up follower, with a background tune thread committing during
+    // both runs so the replicated leg actually has records to ship. The
+    // robustness claim: replicated goodput within 15% of standalone —
+    // shipping happens on dedicated threads off the read path.
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use xpeft::config::NetConfig;
+        use xpeft::coordinator::net::{loadgen, NetServer};
+        use xpeft::coordinator::replication::{
+            Follower, FollowerConfig, RepConfig, RepHub, RepServer,
+        };
+        use xpeft::coordinator::Telemetry;
+
+        let profiles: u64 = if smoke { 64 } else { 1024 };
+        println!("\n== replication: serve {profiles} profiles, standalone vs 1 follower ==");
+        let n = 100usize;
+        let mk_profile = move |pid: u64, layers: usize| {
+            let mut r = Rng::new(7000 + pid);
+            let lg = MaskLogits {
+                layers,
+                n,
+                a: r.normal_vec(layers * n, 1.0),
+                b: r.normal_vec(layers * n, 1.0),
+            };
+            ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None }
+        };
+        for replicated in [false, true] {
+            let engine = Arc::new(Engine::native());
+            let mc = engine.manifest.config.clone();
+            let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+            let store = Arc::new(ProfileStore::with_config(StoreConfig {
+                shards: 64,
+                cache_capacity: 2 * profiles as usize,
+                ..StoreConfig::default()
+            }));
+            for pid in 0..profiles {
+                store.insert(pid, mk_profile(pid, mc.layers)).unwrap();
+            }
+            store.set_shared_aux(AuxParams {
+                ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+                ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+                head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+                head_b: vec![0.0; mc.c_max],
+            });
+            let svc = Arc::new(
+                Service::start(
+                    engine,
+                    store.clone(),
+                    bank,
+                    ServeConfig {
+                        mixed_batch: true,
+                        max_batch: 32,
+                        batch_deadline_us: 400,
+                        mask_cache: 2 * profiles as usize,
+                        ..ServeConfig::default()
+                    },
+                    15,
+                    42,
+                )
+                .unwrap(),
+            );
+            let rep = RepConfig { tail: 2048, heartbeat_ms: 200, failover_ms: 10_000 };
+            let replication = if replicated {
+                let hub = RepHub::attach(&store, 1, rep.tail);
+                let srv = RepServer::start(
+                    store.clone(),
+                    hub,
+                    svc.telemetry_shared(),
+                    "127.0.0.1:0",
+                    rep.clone(),
+                )
+                .unwrap();
+                let fstore = Arc::new(ProfileStore::with_config(StoreConfig {
+                    shards: 64,
+                    cache_capacity: 2 * profiles as usize,
+                    ..StoreConfig::default()
+                }));
+                let follower = Follower::start(
+                    fstore.clone(),
+                    Arc::new(Telemetry::new()),
+                    FollowerConfig {
+                        peer: srv.local_addr().to_string(),
+                        replica_id: 1,
+                        meta_path: None,
+                        rep,
+                    },
+                );
+                // measure a caught-up follower, not the bootstrap
+                let deadline = Instant::now() + Duration::from_secs(30);
+                while fstore.len() < profiles as usize && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                assert_eq!(fstore.len(), profiles as usize, "follower failed to catch up");
+                Some((srv, follower, fstore))
+            } else {
+                None
+            };
+            // tune churn rides along in both legs (the replicated one ships it)
+            let stop = Arc::new(AtomicBool::new(false));
+            let tuner = {
+                let store = store.clone();
+                let stop = stop.clone();
+                let layers = mc.layers;
+                std::thread::spawn(move || {
+                    let mut pid = profiles;
+                    while !stop.load(Ordering::Relaxed) {
+                        store.insert(pid, mk_profile(pid, layers)).unwrap();
+                        pid += 1;
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                })
+            };
+            let net = NetConfig {
+                listen: "127.0.0.1:0".to_string(),
+                deadline_ms: 500,
+                ..NetConfig::default()
+            };
+            let server = NetServer::start(Arc::clone(&svc), net).unwrap();
+            let cfg = loadgen::LoadgenConfig {
+                addr: server.local_addr().to_string(),
+                conns: 4,
+                duration: Duration::from_secs(if smoke { 1 } else { 4 }),
+                profiles,
+                zipf_s: 1.0,
+                deadline_ms: 500,
+                text: "s42t3w1 s42t2w5 s42fw0".to_string(),
+                ..loadgen::LoadgenConfig::default()
+            };
+            let run = loadgen::run(&cfg).unwrap();
+            stop.store(true, Ordering::Relaxed);
+            let _ = tuner.join();
+            let label = if replicated { "replicated, 1 follower" } else { "standalone" };
+            println!("   {label}: {}", run.summary());
+            suite.add(
+                timed(&format!("serve {profiles} profiles ({label})"), run.ok as usize, run.elapsed)
+                    .with_extra("p95_latency_us", run.p95_us)
+                    .with_extra("goodput_per_s", run.goodput_per_s()),
+            );
+            server.shutdown();
+            drop(replication);
+        }
+    }
+
     if smoke {
         println!("\n--smoke: {} entries ok, no trajectory files written", suite.results.len());
         return;

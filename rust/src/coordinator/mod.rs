@@ -6,11 +6,15 @@
 //! executables (cross-profile mixed batches by default — one trunk forward
 //! per batch, not per profile), a training scheduler fanning mask-tuning
 //! jobs for newly-arriving profiles over the process worker pool, and
-//! per-shard + latency telemetry.
+//! per-shard + latency telemetry. The [`replication`] module layers a
+//! leader/follower tier on top: committed records ship to follower
+//! processes over the same frame transport, and a client-side router
+//! fails reads over to a caught-up follower when the leader dies.
 
 pub mod batcher;
 pub mod net;
 pub mod profile_store;
+pub mod replication;
 pub mod scheduler;
 pub mod service;
 pub mod telemetry;
@@ -20,6 +24,7 @@ pub use profile_store::{
     AuxParams, ProfileAggregates, ProfileRecord, ProfileStore, ShardStats, StoreConfig, StoreStats,
 };
 pub use net::NetServer;
+pub use replication::{Follower, FollowerConfig, RepConfig, RepHub, RepServer, Router, RouterConfig};
 pub use scheduler::{JobStatus, Scheduler, TrainJob};
 pub use service::{Response, ResponseStatus, Service};
 pub use telemetry::{Snapshot, Telemetry};

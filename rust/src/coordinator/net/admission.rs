@@ -148,6 +148,21 @@ impl Admission {
             buckets.retain(|_, b| {
                 b.tokens + now.duration_since(b.last).as_secs_f64() * rate < cap
             });
+            if buckets.len() > BUCKET_PRUNE_THRESHOLD {
+                // Every entry is still mid-refill — an active population
+                // larger than the cap. Evict the least-recently-refilled
+                // entries down to the cap: they are the closest to a full
+                // refill, so forgetting them (the bucket comes back full)
+                // is the smallest possible rate-limit error, while the
+                // map stays bounded no matter the offered profile count.
+                let excess = buckets.len() - BUCKET_PRUNE_THRESHOLD;
+                let mut by_age: Vec<(u64, Instant)> =
+                    buckets.iter().map(|(&id, b)| (id, b.last)).collect();
+                by_age.sort_by_key(|&(_, t)| t);
+                for &(id, _) in by_age.iter().take(excess) {
+                    buckets.remove(&id);
+                }
+            }
         }
         let bucket = buckets.entry(profile_id).or_insert(Bucket { tokens: cap, last: now });
         let elapsed = now.duration_since(bucket.last).as_secs_f64();
@@ -253,5 +268,34 @@ mod tests {
         let later = now + Duration::from_secs(60);
         let _ = adm.try_admit(u64::MAX, later);
         assert!(adm.buckets.lock().unwrap().len() < BUCKET_PRUNE_THRESHOLD);
+    }
+
+    #[test]
+    fn prune_evicts_least_recently_refilled_when_all_buckets_are_active() {
+        // Refill so slow that nothing ever becomes "stale": the cheap
+        // retain removes zero entries and the LRU fallback must bound the
+        // map instead.
+        let adm = Admission::new(cfg(0.001, 0));
+        let now = Instant::now();
+        let population = BUCKET_PRUNE_THRESHOLD as u64 + 8;
+        for pid in 0..population {
+            // strictly increasing refill times, every bucket exhausted
+            let t = now + Duration::from_millis(pid);
+            assert!(matches!(adm.try_admit(pid, t), Admit::Admitted(_)));
+            assert!(matches!(adm.try_admit(pid, t), Admit::Admitted(_)));
+            assert!(matches!(adm.try_admit(pid, t), Admit::RateLimited));
+        }
+        let hot = population - 1; // most recently refilled
+        let later = now + Duration::from_millis(population + 10);
+        // Triggers the prune; the new bucket itself is admitted.
+        assert!(matches!(adm.try_admit(u64::MAX, later), Admit::Admitted(_)));
+        assert!(adm.buckets.lock().unwrap().len() <= BUCKET_PRUNE_THRESHOLD + 1);
+        // The hot profile's exhausted bucket survived the prune: still
+        // rate-limited — eviction must not hand hot profiles fresh tokens.
+        assert!(matches!(adm.try_admit(hot, later), Admit::RateLimited));
+        // The oldest profile was the one evicted: it re-admits on a fresh
+        // bucket, and the map stays bounded.
+        assert!(matches!(adm.try_admit(0, later), Admit::Admitted(_)));
+        assert!(adm.buckets.lock().unwrap().len() <= BUCKET_PRUNE_THRESHOLD + 1);
     }
 }

@@ -6,7 +6,8 @@
 //! offset  size  field
 //! 0       4     magic  b"XPNF"
 //! 4       1     version (currently 1)
-//! 5       1     kind    (1=Request, 2=Response, 3=Ping, 4=Pong)
+//! 5       1     kind    (1=Request, 2=Response, 3=Ping, 4=Pong,
+//!                        5=RepHello, 6=RepRecord, 7=RepSnapshot, 8=RepAck)
 //! 6       4     payload length (u32 LE), <= MAX_PAYLOAD
 //! 10      4     checksum: fnv1a32 over version byte || kind byte || payload
 //! 14      len   payload
@@ -36,6 +37,19 @@ pub enum FrameKind {
     Response,
     Ping,
     Pong,
+    /// Replication (re)subscribe: replica id, leader epoch seen, and the
+    /// per-shard next sequence the sender wants. Sent by a follower at
+    /// connect AND after any gap/corrupt record (re-request from the last
+    /// durable offset); answered by the leader with its own hello.
+    RepHello,
+    /// One committed append-log record for one shard, with its own payload
+    /// checksum (end-to-end, independent of the frame crc).
+    RepRecord,
+    /// One chunk of a shard snapshot (catch-up bootstrap when the follower
+    /// is behind the leader's retained log tail).
+    RepSnapshot,
+    /// Follower acknowledgment: shard's records below `seq` are applied.
+    RepAck,
 }
 
 impl FrameKind {
@@ -45,6 +59,10 @@ impl FrameKind {
             FrameKind::Response => 2,
             FrameKind::Ping => 3,
             FrameKind::Pong => 4,
+            FrameKind::RepHello => 5,
+            FrameKind::RepRecord => 6,
+            FrameKind::RepSnapshot => 7,
+            FrameKind::RepAck => 8,
         }
     }
 
@@ -54,6 +72,10 @@ impl FrameKind {
             2 => Some(FrameKind::Response),
             3 => Some(FrameKind::Ping),
             4 => Some(FrameKind::Pong),
+            5 => Some(FrameKind::RepHello),
+            6 => Some(FrameKind::RepRecord),
+            7 => Some(FrameKind::RepSnapshot),
+            8 => Some(FrameKind::RepAck),
             _ => None,
         }
     }
@@ -430,6 +452,214 @@ impl WireResponse {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Replication messages (leader ↔ follower append-log shipping)
+// ---------------------------------------------------------------------------
+
+/// Checksum over a replication record payload — the same FNV-1a the store's
+/// append-log frames use, so a record's end-to-end checksum is identical on
+/// disk and on the wire.
+pub fn payload_checksum(bytes: &[u8]) -> u32 {
+    fnv1a32(FNV_OFFSET, bytes)
+}
+
+/// Replication handshake / re-subscribe. A follower sends this at connect
+/// (and again after detecting a gap or corrupt record) with the per-shard
+/// sequence it wants next; the leader replies with its own hello carrying
+/// its epoch and per-shard head sequences, then starts shipping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepHello {
+    /// Stable id of the sending node (follower: its replica id; leader: 0).
+    pub replica_id: u64,
+    /// Leader-generation epoch. A follower refuses to regress to a leader
+    /// older than one it has already followed.
+    pub epoch: u64,
+    /// Sharding layout; must match on both sides (it IS the hash placement).
+    pub shard_count: u32,
+    /// Per-shard next wanted (follower) / next to be assigned (leader) seq.
+    pub next_seqs: Vec<u64>,
+}
+
+impl RepHello {
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + 8 * self.next_seqs.len());
+        out.extend_from_slice(&self.replica_id.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&(self.shard_count).to_le_bytes());
+        for s in &self.next_seqs {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn encode_frame(&self) -> Vec<u8> {
+        encode(FrameKind::RepHello, &self.encode_payload())
+    }
+
+    pub fn decode_payload(payload: &[u8]) -> Result<RepHello, FrameError> {
+        let mut c = Cursor::new(payload);
+        let replica_id = c.u64()?;
+        let epoch = c.u64()?;
+        let shard_count = c.u32()?;
+        // bounds before the loop: 8·shard_count must be exactly what's left
+        // (a hostile count must not drive a huge allocation)
+        let want = (shard_count as usize).checked_mul(8).ok_or_else(|| {
+            FrameError::Malformed(format!("shard count {} overflows", shard_count))
+        })?;
+        if c.data.len() - c.pos != want {
+            return Err(FrameError::Malformed(format!(
+                "hello: {} seq bytes for {} shards",
+                c.data.len() - c.pos,
+                shard_count
+            )));
+        }
+        let mut next_seqs = Vec::with_capacity(shard_count as usize);
+        for _ in 0..shard_count {
+            next_seqs.push(c.u64()?);
+        }
+        c.finish()?;
+        Ok(RepHello { replica_id, epoch, shard_count, next_seqs })
+    }
+}
+
+/// One committed record shipped leader → follower. `crc` covers `record`
+/// (the store's record *payload* encoding) with the append-log's checksum,
+/// so a follower verifies exactly what it would verify replaying a segment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepRecord {
+    pub shard: u32,
+    /// Per-shard logical sequence: the number of records committed to the
+    /// shard before this one. Logical (not a byte offset) because
+    /// compaction rewrites segment bytes but never reorders history.
+    pub seq: u64,
+    pub crc: u32,
+    pub record: Vec<u8>,
+}
+
+impl RepRecord {
+    pub fn new(shard: u32, seq: u64, record: Vec<u8>) -> RepRecord {
+        let crc = payload_checksum(&record);
+        RepRecord { shard, seq, crc, record }
+    }
+
+    /// Does the carried checksum match the record bytes?
+    pub fn verify(&self) -> bool {
+        payload_checksum(&self.record) == self.crc
+    }
+
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.record.len());
+        out.extend_from_slice(&self.shard.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.crc.to_le_bytes());
+        out.extend_from_slice(&(self.record.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.record);
+        out
+    }
+
+    pub fn encode_frame(&self) -> Vec<u8> {
+        encode(FrameKind::RepRecord, &self.encode_payload())
+    }
+
+    pub fn decode_payload(payload: &[u8]) -> Result<RepRecord, FrameError> {
+        let mut c = Cursor::new(payload);
+        let shard = c.u32()?;
+        let seq = c.u64()?;
+        let crc = c.u32()?;
+        let len = c.u32()? as usize;
+        let record = c.take(len)?.to_vec();
+        c.finish()?;
+        Ok(RepRecord { shard, seq, crc, record })
+    }
+}
+
+/// One chunk of a shard snapshot. The leader streams a shard's live records
+/// in ≤`SNAPSHOT_CHUNK_BYTES` chunks; the final chunk has `done = true` and
+/// the follower atomically replaces the shard and resumes at `upto_seq`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepSnapshot {
+    pub shard: u32,
+    /// Shard sequence the snapshot is consistent at: the follower's next
+    /// wanted seq after installing it.
+    pub upto_seq: u64,
+    pub done: bool,
+    /// Record payloads (store record encoding, one per live profile).
+    pub records: Vec<Vec<u8>>,
+}
+
+/// Soft cap on snapshot chunk payloads, leaving frame-header headroom under
+/// [`MAX_PAYLOAD`]. A single record larger than this cannot be replicated —
+/// at any of this repo's dims records are hundreds of bytes to a few KiB.
+pub const SNAPSHOT_CHUNK_BYTES: usize = 48 * 1024;
+
+impl RepSnapshot {
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let bytes: usize = self.records.iter().map(|r| 4 + r.len()).sum();
+        let mut out = Vec::with_capacity(17 + bytes);
+        out.extend_from_slice(&self.shard.to_le_bytes());
+        out.extend_from_slice(&self.upto_seq.to_le_bytes());
+        out.push(u8::from(self.done));
+        out.extend_from_slice(&(self.records.len() as u32).to_le_bytes());
+        for r in &self.records {
+            out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+            out.extend_from_slice(r);
+        }
+        out
+    }
+
+    pub fn encode_frame(&self) -> Vec<u8> {
+        encode(FrameKind::RepSnapshot, &self.encode_payload())
+    }
+
+    pub fn decode_payload(payload: &[u8]) -> Result<RepSnapshot, FrameError> {
+        let mut c = Cursor::new(payload);
+        let shard = c.u32()?;
+        let upto_seq = c.u64()?;
+        let done = match c.u8()? {
+            0 => false,
+            1 => true,
+            b => return Err(FrameError::Malformed(format!("bad done byte {}", b))),
+        };
+        let n = c.u32()? as usize;
+        let mut records = Vec::new();
+        for _ in 0..n {
+            let len = c.u32()? as usize;
+            records.push(c.take(len)?.to_vec());
+        }
+        c.finish()?;
+        Ok(RepSnapshot { shard, upto_seq, done, records })
+    }
+}
+
+/// Follower → leader: all of `shard`'s records with sequence < `seq` are
+/// applied. Acks drive the leader's per-shard replication watermark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepAck {
+    pub shard: u32,
+    pub seq: u64,
+}
+
+impl RepAck {
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12);
+        out.extend_from_slice(&self.shard.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out
+    }
+
+    pub fn encode_frame(&self) -> Vec<u8> {
+        encode(FrameKind::RepAck, &self.encode_payload())
+    }
+
+    pub fn decode_payload(payload: &[u8]) -> Result<RepAck, FrameError> {
+        let mut c = Cursor::new(payload);
+        let shard = c.u32()?;
+        let seq = c.u64()?;
+        c.finish()?;
+        Ok(RepAck { shard, seq })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -601,5 +831,80 @@ mod tests {
         let frame = encode(FrameKind::Request, &[1, 2, 3]);
         let decoded = decode_exact(&frame).unwrap();
         assert!(WireRequest::decode_payload(&decoded.payload).is_err());
+    }
+
+    // -- replication messages ----------------------------------------------
+
+    #[test]
+    fn rep_hello_roundtrip() {
+        let hello = RepHello {
+            replica_id: 7,
+            epoch: 3,
+            shard_count: 4,
+            next_seqs: vec![0, 12, 5, 1 << 40],
+        };
+        let frame = decode_exact(&hello.encode_frame()).unwrap();
+        assert_eq!(frame.kind, FrameKind::RepHello);
+        assert_eq!(RepHello::decode_payload(&frame.payload).unwrap(), hello);
+    }
+
+    #[test]
+    fn rep_hello_seq_count_must_match_shard_count() {
+        let hello = RepHello { replica_id: 1, epoch: 0, shard_count: 4, next_seqs: vec![0; 4] };
+        let mut payload = hello.encode_payload();
+        // claim more shards than seqs present
+        payload[16..20].copy_from_slice(&8u32.to_le_bytes());
+        assert!(matches!(
+            RepHello::decode_payload(&payload),
+            Err(FrameError::Malformed(_))
+        ));
+        // hostile huge count must error, not allocate
+        payload[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(RepHello::decode_payload(&payload).is_err());
+    }
+
+    #[test]
+    fn rep_record_roundtrip_and_checksum() {
+        let rec = RepRecord::new(3, 99, vec![1, 2, 3, 4, 5]);
+        assert!(rec.verify());
+        let frame = decode_exact(&rec.encode_frame()).unwrap();
+        assert_eq!(frame.kind, FrameKind::RepRecord);
+        let back = RepRecord::decode_payload(&frame.payload).unwrap();
+        assert_eq!(back, rec);
+        assert!(back.verify());
+        // a flipped record byte fails the END-TO-END checksum even when the
+        // frame crc is re-computed over the corrupted bytes (the torn-disk
+        // analogue: the transport can be "valid" while the record is not)
+        let mut bad = rec.clone();
+        bad.record[2] ^= 0x40;
+        let reframed = decode_exact(&bad.encode_frame()).unwrap();
+        assert!(!RepRecord::decode_payload(&reframed.payload).unwrap().verify());
+    }
+
+    #[test]
+    fn rep_snapshot_roundtrip() {
+        let snap = RepSnapshot {
+            shard: 1,
+            upto_seq: 42,
+            done: true,
+            records: vec![vec![9; 10], vec![], vec![1, 2, 3]],
+        };
+        let frame = decode_exact(&snap.encode_frame()).unwrap();
+        assert_eq!(frame.kind, FrameKind::RepSnapshot);
+        assert_eq!(RepSnapshot::decode_payload(&frame.payload).unwrap(), snap);
+        // truncated record list errors instead of over-reading
+        let payload = snap.encode_payload();
+        for n in 17..payload.len() {
+            assert!(RepSnapshot::decode_payload(&payload[..n]).is_err());
+        }
+    }
+
+    #[test]
+    fn rep_ack_roundtrip() {
+        let ack = RepAck { shard: 2, seq: 1234 };
+        let frame = decode_exact(&ack.encode_frame()).unwrap();
+        assert_eq!(frame.kind, FrameKind::RepAck);
+        assert_eq!(RepAck::decode_payload(&frame.payload).unwrap(), ack);
+        assert!(RepAck::decode_payload(&ack.encode_payload()[..11]).is_err());
     }
 }

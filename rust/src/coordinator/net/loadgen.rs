@@ -47,6 +47,10 @@ pub struct LoadgenConfig {
     pub text: String,
     /// Label-space width (0 = server default).
     pub num_classes: u32,
+    /// Retry attempts per request after an `Overloaded` response or a
+    /// connection reset (0 disables). Retries back off exponentially with
+    /// jitter and are capped at [`RETRY_BACKOFF_CAP`].
+    pub retry_max: u32,
     pub seed: u64,
 }
 
@@ -64,6 +68,7 @@ impl Default for LoadgenConfig {
             churn_every: 0,
             text: "the profile requests a prediction".to_string(),
             num_classes: 0,
+            retry_max: 2,
             seed: 42,
         }
     }
@@ -84,6 +89,10 @@ pub struct LoadReport {
     pub shutting_down: u64,
     /// Sent requests never answered (connection died / drain cut off).
     pub lost: u64,
+    /// Retry sends performed (after `Overloaded` or a connection reset).
+    pub retries: u64,
+    /// Requests that burned every retry attempt and still got shed.
+    pub retry_exhausted: u64,
     /// Connect failures + connections dropped mid-run.
     pub conn_errors: u64,
     pub elapsed: Duration,
@@ -115,7 +124,8 @@ impl LoadReport {
     pub fn summary(&self) -> String {
         format!(
             "offered {} sent {} ok {} (goodput {:.1}/s) overloaded {} rate-limited {} \
-             expired {} errors {} lost {} p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs",
+             expired {} errors {} lost {} retries {} (exhausted {}) p50 {:.0}µs \
+             p95 {:.0}µs p99 {:.0}µs",
             self.offered,
             self.sent,
             self.ok,
@@ -125,6 +135,8 @@ impl LoadReport {
             self.expired,
             self.errors,
             self.lost,
+            self.retries,
+            self.retry_exhausted,
             self.p50_us,
             self.p95_us,
             self.p99_us
@@ -143,6 +155,8 @@ struct Tally {
     errors: AtomicU64,
     shutting_down: AtomicU64,
     lost: AtomicU64,
+    retries: AtomicU64,
+    retry_exhausted: AtomicU64,
     conn_errors: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
 }
@@ -189,6 +203,33 @@ impl Zipf {
 const CLOSED_LOOP_WINDOW: usize = 8;
 /// Socket read poll for the client loop.
 const READ_POLL: Duration = Duration::from_millis(2);
+/// First retry delay; attempt `k` waits `BASE · 2^k` plus jitter.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(10);
+/// Ceiling on the exponential part of the retry delay.
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(200);
+
+/// In-flight request bookkeeping (keyed by `client_req_id` in `pending`).
+struct Pending {
+    sent_at: Instant,
+    profile_id: u64,
+    attempt: u32,
+}
+
+/// A request waiting out its backoff before being re-sent.
+struct Retry {
+    profile_id: u64,
+    attempt: u32,
+    due: Instant,
+}
+
+/// Exponential backoff with full jitter on top, capped so a deep retry
+/// never sleeps past the cap + one base.
+fn retry_backoff(attempt: u32, rng: &mut Rng) -> Duration {
+    let exp = RETRY_BACKOFF_BASE
+        .saturating_mul(1u32 << attempt.min(16))
+        .min(RETRY_BACKOFF_CAP);
+    exp + Duration::from_secs_f64(RETRY_BACKOFF_BASE.as_secs_f64() * rng.uniform())
+}
 
 /// Run one load-generation pass against a live server.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
@@ -217,6 +258,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         errors: tally.errors.load(Ordering::Relaxed),
         shutting_down: tally.shutting_down.load(Ordering::Relaxed),
         lost: tally.lost.load(Ordering::Relaxed),
+        retries: tally.retries.load(Ordering::Relaxed),
+        retry_exhausted: tally.retry_exhausted.load(Ordering::Relaxed),
         conn_errors: tally.conn_errors.load(Ordering::Relaxed),
         elapsed,
         p50_us: stats::quantile(&lat, 0.5),
@@ -238,6 +281,9 @@ fn run_conn(cfg: &LoadgenConfig, index: usize, zipf: &Zipf, tally: &Tally) {
     };
     let mut client_req_id: u64 = 0;
     let mut next_tick = Instant::now();
+    // retries survive reconnects: a request reset with the connection is
+    // re-sent on the next one
+    let mut retry_q: Vec<Retry> = Vec::new();
     while Instant::now() < t_end {
         let Ok(stream) = TcpStream::connect(&cfg.addr) else {
             tally.conn_errors.fetch_add(1, Ordering::Relaxed);
@@ -260,11 +306,15 @@ fn run_conn(cfg: &LoadgenConfig, index: usize, zipf: &Zipf, tally: &Tally) {
             t_end,
             open_loop,
             tick,
+            &mut retry_q,
         );
         if dropped {
             tally.conn_errors.fetch_add(1, Ordering::Relaxed);
         }
     }
+    // retries the run ended before re-sending never reached a final
+    // outcome — count them as lost rather than dropping them silently
+    tally.lost.fetch_add(retry_q.len() as u64, Ordering::Relaxed);
 }
 
 /// Drive one connection until churn, error, or the end of the run.
@@ -281,10 +331,11 @@ fn drive_connection(
     t_end: Instant,
     open_loop: bool,
     tick: Duration,
+    retry_q: &mut Vec<Retry>,
 ) -> bool {
     let mut dec = Decoder::new();
     let mut buf = [0u8; 4096];
-    let mut pending: HashMap<u64, Instant> = HashMap::new();
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
     let mut sent_on_conn = 0usize;
     let mut dropped = false;
     'conn: loop {
@@ -297,6 +348,37 @@ fn drive_connection(
         if cfg.churn_every > 0 && sent_on_conn >= cfg.churn_every {
             let _ = stream.shutdown(Shutdown::Both);
             break;
+        }
+        // retry phase: re-send whatever has waited out its backoff
+        // (retries ride on top of the schedule — that is what real client
+        // retries do to an overloaded server)
+        let mut i = 0;
+        while i < retry_q.len() {
+            if retry_q[i].due > now {
+                i += 1;
+                continue;
+            }
+            let r = retry_q.swap_remove(i);
+            *client_req_id += 1;
+            let req = WireRequest {
+                client_req_id: *client_req_id,
+                profile_id: r.profile_id,
+                deadline_ms: cfg.deadline_ms,
+                num_classes: cfg.num_classes,
+                text: cfg.text.clone(),
+            };
+            if stream.write_all(&req.encode_frame()).is_err() {
+                retry_q.push(r); // back in the queue for the next conn
+                dropped = true;
+                break 'conn;
+            }
+            pending.insert(
+                *client_req_id,
+                Pending { sent_at: Instant::now(), profile_id: r.profile_id, attempt: r.attempt },
+            );
+            tally.sent.fetch_add(1, Ordering::Relaxed);
+            tally.retries.fetch_add(1, Ordering::Relaxed);
+            sent_on_conn += 1;
         }
         // send phase
         let want_send = if open_loop {
@@ -312,9 +394,10 @@ fn drive_connection(
         for _ in 0..want_send {
             tally.offered.fetch_add(1, Ordering::Relaxed);
             *client_req_id += 1;
+            let profile_id = zipf.sample(rng).min(cfg.profiles.saturating_sub(1));
             let req = WireRequest {
                 client_req_id: *client_req_id,
-                profile_id: zipf.sample(rng).min(cfg.profiles.saturating_sub(1)),
+                profile_id,
                 deadline_ms: cfg.deadline_ms,
                 num_classes: cfg.num_classes,
                 text: cfg.text.clone(),
@@ -323,7 +406,10 @@ fn drive_connection(
                 dropped = true;
                 break 'conn;
             }
-            pending.insert(*client_req_id, Instant::now());
+            pending.insert(
+                *client_req_id,
+                Pending { sent_at: Instant::now(), profile_id, attempt: 0 },
+            );
             tally.sent.fetch_add(1, Ordering::Relaxed);
             sent_on_conn += 1;
         }
@@ -343,7 +429,7 @@ fn drive_connection(
                         Ok(Some(frame)) => {
                             if frame.kind == FrameKind::Response {
                                 if let Ok(resp) = WireResponse::decode_payload(&frame.payload) {
-                                    record_response(tally, &mut pending, &resp);
+                                    record_response(cfg, tally, &mut pending, &resp, retry_q, rng);
                                 }
                             }
                         }
@@ -376,7 +462,7 @@ fn drive_connection(
                 while let Ok(Some(frame)) = dec.next() {
                     if frame.kind == FrameKind::Response {
                         if let Ok(resp) = WireResponse::decode_payload(&frame.payload) {
-                            record_response(tally, &mut pending, &resp);
+                            record_response(cfg, tally, &mut pending, &resp, retry_q, rng);
                         }
                     }
                 }
@@ -387,20 +473,54 @@ fn drive_connection(
             Err(_) => break,
         }
     }
-    tally.lost.fetch_add(pending.len() as u64, Ordering::Relaxed);
+    // requests reset with the connection get their retry budget (churn
+    // hang-ups stay deliberately lost); the rest are lost for good
+    for (_, p) in pending.drain() {
+        if dropped && p.attempt < cfg.retry_max {
+            retry_q.push(Retry {
+                profile_id: p.profile_id,
+                attempt: p.attempt + 1,
+                due: Instant::now() + retry_backoff(p.attempt, rng),
+            });
+        } else {
+            tally.lost.fetch_add(1, Ordering::Relaxed);
+            if dropped && cfg.retry_max > 0 {
+                tally.retry_exhausted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
     dropped
 }
 
-fn record_response(tally: &Tally, pending: &mut HashMap<u64, Instant>, resp: &WireResponse) {
-    let Some(sent_at) = pending.remove(&resp.client_req_id) else { return };
+fn record_response(
+    cfg: &LoadgenConfig,
+    tally: &Tally,
+    pending: &mut HashMap<u64, Pending>,
+    resp: &WireResponse,
+    retry_q: &mut Vec<Retry>,
+    rng: &mut Rng,
+) {
+    let Some(p) = pending.remove(&resp.client_req_id) else { return };
     match resp.status {
         Status::Ok => {
             tally.ok.fetch_add(1, Ordering::Relaxed);
-            let us = sent_at.elapsed().as_secs_f64() * 1e6;
+            let us = p.sent_at.elapsed().as_secs_f64() * 1e6;
             tally.latencies_us.lock().unwrap().push(us);
         }
         Status::Overloaded => {
-            tally.overloaded.fetch_add(1, Ordering::Relaxed);
+            if p.attempt < cfg.retry_max {
+                // shed by admission control: back off and try again
+                retry_q.push(Retry {
+                    profile_id: p.profile_id,
+                    attempt: p.attempt + 1,
+                    due: Instant::now() + retry_backoff(p.attempt, rng),
+                });
+            } else {
+                tally.overloaded.fetch_add(1, Ordering::Relaxed);
+                if cfg.retry_max > 0 {
+                    tally.retry_exhausted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
         Status::RateLimited => {
             tally.rate_limited.fetch_add(1, Ordering::Relaxed);
@@ -465,6 +585,22 @@ mod tests {
         let mut rng = Rng::new(1);
         for _ in 0..100 {
             assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn retry_backoff_grows_and_caps() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let b0 = retry_backoff(0, &mut rng);
+            assert!(b0 >= RETRY_BACKOFF_BASE);
+            assert!(b0 < RETRY_BACKOFF_BASE * 2);
+            let b2 = retry_backoff(2, &mut rng);
+            assert!(b2 >= RETRY_BACKOFF_BASE * 4);
+            // deep attempts saturate: cap plus at most one base of jitter
+            let deep = retry_backoff(40, &mut rng);
+            assert!(deep >= RETRY_BACKOFF_CAP);
+            assert!(deep < RETRY_BACKOFF_CAP + RETRY_BACKOFF_BASE);
         }
     }
 

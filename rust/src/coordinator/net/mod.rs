@@ -31,6 +31,9 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionConfig, Admit, Permit};
 pub use conn::CloseReason;
-pub use frame::{Decoder, Frame, FrameError, FrameKind, Status, WireRequest, WireResponse};
+pub use frame::{
+    Decoder, Frame, FrameError, FrameKind, RepAck, RepHello, RepRecord, RepSnapshot, Status,
+    WireRequest, WireResponse,
+};
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use server::NetServer;

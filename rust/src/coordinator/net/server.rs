@@ -91,8 +91,16 @@ impl ServerInner {
                 Err(e) => self.on_frame_error(conn, &e),
             },
             // Ping is answered in the reader; a client sending Response or
-            // Pong frames is odd but harmless — ignore.
-            FrameKind::Ping | FrameKind::Pong | FrameKind::Response => {}
+            // Pong frames is odd but harmless — ignore. Replication frames
+            // belong on the dedicated replication listener, not the serving
+            // port — also ignored rather than killing the connection.
+            FrameKind::Ping
+            | FrameKind::Pong
+            | FrameKind::Response
+            | FrameKind::RepHello
+            | FrameKind::RepRecord
+            | FrameKind::RepSnapshot
+            | FrameKind::RepAck => {}
         }
     }
 

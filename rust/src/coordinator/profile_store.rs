@@ -76,6 +76,8 @@ use crate::adapters::{codec_from_tag, codec_tag, AdapterBank};
 use crate::masks::{HardMask, MaskWeights, ProfileMasks};
 use crate::runtime::native::kernels::{self, AggPanels, Quant};
 
+use super::replication::RepHub;
+
 const LOG_MAGIC: &[u8; 8] = b"XPFTLOG1";
 const LEGACY_MAGIC: &[u8; 8] = b"XPFTPROF";
 
@@ -265,6 +267,12 @@ pub struct ShardStats {
     /// Prepacked aggregate-cache occupancy.
     pub agg_entries: usize,
     pub agg_bytes: usize,
+    /// Replication head: records ever committed to this shard since the
+    /// hub attached (0 when no hub).
+    pub rep_seq: u64,
+    /// Replication watermark: every live follower has acked this shard's
+    /// records below this sequence (== `rep_seq` with no followers).
+    pub rep_watermark: u64,
 }
 
 /// Aggregate + per-shard store telemetry (surfaced in serving snapshots).
@@ -291,6 +299,15 @@ pub struct StoreStats {
     /// what they actually hold — 0 at `--quant f32`, ~3·agg_bytes at
     /// int8: the cache-capacity gain made visible.
     pub agg_bytes_saved: usize,
+    /// Replication (leader role; all zero without an attached hub):
+    /// Σ per-shard head sequences, Σ per-shard watermarks, and the lag
+    /// between them (records committed but not yet acked by every live
+    /// follower — the staleness bound a failover read can observe).
+    pub rep_seq: u64,
+    pub rep_watermark: u64,
+    pub rep_lag: u64,
+    /// Live (currently subscribed) followers on the hub.
+    pub rep_followers: usize,
     pub per_shard: Vec<ShardStats>,
 }
 
@@ -526,6 +543,11 @@ pub struct ProfileStore {
     /// Serializes whole-store maintenance (compact-all, save) against
     /// itself; never taken by the serving read path.
     maintenance: Mutex<()>,
+    /// Attached replication hub (leader role): every committed insert
+    /// publishes its record to the hub *while holding the shard write
+    /// lock*, so publish order == commit order per shard. `None` on
+    /// standalone stores and followers.
+    rep: RwLock<Option<Arc<RepHub>>>,
 }
 
 impl ProfileStore {
@@ -553,6 +575,7 @@ impl ProfileStore {
             agg_budget,
             persistent: false,
             maintenance: Mutex::new(()),
+            rep: RwLock::new(None),
         }
     }
 
@@ -564,13 +587,19 @@ impl ProfileStore {
         self.shards.len()
     }
 
+    /// Which shard owns `id` — the Fibonacci multiplicative hash used for
+    /// ALL placement (in-store striping, segment files, and the routing
+    /// tier's node homing reuses the same multiplier): ids are often
+    /// sequential; spread them over the top bits.
+    #[inline]
+    pub fn shard_index(&self, id: u64) -> usize {
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> (64 - self.shard_bits.max(1))) as usize & (self.shards.len() - 1)
+    }
+
     #[inline]
     fn shard_of(&self, id: u64) -> &Shard {
-        // Fibonacci multiplicative hash: ids are often sequential; spread
-        // them over the top bits.
-        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let idx = (h >> (64 - self.shard_bits.max(1))) as usize & (self.shards.len() - 1);
-        &self.shards[idx]
+        &self.shards[self.shard_index(id)]
     }
 
     pub fn set_shared_aux(&self, aux: AuxParams) {
@@ -590,13 +619,23 @@ impl ProfileStore {
     /// keeping the log self-maintaining without a background thread.
     pub fn insert(&self, profile_id: u64, record: ProfileRecord) -> Result<()> {
         let rec = Arc::new(record);
-        let shard = self.shard_of(profile_id);
+        let shard_idx = self.shard_index(profile_id);
+        let shard = &self.shards[shard_idx];
+        // clone the hub handle without holding `self.rep` across the shard
+        // lock (a queued writer on the RwLock could otherwise deadlock the
+        // insert ↔ snapshot lock orders)
+        let hub = self.rep.read().unwrap().clone();
         // encode before taking the lock: serialization needs only the
         // immutable record, and the exclusive section should cover just
         // the file append + map update
+        let mut payload = (self.persistent || hub.is_some())
+            .then(|| encode_record_payload(profile_id, &rec, self.cfg.quant));
         let frame = self.persistent.then(|| {
-            let mut f = Vec::new();
-            encode_record(profile_id, &rec, self.cfg.quant, &mut f);
+            let p = payload.as_ref().expect("payload encoded for persistent stores");
+            let mut f = Vec::with_capacity(8 + p.len());
+            f.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            f.extend_from_slice(&fnv1a32(p).to_le_bytes());
+            f.extend_from_slice(p);
             f
         });
         let mut st = shard.state.write().unwrap();
@@ -638,6 +677,13 @@ impl ProfileStore {
             shard.appended_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
         }
         let replaced = st.profiles.insert(profile_id, rec).is_some();
+        if let Some(hub) = &hub {
+            // publish while the shard write lock is held: the hub assigns
+            // the shard's next sequence, so publish order == commit order
+            // and a snapshot taken under the shard *read* lock observes a
+            // (records, next_seq) pair no in-flight insert can straddle
+            hub.publish(shard_idx, payload.take().expect("payload encoded when hub attached"));
+        }
         if replaced {
             // the cached weights (if any) describe the superseded record
             st.cache.remove(profile_id);
@@ -923,12 +969,16 @@ impl ProfileStore {
 
     /// Per-shard + aggregate telemetry.
     pub fn stats(&self) -> StoreStats {
+        let hub = self.rep.read().unwrap().clone();
         let mut out = StoreStats {
             shards: self.shards.len(),
+            rep_followers: hub.as_ref().map_or(0, |h| h.follower_count()),
             ..StoreStats::default()
         };
-        for sh in &self.shards {
+        for (i, sh) in self.shards.iter().enumerate() {
             let st = sh.state.read().unwrap();
+            let (rep_seq, rep_watermark) =
+                hub.as_ref().map_or((0, 0), |h| (h.next_seq(i), h.watermark(i)));
             let s = ShardStats {
                 profiles: st.profiles.len(),
                 cached: st.cache.len(),
@@ -938,6 +988,8 @@ impl ProfileStore {
                 log_dead: st.log.as_ref().map_or(0, |l| l.dead),
                 agg_entries: st.agg.len(),
                 agg_bytes: st.agg_bytes,
+                rep_seq,
+                rep_watermark,
             };
             out.profiles += s.profiles;
             out.cached += s.cached;
@@ -958,6 +1010,9 @@ impl ProfileStore {
                 .values()
                 .map(|e| e.layers.f32_equiv_bytes().saturating_sub(e.bytes()))
                 .sum::<usize>();
+            out.rep_seq += s.rep_seq;
+            out.rep_watermark += s.rep_watermark;
+            out.rep_lag += s.rep_seq.saturating_sub(s.rep_watermark);
             out.per_shard.push(s);
         }
         out
@@ -987,6 +1042,87 @@ impl ProfileStore {
         self.total_profile_bytes() as f64 / n as f64
     }
 
+    // -- replication -------------------------------------------------------
+
+    /// Attach a replication hub: this store becomes a **leader** — every
+    /// subsequent committed insert is published to the hub in shard-commit
+    /// order. Use [`RepHub::attach`], which seeds the hub's per-shard
+    /// base sequences so pre-existing profiles are served to followers via
+    /// snapshot catch-up.
+    pub fn attach_rep_hub(&self, hub: Arc<RepHub>) {
+        *self.rep.write().unwrap() = Some(hub);
+    }
+
+    pub fn rep_hub(&self) -> Option<Arc<RepHub>> {
+        self.rep.read().unwrap().clone()
+    }
+
+    /// Live profiles of one shard in this shard's history (= the most
+    /// recently committed record for each id).
+    pub fn shard_len(&self, shard_idx: usize) -> usize {
+        self.shards[shard_idx].state.read().unwrap().profiles.len()
+    }
+
+    /// Consistent snapshot of one shard for follower catch-up: every live
+    /// record's encoded payload plus the shard sequence the snapshot is
+    /// valid at. Taken under the shard's *read* lock — inserts publish to
+    /// the hub while holding the *write* lock, so no record can land
+    /// between reading the profiles and reading the sequence.
+    pub fn rep_snapshot(&self, shard_idx: usize) -> (u64, Vec<Vec<u8>>) {
+        let hub = self.rep.read().unwrap().clone();
+        let st = self.shards[shard_idx].state.read().unwrap();
+        let mut ids: Vec<u64> = st.profiles.keys().copied().collect();
+        ids.sort_unstable();
+        let payloads = ids
+            .iter()
+            .map(|id| encode_record_payload(*id, &st.profiles[id], self.cfg.quant))
+            .collect();
+        let seq = hub.as_ref().map_or(0, |h| h.next_seq(shard_idx));
+        (seq, payloads)
+    }
+
+    /// Atomically replace one shard's contents from snapshot record
+    /// payloads (follower snapshot install). All payloads are decoded
+    /// *before* the shard is touched — a malformed snapshot leaves the
+    /// shard intact. Every id present before the swap gets its mask epoch
+    /// bumped (whether it survives, changed, or vanished), so stale cached
+    /// aggregates and in-flight `agg_cache_put`s are rejected exactly as
+    /// after a re-tune; the weight cache and aggregate cache are dropped
+    /// wholesale. In persistent mode the shard's segment is rewritten via
+    /// the compaction path (temp file + fsync + rename).
+    pub fn replace_shard(&self, shard_idx: usize, payloads: &[Vec<u8>]) -> Result<usize> {
+        let mut incoming = Vec::with_capacity(payloads.len());
+        for p in payloads {
+            incoming.push(decode_payload(p)?);
+        }
+        let shard = &self.shards[shard_idx];
+        let mut st = shard.state.write().unwrap();
+        let old_ids: Vec<u64> = st.profiles.keys().copied().collect();
+        for id in old_ids {
+            *st.epochs.entry(id).or_insert(0) += 1;
+        }
+        st.profiles.clear();
+        let cache_cap = st.cache.cap;
+        st.cache = Lru::new(cache_cap);
+        st.agg.clear();
+        st.agg_order.clear();
+        st.agg_bytes = 0;
+        for (id, rec) in incoming {
+            if self.shard_index(id) != shard_idx {
+                bail!(
+                    "snapshot record for profile {id} belongs to shard {}, not {shard_idx}",
+                    self.shard_index(id)
+                );
+            }
+            st.profiles.insert(id, Arc::new(rec));
+        }
+        if st.log.is_some() {
+            compact_locked(&mut st, self.cfg.quant)?;
+            shard.compactions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(st.profiles.len())
+    }
+
     // -- persistence -------------------------------------------------------
 
     /// Open (or create) a **segmented** persistent store rooted at `dir`:
@@ -997,10 +1133,53 @@ impl ProfileStore {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating store dir {}", dir.display()))?;
         let meta_path = dir.join("store.meta");
+        let meta_tmp = dir.join("store.meta.tmp");
         if let Ok(text) = std::fs::read_to_string(&meta_path) {
-            let meta = crate::util::json::Json::parse(&text)
-                .with_context(|| format!("parsing {}", meta_path.display()))?;
-            cfg.shards = meta.usize_field("shards")?;
+            let parsed = crate::util::json::Json::parse(&text)
+                .with_context(|| format!("parsing {}", meta_path.display()))
+                .and_then(|meta| meta.usize_field("shards"));
+            match parsed {
+                Ok(shards) => {
+                    cfg.shards = shards;
+                    // an interrupted atomic rewrite may have left a stale
+                    // temp file behind; the real meta won, so drop it
+                    let _ = std::fs::remove_file(&meta_tmp);
+                }
+                Err(e) => {
+                    // torn meta (a crash mid-write predating the atomic
+                    // writer, or disk corruption). The shard count never
+                    // changes after creation, so ANY complete copy is
+                    // authoritative — recover from the atomic writer's
+                    // temp file if one survived, else refuse (guessing
+                    // the count would orphan records; see below).
+                    let recovered = std::fs::read_to_string(&meta_tmp)
+                        .ok()
+                        .and_then(|t| crate::util::json::Json::parse(&t).ok())
+                        .and_then(|m| m.usize_field("shards").ok());
+                    match recovered {
+                        Some(shards) => {
+                            crate::warn_log!(
+                                "store",
+                                "{}: corrupt meta recovered from {} (shards={shards}): {e:#}",
+                                meta_path.display(),
+                                meta_tmp.display()
+                            );
+                            cfg.shards = shards;
+                            std::fs::rename(&meta_tmp, &meta_path).with_context(|| {
+                                format!("promoting {} over torn meta", meta_tmp.display())
+                            })?;
+                        }
+                        None => {
+                            return Err(e.context(format!(
+                                "{}: torn meta and no recoverable {} — restore store.meta \
+                                 (shard count) to open this store",
+                                meta_path.display(),
+                                meta_tmp.display()
+                            )));
+                        }
+                    }
+                }
+            }
         } else {
             // segments without a meta file mean the shard count (= hash
             // placement) is unknown: regenerating it from cfg could
@@ -1026,7 +1205,12 @@ impl ProfileStore {
             let mut meta = crate::util::json::Json::obj();
             meta.set("shards", crate::util::json::Json::Num(cfg.shards as f64));
             meta.set("version", crate::util::json::Json::Num(1.0));
-            std::fs::write(&meta_path, meta.to_string_pretty())
+            // crash-atomic: write tmp + fsync + rename, so no crash point
+            // can leave a TORN meta in place — either the old state (here:
+            // nothing) or the complete new file. The meta records the hash
+            // placement of every segment; a half-written one would brick
+            // the whole store.
+            atomic_write(&meta_path, meta.to_string_pretty().as_bytes())
                 .with_context(|| format!("writing {}", meta_path.display()))?;
         }
         let mut store = ProfileStore::with_config(cfg);
@@ -1144,6 +1328,24 @@ impl ProfileStore {
     }
 }
 
+/// Crash-atomic small-file write: write `<path>.tmp`, fsync, rename over
+/// `path`. Any crash point leaves either the old file or the complete new
+/// one — never a torn mix. Used for `store.meta` and the follower's
+/// `replica.meta` (both are small JSON whose corruption would otherwise
+/// require manual recovery).
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".tmp");
+    let tmp = PathBuf::from(name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("replacing {}", path.display()))
+}
+
 /// Shard count: default 64, rounded up to a power of two, clamped to a
 /// sane range (an unchecked `next_power_of_two` of a huge `--shards` value
 /// wraps to 0 in release builds — a zero-shard store would panic on first
@@ -1201,7 +1403,7 @@ fn compact_locked(st: &mut ShardState, quant: Quant) -> Result<()> {
 // record codec
 // ---------------------------------------------------------------------------
 
-fn fnv1a32(bytes: &[u8]) -> u32 {
+pub(crate) fn fnv1a32(bytes: &[u8]) -> u32 {
     let mut h = 0x811c_9dc5u32;
     for &b in bytes {
         h ^= b as u32;
@@ -1211,6 +1413,15 @@ fn fnv1a32(bytes: &[u8]) -> u32 {
 }
 
 /// Append one framed record (`len | checksum | payload`) to `out`.
+fn encode_record(id: u64, rec: &ProfileRecord, quant: Quant, out: &mut Vec<u8>) {
+    let payload = encode_record_payload(id, rec, quant);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+/// Encode one record *payload* (the checksummed unit both the append-log
+/// frames and the replication stream carry).
 ///
 /// Format versioning: the kind byte carries the mask kind in its low
 /// nibble and the **aux codec tag** ([`codec_tag`]) in its high nibble.
@@ -1219,7 +1430,7 @@ fn fnv1a32(bytes: &[u8]) -> u32 {
 /// stored exact; only the aux tensors (LN affine + head) are quantized,
 /// as `u32 len | len·u16` at f16 and `u32 len | f32 scale | len·i8` at
 /// int8 (one scale per tensor).
-fn encode_record(id: u64, rec: &ProfileRecord, quant: Quant, out: &mut Vec<u8>) {
+pub(crate) fn encode_record_payload(id: u64, rec: &ProfileRecord, quant: Quant) -> Vec<u8> {
     let mut payload: Vec<u8> = Vec::new();
     payload.extend_from_slice(&id.to_le_bytes());
     let aux_codec = if rec.aux.is_some() { quant } else { Quant::F32 };
@@ -1272,9 +1483,7 @@ fn encode_record(id: u64, rec: &ProfileRecord, quant: Quant, out: &mut Vec<u8>) 
             }
         }
     }
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
-    out.extend_from_slice(&payload);
+    payload
 }
 
 /// A bounds-checked little-endian cursor over untrusted bytes.
@@ -1328,7 +1537,7 @@ impl<'a> Cursor<'a> {
 }
 
 /// Decode one record payload (after checksum verification).
-fn decode_payload(payload: &[u8]) -> Result<(u64, ProfileRecord)> {
+pub(crate) fn decode_payload(payload: &[u8]) -> Result<(u64, ProfileRecord)> {
     let mut c = Cursor::new(payload);
     let id = c.u64()?;
     let kind = c.u8()?;
@@ -2152,6 +2361,47 @@ mod tests {
         }
         std::fs::remove_file(dir.join("store.meta")).unwrap();
         assert!(ProfileStore::open(&dir, cfg).is_err());
+    }
+
+    #[test]
+    fn open_recovers_torn_meta_from_atomic_writer_tmp() {
+        let dir = tmp_dir("seg_torn_meta");
+        let cfg = StoreConfig { shards: 4, ..StoreConfig::default() };
+        {
+            let s = ProfileStore::open(&dir, cfg.clone()).unwrap();
+            s.insert(1, hard_rec(1)).unwrap();
+            s.insert(9, hard_rec(9)).unwrap();
+        }
+        // simulate a crash mid-rewrite: the real meta is torn, but the
+        // atomic writer's complete tmp survived
+        let meta = std::fs::read_to_string(dir.join("store.meta")).unwrap();
+        std::fs::write(dir.join("store.meta.tmp"), &meta).unwrap();
+        std::fs::write(dir.join("store.meta"), &meta[..meta.len() / 2]).unwrap();
+        {
+            // recovery: shard count comes from the tmp, records all load
+            let s = ProfileStore::open(&dir, StoreConfig::default()).unwrap();
+            assert_eq!(s.shard_count(), 4);
+            assert!(s.contains(1) && s.contains(9));
+        }
+        // and the promotion repaired store.meta in place: tmp consumed,
+        // next open is clean
+        assert!(!dir.join("store.meta.tmp").exists());
+        let s = ProfileStore::open(&dir, StoreConfig::default()).unwrap();
+        assert_eq!(s.shard_count(), 4);
+    }
+
+    #[test]
+    fn open_refuses_torn_meta_without_recovery_source() {
+        let dir = tmp_dir("seg_torn_meta_norec");
+        let cfg = StoreConfig { shards: 2, ..StoreConfig::default() };
+        {
+            let s = ProfileStore::open(&dir, cfg).unwrap();
+            s.insert(3, hard_rec(3)).unwrap();
+        }
+        std::fs::write(dir.join("store.meta"), "{ \"sha").unwrap();
+        let err = ProfileStore::open(&dir, StoreConfig::default()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("torn meta"), "unexpected error: {msg}");
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Follower side: connect to the leader's replication listener, apply
+//! shipped records through the ordinary `ProfileStore::insert` path, ack,
+//! and promote when the leader goes silent.
+//!
+//! Applying through `insert` (not a raw map write) is what makes failover
+//! reads safe: the insert bumps the profile's mask epoch and drops stale
+//! cache/aggregation entries under the shard write lock, exactly as a
+//! local re-tune would — so a read served by a promoted follower can never
+//! observe a torn re-tune.
+//!
+//! Fault policy: a record that is corrupt (bad CRC), out of order (gap),
+//! mis-sharded, or undecodable triggers a fresh `RepHello` from the last
+//! durable position — the leader rewinds its cursors and re-ships. The
+//! follower never dies on bad input; only frame-level stream corruption
+//! forces a reconnect (which re-hellos from the same durable position).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::net::frame::{
+    self, Decoder, FrameKind, RepAck, RepHello, RepRecord, RepSnapshot,
+};
+use crate::coordinator::profile_store::{self, ProfileStore};
+use crate::coordinator::telemetry::Telemetry;
+use crate::util::json::Json;
+
+use super::RepConfig;
+
+/// Socket poll granularity.
+const POLL: Duration = Duration::from_millis(5);
+/// Pause between reconnect attempts while the leader is unreachable.
+const RECONNECT_PAUSE: Duration = Duration::from_millis(100);
+/// Persist `replica.meta` every this many applied records (and on every
+/// disconnect), bounding re-ship work after a follower crash.
+const META_EVERY: u64 = 64;
+
+/// Follower configuration.
+#[derive(Debug, Clone)]
+pub struct FollowerConfig {
+    /// Leader replication address (`--rep-peer`), e.g. `127.0.0.1:7401`.
+    pub peer: String,
+    /// This replica's id (`--replica-id`); must be non-zero and unique
+    /// (the leader reserves 0 for itself).
+    pub replica_id: u64,
+    /// Where to persist per-shard durable positions (`replica.meta`).
+    /// `None` keeps positions in memory only — fine for tests, but a
+    /// restarted follower then bootstraps by snapshot.
+    pub meta_path: Option<PathBuf>,
+    pub rep: RepConfig,
+}
+
+struct Shared {
+    stop: AtomicBool,
+    connected: AtomicBool,
+    /// Promotion gate: never promote before having reached the leader at
+    /// least once this process (a follower booted against a dead address
+    /// must not instantly crown itself).
+    ever_connected: AtomicBool,
+    promoted: AtomicBool,
+    applied: AtomicU64,
+    reconnects: AtomicU64,
+    /// Gap / corrupt / mis-sharded records answered with a re-`RepHello`.
+    rerequests: AtomicU64,
+    snapshots: AtomicU64,
+    /// Highest leader generation seen; an older leader is refused.
+    epoch_seen: AtomicU64,
+    /// Per-shard next expected sequence (== records durably applied).
+    next_seqs: Mutex<Vec<u64>>,
+    /// Last moment any byte arrived from the leader.
+    last_contact: Mutex<Instant>,
+}
+
+/// A running follower loop; handle to observe and stop it.
+pub struct Follower {
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Follower {
+    pub fn start(store: Arc<ProfileStore>, tel: Arc<Telemetry>, cfg: FollowerConfig) -> Follower {
+        let shards = store.shard_count();
+        let (epoch, seqs) = load_meta(cfg.meta_path.as_deref(), shards);
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            connected: AtomicBool::new(false),
+            ever_connected: AtomicBool::new(false),
+            promoted: AtomicBool::new(false),
+            applied: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            rerequests: AtomicU64::new(0),
+            snapshots: AtomicU64::new(0),
+            epoch_seen: AtomicU64::new(epoch),
+            next_seqs: Mutex::new(seqs),
+            last_contact: Mutex::new(Instant::now()),
+        });
+        let handle = {
+            let shared = shared.clone();
+            std::thread::spawn(move || run(store, tel, cfg, shared))
+        };
+        Follower { shared, handle: Some(handle) }
+    }
+
+    /// True once the follower declared the leader dead and started serving
+    /// reads at its watermark.
+    pub fn promoted(&self) -> bool {
+        self.shared.promoted.load(Ordering::Relaxed)
+    }
+
+    pub fn connected(&self) -> bool {
+        self.shared.connected.load(Ordering::Relaxed)
+    }
+
+    /// Records applied this process (monotone).
+    pub fn applied(&self) -> u64 {
+        self.shared.applied.load(Ordering::Relaxed)
+    }
+
+    pub fn reconnects(&self) -> u64 {
+        self.shared.reconnects.load(Ordering::Relaxed)
+    }
+
+    pub fn rerequests(&self) -> u64 {
+        self.shared.rerequests.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshots(&self) -> u64 {
+        self.shared.snapshots.load(Ordering::Relaxed)
+    }
+
+    /// Per-shard durable positions (the follower's watermark).
+    pub fn next_seqs(&self) -> Vec<u64> {
+        self.shared.next_seqs.lock().unwrap().clone()
+    }
+
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Follower {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn load_meta(path: Option<&std::path::Path>, shards: usize) -> (u64, Vec<u64>) {
+    let fallback = (0, vec![0u64; shards]);
+    let Some(path) = path else { return fallback };
+    let Ok(text) = std::fs::read_to_string(path) else { return fallback };
+    // a torn or stale meta is never fatal: zeros force the snapshot path,
+    // which is self-healing
+    match parse_meta(&text, shards) {
+        Ok(v) => v,
+        Err(e) => {
+            crate::warn_log!("rep", "ignoring unreadable {}: {e:#}", path.display());
+            fallback
+        }
+    }
+}
+
+fn parse_meta(text: &str, shards: usize) -> Result<(u64, Vec<u64>)> {
+    let j = Json::parse(text)?;
+    let epoch = j.usize_field("epoch")? as u64;
+    let arr = j.get("next_seqs")?.as_arr()?;
+    if arr.len() != shards {
+        bail!("meta has {} shards, store has {shards}", arr.len());
+    }
+    let seqs = arr
+        .iter()
+        .map(|v| v.as_usize().map(|n| n as u64))
+        .collect::<Result<Vec<u64>>>()?;
+    Ok((epoch, seqs))
+}
+
+fn persist_meta(cfg: &FollowerConfig, shared: &Shared) {
+    let Some(path) = &cfg.meta_path else { return };
+    let seqs = shared.next_seqs.lock().unwrap().clone();
+    let mut j = Json::obj();
+    j.set("replica_id", Json::Num(cfg.replica_id as f64));
+    j.set("epoch", Json::Num(shared.epoch_seen.load(Ordering::Relaxed) as f64));
+    j.set(
+        "next_seqs",
+        Json::Arr(seqs.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    if let Err(e) = profile_store::atomic_write(path, j.to_string_pretty().as_bytes()) {
+        crate::warn_log!("rep", "persisting {} failed: {e:#}", path.display());
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Outer loop: connect, run a session, persist positions, maybe promote.
+fn run(store: Arc<ProfileStore>, tel: Arc<Telemetry>, cfg: FollowerConfig, shared: Arc<Shared>) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match TcpStream::connect(&cfg.peer) {
+            Ok(stream) => {
+                shared.connected.store(true, Ordering::Relaxed);
+                shared.ever_connected.store(true, Ordering::Relaxed);
+                *shared.last_contact.lock().unwrap() = Instant::now();
+                let res = session(&store, &tel, &cfg, &shared, stream);
+                shared.connected.store(false, Ordering::Relaxed);
+                shared.reconnects.fetch_add(1, Ordering::Relaxed);
+                persist_meta(&cfg, &shared);
+                if let Err(e) = res {
+                    crate::info!("rep", "leader session ended: {e:#}");
+                }
+            }
+            Err(e) => {
+                crate::debug_log!("rep", "connect {} failed: {e}", cfg.peer);
+                std::thread::sleep(RECONNECT_PAUSE);
+            }
+        }
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // promotion: the leader is dead when we have reached it before but
+        // it has now been silent past the failover budget
+        let silent = shared.last_contact.lock().unwrap().elapsed();
+        if shared.ever_connected.load(Ordering::Relaxed)
+            && silent > Duration::from_millis(cfg.rep.failover_ms)
+        {
+            shared.promoted.store(true, Ordering::Relaxed);
+            crate::info!(
+                "rep",
+                "leader silent for {silent:?} (> {}ms): promoting, serving reads at watermark",
+                cfg.rep.failover_ms
+            );
+            break;
+        }
+    }
+    persist_meta(&cfg, &shared);
+}
+
+/// One connected session: hello exchange, then apply until error/stop.
+fn session(
+    store: &ProfileStore,
+    tel: &Telemetry,
+    cfg: &FollowerConfig,
+    shared: &Shared,
+    mut stream: TcpStream,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL)).context("read timeout")?;
+    stream.set_write_timeout(Some(Duration::from_secs(2))).context("write timeout")?;
+    send_hello(cfg, shared, store, &mut stream).context("sending hello")?;
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 16 * 1024];
+    // partial snapshot chunks per shard, dropped on any re-hello
+    let mut pending_snaps: HashMap<u32, Vec<Vec<u8>>> = HashMap::new();
+    let mut since_meta = 0u64;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let silent = shared.last_contact.lock().unwrap().elapsed();
+        if silent > Duration::from_millis(cfg.rep.failover_ms) {
+            bail!("leader silent for {silent:?} mid-session");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => bail!("leader closed the connection"),
+            Ok(n) => {
+                *shared.last_contact.lock().unwrap() = Instant::now();
+                dec.push(&buf[..n]).map_err(|e| anyhow::anyhow!("leader stream: {e}"))?;
+                while let Some(f) =
+                    dec.next().map_err(|e| anyhow::anyhow!("leader stream: {e}"))?
+                {
+                    handle_frame(
+                        store,
+                        tel,
+                        cfg,
+                        shared,
+                        &mut stream,
+                        &mut pending_snaps,
+                        &mut since_meta,
+                        f,
+                    )?;
+                }
+            }
+            Err(e) if would_block(&e) => {}
+            Err(e) => return Err(e).context("reading from leader"),
+        }
+    }
+}
+
+fn send_hello(
+    cfg: &FollowerConfig,
+    shared: &Shared,
+    store: &ProfileStore,
+    stream: &mut TcpStream,
+) -> Result<()> {
+    let hello = RepHello {
+        replica_id: cfg.replica_id,
+        epoch: shared.epoch_seen.load(Ordering::Relaxed),
+        shard_count: store.shard_count() as u32,
+        next_seqs: shared.next_seqs.lock().unwrap().clone(),
+    };
+    stream.write_all(&hello.encode_frame())?;
+    Ok(())
+}
+
+/// Answer a bad record (gap, CRC, decode, mis-shard) with a re-hello from
+/// the durable position instead of dying.
+fn rerequest(
+    cfg: &FollowerConfig,
+    shared: &Shared,
+    store: &ProfileStore,
+    stream: &mut TcpStream,
+    pending_snaps: &mut HashMap<u32, Vec<Vec<u8>>>,
+    why: &str,
+) -> Result<()> {
+    shared.rerequests.fetch_add(1, Ordering::Relaxed);
+    pending_snaps.clear();
+    crate::warn_log!("rep", "{why}; re-requesting from durable offsets");
+    send_hello(cfg, shared, store, stream).context("sending re-hello")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    store: &ProfileStore,
+    tel: &Telemetry,
+    cfg: &FollowerConfig,
+    shared: &Shared,
+    stream: &mut TcpStream,
+    pending_snaps: &mut HashMap<u32, Vec<Vec<u8>>>,
+    since_meta: &mut u64,
+    f: frame::Frame,
+) -> Result<()> {
+    let shards = store.shard_count();
+    match f.kind {
+        FrameKind::RepHello => {
+            // the leader's side of the handshake
+            let h = RepHello::decode_payload(&f.payload)
+                .map_err(|e| anyhow::anyhow!("bad leader hello: {e}"))?;
+            let seen = shared.epoch_seen.load(Ordering::Relaxed);
+            if h.epoch < seen {
+                bail!("leader at epoch {} but we have seen {seen}: stale leader", h.epoch);
+            }
+            shared.epoch_seen.store(h.epoch, Ordering::Relaxed);
+            if h.shard_count as usize != shards {
+                bail!("leader has {} shards, this store has {shards}", h.shard_count);
+            }
+        }
+        FrameKind::RepRecord => {
+            let r = match RepRecord::decode_payload(&f.payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    return rerequest(
+                        cfg, shared, store, stream, pending_snaps,
+                        &format!("malformed record frame ({e})"),
+                    );
+                }
+            };
+            let shard = r.shard as usize;
+            if shard >= shards {
+                return rerequest(
+                    cfg, shared, store, stream, pending_snaps,
+                    &format!("record for shard {shard} outside layout"),
+                );
+            }
+            let expect = shared.next_seqs.lock().unwrap()[shard];
+            if r.seq != expect {
+                if r.seq < expect {
+                    // duplicate after a re-ship race: drop silently
+                    return Ok(());
+                }
+                return rerequest(
+                    cfg, shared, store, stream, pending_snaps,
+                    &format!("gap on shard {shard}: got seq {}, expected {expect}", r.seq),
+                );
+            }
+            if !r.verify() {
+                return rerequest(
+                    cfg, shared, store, stream, pending_snaps,
+                    &format!("checksum mismatch on shard {shard} seq {}", r.seq),
+                );
+            }
+            let (id, rec) = match profile_store::decode_payload(&r.record) {
+                Ok(v) => v,
+                Err(e) => {
+                    return rerequest(
+                        cfg, shared, store, stream, pending_snaps,
+                        &format!("undecodable record on shard {shard} seq {} ({e:#})", r.seq),
+                    );
+                }
+            };
+            if store.shard_index(id) != shard {
+                return rerequest(
+                    cfg, shared, store, stream, pending_snaps,
+                    &format!("profile {id} does not hash to shard {shard}"),
+                );
+            }
+            store
+                .insert(id, rec)
+                .with_context(|| format!("applying profile {id}"))?;
+            let durable = {
+                let mut seqs = shared.next_seqs.lock().unwrap();
+                seqs[shard] = r.seq + 1;
+                seqs[shard]
+            };
+            shared.applied.fetch_add(1, Ordering::Relaxed);
+            let ack = RepAck { shard: r.shard, seq: durable };
+            stream.write_all(&ack.encode_frame()).context("sending ack")?;
+            tel.record_rep_ack();
+            *since_meta += 1;
+            if *since_meta >= META_EVERY {
+                *since_meta = 0;
+                persist_meta(cfg, shared);
+            }
+        }
+        FrameKind::RepSnapshot => {
+            let s = match RepSnapshot::decode_payload(&f.payload) {
+                Ok(s) => s,
+                Err(e) => {
+                    return rerequest(
+                        cfg, shared, store, stream, pending_snaps,
+                        &format!("malformed snapshot frame ({e})"),
+                    );
+                }
+            };
+            if s.shard as usize >= shards {
+                return rerequest(
+                    cfg, shared, store, stream, pending_snaps,
+                    &format!("snapshot for shard {} outside layout", s.shard),
+                );
+            }
+            let acc = pending_snaps.entry(s.shard).or_default();
+            acc.extend(s.records);
+            if s.done {
+                let payloads = pending_snaps.remove(&s.shard).unwrap_or_default();
+                let n = payloads.len();
+                match store.replace_shard(s.shard as usize, &payloads) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        return rerequest(
+                            cfg, shared, store, stream, pending_snaps,
+                            &format!("snapshot install failed on shard {} ({e:#})", s.shard),
+                        );
+                    }
+                }
+                shared.next_seqs.lock().unwrap()[s.shard as usize] = s.upto_seq;
+                shared.snapshots.fetch_add(1, Ordering::Relaxed);
+                tel.record_snapshot_catchup();
+                persist_meta(cfg, shared);
+                let ack = RepAck { shard: s.shard, seq: s.upto_seq };
+                stream.write_all(&ack.encode_frame()).context("acking snapshot")?;
+                crate::info!(
+                    "rep",
+                    "shard {}: installed snapshot of {n} records, position {}",
+                    s.shard,
+                    s.upto_seq
+                );
+            }
+        }
+        FrameKind::Ping => {
+            stream
+                .write_all(&frame::encode(FrameKind::Pong, &[]))
+                .context("answering heartbeat")?;
+        }
+        _ => {}
+    }
+    Ok(())
+}

@@ -1,0 +1,327 @@
+//! Replicated profile store: leader → follower append-log shipping over
+//! the `XPNF` frame transport, follower catch-up, and failover routing.
+//!
+//! # Roles and data flow
+//!
+//! ```text
+//!              tuning commits                    reads (any time)
+//!                   │                                  │
+//!                   ▼                                  ▼
+//!   leader ProfileStore ──publish──▶ RepHub      client Router
+//!        │ (under the shard            │          home = fib-hash(id)
+//!        │  write lock)                │          failover → next node
+//!        ▼                             ▼
+//!   shard-NNNN.log            RepServer (shipper)
+//!                                      │ RepRecord / RepSnapshot / Ping
+//!                                      ▼
+//!                              Follower ──insert──▶ follower ProfileStore
+//!                                      │ RepAck                │
+//!                                      ▼                       ▼
+//!                              leader watermark        follower Service
+//!                                                      (serves reads at
+//!                                                       its watermark)
+//! ```
+//!
+//! * [`RepHub`] — attached to the **leader** store; every committed insert
+//!   publishes its record payload to a bounded per-shard tail *while
+//!   holding the shard write lock* (publish order == commit order), and
+//!   follower acks drive the per-shard replication **watermark** exposed
+//!   in [`StoreStats`](super::profile_store::StoreStats).
+//! * [`shipper`] — the leader's replication listener: one thread per
+//!   follower streams tail records, falls back to **snapshot catch-up**
+//!   (the shard's live records — the same artifact compaction writes)
+//!   when a follower is behind the retained tail, and heartbeats with
+//!   `Ping` when idle.
+//! * [`follower`] — connects, applies records through the ordinary
+//!   `ProfileStore::insert` (so the mask-epoch machinery invalidates
+//!   caches exactly as a local re-tune would — a failover read can never
+//!   observe a torn re-tune), acks each record, persists its per-shard
+//!   positions in `replica.meta`, and **promotes** itself when the leader
+//!   stays silent past the failover budget. A corrupt or gap record
+//!   triggers a re-`RepHello` from the last durable position — never
+//!   follower death.
+//! * [`router`] — client-side failover tier: profiles hash to a home node
+//!   with the store's Fibonacci multiplier; reads fail over to the next
+//!   node when the home node is unreachable, draining, or shutting down.
+//!
+//! # Sequences are logical
+//!
+//! A shard's replication position is the **count of records ever
+//! committed** to it (since the hub attached), not a byte offset —
+//! compaction rewrites segment bytes but never reorders history, so
+//! logical sequences survive compaction where byte offsets would not.
+//! Pre-attach history has no sequences; a follower asking for a position
+//! below the retained tail (or below the attach point) is bootstrapped
+//! with a snapshot instead.
+
+pub mod follower;
+pub mod router;
+pub mod shipper;
+
+pub use follower::{Follower, FollowerConfig};
+pub use router::{Router, RouterConfig, RouterStats};
+pub use shipper::RepServer;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::profile_store::ProfileStore;
+
+/// Replication tuning knobs (shared by leader and follower sides).
+#[derive(Debug, Clone)]
+pub struct RepConfig {
+    /// Records retained per shard for incremental catch-up (`--rep-tail`).
+    /// A follower further behind than this is bootstrapped by snapshot.
+    pub tail: usize,
+    /// Leader heartbeat interval when a connection is idle
+    /// (`--rep-heartbeat-ms`): followers use silence, not just EOF, to
+    /// detect a dead or partitioned leader.
+    pub heartbeat_ms: u64,
+    /// Follower promotion budget (`--rep-failover-ms`): after first
+    /// contact, a leader silent for longer than this is declared dead and
+    /// the follower promotes itself (serves reads at its watermark).
+    pub failover_ms: u64,
+}
+
+impl Default for RepConfig {
+    fn default() -> Self {
+        RepConfig { tail: 1024, heartbeat_ms: 200, failover_ms: 1500 }
+    }
+}
+
+struct ShardTail {
+    /// Next sequence to assign == records ever committed (incl. pre-attach
+    /// history counted at attach time).
+    next_seq: u64,
+    /// Retained record payloads for `[next_seq - buf.len(), next_seq)`.
+    buf: VecDeque<Arc<Vec<u8>>>,
+}
+
+/// Per-shard bounded replication tails + follower ack tracking, attached
+/// to a leader [`ProfileStore`]. All methods are `&self`; per-shard state
+/// sits behind its own mutex so publishing from insert contends only with
+/// shipping of the same shard.
+pub struct RepHub {
+    epoch: u64,
+    tail_cap: usize,
+    shards: Vec<Mutex<ShardTail>>,
+    /// replica_id → per-shard acked sequence (records below it applied).
+    followers: Mutex<HashMap<u64, Vec<u64>>>,
+    /// Total records ever published (monotone; cheap progress signal).
+    published: AtomicU64,
+}
+
+impl RepHub {
+    /// Create a hub for `store` and attach it: the store becomes a leader.
+    /// Per-shard sequences start at the shard's current live-profile count
+    /// so pre-existing history is representable — any follower below the
+    /// attach point takes the snapshot path.
+    pub fn attach(store: &ProfileStore, epoch: u64, tail: usize) -> Arc<RepHub> {
+        let shards = (0..store.shard_count())
+            .map(|i| {
+                Mutex::new(ShardTail {
+                    next_seq: store.shard_len(i) as u64,
+                    buf: VecDeque::new(),
+                })
+            })
+            .collect();
+        let hub = Arc::new(RepHub {
+            epoch,
+            tail_cap: tail.max(1),
+            shards,
+            followers: Mutex::new(HashMap::new()),
+            published: AtomicU64::new(0),
+        });
+        store.attach_rep_hub(hub.clone());
+        hub
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Called by `ProfileStore::insert` while holding the shard write
+    /// lock: append the committed record to the shard's tail.
+    pub fn publish(&self, shard: usize, payload: Vec<u8>) {
+        let mut t = self.shards[shard].lock().unwrap();
+        t.buf.push_back(Arc::new(payload));
+        t.next_seq += 1;
+        while t.buf.len() > self.tail_cap {
+            t.buf.pop_front();
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn next_seq(&self, shard: usize) -> u64 {
+        self.shards[shard].lock().unwrap().next_seq
+    }
+
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+
+    /// Per-shard head sequences (the leader half of a `RepHello`).
+    pub fn next_seqs(&self) -> Vec<u64> {
+        (0..self.shards.len()).map(|i| self.next_seq(i)).collect()
+    }
+
+    /// Retained records from `from_seq` on, with their sequences. `None`
+    /// means the position is outside the retained tail — ahead of the
+    /// head (a diverged follower) or behind the oldest retained record —
+    /// and the follower needs a snapshot.
+    #[allow(clippy::type_complexity)]
+    pub fn records_from(&self, shard: usize, from_seq: u64) -> Option<Vec<(u64, Arc<Vec<u8>>)>> {
+        let t = self.shards[shard].lock().unwrap();
+        let first = t.next_seq - t.buf.len() as u64;
+        if from_seq < first || from_seq > t.next_seq {
+            return None;
+        }
+        let skip = (from_seq - first) as usize;
+        Some(
+            t.buf
+                .iter()
+                .skip(skip)
+                .enumerate()
+                .map(|(i, p)| (from_seq + i as u64, p.clone()))
+                .collect(),
+        )
+    }
+
+    /// Register (or re-register) a follower at its starting positions.
+    /// Positions are clamped to the shard heads so a diverged follower
+    /// cannot push the watermark past records that exist here.
+    pub fn register_follower(&self, replica_id: u64, start: &[u64]) {
+        let acked: Vec<u64> = (0..self.shards.len())
+            .map(|i| start.get(i).copied().unwrap_or(0).min(self.next_seq(i)))
+            .collect();
+        self.followers.lock().unwrap().insert(replica_id, acked);
+    }
+
+    /// Record a follower ack: `shard`'s records below `seq` are applied.
+    /// A shard index outside the layout is ignored (hostile or confused
+    /// peer — never a panic path).
+    pub fn ack(&self, replica_id: u64, shard: usize, seq: u64) {
+        if shard >= self.shards.len() {
+            return;
+        }
+        let clamped = seq.min(self.next_seq(shard));
+        if let Some(acked) = self.followers.lock().unwrap().get_mut(&replica_id) {
+            if shard < acked.len() {
+                acked[shard] = acked[shard].max(clamped);
+            }
+        }
+    }
+
+    /// Drop a disconnected follower; the watermark recovers immediately
+    /// (a dead follower must not pin the lag forever).
+    pub fn drop_follower(&self, replica_id: u64) {
+        self.followers.lock().unwrap().remove(&replica_id);
+    }
+
+    pub fn follower_count(&self) -> usize {
+        self.followers.lock().unwrap().len()
+    }
+
+    /// Replication watermark for one shard: every live follower has acked
+    /// records below this. With no followers it equals the head (nothing
+    /// is owed to anyone).
+    pub fn watermark(&self, shard: usize) -> u64 {
+        let head = self.next_seq(shard);
+        self.followers
+            .lock()
+            .unwrap()
+            .values()
+            .map(|acked| acked.get(shard).copied().unwrap_or(0))
+            .min()
+            .unwrap_or(head)
+            .min(head)
+    }
+
+    /// Σ per-shard (head − watermark): committed records not yet acked by
+    /// every live follower — the failover staleness bound.
+    pub fn lag(&self) -> u64 {
+        (0..self.shards.len())
+            .map(|i| self.next_seq(i).saturating_sub(self.watermark(i)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bare_hub(shards: usize) -> RepHub {
+        RepHub {
+            epoch: 1,
+            tail_cap: 4,
+            shards: (0..shards)
+                .map(|_| Mutex::new(ShardTail { next_seq: 0, buf: VecDeque::new() }))
+                .collect(),
+            followers: Mutex::new(HashMap::new()),
+            published: AtomicU64::new(0),
+        }
+    }
+
+    #[test]
+    fn publish_assigns_dense_sequences_and_bounds_the_tail() {
+        let hub = bare_hub(1);
+        for i in 0..10u8 {
+            hub.publish(0, vec![i]);
+        }
+        assert_eq!(hub.next_seq(0), 10);
+        assert_eq!(hub.published(), 10);
+        // tail_cap = 4: only seqs 6..10 retained
+        let recs = hub.records_from(0, 6).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(recs[0].0, 6);
+        assert_eq!(*recs[0].1, vec![6u8]);
+        assert_eq!(recs[3].0, 9);
+        // behind the tail, or ahead of the head → snapshot needed
+        assert!(hub.records_from(0, 5).is_none());
+        assert!(hub.records_from(0, 11).is_none());
+        // at the head → empty, valid
+        assert_eq!(hub.records_from(0, 10).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn watermark_is_min_over_live_followers_and_recovers_on_drop() {
+        let hub = bare_hub(2);
+        for _ in 0..5 {
+            hub.publish(0, vec![0]);
+        }
+        // no followers: watermark == head, lag 0
+        assert_eq!(hub.watermark(0), 5);
+        assert_eq!(hub.lag(), 0);
+        hub.register_follower(1, &[0, 0]);
+        hub.register_follower(2, &[3, 0]);
+        assert_eq!(hub.watermark(0), 0);
+        assert_eq!(hub.lag(), 5);
+        hub.ack(1, 0, 5);
+        assert_eq!(hub.watermark(0), 3); // follower 2 still at 3
+        hub.ack(2, 0, 4);
+        assert_eq!(hub.watermark(0), 4);
+        assert_eq!(hub.lag(), 1);
+        // acks never regress, and are clamped to the head
+        hub.ack(2, 0, 2);
+        assert_eq!(hub.watermark(0), 4);
+        hub.ack(2, 0, 99);
+        assert_eq!(hub.watermark(0), 5);
+        hub.drop_follower(1);
+        hub.drop_follower(2);
+        assert_eq!(hub.watermark(0), 5);
+        assert_eq!(hub.follower_count(), 0);
+    }
+
+    #[test]
+    fn register_clamps_diverged_follower_positions() {
+        let hub = bare_hub(1);
+        hub.publish(0, vec![1]);
+        hub.register_follower(7, &[40]); // claims to be far ahead
+        assert_eq!(hub.watermark(0), 1); // clamped to the head
+    }
+}

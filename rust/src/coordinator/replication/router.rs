@@ -1,0 +1,279 @@
+//! Client-side failover routing in front of the serving tier.
+//!
+//! Profiles hash to a **home node** with the same Fibonacci multiplier the
+//! store uses for shard placement, so a profile's requests land on the
+//! node whose store committed it. When the home node is unreachable,
+//! drains the connection, or answers `ShuttingDown`, the request fails
+//! over to the next node in ring order (a caught-up follower serving at
+//! its watermark) and `failover_reads` is counted. Nodes that keep
+//! failing sit out a cooldown so a dead leader costs one connect timeout
+//! per cooldown window, not per request.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::net::frame::{Decoder, FrameKind, Status, WireRequest, WireResponse};
+use crate::coordinator::telemetry::Telemetry;
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Serving addresses in ring order; index 0 is conventionally the
+    /// leader but the router is symmetric.
+    pub nodes: Vec<String>,
+    /// How long a node sits out after `FAILS_BEFORE_COOLDOWN` consecutive
+    /// failures.
+    pub cooldown_ms: u64,
+    pub connect_timeout_ms: u64,
+    /// Per-response wait; a node slower than this is treated as down.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            nodes: Vec::new(),
+            cooldown_ms: 500,
+            connect_timeout_ms: 250,
+            io_timeout_ms: 2000,
+        }
+    }
+}
+
+/// Consecutive failures before a node is placed on cooldown.
+const FAILS_BEFORE_COOLDOWN: u32 = 2;
+/// Socket poll granularity while waiting for a response.
+const POLL: Duration = Duration::from_millis(2);
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Requests that got a response (from any node).
+    pub sent: u64,
+    /// Requests answered by a non-home node.
+    pub failover_reads: u64,
+    /// Requests that failed on every node.
+    pub errors: u64,
+}
+
+struct Node {
+    addr: String,
+    conn: Option<(TcpStream, Decoder)>,
+    fails: u32,
+    down_until: Option<Instant>,
+}
+
+/// A failover-routing client. Not thread-safe by design — loadgen and the
+/// fault harness run one router per worker.
+pub struct Router {
+    cfg: RouterConfig,
+    nodes: Vec<Node>,
+    stats: RouterStats,
+    tel: Option<Arc<Telemetry>>,
+    next_req_id: u64,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Result<Router> {
+        if cfg.nodes.is_empty() {
+            bail!("router needs at least one node");
+        }
+        let nodes = cfg
+            .nodes
+            .iter()
+            .map(|a| Node { addr: a.clone(), conn: None, fails: 0, down_until: None })
+            .collect();
+        Ok(Router { cfg, nodes, stats: RouterStats::default(), tel: None, next_req_id: 1 })
+    }
+
+    /// Attach a telemetry sink: failovers then also tick the process-wide
+    /// `failover_reads` counter.
+    pub fn with_telemetry(mut self, tel: Arc<Telemetry>) -> Router {
+        self.tel = Some(tel);
+        self
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        self.stats
+    }
+
+    /// Home node for a profile: same multiplier as
+    /// `ProfileStore::shard_index`, mapped over the node count.
+    pub fn home(&self, profile_id: u64) -> usize {
+        let h = profile_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h as u128 * self.nodes.len() as u128) >> 64) as usize
+    }
+
+    /// Send one request, trying the profile's home node first and failing
+    /// over around the ring. Returns the index of the node that answered
+    /// plus its response.
+    pub fn request(&mut self, req: &WireRequest) -> Result<(usize, WireResponse)> {
+        let n = self.nodes.len();
+        let home = self.home(req.profile_id);
+        let mut req = req.clone();
+        let mut last_err: Option<anyhow::Error> = None;
+        // pass 1 honours cooldowns; pass 2 retries everyone anyway (total
+        // unavailability should surface the real error, not a cooldown)
+        for pass in 0..2 {
+            for off in 0..n {
+                let idx = (home + off) % n;
+                if pass == 0 {
+                    if let Some(t) = self.nodes[idx].down_until {
+                        if Instant::now() < t {
+                            continue;
+                        }
+                    }
+                }
+                req.client_req_id = self.next_req_id;
+                self.next_req_id += 1;
+                match self.try_node(idx, &req) {
+                    Ok(resp) if resp.status == Status::ShuttingDown => {
+                        self.mark_failed(idx);
+                        last_err = Some(anyhow::anyhow!(
+                            "node {} ({}) is shutting down",
+                            idx,
+                            self.nodes[idx].addr
+                        ));
+                    }
+                    Ok(resp) => {
+                        self.nodes[idx].fails = 0;
+                        self.nodes[idx].down_until = None;
+                        self.stats.sent += 1;
+                        if idx != home {
+                            self.stats.failover_reads += 1;
+                            if let Some(tel) = &self.tel {
+                                tel.record_failover_read();
+                            }
+                        }
+                        return Ok((idx, resp));
+                    }
+                    Err(e) => {
+                        self.mark_failed(idx);
+                        last_err = Some(e.context(format!(
+                            "node {} ({})",
+                            idx, self.nodes[idx].addr
+                        )));
+                    }
+                }
+            }
+        }
+        self.stats.errors += 1;
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no nodes configured")))
+    }
+
+    fn mark_failed(&mut self, idx: usize) {
+        let node = &mut self.nodes[idx];
+        node.conn = None;
+        node.fails += 1;
+        if node.fails >= FAILS_BEFORE_COOLDOWN {
+            node.down_until =
+                Some(Instant::now() + Duration::from_millis(self.cfg.cooldown_ms));
+        }
+    }
+
+    fn try_node(&mut self, idx: usize, req: &WireRequest) -> Result<WireResponse> {
+        if self.nodes[idx].conn.is_none() {
+            let stream = connect(&self.nodes[idx].addr, self.cfg.connect_timeout_ms)?;
+            stream
+                .set_read_timeout(Some(POLL))
+                .context("setting read timeout")?;
+            stream
+                .set_write_timeout(Some(Duration::from_millis(self.cfg.io_timeout_ms)))
+                .context("setting write timeout")?;
+            stream.set_nodelay(true).ok();
+            self.nodes[idx].conn = Some((stream, Decoder::new()));
+        }
+        let want = req.client_req_id;
+        let io_timeout = Duration::from_millis(self.cfg.io_timeout_ms);
+        let (stream, dec) = self.nodes[idx].conn.as_mut().unwrap();
+        stream.write_all(&req.encode_frame()).context("sending request")?;
+        let deadline = Instant::now() + io_timeout;
+        let mut buf = [0u8; 8192];
+        loop {
+            while let Some(f) = dec.next().map_err(|e| anyhow::anyhow!("bad frame: {e}"))? {
+                if f.kind != FrameKind::Response {
+                    continue;
+                }
+                let resp = WireResponse::decode_payload(&f.payload)
+                    .map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+                // stale correlation ids (a response to a request whose
+                // wait we abandoned) are skipped, not errors
+                if resp.client_req_id == want {
+                    return Ok(resp);
+                }
+            }
+            if Instant::now() > deadline {
+                bail!("no response within {io_timeout:?}");
+            }
+            match stream.read(&mut buf) {
+                Ok(0) => bail!("connection closed"),
+                Ok(n) => dec
+                    .push(&buf[..n])
+                    .map_err(|e| anyhow::anyhow!("bad bytes: {e}"))?,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => return Err(e).context("reading response"),
+            }
+        }
+    }
+}
+
+fn connect(addr: &str, timeout_ms: u64) -> Result<TcpStream> {
+    let sa: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("{addr} resolved to nothing"))?;
+    TcpStream::connect_timeout(&sa, Duration::from_millis(timeout_ms))
+        .with_context(|| format!("connecting to {addr}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(n: usize) -> Router {
+        let cfg = RouterConfig {
+            nodes: (0..n).map(|i| format!("127.0.0.1:{}", 40000 + i)).collect(),
+            ..RouterConfig::default()
+        };
+        Router::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn home_matches_store_shard_placement() {
+        // same multiplier, same bucketing: a profile's home over N nodes
+        // must agree with ProfileStore::shard_index over N shards
+        let store = crate::coordinator::profile_store::ProfileStore::with_config(
+            crate::coordinator::profile_store::StoreConfig {
+                shards: 4,
+                ..Default::default()
+            },
+        );
+        let r = router(4);
+        for id in [0u64, 1, 7, 42, 1_000_003, u64::MAX] {
+            assert_eq!(r.home(id), store.shard_index(id));
+        }
+    }
+
+    #[test]
+    fn home_is_stable_and_in_range() {
+        let r = router(3);
+        for id in 0..500u64 {
+            let h = r.home(id);
+            assert!(h < 3);
+            assert_eq!(h, r.home(id));
+        }
+    }
+
+    #[test]
+    fn empty_node_list_is_rejected() {
+        assert!(Router::new(RouterConfig::default()).is_err());
+    }
+}

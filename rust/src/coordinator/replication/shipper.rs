@@ -1,0 +1,327 @@
+//! Leader-side shipping: a replication listener that streams committed
+//! append-log records to followers.
+//!
+//! One OS thread per follower connection (followers are few — this is the
+//! node-replication fan-out, not the client fan-in). Each connection:
+//!
+//! 1. reads the follower's `RepHello` (validating the shard layout and
+//!    epoch), answers with the leader's hello, and registers the follower
+//!    on the [`RepHub`];
+//! 2. loops: drains incoming `RepAck`s (driving the watermark) and
+//!    re-`RepHello`s (a gap/corrupt re-request resets the shard cursors),
+//!    then ships retained tail records per shard — falling back to
+//!    chunked `RepSnapshot` catch-up when the follower's position is
+//!    outside the retained tail — and heartbeats with `Ping` when idle;
+//! 3. on any error drops the follower from the hub, so a dead follower
+//!    never pins the watermark.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::net::frame::{
+    self, Decoder, FrameKind, RepAck, RepHello, RepRecord, RepSnapshot, SNAPSHOT_CHUNK_BYTES,
+};
+use crate::coordinator::profile_store::ProfileStore;
+use crate::coordinator::telemetry::Telemetry;
+
+use super::{RepConfig, RepHub};
+
+/// Socket poll granularity (also the idle ship-loop pacing).
+const POLL: Duration = Duration::from_millis(5);
+/// Budget for the follower's opening hello.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// The leader's replication listener (`--rep-listen`).
+pub struct RepServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RepServer {
+    pub fn start(
+        store: Arc<ProfileStore>,
+        hub: Arc<RepHub>,
+        tel: Arc<Telemetry>,
+        listen: &str,
+        cfg: RepConfig,
+    ) -> Result<RepServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding replication listener on {listen}"))?;
+        listener.set_nonblocking(true).context("nonblocking replication listener")?;
+        let addr = listener.local_addr().context("replication listener addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let store = store.clone();
+                            let hub = hub.clone();
+                            let tel = tel.clone();
+                            let cfg = cfg.clone();
+                            let stop = stop.clone();
+                            conns.push(std::thread::spawn(move || {
+                                crate::info!("rep", "follower connected from {peer}");
+                                if let Err(e) = ship(&store, &hub, &tel, stream, &cfg, &stop) {
+                                    crate::info!("rep", "follower {peer} disconnected: {e:#}");
+                                }
+                            }));
+                        }
+                        Err(e) if would_block(&e) => std::thread::sleep(POLL),
+                        Err(e) => {
+                            crate::warn_log!("rep", "replication accept failed: {e}");
+                            std::thread::sleep(POLL);
+                        }
+                    }
+                    conns.retain(|h| !h.is_finished());
+                }
+                for h in conns {
+                    let _ = h.join();
+                }
+            })
+        };
+        Ok(RepServer { addr, stop, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RepServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One follower connection, handshake to teardown.
+fn ship(
+    store: &ProfileStore,
+    hub: &RepHub,
+    tel: &Telemetry,
+    mut stream: TcpStream,
+    cfg: &RepConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL)).context("read timeout")?;
+    stream.set_write_timeout(Some(Duration::from_secs(2))).context("write timeout")?;
+    let hello = read_hello(&mut stream)?;
+    if hello.shard_count as usize != store.shard_count() {
+        bail!(
+            "follower {} has {} shards, this store has {} — shard layout IS the hash \
+             placement; refusing to replicate across layouts",
+            hello.replica_id,
+            hello.shard_count,
+            store.shard_count()
+        );
+    }
+    if hello.epoch > hub.epoch() {
+        bail!(
+            "follower {} has seen epoch {} > our {} — a newer leader exists; refusing",
+            hello.replica_id,
+            hello.epoch,
+            hub.epoch()
+        );
+    }
+    let leader_hello = RepHello {
+        replica_id: 0,
+        epoch: hub.epoch(),
+        shard_count: store.shard_count() as u32,
+        next_seqs: hub.next_seqs(),
+    };
+    stream.write_all(&leader_hello.encode_frame()).context("sending leader hello")?;
+    let replica = hello.replica_id;
+    hub.register_follower(replica, &hello.next_seqs);
+    let res = ship_loop(store, hub, tel, &mut stream, cfg, stop, replica, hello.next_seqs);
+    hub.drop_follower(replica);
+    tel.set_rep_watermark_lag(hub.lag());
+    res
+}
+
+fn read_hello(stream: &mut TcpStream) -> Result<RepHello> {
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 4096];
+    let deadline = Instant::now() + HELLO_TIMEOUT;
+    loop {
+        if let Some(f) = dec.next().map_err(|e| anyhow::anyhow!("bad hello frame: {e}"))? {
+            match f.kind {
+                FrameKind::RepHello => {
+                    return RepHello::decode_payload(&f.payload)
+                        .map_err(|e| anyhow::anyhow!("malformed hello: {e}"));
+                }
+                // pre-hello noise (a ping from a confused peer) is ignored
+                _ => continue,
+            }
+        }
+        if Instant::now() > deadline {
+            bail!("no hello within {HELLO_TIMEOUT:?}");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => bail!("eof before hello"),
+            Ok(n) => dec
+                .push(&buf[..n])
+                .map_err(|e| anyhow::anyhow!("bad hello bytes: {e}"))?,
+            Err(e) if would_block(&e) => {}
+            Err(e) => return Err(e).context("reading hello"),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ship_loop(
+    store: &ProfileStore,
+    hub: &RepHub,
+    tel: &Telemetry,
+    stream: &mut TcpStream,
+    cfg: &RepConfig,
+    stop: &AtomicBool,
+    replica: u64,
+    mut cursors: Vec<u64>,
+) -> Result<()> {
+    let shards = store.shard_count();
+    cursors.resize(shards, 0);
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 16 * 1024];
+    let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(1));
+    let mut last_sent = Instant::now();
+    while !stop.load(Ordering::Relaxed) {
+        // drain incoming acks / re-requests; the POLL read timeout is also
+        // the loop pacing when idle
+        match stream.read(&mut buf) {
+            Ok(0) => bail!("follower closed the connection"),
+            Ok(n) => {
+                dec.push(&buf[..n]).map_err(|e| anyhow::anyhow!("follower stream: {e}"))?;
+                while let Some(f) =
+                    dec.next().map_err(|e| anyhow::anyhow!("follower stream: {e}"))?
+                {
+                    match f.kind {
+                        FrameKind::RepAck => {
+                            let a = RepAck::decode_payload(&f.payload)
+                                .map_err(|e| anyhow::anyhow!("bad ack: {e}"))?;
+                            hub.ack(replica, a.shard as usize, a.seq);
+                            tel.record_rep_ack();
+                        }
+                        FrameKind::RepHello => {
+                            // gap / corrupt-record re-request: resume every
+                            // shard from the follower's last durable seq
+                            let h = RepHello::decode_payload(&f.payload)
+                                .map_err(|e| anyhow::anyhow!("bad re-hello: {e}"))?;
+                            if h.shard_count as usize != shards {
+                                bail!("re-hello changed shard count to {}", h.shard_count);
+                            }
+                            crate::info!(
+                                "rep",
+                                "follower {replica} re-requested from its durable offsets"
+                            );
+                            cursors = h.next_seqs;
+                            cursors.resize(shards, 0);
+                        }
+                        FrameKind::Ping => {
+                            stream
+                                .write_all(&frame::encode(FrameKind::Pong, &[]))
+                                .context("answering ping")?;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Err(e) if would_block(&e) => {}
+            Err(e) => return Err(e).context("reading from follower"),
+        }
+        // ship new records per shard (snapshot when outside the tail)
+        let mut sent = false;
+        for s in 0..shards {
+            match hub.records_from(s, cursors[s]) {
+                Some(recs) => {
+                    for (seq, payload) in recs {
+                        let rr = RepRecord::new(s as u32, seq, (*payload).clone());
+                        stream.write_all(&rr.encode_frame()).context("shipping record")?;
+                        cursors[s] = seq + 1;
+                        tel.record_rep_records_shipped(1);
+                        sent = true;
+                    }
+                }
+                None => {
+                    let (upto, payloads) = store.rep_snapshot(s);
+                    send_snapshot(stream, s as u32, upto, &payloads)?;
+                    cursors[s] = upto;
+                    tel.record_snapshot_catchup();
+                    crate::info!(
+                        "rep",
+                        "follower {replica} shard {s}: snapshot catch-up, {} records to seq {upto}",
+                        payloads.len()
+                    );
+                    sent = true;
+                }
+            }
+        }
+        tel.set_rep_watermark_lag(hub.lag());
+        if sent {
+            last_sent = Instant::now();
+        } else if last_sent.elapsed() >= heartbeat {
+            stream
+                .write_all(&frame::encode(FrameKind::Ping, &[]))
+                .context("sending heartbeat")?;
+            last_sent = Instant::now();
+        }
+    }
+    Ok(())
+}
+
+/// Stream one shard snapshot as chunks under the frame-size cap. Always
+/// sends at least one chunk (`done = true`) so an empty shard still resets
+/// the follower's position.
+fn send_snapshot(
+    stream: &mut TcpStream,
+    shard: u32,
+    upto: u64,
+    payloads: &[Vec<u8>],
+) -> Result<()> {
+    if let Some(big) = payloads.iter().find(|p| p.len() > SNAPSHOT_CHUNK_BYTES) {
+        bail!(
+            "shard {shard}: a {}-byte record exceeds the replicable frame size ({})",
+            big.len(),
+            SNAPSHOT_CHUNK_BYTES
+        );
+    }
+    let mut chunks: Vec<Vec<Vec<u8>>> = vec![Vec::new()];
+    let mut bytes = 0usize;
+    for p in payloads {
+        if bytes + 4 + p.len() > SNAPSHOT_CHUNK_BYTES && !chunks.last().unwrap().is_empty() {
+            chunks.push(Vec::new());
+            bytes = 0;
+        }
+        bytes += 4 + p.len();
+        chunks.last_mut().unwrap().push(p.clone());
+    }
+    let n = chunks.len();
+    for (i, records) in chunks.into_iter().enumerate() {
+        let snap = RepSnapshot { shard, upto_seq: upto, done: i + 1 == n, records };
+        stream.write_all(&snap.encode_frame()).context("sending snapshot chunk")?;
+    }
+    Ok(())
+}

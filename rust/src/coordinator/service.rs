@@ -641,6 +641,13 @@ impl Service {
         Arc::clone(&self.telemetry)
     }
 
+    /// Shared handle to the profile store this service reads from, so the
+    /// replication tier (leader shipper or follower apply loop) can be
+    /// attached to the same store that serves requests.
+    pub fn store(&self) -> Arc<ProfileStore> {
+        Arc::clone(&self.store)
+    }
+
     /// Sequence length requests are tokenized to (wire clients size text
     /// accordingly; longer inputs truncate).
     pub fn seq_len(&self) -> usize {

@@ -55,6 +55,22 @@ pub struct Telemetry {
     /// were admitted in a reduced-precision codec (f32-projected bytes
     /// minus actual entry bytes, summed at admission).
     pub agg_cache_bytes_saved: AtomicU64,
+    // --- replication counters -------------------------------------------
+    /// Append-log records shipped to followers (leader role; counts every
+    /// record × follower, so 2 followers double it).
+    pub rep_records_shipped: AtomicU64,
+    /// Replication acks received from followers (leader role).
+    pub rep_acks: AtomicU64,
+    /// Gauge, not a counter: latest Σ per-shard (head − watermark) — the
+    /// number of committed records not yet acked by every live follower,
+    /// i.e. the staleness bound a failover read can observe.
+    pub rep_watermark_lag: AtomicU64,
+    /// Reads served by a non-home node after the home node was
+    /// unreachable, draining, or shutting down (router tier).
+    pub failover_reads: AtomicU64,
+    /// Shard snapshots streamed to (leader) or installed by (follower) a
+    /// catch-up peer that was behind the retained log tail.
+    pub snapshot_catchups: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     profiles_per_batch: Mutex<Vec<f64>>,
@@ -79,6 +95,11 @@ pub struct Snapshot {
     pub frame_errors: u64,
     pub quant_dequant_fallbacks: u64,
     pub agg_cache_bytes_saved: u64,
+    pub rep_records_shipped: u64,
+    pub rep_acks: u64,
+    pub rep_watermark_lag: u64,
+    pub failover_reads: u64,
+    pub snapshot_catchups: u64,
     pub mean_batch: f64,
     /// Mean distinct profiles per mixed batch (0 when mixed mode is off).
     pub mean_profiles_per_batch: f64,
@@ -185,6 +206,28 @@ impl Telemetry {
         self.agg_cache_bytes_saved.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
+    /// `n` append-log records shipped to a follower.
+    pub fn record_rep_records_shipped(&self, n: usize) {
+        self.rep_records_shipped.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_rep_ack(&self) {
+        self.rep_acks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latest replication lag (gauge: stored, not accumulated).
+    pub fn set_rep_watermark_lag(&self, lag: u64) {
+        self.rep_watermark_lag.store(lag, Ordering::Relaxed);
+    }
+
+    pub fn record_failover_read(&self) {
+        self.failover_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_snapshot_catchup(&self) {
+        self.snapshot_catchups.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.latencies_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
@@ -207,6 +250,11 @@ impl Telemetry {
             frame_errors: self.frame_errors.load(Ordering::Relaxed),
             quant_dequant_fallbacks: self.quant_dequant_fallbacks.load(Ordering::Relaxed),
             agg_cache_bytes_saved: self.agg_cache_bytes_saved.load(Ordering::Relaxed),
+            rep_records_shipped: self.rep_records_shipped.load(Ordering::Relaxed),
+            rep_acks: self.rep_acks.load(Ordering::Relaxed),
+            rep_watermark_lag: self.rep_watermark_lag.load(Ordering::Relaxed),
+            failover_reads: self.failover_reads.load(Ordering::Relaxed),
+            snapshot_catchups: self.snapshot_catchups.load(Ordering::Relaxed),
             mean_batch: stats::mean(&sizes),
             mean_profiles_per_batch: stats::mean(&ppb),
             p50_latency_us: stats::quantile(&lat, 0.5),
@@ -271,7 +319,19 @@ mod tests {
         t.record_quant_fallbacks(2);
         t.record_agg_bytes_saved(1024);
         t.record_agg_bytes_saved(1024);
+        t.record_rep_records_shipped(5);
+        t.record_rep_ack();
+        t.record_rep_ack();
+        t.set_rep_watermark_lag(7);
+        t.set_rep_watermark_lag(3); // gauge: the latest value wins
+        t.record_failover_read();
+        t.record_snapshot_catchup();
         let s = t.snapshot();
+        assert_eq!(s.rep_records_shipped, 5);
+        assert_eq!(s.rep_acks, 2);
+        assert_eq!(s.rep_watermark_lag, 3);
+        assert_eq!(s.failover_reads, 1);
+        assert_eq!(s.snapshot_catchups, 1);
         assert_eq!(s.quant_dequant_fallbacks, 2);
         assert_eq!(s.agg_cache_bytes_saved, 2048);
         assert_eq!(s.admitted, 2);

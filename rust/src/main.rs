@@ -8,6 +8,9 @@
 //!                      (--listen ADDR exposes it over TCP instead)
 //!   loadgen            drive a TCP server with zipfian open-loop load
 //!                      (--smoke self-hosts a loopback server in-process)
+//!   replicate          leader/follower fault harness: kill -9 the leader
+//!                      mid-tune, assert zero committed-profile loss and
+//!                      bounded failover time (--smoke for the CI gate)
 //!   bench              quick micro-bench suite (full suites: cargo bench)
 //!   info               show artifact/manifest inventory
 
@@ -53,6 +56,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train-profile" => train_profile(args),
         "serve" => serve(args),
         "loadgen" => loadgen_cmd(args),
+        "replicate" => replicate_cmd(args),
         "info" => show_info(args),
         "bench" => quick_bench(args),
         "" | "help" => {
@@ -100,13 +104,27 @@ COMMANDS
                     knobs --rate-limit R --rate-burst B --admission-queue Q
                     --deadline-ms D --read-deadline-ms --write-deadline-ms
                     --idle-timeout-ms --outbox --max-conns
+                    --rep-listen HOST:PORT additionally ships committed
+                    records to followers (leader role): --rep-tail 1024
+                    --rep-heartbeat-ms 200 --rep-failover-ms 1500
+                    --rep-epoch 1
   loadgen           drive a TCP server: --addr HOST:PORT --conns 4
                     --rate R (req/s; 0 = closed-loop capacity probe)
                     --secs 5 --profiles 64 --zipf 1.0 --deadline-ms 0
                     --burst 1 --churn-every 0 --num-classes 0 --seed 42
+                    --retries 2 (per-request retry budget on Overloaded /
+                    connection reset; 0 disables)
                     --suite (closed-loop probe, then 1x/2x/4x offered load)
                     --smoke (self-host a loopback server and exercise the
                     wire end-to-end; used by CI)
+  replicate         leader + follower under loadgen, then kill -9 the
+                    leader mid-tune: asserts zero committed-profile loss,
+                    follower promotion < 2s, and bounded read
+                    unavailability via the failover router. --smoke
+                    (CI-sized), --commit-target N, --rep-failover-ms 600
+                    (children: --role leader|follower, --rep-peer ADDR,
+                    --replica-id N, --rep-meta PATH, --preseed N,
+                    --tune-interval-ms N)
   info              artifact inventory from artifacts/manifest.json
   bench             quick micro-bench suite (full: cargo bench)
 
@@ -241,11 +259,31 @@ fn serve(args: &Args) -> Result<()> {
     );
 
     // 2a) --listen: expose the service over TCP behind admission control
-    // instead of driving the built-in demo stream
+    // instead of driving the built-in demo stream. --rep-listen makes this
+    // node a replication leader: committed records ship to any follower
+    // that connects, and the stats/telemetry gain watermark counters.
     if args.get("listen").is_some() {
         let net_cfg = NetConfig::default().override_from_args(args)?;
-        let svc =
-            Arc::new(Service::start(engine, store, bank, serve_cfg, lamp::CATEGORIES, env.plm_seed)?);
+        let svc = Arc::new(Service::start(
+            engine,
+            store.clone(),
+            bank,
+            serve_cfg,
+            lamp::CATEGORIES,
+            env.plm_seed,
+        )?);
+        let _rep_srv = match args.get("rep-listen") {
+            Some(addr) => {
+                use xpeft::coordinator::replication::{RepHub, RepServer};
+                let rep = rep_config(args)?;
+                let hub = RepHub::attach(&store, args.get_u64("rep-epoch", 1)?, rep.tail);
+                let srv =
+                    RepServer::start(store, hub, svc.telemetry_shared(), addr, rep)?;
+                println!("replication listener on {}", srv.local_addr());
+                Some(srv)
+            }
+            None => None,
+        };
         return serve_listen(svc, net_cfg, args);
     }
 
@@ -499,6 +537,7 @@ fn loadgen_config(args: &Args, addr: String) -> Result<loadgen::LoadgenConfig> {
         churn_every: args.get_usize("churn-every", base.churn_every)?,
         text: args.get_str("text", &base.text),
         num_classes: args.get_u64("num-classes", base.num_classes as u64)? as u32,
+        retry_max: args.get_u64("retries", base.retry_max as u64)? as u32,
         seed: args.get_u64("seed", base.seed)?,
     })
 }
@@ -604,4 +643,436 @@ fn print_overload_counters(snap: &xpeft::coordinator::Snapshot) {
     println!("  evicted slow       {}", snap.evicted_slow_clients);
     println!("  conns open/closed  {}/{}", snap.conns_opened, snap.conns_closed);
     println!("  frame errors       {}", snap.frame_errors);
+    println!("replication telemetry:");
+    println!("  records shipped    {}", snap.rep_records_shipped);
+    println!("  acks               {}", snap.rep_acks);
+    println!("  watermark lag      {}", snap.rep_watermark_lag);
+    println!("  failover reads     {}", snap.failover_reads);
+    println!("  snapshot catchups  {}", snap.snapshot_catchups);
+}
+
+// ------------------------------------------------------------- replication
+
+fn rep_config(args: &Args) -> Result<xpeft::coordinator::replication::RepConfig> {
+    let base = xpeft::coordinator::replication::RepConfig::default();
+    Ok(xpeft::coordinator::replication::RepConfig {
+        tail: args.get_usize("rep-tail", base.tail)?,
+        heartbeat_ms: args.get_u64("rep-heartbeat-ms", base.heartbeat_ms)?,
+        failover_ms: args.get_u64("rep-failover-ms", base.failover_ms)?,
+    })
+}
+
+/// Boot a self-hosted service over `store` with the native engine and
+/// deterministic shared state. Leader and follower both build this, so a
+/// failover read returns the same prediction the leader would have.
+fn native_service(
+    store: Arc<ProfileStore>,
+) -> Result<(Arc<Service>, usize)> {
+    use xpeft::coordinator::profile_store::AuxParams;
+    use xpeft::util::rng::Rng;
+
+    let engine = Arc::new(Engine::native());
+    let mc = engine.manifest.config.clone();
+    let layers = mc.layers;
+    let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
+    store.set_shared_aux(AuxParams {
+        ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+        ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+        head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+        head_b: vec![0.0; mc.c_max],
+    });
+    let svc = Arc::new(Service::start(
+        engine,
+        store,
+        bank,
+        ServeConfig { max_batch: 16, batch_deadline_us: 300, mask_cache: 64, ..ServeConfig::default() },
+        15,
+        42,
+    )?);
+    Ok((svc, layers))
+}
+
+/// Deterministic hard-mask profile (stand-in for one tune commit).
+fn replica_profile(layers: usize, pid: u64) -> xpeft::coordinator::ProfileRecord {
+    use xpeft::masks::{MaskLogits, ProfileMasks};
+    use xpeft::util::rng::Rng;
+
+    let n = 100usize;
+    let mut r = Rng::new(5000 + pid);
+    let lg = MaskLogits {
+        layers,
+        n,
+        a: r.normal_vec(layers * n, 1.0),
+        b: r.normal_vec(layers * n, 1.0),
+    };
+    xpeft::coordinator::ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None }
+}
+
+const REPL_TEXT: &str = "s42t3w1 s42t2w5 s42fw0";
+
+fn replicate_cmd(args: &Args) -> Result<()> {
+    match args.get_str("role", "").as_str() {
+        "leader" => replicate_leader(args),
+        "follower" => replicate_follower(args),
+        "" => replicate_driver(args),
+        other => bail!("unknown --role '{other}' (leader|follower)"),
+    }
+}
+
+/// Leader child: preseed some profiles (pre-replication history, so the
+/// follower must take the snapshot path), attach the replication hub, then
+/// keep committing new profiles until killed. Prints a machine-parseable
+/// line protocol on stdout:
+///   `REPL_READY serve=ADDR rep=ADDR`
+///   `COMMITTED n=N inserted=M` — every pid < N is replication-committed
+///   (acked by every live follower), the driver's zero-loss yardstick.
+fn replicate_leader(args: &Args) -> Result<()> {
+    use xpeft::coordinator::profile_store::StoreConfig;
+    use xpeft::coordinator::replication::{RepHub, RepServer};
+
+    let preseed = args.get_u64("preseed", 12)?;
+    let tune_interval = std::time::Duration::from_millis(args.get_u64("tune-interval-ms", 5)?);
+    let shards = args.get_usize("shards", 8)?;
+    let rep = rep_config(args)?;
+    let store = Arc::new(ProfileStore::with_config(StoreConfig { shards, ..StoreConfig::default() }));
+    let (svc, layers) = native_service(store.clone())?;
+
+    // pid → (shard, seq) placement, for computing the committed prefix.
+    // Preseeded records predate the hub; their seqs are the per-shard
+    // insert order, which the hub counts at attach time via shard_len.
+    let mut placed: Vec<(usize, u64)> = Vec::new();
+    let mut preseed_counts = vec![0u64; store.shard_count()];
+    for pid in 0..preseed {
+        store.insert(pid, replica_profile(layers, pid))?;
+        let s = store.shard_index(pid);
+        placed.push((s, preseed_counts[s]));
+        preseed_counts[s] += 1;
+    }
+    let hub = RepHub::attach(&store, args.get_u64("rep-epoch", 1)?, rep.tail);
+    let rep_srv = RepServer::start(
+        store.clone(),
+        hub.clone(),
+        svc.telemetry_shared(),
+        &args.get_str("rep-listen", "127.0.0.1:0"),
+        rep,
+    )?;
+    let mut net_cfg = NetConfig::default().override_from_args(args)?;
+    if net_cfg.listen.is_empty() {
+        net_cfg.listen = "127.0.0.1:0".to_string();
+    }
+    let server = NetServer::start(Arc::clone(&svc), net_cfg)?;
+    println!("REPL_READY serve={} rep={}", server.local_addr(), rep_srv.local_addr());
+
+    // the "tune" loop: commit one profile per tick, forever (the driver
+    // SIGKILLs this process mid-loop — that is the whole point)
+    let mut next_pid = preseed;
+    let mut committed = 0usize;
+    let mut last_print = std::time::Instant::now();
+    loop {
+        std::thread::sleep(tune_interval);
+        let s = store.shard_index(next_pid);
+        let seq = hub.next_seq(s); // single writer: publish gets exactly this seq
+        store.insert(next_pid, replica_profile(layers, next_pid))?;
+        placed.push((s, seq));
+        next_pid += 1;
+        // a pid is committed once every live follower acked past its seq;
+        // with zero followers the watermark is vacuously at the head, so
+        // only advance while someone is actually replicating
+        if hub.follower_count() > 0 {
+            while committed < placed.len() {
+                let (sh, sq) = placed[committed];
+                if hub.watermark(sh) > sq {
+                    committed += 1;
+                } else {
+                    break;
+                }
+            }
+            if last_print.elapsed() >= std::time::Duration::from_millis(100) {
+                last_print = std::time::Instant::now();
+                println!("COMMITTED n={committed} inserted={}", placed.len());
+            }
+        }
+    }
+}
+
+/// Follower child: apply the leader's stream, serve reads on its own port,
+/// and report via the stdout line protocol:
+///   `REPL_READY serve=ADDR`
+///   `REPL_STATS applied=N snapshots=N rerequests=N reconnects=N`
+///   `PROMOTED applied=N` — leader declared dead, serving at watermark.
+fn replicate_follower(args: &Args) -> Result<()> {
+    use xpeft::coordinator::profile_store::StoreConfig;
+    use xpeft::coordinator::replication::{Follower, FollowerConfig};
+
+    let peer = args.require("rep-peer")?.to_string();
+    let shards = args.get_usize("shards", 8)?;
+    let rep = rep_config(args)?;
+    let store = Arc::new(ProfileStore::with_config(StoreConfig { shards, ..StoreConfig::default() }));
+    let (svc, _layers) = native_service(store.clone())?;
+    let follower = Follower::start(
+        store,
+        svc.telemetry_shared(),
+        FollowerConfig {
+            peer,
+            replica_id: args.get_u64("replica-id", 1)?,
+            meta_path: args.get("rep-meta").map(std::path::PathBuf::from),
+            rep,
+        },
+    );
+    let mut net_cfg = NetConfig::default().override_from_args(args)?;
+    if net_cfg.listen.is_empty() {
+        net_cfg.listen = "127.0.0.1:0".to_string();
+    }
+    let server = NetServer::start(Arc::clone(&svc), net_cfg)?;
+    println!("REPL_READY serve={}", server.local_addr());
+    let mut announced = false;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        println!(
+            "REPL_STATS applied={} snapshots={} rerequests={} reconnects={}",
+            follower.applied(),
+            follower.snapshots(),
+            follower.rerequests(),
+            follower.reconnects()
+        );
+        if follower.promoted() && !announced {
+            announced = true;
+            println!("PROMOTED applied={}", follower.applied());
+        }
+    }
+}
+
+/// A spawned child with its stdout tee'd: echoed with a `[name]` prefix
+/// and forwarded line-by-line for the driver to parse.
+struct ChildProc {
+    name: &'static str,
+    child: std::process::Child,
+    rx: std::sync::mpsc::Receiver<String>,
+}
+
+impl ChildProc {
+    fn spawn(name: &'static str, cmd: &mut std::process::Command) -> Result<ChildProc> {
+        use std::io::BufRead;
+        let mut child = cmd
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit())
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning {name}: {e}"))?;
+        let stdout = child.stdout.take().expect("piped stdout");
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines().map_while(|l| l.ok()) {
+                println!("[{name}] {line}");
+                let _ = tx.send(line);
+            }
+        });
+        Ok(ChildProc { name, child, rx })
+    }
+
+    /// Next line starting with `prefix` (other lines are consumed).
+    fn wait_line(&self, prefix: &str, timeout: std::time::Duration) -> Result<String> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remain = deadline.saturating_duration_since(std::time::Instant::now());
+            if remain.is_zero() {
+                bail!("{}: no '{prefix}' line within {timeout:?}", self.name);
+            }
+            match self.rx.recv_timeout(remain) {
+                Ok(l) if l.starts_with(prefix) => return Ok(l),
+                Ok(_) => continue,
+                Err(_) => bail!("{}: no '{prefix}' line within {timeout:?}", self.name),
+            }
+        }
+    }
+
+    /// SIGKILL — no drain, no flush; the crash being simulated.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ChildProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// `key=value` field out of a line-protocol line.
+fn line_field(line: &str, key: &str) -> Result<String> {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("no '{key}=' in line: {line}"))
+}
+
+fn line_field_u64(line: &str, key: &str) -> Result<u64> {
+    let v = line_field(line, key)?;
+    v.parse().map_err(|e| anyhow::anyhow!("bad {key}={v}: {e}"))
+}
+
+/// The kill/partition fault harness (`xpeft replicate [--smoke]`): leader
+/// and follower as real processes, loadgen running against the leader,
+/// SIGKILL mid-tune, then assert — follower promotion under 2s, every
+/// committed profile readable through the failover router, bounded read
+/// unavailability.
+fn replicate_driver(args: &Args) -> Result<()> {
+    use std::time::{Duration, Instant};
+    use xpeft::coordinator::net::frame::{Status, WireRequest};
+    use xpeft::coordinator::replication::{Router, RouterConfig};
+
+    let smoke = args.flag("smoke");
+    let commit_target = args.get_u64("commit-target", if smoke { 40 } else { 200 })?;
+    let failover_ms = args.get_u64("rep-failover-ms", 600)?;
+    let preseed = args.get_u64("preseed", if smoke { 12 } else { 32 })?;
+    let tune_ms = args.get_u64("tune-interval-ms", if smoke { 4 } else { 5 })?;
+    let exe = std::env::current_exe()?;
+
+    let leader = ChildProc::spawn(
+        "leader",
+        std::process::Command::new(&exe).args([
+            "replicate",
+            "--role",
+            "leader",
+            "--preseed",
+            &preseed.to_string(),
+            "--tune-interval-ms",
+            &tune_ms.to_string(),
+            "--rep-failover-ms",
+            &failover_ms.to_string(),
+        ]),
+    )?;
+    let ready = leader.wait_line("REPL_READY", Duration::from_secs(30))?;
+    let leader_serve = line_field(&ready, "serve")?;
+    let leader_rep = line_field(&ready, "rep")?;
+
+    let mut follower = ChildProc::spawn(
+        "follower",
+        std::process::Command::new(&exe).args([
+            "replicate",
+            "--role",
+            "follower",
+            "--rep-peer",
+            &leader_rep,
+            "--rep-failover-ms",
+            &failover_ms.to_string(),
+        ]),
+    )?;
+    let fready = follower.wait_line("REPL_READY", Duration::from_secs(30))?;
+    let follower_serve = line_field(&fready, "serve")?;
+
+    // the follower bootstraps via snapshot (the leader preseeded profiles
+    // before replication history began)
+    let catchup_deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let remain = catchup_deadline.saturating_duration_since(Instant::now());
+        let stats = follower.wait_line("REPL_STATS", remain)?;
+        if line_field_u64(&stats, "snapshots")? >= 1 {
+            break;
+        }
+    }
+    println!("driver: follower caught up via snapshot");
+
+    // loadgen rides along for the rest of the run — its retries absorb the
+    // connection resets the kill is about to cause
+    let lg_addr = leader_serve.clone();
+    let lg_secs = if smoke { 8 } else { 15 };
+    let lg_profiles = preseed;
+    let lg = std::thread::spawn(move || {
+        loadgen::run(&loadgen::LoadgenConfig {
+            addr: lg_addr,
+            conns: 2,
+            rate: 100.0,
+            duration: Duration::from_secs(lg_secs),
+            profiles: lg_profiles,
+            text: REPL_TEXT.to_string(),
+            ..loadgen::LoadgenConfig::default()
+        })
+    });
+
+    // wait until enough profiles are replication-committed, then KILL -9
+    let mut committed = 0u64;
+    let commit_deadline = Instant::now() + Duration::from_secs(60);
+    while committed < commit_target {
+        let remain = commit_deadline.saturating_duration_since(Instant::now());
+        let line = leader.wait_line("COMMITTED", remain)?;
+        committed = line_field_u64(&line, "n")?;
+    }
+    let mut leader = leader;
+    let t_kill = Instant::now();
+    leader.kill();
+    println!("driver: SIGKILLed leader mid-tune at committed n={committed}");
+
+    // promotion must be fast — this is the CI gate
+    let promoted = follower.wait_line(
+        "PROMOTED",
+        Duration::from_millis(failover_ms) + Duration::from_secs(5),
+    )?;
+    let promote_ms = t_kill.elapsed().as_millis();
+    let promoted_applied = line_field_u64(&promoted, "applied")?;
+    anyhow::ensure!(
+        promote_ms < 2000,
+        "follower took {promote_ms}ms to promote (budget 2000ms)"
+    );
+    println!("driver: follower promoted after {promote_ms}ms (applied={promoted_applied})");
+
+    // read availability: time from the kill to the first successful read
+    // through the failover router (leader listed first and dead, so every
+    // answered read is a failover read for leader-homed profiles)
+    let mut router = Router::new(RouterConfig {
+        nodes: vec![leader_serve, follower_serve],
+        ..RouterConfig::default()
+    })?;
+    let probe = WireRequest {
+        client_req_id: 0,
+        profile_id: 0,
+        deadline_ms: 1000,
+        num_classes: 0,
+        text: REPL_TEXT.to_string(),
+    };
+    let avail_deadline = Instant::now() + Duration::from_secs(10);
+    let unavail_ms = loop {
+        match router.request(&probe) {
+            Ok((_, resp)) if resp.status == Status::Ok => break t_kill.elapsed().as_millis(),
+            _ if Instant::now() > avail_deadline => {
+                bail!("no successful read within 10s of the kill");
+            }
+            _ => std::thread::sleep(Duration::from_millis(25)),
+        }
+    };
+    println!("driver: reads available {unavail_ms}ms after the kill");
+
+    // ZERO LOSS: every profile the leader reported replication-committed
+    // must answer Ok from what survives
+    let mut lost = Vec::new();
+    for pid in 0..committed {
+        let req = WireRequest { profile_id: pid, ..probe.clone() };
+        match router.request(&req) {
+            Ok((_, resp)) if resp.status == Status::Ok => {}
+            _ => lost.push(pid),
+        }
+    }
+    anyhow::ensure!(
+        lost.is_empty(),
+        "{} committed profiles lost after failover: {:?}",
+        lost.len(),
+        &lost[..lost.len().min(16)]
+    );
+    let rstats = router.stats();
+    anyhow::ensure!(
+        rstats.failover_reads > 0,
+        "dead leader but the router never failed over (stats: {rstats:?})"
+    );
+
+    let lg_report = lg
+        .join()
+        .map_err(|_| anyhow::anyhow!("loadgen thread panicked"))??;
+    println!("driver: loadgen {}", lg_report.summary());
+    follower.kill();
+    println!(
+        "replicate OK: committed={committed} promote={promote_ms}ms \
+         first-read={unavail_ms}ms failover-reads={} retries={}",
+        rstats.failover_reads, lg_report.retries
+    );
+    Ok(())
 }
