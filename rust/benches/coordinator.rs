@@ -733,6 +733,178 @@ fn main() {
         }
     }
 
+    // ---- tune-while-serving churn: the same closed-loop read load with no
+    // tuning vs with the continuous scheduler re-tuning a set of hot
+    // streams behind the serving path. Trajectory entry pair: serving p95
+    // under churn (same-run baseline attached) and tuning throughput in
+    // profiles/hour.
+    {
+        use xpeft::config::{IngestConfig, Mode, NetConfig, SchedConfig, TrainConfig};
+        use xpeft::coordinator::ingest::{
+            IngestCore, IngestPump, SourceMeta, SourceSpec, SyntheticSource,
+        };
+        use xpeft::coordinator::net::{loadgen, NetServer};
+        use xpeft::coordinator::scheduler::Scheduler;
+        use xpeft::data::{lamp, MetricKind};
+
+        let profiles: u64 = if smoke { 32 } else { 256 };
+        let streams: u64 = if smoke { 8 } else { 24 };
+        println!("\n== tune-while-serving: {profiles} profiles, {streams} re-tune streams ==");
+        let n = 100usize;
+        let engine = Arc::new(Engine::native());
+        let mc = engine.manifest.config.clone();
+        let bank = Arc::new(AdapterBank::random(mc.layers, n, mc.d, mc.bottleneck, 42));
+        let store = Arc::new(ProfileStore::with_config(StoreConfig {
+            shards: 64,
+            cache_capacity: 2 * profiles as usize,
+            ..StoreConfig::default()
+        }));
+        for pid in 0..profiles {
+            let mut r = Rng::new(7000 + pid);
+            let lg = MaskLogits {
+                layers: mc.layers,
+                n,
+                a: r.normal_vec(mc.layers * n, 1.0),
+                b: r.normal_vec(mc.layers * n, 1.0),
+            };
+            store
+                .insert(pid, ProfileRecord { masks: ProfileMasks::Hard(lg.binarize(50)), aux: None })
+                .unwrap();
+        }
+        store.set_shared_aux(AuxParams {
+            ln_scale: vec![1.0; mc.layers * mc.bottleneck],
+            ln_bias: vec![0.0; mc.layers * mc.bottleneck],
+            head_w: Rng::new(9).normal_vec(mc.d * mc.c_max, 0.05),
+            head_b: vec![0.0; mc.c_max],
+        });
+        let svc = Arc::new(
+            Service::start(
+                engine.clone(),
+                store.clone(),
+                bank.clone(),
+                ServeConfig {
+                    mixed_batch: true,
+                    max_batch: 32,
+                    batch_deadline_us: 400,
+                    mask_cache: 2 * profiles as usize,
+                    ..ServeConfig::default()
+                },
+                15,
+                42,
+            )
+            .unwrap(),
+        );
+        let server = NetServer::start(
+            Arc::clone(&svc),
+            NetConfig { listen: "127.0.0.1:0".to_string(), deadline_ms: 500, ..NetConfig::default() },
+        )
+        .unwrap();
+        let cfg = loadgen::LoadgenConfig {
+            addr: server.local_addr().to_string(),
+            conns: 4,
+            duration: Duration::from_secs(if smoke { 1 } else { 4 }),
+            profiles,
+            zipf_s: 1.0,
+            deadline_ms: 500,
+            text: "s42t3w1 s42t2w5 s42fw0".to_string(),
+            ..loadgen::LoadgenConfig::default()
+        };
+        let baseline = loadgen::run(&cfg).unwrap();
+        println!("   no tuning: {}", baseline.summary());
+
+        // the re-tuned pids are the zipf-hottest served profiles, so the
+        // serving path sees mask epochs churn on exactly the reads the
+        // aggregate cache works hardest for
+        let corpus = lamp::generate(streams as usize, mc.seq, mc.vocab, 42, 12, 80);
+        let sched = Arc::new(Scheduler::start_with(
+            engine,
+            bank,
+            store.clone(),
+            42,
+            SchedConfig {
+                workers: 2,
+                tenant_inflight: 1,
+                cold_boost_ms: 1_000,
+                ..SchedConfig::default()
+            },
+            None,
+        ));
+        let mut core = IngestCore::new(
+            IngestConfig { queue_cap: 4, min_batches: 2, tick_ms: 2, ..IngestConfig::default() },
+            None,
+            42,
+        );
+        for (i, p) in corpus.profiles.iter().enumerate() {
+            let pid = i as u64;
+            core.add_source(SourceSpec {
+                source: Box::new(
+                    SyntheticSource::new(
+                        pid,
+                        SourceMeta {
+                            name: format!("author{pid}"),
+                            num_classes: lamp::CATEGORIES,
+                            metric: MetricKind::Acc,
+                        },
+                        p.train.chunks(4).map(|c| c.to_vec()).collect(),
+                        0,
+                    )
+                    .with_tenant(pid % 3),
+                ),
+                cfg: TrainConfig {
+                    mode: Mode::XpeftHard,
+                    n,
+                    steps: 4,
+                    seed: 42 + pid,
+                    ..TrainConfig::default()
+                },
+                keep_aux: true,
+            });
+        }
+        let epochs0: u64 = (0..streams).map(|p| store.mask_epoch(p).unwrap_or(0)).sum();
+        let t0 = Instant::now();
+        let pump = IngestPump::start(core, Arc::clone(&sched));
+        let mut hot = cfg.clone();
+        hot.seed = cfg.seed.wrapping_add(1);
+        let churn = loadgen::run(&hot).unwrap();
+        let _ = pump.stop();
+        sched.wait_all();
+        let tune_wall = t0.elapsed();
+        let commits: u64 =
+            (0..streams).map(|p| store.mask_epoch(p).unwrap_or(0)).sum::<u64>() - epochs0;
+        let per_hour = commits as f64 / tune_wall.as_secs_f64() * 3600.0;
+        println!(
+            "   under churn: {} — {commits} re-tune commits ({per_hour:.0} profiles/hour)",
+            churn.summary()
+        );
+        let degradation = (churn.p95_us / baseline.p95_us.max(1.0) - 1.0) * 100.0;
+        suite.add(
+            timed(
+                &format!(
+                    "churn: serving p95 under continuous re-tuning ({profiles} profiles, {streams} streams)"
+                ),
+                churn.ok as usize,
+                churn.elapsed,
+            )
+            .with_extra("p95_latency_us", churn.p95_us)
+            .with_extra("baseline_p95_us", baseline.p95_us)
+            .with_extra("p95_degradation_pct", degradation)
+            .with_extra("goodput_per_s", churn.goodput_per_s()),
+        );
+        suite.add(
+            timed(
+                &format!("churn: tuning throughput under serving load ({streams} streams)"),
+                commits as usize,
+                tune_wall,
+            )
+            .with_extra("profiles_per_hour", per_hour),
+        );
+        server.shutdown();
+        if let Ok(s) = Arc::try_unwrap(sched) {
+            s.shutdown();
+        }
+        drop(svc);
+    }
+
     if smoke {
         println!("\n--smoke: {} entries ok, no trajectory files written", suite.results.len());
         return;

@@ -288,6 +288,131 @@ impl ServeConfig {
     }
 }
 
+/// Continuous-scheduler configuration (`xpeft serve`/`xpeft churn`):
+/// worker count, per-tenant fairness caps, transient-failure retries, and
+/// the cold-start priority boost the aging policy trades against.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Concurrent tune workers (`--tune-workers`; 0 ⇒ the compute pool's
+    /// lane count). Each running job still fans its train steps over the
+    /// shared pool.
+    pub workers: usize,
+    /// Max in-flight tune jobs per tenant (`--tenant-inflight`; 0 = no
+    /// cap). With a cap, a tenant flooding submits cannot occupy every
+    /// worker — its surplus jobs age in the queue while other tenants run.
+    pub tenant_inflight: usize,
+    /// Transient-failure retry budget per job (`--tune-retries`). Panics
+    /// and permanent errors (bad config, no artifact) never retry.
+    pub tune_retries: usize,
+    /// Base retry backoff in ms (`--retry-backoff-ms`), doubled per
+    /// attempt with jitter.
+    pub retry_backoff_ms: u64,
+    /// Cold-start priority boost in ms of equivalent queue age
+    /// (`--cold-boost-ms`): a new profile's first tune dispatches ahead of
+    /// any re-tune that has waited less than this. Aged re-tunes
+    /// eventually outrank fresh cold-starts, bounding every tenant's wait.
+    pub cold_boost_ms: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            workers: 0,
+            tenant_inflight: 0,
+            tune_retries: 1,
+            retry_backoff_ms: 50,
+            cold_boost_ms: 10_000,
+        }
+    }
+}
+
+impl SchedConfig {
+    pub fn override_from_args(mut self, args: &Args) -> Result<SchedConfig> {
+        self.workers = args.get_usize("tune-workers", self.workers)?;
+        self.tenant_inflight = args.get_usize("tenant-inflight", self.tenant_inflight)?;
+        self.tune_retries = args.get_usize("tune-retries", self.tune_retries)?;
+        self.retry_backoff_ms = args.get_u64("retry-backoff-ms", self.retry_backoff_ms)?;
+        self.cold_boost_ms = args.get_u64("cold-boost-ms", self.cold_boost_ms)?;
+        if self.retry_backoff_ms == 0 {
+            bail!("retry-backoff-ms must be positive");
+        }
+        Ok(self)
+    }
+}
+
+/// Streaming-ingestion configuration (`xpeft serve --ingest` /
+/// `xpeft churn`): per-profile queue bounds, DWRR fairness quantum, and
+/// the stall → backoff → quarantine fault policy.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Bounded per-profile batch queue (`--ingest-queue`): a source whose
+    /// queue is full is simply not pulled (pull-based backpressure).
+    pub queue_cap: usize,
+    /// DWRR quantum (`--ingest-quantum`): batches credited per source per
+    /// round per unit weight. A hot source can pull at most its credit
+    /// each round, so it cannot starve the rotation.
+    pub quantum: usize,
+    /// Batches accumulated before a tune job is cut
+    /// (`--ingest-min-batches`).
+    pub min_batches: usize,
+    /// A source pending (no batch, no error) longer than this is stalled —
+    /// one quarantine strike (`--ingest-stall-ms`).
+    pub stall_ms: u64,
+    /// Base strike backoff in ms (`--ingest-backoff-ms`), doubled per
+    /// consecutive strike with jitter, capped at [`Self::backoff_cap_ms`].
+    pub backoff_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Consecutive strikes before quarantine (`--ingest-strikes`). A
+    /// quarantined source is dropped from the rotation until reset.
+    pub strikes: u32,
+    /// Pump idle tick in ms when no source produced a batch.
+    pub tick_ms: u64,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            queue_cap: 8,
+            quantum: 2,
+            min_batches: 1,
+            stall_ms: 500,
+            backoff_ms: 100,
+            backoff_cap_ms: 2_000,
+            strikes: 3,
+            tick_ms: 5,
+        }
+    }
+}
+
+impl IngestConfig {
+    pub fn override_from_args(mut self, args: &Args) -> Result<IngestConfig> {
+        self.queue_cap = args.get_usize("ingest-queue", self.queue_cap)?;
+        self.quantum = args.get_usize("ingest-quantum", self.quantum)?;
+        self.min_batches = args.get_usize("ingest-min-batches", self.min_batches)?;
+        self.stall_ms = args.get_u64("ingest-stall-ms", self.stall_ms)?;
+        self.backoff_ms = args.get_u64("ingest-backoff-ms", self.backoff_ms)?;
+        self.backoff_cap_ms = args.get_u64("ingest-backoff-cap-ms", self.backoff_cap_ms)?;
+        self.strikes = args.get_u64("ingest-strikes", self.strikes as u64)? as u32;
+        self.tick_ms = args.get_u64("ingest-tick-ms", self.tick_ms)?;
+        if self.queue_cap == 0 || self.quantum == 0 {
+            bail!("ingest-queue and ingest-quantum must be positive");
+        }
+        if self.min_batches == 0 || self.min_batches > self.queue_cap {
+            bail!(
+                "ingest-min-batches must be in 1..=ingest-queue ({})",
+                self.queue_cap
+            );
+        }
+        if self.strikes == 0 {
+            bail!("ingest-strikes must be positive");
+        }
+        if self.backoff_ms == 0 || self.backoff_cap_ms < self.backoff_ms {
+            bail!("ingest backoff must be positive and cap >= base");
+        }
+        Ok(self)
+    }
+}
+
 /// Wire front-end configuration (`xpeft serve --listen ...`): admission
 /// control, deadlines, and per-connection robustness knobs.
 #[derive(Debug, Clone)]
@@ -501,6 +626,55 @@ mod tests {
         assert!(NetConfig::default().override_from_args(&args("serve --outbox 0")).is_err());
         assert!(NetConfig::default()
             .override_from_args(&args("serve --rate-limit -1"))
+            .is_err());
+    }
+
+    #[test]
+    fn sched_overrides_and_validation() {
+        let sc = SchedConfig::default()
+            .override_from_args(&args(
+                "serve --tune-workers 3 --tenant-inflight 2 --tune-retries 4 \
+                 --retry-backoff-ms 25 --cold-boost-ms 500",
+            ))
+            .unwrap();
+        assert_eq!(sc.workers, 3);
+        assert_eq!(sc.tenant_inflight, 2);
+        assert_eq!(sc.tune_retries, 4);
+        assert_eq!(sc.retry_backoff_ms, 25);
+        assert_eq!(sc.cold_boost_ms, 500);
+        let d = SchedConfig::default();
+        assert_eq!(d.tune_retries, 1, "one transient retry by default");
+        assert_eq!(d.tenant_inflight, 0, "no per-tenant cap by default");
+        assert!(SchedConfig::default()
+            .override_from_args(&args("serve --retry-backoff-ms 0"))
+            .is_err());
+    }
+
+    #[test]
+    fn ingest_overrides_and_validation() {
+        let ic = IngestConfig::default()
+            .override_from_args(&args(
+                "churn --ingest-queue 4 --ingest-quantum 1 --ingest-min-batches 2 \
+                 --ingest-stall-ms 100 --ingest-backoff-ms 20 --ingest-strikes 5",
+            ))
+            .unwrap();
+        assert_eq!(ic.queue_cap, 4);
+        assert_eq!(ic.quantum, 1);
+        assert_eq!(ic.min_batches, 2);
+        assert_eq!(ic.stall_ms, 100);
+        assert_eq!(ic.backoff_ms, 20);
+        assert_eq!(ic.strikes, 5);
+        assert!(IngestConfig::default()
+            .override_from_args(&args("churn --ingest-queue 0"))
+            .is_err());
+        assert!(
+            IngestConfig::default()
+                .override_from_args(&args("churn --ingest-queue 2 --ingest-min-batches 3"))
+                .is_err(),
+            "a job can never cut if min-batches exceeds the queue bound"
+        );
+        assert!(IngestConfig::default()
+            .override_from_args(&args("churn --ingest-backoff-cap-ms 1"))
             .is_err());
     }
 

@@ -1,0 +1,694 @@
+//! Streaming ingestion: continuous re-tuning as a first-class,
+//! fault-tolerant mode (ROADMAP item: tune-while-serving).
+//!
+//! The paper's economics — thousands of profiles over one frozen adapter
+//! bank — only pay off if profiles can arrive and re-tune *while* the
+//! store serves reads. This module turns per-profile train-batch streams
+//! ([`ProfileSource`]) into tune jobs for the continuous scheduler:
+//!
+//! - **Bounded queues, pull-based backpressure.** Each source owns a
+//!   queue of at most `queue_cap` batches; a source is simply not polled
+//!   while its queue is full, so a fast producer cannot balloon memory.
+//! - **Deficit-weighted round robin.** Every round each live source
+//!   earns `quantum × weight` polling credit (deficit capped at 2× the
+//!   earn rate), so a hot profile drains its credit and yields the
+//!   rotation — it cannot starve colder profiles out of tuning.
+//! - **Stall → backoff → quarantine.** A source that stays `Pending`
+//!   past `stall_ms`, or returns an error, takes a *strike*: exponential
+//!   backoff with jitter per strike, quarantine (dropped from rotation)
+//!   after `strikes` consecutive strikes. [`IngestCore::reset_quarantined`]
+//!   re-admits quarantined sources with a clean slate — the recovery
+//!   half of the chaos-harness lifecycle.
+//! - **Panic containment.** A source that panics inside `poll_batch` is
+//!   quarantined on the spot; the panic never unwinds into the pump
+//!   thread or the rotation.
+//!
+//! The core is tick-able ([`IngestCore::run_round`] takes an explicit
+//! `now`), so the fault policy is unit-tested deterministically;
+//! [`IngestPump`] wraps it in a real thread for `serve`/`churn`.
+
+pub mod source;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{IngestConfig, TrainConfig};
+use crate::coordinator::scheduler::TrainJob;
+use crate::coordinator::telemetry::Telemetry;
+use crate::data::Dataset;
+use crate::data::Example;
+use crate::info;
+use crate::util::rng::Rng;
+
+pub use source::{
+    FlakySource, ProfileSource, SourceMeta, SourcePoll, StallingSource, SyntheticSource,
+};
+
+/// Where cut tune jobs go. Implemented by the continuous
+/// [`Scheduler`](crate::coordinator::scheduler::Scheduler); tests plug
+/// in collecting sinks.
+pub trait TuneSink {
+    fn submit_tune(&self, job: TrainJob) -> Result<()>;
+
+    /// Whether the sink would accept a new job for this profile right now.
+    /// `maybe_dispatch` holds a full-enough queue instead of cutting when
+    /// this is false, which stops polling the source (bounded queue) — so
+    /// a slow tuner back-pressures all the way to the stream head instead
+    /// of flooding the scheduler with stacked re-tunes of one profile.
+    fn ready_for(&self, _profile_id: u64) -> bool {
+        true
+    }
+}
+
+impl<T: TuneSink + ?Sized> TuneSink for Arc<T> {
+    fn submit_tune(&self, job: TrainJob) -> Result<()> {
+        (**self).submit_tune(job)
+    }
+    fn ready_for(&self, profile_id: u64) -> bool {
+        (**self).ready_for(profile_id)
+    }
+}
+
+impl TuneSink for crate::coordinator::scheduler::Scheduler {
+    fn submit_tune(&self, job: TrainJob) -> Result<()> {
+        self.submit(job)
+    }
+    /// One in-flight tune per profile: while a job for this profile is
+    /// queued or running, freshly streamed batches wait in the ingest
+    /// queue rather than stacking duplicate jobs behind it.
+    fn ready_for(&self, profile_id: u64) -> bool {
+        use crate::coordinator::scheduler::JobStatus;
+        !matches!(self.status(profile_id), Some(JobStatus::Queued | JobStatus::Running))
+    }
+}
+
+/// A source plus the tune recipe applied to every job cut from it.
+pub struct SourceSpec {
+    pub source: Box<dyn ProfileSource>,
+    pub cfg: TrainConfig,
+    pub keep_aux: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Healthy,
+    /// Backoff after a strike: skipped until the deadline passes.
+    Backoff(Instant),
+    /// Dropped from the rotation until `reset_quarantined`.
+    Quarantined,
+    /// Stream exhausted and flushed.
+    Done,
+}
+
+struct Slot {
+    spec: SourceSpec,
+    queue: VecDeque<Vec<Example>>,
+    deficit: usize,
+    strikes: u32,
+    state: SlotState,
+    /// First `Pending` of the current dry spell (stall detection).
+    pending_since: Option<Instant>,
+    dispatched: u64,
+}
+
+/// What one `run_round` did — the pump uses this to decide whether to
+/// idle-sleep.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundStats {
+    /// Batches pulled into queues this round.
+    pub produced: usize,
+    /// Tune jobs cut and submitted this round.
+    pub dispatched: usize,
+}
+
+/// Per-slot view for harness assertions and shutdown reporting.
+#[derive(Debug, Clone)]
+pub struct SlotReport {
+    pub profile_id: u64,
+    pub tenant: u64,
+    pub state: &'static str,
+    pub strikes: u32,
+    pub queued: usize,
+    pub dispatched: u64,
+}
+
+pub struct IngestCore {
+    cfg: IngestConfig,
+    slots: Vec<Slot>,
+    telemetry: Option<Arc<Telemetry>>,
+    rng: Rng,
+}
+
+impl IngestCore {
+    pub fn new(cfg: IngestConfig, telemetry: Option<Arc<Telemetry>>, seed: u64) -> IngestCore {
+        IngestCore { cfg, slots: Vec::new(), telemetry, rng: Rng::new(seed).fold_in(0x1963e57) }
+    }
+
+    pub fn cfg(&self) -> &IngestConfig {
+        &self.cfg
+    }
+
+    pub fn add_source(&mut self, spec: SourceSpec) {
+        self.slots.push(Slot {
+            spec,
+            queue: VecDeque::new(),
+            deficit: 0,
+            strikes: 0,
+            state: SlotState::Healthy,
+            pending_since: None,
+            dispatched: 0,
+        });
+    }
+
+    /// One DWRR rotation: earn credit, poll every live source up to its
+    /// credit and queue room, then cut tune jobs from every queue at or
+    /// past `min_batches` (or any non-empty queue of a finished source).
+    pub fn run_round(&mut self, sink: &dyn TuneSink, now: Instant) -> RoundStats {
+        let mut stats = RoundStats::default();
+        for i in 0..self.slots.len() {
+            self.poll_slot(i, now, &mut stats);
+        }
+        for i in 0..self.slots.len() {
+            if self.maybe_dispatch(i, sink) {
+                stats.dispatched += 1;
+            }
+        }
+        stats
+    }
+
+    fn poll_slot(&mut self, i: usize, now: Instant, stats: &mut RoundStats) {
+        let cap = self.cfg.queue_cap;
+        let quantum = self.cfg.quantum;
+        let stall_ms = self.cfg.stall_ms;
+        let mut strike_after: Option<&'static str> = None;
+        {
+            let slot = &mut self.slots[i];
+            match slot.state {
+                SlotState::Quarantined | SlotState::Done => return,
+                SlotState::Backoff(until) => {
+                    if now < until {
+                        return;
+                    }
+                    slot.state = SlotState::Healthy;
+                }
+                SlotState::Healthy => {}
+            }
+            let w = slot.spec.source.weight().max(1);
+            slot.deficit = (slot.deficit + quantum * w).min(2 * quantum * w);
+            while slot.deficit > 0 && slot.queue.len() < cap {
+                let polled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    slot.spec.source.poll_batch()
+                }));
+                match polled {
+                    Err(payload) => {
+                        let msg = crate::coordinator::scheduler::panic_message(payload.as_ref());
+                        crate::warn_log!(
+                            "ingest",
+                            "source for profile {} panicked ({msg}); quarantined",
+                            slot.spec.source.profile_id()
+                        );
+                        slot.state = SlotState::Quarantined;
+                        slot.pending_since = None;
+                        if let Some(t) = &self.telemetry {
+                            t.record_source_quarantined();
+                        }
+                        return;
+                    }
+                    Ok(Err(e)) => {
+                        crate::debug_log!(
+                            "ingest",
+                            "source for profile {} errored: {e:#}",
+                            slot.spec.source.profile_id()
+                        );
+                        slot.pending_since = None;
+                        strike_after = Some("error");
+                        break;
+                    }
+                    Ok(Ok(SourcePoll::Batch(batch))) => {
+                        slot.queue.push_back(batch);
+                        slot.deficit -= 1;
+                        slot.strikes = 0;
+                        slot.pending_since = None;
+                        stats.produced += 1;
+                    }
+                    Ok(Ok(SourcePoll::Pending)) => {
+                        match slot.pending_since {
+                            None => slot.pending_since = Some(now),
+                            Some(t0)
+                                if now.duration_since(t0) >= Duration::from_millis(stall_ms) =>
+                            {
+                                slot.pending_since = None;
+                                if let Some(t) = &self.telemetry {
+                                    t.record_source_stall();
+                                }
+                                strike_after = Some("stalled");
+                            }
+                            Some(_) => {}
+                        }
+                        break;
+                    }
+                    Ok(Ok(SourcePoll::Done)) => {
+                        slot.state = SlotState::Done;
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(reason) = strike_after {
+            self.strike(i, now, reason);
+        }
+    }
+
+    /// One quarantine strike: exponential backoff with jitter (uniform
+    /// in [cap/2, cap] of the doubled-per-strike delay), quarantine once
+    /// `strikes` consecutive strikes accumulate.
+    fn strike(&mut self, i: usize, now: Instant, reason: &str) {
+        let max_strikes = self.cfg.strikes;
+        let (base, cap) = (self.cfg.backoff_ms, self.cfg.backoff_cap_ms);
+        let jitter = self.rng.uniform();
+        let slot = &mut self.slots[i];
+        slot.strikes += 1;
+        let pid = slot.spec.source.profile_id();
+        if slot.strikes >= max_strikes {
+            slot.state = SlotState::Quarantined;
+            crate::warn_log!(
+                "ingest",
+                "source for profile {pid} quarantined after {} strikes (last: {reason})",
+                slot.strikes
+            );
+            if let Some(t) = &self.telemetry {
+                t.record_source_quarantined();
+            }
+        } else {
+            let exp = base.saturating_mul(1u64 << (slot.strikes as u64 - 1).min(20)).min(cap);
+            let half = (exp / 2).max(1);
+            let wait = half + (jitter * half as f64) as u64;
+            slot.state = SlotState::Backoff(now + Duration::from_millis(wait));
+            crate::debug_log!(
+                "ingest",
+                "source for profile {pid} strike {} ({reason}); retry in {wait}ms",
+                slot.strikes
+            );
+            if let Some(t) = &self.telemetry {
+                t.record_ingest_retry();
+            }
+        }
+    }
+
+    fn maybe_dispatch(&mut self, i: usize, sink: &dyn TuneSink) -> bool {
+        let min = self.cfg.min_batches;
+        let slot = &mut self.slots[i];
+        let flush = matches!(slot.state, SlotState::Done);
+        if slot.queue.is_empty() || (slot.queue.len() < min && !flush) {
+            return false;
+        }
+        if !sink.ready_for(slot.spec.source.profile_id()) && !flush {
+            return false;
+        }
+        let meta = slot.spec.source.meta();
+        let train: Vec<Example> = slot.queue.drain(..).flatten().collect();
+        let job = TrainJob {
+            profile_id: slot.spec.source.profile_id(),
+            tenant: slot.spec.source.tenant(),
+            dataset: Dataset {
+                name: meta.name,
+                train,
+                dev: Vec::new(),
+                num_classes: meta.num_classes,
+                metric: meta.metric,
+            },
+            cfg: slot.spec.cfg.clone(),
+            keep_aux: slot.spec.keep_aux,
+        };
+        match sink.submit_tune(job) {
+            Ok(()) => {
+                slot.dispatched += 1;
+                true
+            }
+            Err(e) => {
+                crate::warn_log!(
+                    "ingest",
+                    "tune sink rejected job for profile {}: {e:#}",
+                    slot.spec.source.profile_id()
+                );
+                false
+            }
+        }
+    }
+
+    /// Re-admit every quarantined source with a clean slate (strikes and
+    /// stall clock cleared). Returns how many were reset.
+    pub fn reset_quarantined(&mut self) -> usize {
+        let mut n = 0;
+        for slot in &mut self.slots {
+            if slot.state == SlotState::Quarantined {
+                slot.state = SlotState::Healthy;
+                slot.strikes = 0;
+                slot.pending_since = None;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            info!("ingest", "reset {n} quarantined source(s) back into the rotation");
+        }
+        n
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.state == SlotState::Quarantined).count()
+    }
+
+    /// Sources still in (or eligible to rejoin) the rotation.
+    pub fn live_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s.state, SlotState::Healthy | SlotState::Backoff(_)))
+            .count()
+    }
+
+    pub fn reports(&self) -> Vec<SlotReport> {
+        self.slots
+            .iter()
+            .map(|s| SlotReport {
+                profile_id: s.spec.source.profile_id(),
+                tenant: s.spec.source.tenant(),
+                state: match s.state {
+                    SlotState::Healthy => "healthy",
+                    SlotState::Backoff(_) => "backoff",
+                    SlotState::Quarantined => "quarantined",
+                    SlotState::Done => "done",
+                },
+                strikes: s.strikes,
+                queued: s.queue.len(),
+                dispatched: s.dispatched,
+            })
+            .collect()
+    }
+}
+
+struct PumpShared {
+    stop: AtomicBool,
+    reset: AtomicBool,
+}
+
+/// Thread wrapper around [`IngestCore`] for live serving: rounds run
+/// continuously, idling `tick_ms` between empty rounds. `request_reset`
+/// re-admits quarantined sources from another thread (the churn
+/// harness's mid-run recovery).
+pub struct IngestPump {
+    shared: Arc<PumpShared>,
+    handle: Option<JoinHandle<IngestCore>>,
+}
+
+impl IngestPump {
+    pub fn start<S>(mut core: IngestCore, sink: S) -> IngestPump
+    where
+        S: TuneSink + Send + 'static,
+    {
+        let shared =
+            Arc::new(PumpShared { stop: AtomicBool::new(false), reset: AtomicBool::new(false) });
+        let sh = shared.clone();
+        let handle = std::thread::spawn(move || {
+            let tick = Duration::from_millis(core.cfg().tick_ms.max(1));
+            while !sh.stop.load(Ordering::Acquire) {
+                if sh.reset.swap(false, Ordering::AcqRel) {
+                    core.reset_quarantined();
+                }
+                let stats = core.run_round(&sink, Instant::now());
+                if stats.produced == 0 && stats.dispatched == 0 {
+                    std::thread::sleep(tick);
+                }
+            }
+            core
+        });
+        IngestPump { shared, handle: Some(handle) }
+    }
+
+    pub fn request_reset(&self) {
+        self.shared.reset.store(true, Ordering::Release);
+    }
+
+    /// Stop the pump and hand back the core (for final reports).
+    pub fn stop(mut self) -> Option<IngestCore> {
+        self.shared.stop.store(true, Ordering::Release);
+        self.handle.take().and_then(|h| h.join().ok())
+    }
+}
+
+impl Drop for IngestPump {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Label, MetricKind};
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
+
+    fn meta(name: &str) -> SourceMeta {
+        SourceMeta { name: name.to_string(), num_classes: 2, metric: MetricKind::Acc }
+    }
+
+    fn example() -> Example {
+        Example { tokens: vec![1, 2, 3], pad_mask: vec![1.0; 3], label: Label::Class(0), pair_id: None }
+    }
+
+    fn batches(n: usize, per: usize) -> Vec<Vec<Example>> {
+        (0..n).map(|_| vec![example(); per]).collect()
+    }
+
+    fn cfg() -> IngestConfig {
+        IngestConfig {
+            queue_cap: 8,
+            quantum: 1,
+            min_batches: 1,
+            stall_ms: 50,
+            backoff_ms: 100,
+            backoff_cap_ms: 400,
+            strikes: 3,
+            tick_ms: 1,
+        }
+    }
+
+    /// Collects (profile_id, train examples) per submitted job.
+    #[derive(Default)]
+    struct CollectSink {
+        jobs: Mutex<Vec<(u64, usize)>>,
+    }
+
+    impl TuneSink for CollectSink {
+        fn submit_tune(&self, job: TrainJob) -> Result<()> {
+            self.jobs.lock().unwrap().push((job.profile_id, job.dataset.train.len()));
+            Ok(())
+        }
+    }
+
+    impl CollectSink {
+        fn total_examples(&self, pid: u64) -> usize {
+            self.jobs.lock().unwrap().iter().filter(|(p, _)| *p == pid).map(|(_, n)| n).sum()
+        }
+    }
+
+    /// Counts polls; always has a batch ready.
+    struct CountedSource {
+        pid: u64,
+        weight: usize,
+        polls: Arc<AtomicU64>,
+    }
+
+    impl ProfileSource for CountedSource {
+        fn profile_id(&self) -> u64 {
+            self.pid
+        }
+        fn weight(&self) -> usize {
+            self.weight
+        }
+        fn meta(&self) -> SourceMeta {
+            meta("counted")
+        }
+        fn poll_batch(&mut self) -> Result<SourcePoll> {
+            self.polls.fetch_add(1, Ordering::Relaxed);
+            Ok(SourcePoll::Batch(vec![example()]))
+        }
+    }
+
+    struct PanicSource;
+
+    impl ProfileSource for PanicSource {
+        fn profile_id(&self) -> u64 {
+            66
+        }
+        fn meta(&self) -> SourceMeta {
+            meta("panic")
+        }
+        fn poll_batch(&mut self) -> Result<SourcePoll> {
+            panic!("deliberate source panic");
+        }
+    }
+
+    fn spec(source: impl ProfileSource + 'static) -> SourceSpec {
+        SourceSpec { source: Box::new(source), cfg: TrainConfig::default(), keep_aux: false }
+    }
+
+    #[test]
+    fn dwrr_weights_share_and_no_starvation() {
+        // A weight-3 hot source and a weight-1 cold source, both always
+        // ready: credit (not eagerness) sets the split, and the cold
+        // source still lands one batch per round — never starved.
+        let mut core = IngestCore::new(cfg(), None, 7);
+        let hot_polls = Arc::new(AtomicU64::new(0));
+        let cold_polls = Arc::new(AtomicU64::new(0));
+        core.add_source(spec(CountedSource { pid: 1, weight: 3, polls: hot_polls.clone() }));
+        core.add_source(spec(CountedSource { pid: 2, weight: 1, polls: cold_polls.clone() }));
+        let sink = CollectSink::default();
+        let t0 = Instant::now();
+        let rounds = 40;
+        for r in 0..rounds {
+            core.run_round(&sink, t0 + Duration::from_millis(r));
+        }
+        let hot = sink.total_examples(1) as f64;
+        let cold = sink.total_examples(2) as f64;
+        assert_eq!(cold as u64, rounds, "cold source earns exactly quantum per round");
+        let ratio = hot / cold;
+        assert!((2.5..=3.5).contains(&ratio), "weight-3 source gets ~3x share, got {ratio}");
+    }
+
+    #[test]
+    fn stall_strike_quarantine_and_reset_recovery() {
+        // Pending for the first 2 polls with strikes=1: the sustained
+        // stall quarantines the source; reset re-admits it and it
+        // produces again — the full chaos-harness lifecycle.
+        let mut c = cfg();
+        c.strikes = 1;
+        let mut core = IngestCore::new(c, Some(Arc::new(Telemetry::new())), 7);
+        let tele = core.telemetry.clone().unwrap();
+        let src = StallingSource::new(SyntheticSource::new(5, meta("s"), batches(4, 2), 0), 0, 2);
+        core.add_source(spec(src));
+        let sink = CollectSink::default();
+        let t0 = Instant::now();
+        core.run_round(&sink, t0); // Pending: stall clock starts
+        assert_eq!(core.quarantined_count(), 0);
+        core.run_round(&sink, t0 + Duration::from_millis(60)); // past stall_ms: strike -> quarantine
+        assert_eq!(core.quarantined_count(), 1);
+        core.run_round(&sink, t0 + Duration::from_millis(120)); // quarantined: not polled
+        assert!(sink.jobs.lock().unwrap().is_empty());
+        assert_eq!(core.reset_quarantined(), 1);
+        core.run_round(&sink, t0 + Duration::from_millis(180)); // recovered: produces
+        assert_eq!(sink.total_examples(5), 2, "one 2-example batch after recovery");
+        let snap = tele.snapshot();
+        assert_eq!(snap.sources_stalled, 1);
+        assert_eq!(snap.sources_quarantined, 1);
+        assert_eq!(snap.ingest_retries, 0, "strike 1 of 1 quarantines, never retries");
+    }
+
+    #[test]
+    fn error_strikes_back_off_exponentially_before_quarantine() {
+        // An always-failing source: each sub-quarantine strike opens a
+        // backoff window (jittered in [d/2, d] of the doubled delay)
+        // during which the source is NOT polled.
+        let mut c = cfg();
+        c.strikes = 10;
+        let tele = Arc::new(Telemetry::new());
+        let mut core = IngestCore::new(c, Some(tele.clone()), 7);
+        let polls = Arc::new(AtomicU64::new(0));
+        struct FailSource(Arc<AtomicU64>);
+        impl ProfileSource for FailSource {
+            fn profile_id(&self) -> u64 {
+                9
+            }
+            fn meta(&self) -> SourceMeta {
+                SourceMeta { name: "fail".into(), num_classes: 2, metric: MetricKind::Acc }
+            }
+            fn poll_batch(&mut self) -> Result<SourcePoll> {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("down");
+            }
+        }
+        core.add_source(spec(FailSource(polls.clone())));
+        let sink = CollectSink::default();
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        core.run_round(&sink, at(0)); // strike 1: backoff in [50, 100]ms
+        assert_eq!(polls.load(Ordering::Relaxed), 1);
+        core.run_round(&sink, at(40)); // inside the window: skipped
+        assert_eq!(polls.load(Ordering::Relaxed), 1, "backoff window must suppress polling");
+        core.run_round(&sink, at(101)); // strike 2: backoff in [100, 200]ms
+        assert_eq!(polls.load(Ordering::Relaxed), 2);
+        core.run_round(&sink, at(302)); // strike 3: backoff in [200, 400]ms (cap)
+        assert_eq!(polls.load(Ordering::Relaxed), 3);
+        core.run_round(&sink, at(703)); // past the cap: polled again
+        assert_eq!(polls.load(Ordering::Relaxed), 4);
+        assert_eq!(tele.snapshot().ingest_retries, 4);
+        assert_eq!(core.quarantined_count(), 0);
+    }
+
+    #[test]
+    fn source_panic_is_contained_and_quarantines_only_that_source() {
+        let tele = Arc::new(Telemetry::new());
+        let mut core = IngestCore::new(cfg(), Some(tele.clone()), 7);
+        core.add_source(spec(PanicSource));
+        core.add_source(spec(SyntheticSource::new(7, meta("ok"), batches(2, 1), 1)));
+        let sink = CollectSink::default();
+        let stats = core.run_round(&sink, Instant::now()); // must not unwind
+        assert_eq!(core.quarantined_count(), 1);
+        assert!(stats.produced >= 1, "healthy source unaffected by the panic");
+        assert_eq!(sink.total_examples(7), stats.produced);
+        assert_eq!(tele.snapshot().sources_quarantined, 1);
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_limits_polling() {
+        // quantum 10 but queue_cap 3: at most 3 batches are pulled per
+        // round no matter how much credit accrues, and each cut job
+        // carries exactly the queue's contents.
+        let mut c = cfg();
+        c.queue_cap = 3;
+        c.quantum = 10;
+        c.min_batches = 3;
+        let mut core = IngestCore::new(c, None, 7);
+        let polls = Arc::new(AtomicU64::new(0));
+        core.add_source(spec(CountedSource { pid: 3, weight: 1, polls: polls.clone() }));
+        let sink = CollectSink::default();
+        let t0 = Instant::now();
+        for r in 0..5 {
+            core.run_round(&sink, t0 + Duration::from_millis(r));
+            assert_eq!(
+                polls.load(Ordering::Relaxed),
+                3 * (r as u64 + 1),
+                "polling stops at queue_cap regardless of credit"
+            );
+        }
+        let jobs = sink.jobs.lock().unwrap();
+        assert_eq!(jobs.len(), 5);
+        assert!(jobs.iter().all(|&(_, n)| n == 3), "each job cut at exactly queue_cap batches");
+    }
+
+    #[test]
+    fn finished_source_flushes_below_min_batches() {
+        // 2 batches then Done with min_batches=4: the remainder is still
+        // flushed as a final (smaller) tune job.
+        let mut c = cfg();
+        c.min_batches = 4;
+        c.quantum = 8;
+        let mut core = IngestCore::new(c, None, 7);
+        core.add_source(spec(SyntheticSource::new(11, meta("tail"), batches(2, 2), 1)));
+        let sink = CollectSink::default();
+        core.run_round(&sink, Instant::now());
+        assert_eq!(sink.total_examples(11), 4, "2 batches x 2 examples flushed on Done");
+        assert_eq!(core.live_count(), 0);
+        let report = &core.reports()[0];
+        assert_eq!(report.state, "done");
+        assert_eq!(report.dispatched, 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Profile train-data sources: the pull side of streaming ingestion.
+//!
+//! A [`ProfileSource`] yields fixed-shape train batches for one profile.
+//! The ingest core *pulls* — a source is only polled when its bounded
+//! queue has room and its DWRR credit allows it — so a fast producer
+//! exerts no push-pressure on the tuning pipeline. Sources are free to
+//! return [`SourcePoll::Pending`] (no data yet) without blocking the
+//! rotation; the core turns *sustained* Pending into stall strikes.
+//!
+//! The synthetic sources here back both the unit tests and the
+//! `xpeft churn` chaos harness: [`SyntheticSource`] replays pre-chunked
+//! batches, while [`StallingSource`] / [`FlakySource`] wrap another
+//! source and inject deterministic (poll-counted, not timed) stalls and
+//! transient failures.
+
+use anyhow::{bail, Result};
+
+use crate::data::{Example, MetricKind};
+
+/// Dataset-shaping metadata a source carries alongside its batches.
+#[derive(Debug, Clone)]
+pub struct SourceMeta {
+    pub name: String,
+    pub num_classes: usize,
+    pub metric: MetricKind,
+}
+
+/// One poll's outcome.
+pub enum SourcePoll {
+    /// A ready train batch.
+    Batch(Vec<Example>),
+    /// No data right now; poll again later. Sustained Pending past the
+    /// configured stall window counts as a stall strike.
+    Pending,
+    /// Stream exhausted: remaining queued batches are flushed into a
+    /// final tune job and the source leaves the rotation.
+    Done,
+}
+
+/// Pull-based stream of train batches for one profile.
+///
+/// `poll_batch` must not block: return [`SourcePoll::Pending`] instead.
+/// Errors are treated as transient (backoff + retry, quarantine after
+/// repeated strikes); panics quarantine the source immediately but never
+/// escape the ingest core.
+pub trait ProfileSource: Send {
+    fn profile_id(&self) -> u64;
+
+    /// Fairness/accounting tenant. Defaults to the profile id (one
+    /// tenant per profile); multi-profile tenants override this.
+    fn tenant(&self) -> u64 {
+        self.profile_id()
+    }
+
+    /// DWRR weight (relative share of polling credit). Default 1.
+    fn weight(&self) -> usize {
+        1
+    }
+
+    fn meta(&self) -> SourceMeta;
+
+    fn poll_batch(&mut self) -> Result<SourcePoll>;
+}
+
+/// Replays pre-chunked batches, optionally cycling the list: `cycles`
+/// full passes (0 ⇒ endless). Deterministic and allocation-light — the
+/// workhorse source for tests, smoke runs, and the churn harness.
+pub struct SyntheticSource {
+    profile_id: u64,
+    tenant: u64,
+    weight: usize,
+    meta: SourceMeta,
+    batches: Vec<Vec<Example>>,
+    cycles: usize,
+    cursor: usize,
+    pass: usize,
+}
+
+impl SyntheticSource {
+    pub fn new(
+        profile_id: u64,
+        meta: SourceMeta,
+        batches: Vec<Vec<Example>>,
+        cycles: usize,
+    ) -> SyntheticSource {
+        SyntheticSource {
+            profile_id,
+            tenant: profile_id,
+            weight: 1,
+            meta,
+            batches,
+            cycles,
+            cursor: 0,
+            pass: 0,
+        }
+    }
+
+    pub fn with_tenant(mut self, tenant: u64) -> SyntheticSource {
+        self.tenant = tenant;
+        self
+    }
+
+    pub fn with_weight(mut self, weight: usize) -> SyntheticSource {
+        self.weight = weight.max(1);
+        self
+    }
+}
+
+impl ProfileSource for SyntheticSource {
+    fn profile_id(&self) -> u64 {
+        self.profile_id
+    }
+
+    fn tenant(&self) -> u64 {
+        self.tenant
+    }
+
+    fn weight(&self) -> usize {
+        self.weight
+    }
+
+    fn meta(&self) -> SourceMeta {
+        self.meta.clone()
+    }
+
+    fn poll_batch(&mut self) -> Result<SourcePoll> {
+        if self.batches.is_empty() {
+            return Ok(SourcePoll::Done);
+        }
+        if self.cursor == self.batches.len() {
+            self.cursor = 0;
+            self.pass += 1;
+            if self.cycles != 0 && self.pass >= self.cycles {
+                return Ok(SourcePoll::Done);
+            }
+        }
+        let batch = self.batches[self.cursor].clone();
+        self.cursor += 1;
+        Ok(SourcePoll::Batch(batch))
+    }
+}
+
+/// Wraps a source and returns `Pending` for `stall_for` consecutive
+/// polls starting at poll index `stall_from` (0-based, counted across
+/// the wrapper's lifetime), then delegates again. Poll-counted rather
+/// than timed, so tests and the churn harness stay deterministic.
+pub struct StallingSource<S: ProfileSource> {
+    inner: S,
+    stall_from: u64,
+    stall_for: u64,
+    polls: u64,
+}
+
+impl<S: ProfileSource> StallingSource<S> {
+    pub fn new(inner: S, stall_from: u64, stall_for: u64) -> StallingSource<S> {
+        StallingSource { inner, stall_from, stall_for, polls: 0 }
+    }
+}
+
+impl<S: ProfileSource> ProfileSource for StallingSource<S> {
+    fn profile_id(&self) -> u64 {
+        self.inner.profile_id()
+    }
+
+    fn tenant(&self) -> u64 {
+        self.inner.tenant()
+    }
+
+    fn weight(&self) -> usize {
+        self.inner.weight()
+    }
+
+    fn meta(&self) -> SourceMeta {
+        self.inner.meta()
+    }
+
+    fn poll_batch(&mut self) -> Result<SourcePoll> {
+        let i = self.polls;
+        self.polls += 1;
+        if i >= self.stall_from && i < self.stall_from + self.stall_for {
+            return Ok(SourcePoll::Pending);
+        }
+        self.inner.poll_batch()
+    }
+}
+
+/// Wraps a source and fails `fail_for` consecutive polls starting at
+/// poll index `fail_from` — a deterministic transient-fault window for
+/// exercising backoff/retry and (when `fail_for >= strikes`) quarantine
+/// followed by post-reset recovery.
+pub struct FlakySource<S: ProfileSource> {
+    inner: S,
+    fail_from: u64,
+    fail_for: u64,
+    polls: u64,
+}
+
+impl<S: ProfileSource> FlakySource<S> {
+    pub fn new(inner: S, fail_from: u64, fail_for: u64) -> FlakySource<S> {
+        FlakySource { inner, fail_from, fail_for, polls: 0 }
+    }
+}
+
+impl<S: ProfileSource> ProfileSource for FlakySource<S> {
+    fn profile_id(&self) -> u64 {
+        self.inner.profile_id()
+    }
+
+    fn tenant(&self) -> u64 {
+        self.inner.tenant()
+    }
+
+    fn weight(&self) -> usize {
+        self.inner.weight()
+    }
+
+    fn meta(&self) -> SourceMeta {
+        self.inner.meta()
+    }
+
+    fn poll_batch(&mut self) -> Result<SourcePoll> {
+        let i = self.polls;
+        self.polls += 1;
+        if i >= self.fail_from && i < self.fail_from + self.fail_for {
+            bail!("synthetic source failure (poll {i})");
+        }
+        self.inner.poll_batch()
+    }
+}

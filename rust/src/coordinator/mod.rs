@@ -9,9 +9,14 @@
 //! per-shard + latency telemetry. The [`replication`] module layers a
 //! leader/follower tier on top: committed records ship to follower
 //! processes over the same frame transport, and a client-side router
-//! fails reads over to a caught-up follower when the leader dies.
+//! fails reads over to a caught-up follower when the leader dies. The
+//! [`ingest`] module makes re-tuning continuous: per-profile batch
+//! streams feed the scheduler through bounded queues with DWRR fairness
+//! and a stall → backoff → quarantine fault policy, so profiles churn
+//! while the store serves.
 
 pub mod batcher;
+pub mod ingest;
 pub mod net;
 pub mod profile_store;
 pub mod replication;
@@ -25,6 +30,7 @@ pub use profile_store::{
 };
 pub use net::NetServer;
 pub use replication::{Follower, FollowerConfig, RepConfig, RepHub, RepServer, Router, RouterConfig};
-pub use scheduler::{JobStatus, Scheduler, TrainJob};
+pub use ingest::{IngestCore, IngestPump, ProfileSource, SourceSpec, TuneSink};
+pub use scheduler::{JobError, JobStatus, Scheduler, TrainJob};
 pub use service::{Response, ResponseStatus, Service};
 pub use telemetry::{Snapshot, Telemetry};

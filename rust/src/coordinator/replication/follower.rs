@@ -36,8 +36,11 @@ use super::RepConfig;
 
 /// Socket poll granularity.
 const POLL: Duration = Duration::from_millis(5);
-/// Pause between reconnect attempts while the leader is unreachable.
-const RECONNECT_PAUSE: Duration = Duration::from_millis(100);
+/// Reconnect backoff base while the leader is unreachable: doubled per
+/// consecutive failed dial, jittered, capped at [`RECONNECT_CAP`] — a
+/// down leader is probed, not hammered by a tight re-dial loop.
+const RECONNECT_BASE: Duration = Duration::from_millis(100);
+const RECONNECT_CAP: Duration = Duration::from_millis(2_000);
 /// Persist `replica.meta` every this many applied records (and on every
 /// disconnect), bounding re-ship work after a follower crash.
 const META_EVERY: u64 = 64;
@@ -205,11 +208,26 @@ fn would_block(e: &std::io::Error) -> bool {
     )
 }
 
+/// Jittered exponential reconnect delay for the `attempt`-th (0-based)
+/// consecutive failed dial: doubled per attempt from [`RECONNECT_BASE`],
+/// capped at [`RECONNECT_CAP`], uniform in [d/2, d] so a fleet of
+/// followers doesn't re-dial a recovering leader in lockstep.
+fn reconnect_backoff(attempt: u32, rng: &mut crate::util::rng::Rng) -> Duration {
+    let exp = (RECONNECT_BASE.as_millis() as u64)
+        .saturating_mul(1u64 << attempt.min(16))
+        .min(RECONNECT_CAP.as_millis() as u64);
+    let half = (exp / 2).max(1);
+    Duration::from_millis(half + (rng.uniform() * half as f64) as u64)
+}
+
 /// Outer loop: connect, run a session, persist positions, maybe promote.
 fn run(store: Arc<ProfileStore>, tel: Arc<Telemetry>, cfg: FollowerConfig, shared: Arc<Shared>) {
+    let mut rng = crate::util::rng::Rng::new(0x4e7c0).fold_in(cfg.replica_id);
+    let mut failed_dials = 0u32;
     while !shared.stop.load(Ordering::Relaxed) {
         match TcpStream::connect(&cfg.peer) {
             Ok(stream) => {
+                failed_dials = 0;
                 shared.connected.store(true, Ordering::Relaxed);
                 shared.ever_connected.store(true, Ordering::Relaxed);
                 *shared.last_contact.lock().unwrap() = Instant::now();
@@ -222,8 +240,21 @@ fn run(store: Arc<ProfileStore>, tel: Arc<Telemetry>, cfg: FollowerConfig, share
                 }
             }
             Err(e) => {
-                crate::debug_log!("rep", "connect {} failed: {e}", cfg.peer);
-                std::thread::sleep(RECONNECT_PAUSE);
+                let wait = reconnect_backoff(failed_dials, &mut rng);
+                failed_dials = failed_dials.saturating_add(1);
+                crate::debug_log!(
+                    "rep",
+                    "connect {} failed (attempt {failed_dials}): {e}; retry in {}ms",
+                    cfg.peer,
+                    wait.as_millis()
+                );
+                // sleep in slices so stop() isn't held up by the backoff
+                let mut left = wait;
+                while !left.is_zero() && !shared.stop.load(Ordering::Relaxed) {
+                    let step = left.min(Duration::from_millis(20));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
             }
         }
         if shared.stop.load(Ordering::Relaxed) {
@@ -475,4 +506,57 @@ fn handle_frame(
         _ => {}
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconnect_backoff_schedule_doubles_with_jitter_to_cap() {
+        // Pin the schedule: attempt k draws uniform in [d/2, d] where
+        // d = min(100ms << k, 2s). Jitter never moves a draw outside its
+        // window, and the cap holds for absurd attempt counts.
+        let windows: [(u64, u64); 7] = [
+            (50, 100),
+            (100, 200),
+            (200, 400),
+            (400, 800),
+            (800, 1600),
+            (1000, 2000),
+            (1000, 2000),
+        ];
+        let mut rng = Rng::new(42);
+        for (attempt, (lo, hi)) in windows.into_iter().enumerate() {
+            for _ in 0..50 {
+                let d = reconnect_backoff(attempt as u32, &mut rng).as_millis() as u64;
+                assert!(
+                    (lo..=hi).contains(&d),
+                    "attempt {attempt}: {d}ms outside [{lo}, {hi}]ms"
+                );
+            }
+        }
+        assert!(
+            reconnect_backoff(63, &mut rng) <= RECONNECT_CAP,
+            "shift must saturate, not overflow, at large attempt counts"
+        );
+    }
+
+    #[test]
+    fn reconnect_backoff_draws_are_spread_within_the_window() {
+        // The jitter exists to de-synchronize followers: over many draws
+        // both halves of the [d/2, d] window must actually be hit.
+        let mut rng = Rng::new(7);
+        let (mut low_half, mut high_half) = (0, 0);
+        for _ in 0..200 {
+            let d = reconnect_backoff(0, &mut rng).as_millis() as u64;
+            if d < 75 {
+                low_half += 1;
+            } else {
+                high_half += 1;
+            }
+        }
+        assert!(low_half > 20 && high_half > 20, "jitter collapsed: {low_half}/{high_half}");
+    }
 }

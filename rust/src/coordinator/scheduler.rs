@@ -1,36 +1,60 @@
-//! Training-job scheduler: each *new profile* entering the system gets a
-//! mask-tuning job against the shared frozen bank (paper §3: "each new
-//! incoming profile is designed to reuse and adaptively select them").
+//! Continuous tuning scheduler: profiles enter (or re-enter) the system
+//! at any time and each gets a mask-tuning job against the shared frozen
+//! bank (paper §3: "each new incoming profile is designed to reuse and
+//! adaptively select them"). Finished tunes commit through
+//! [`ProfileStore::insert`] — the epoch-bump + eager-invalidation path —
+//! so serving reads flip atomically to the new masks.
 //!
-//! Jobs are independent (distinct profiles, shared frozen inputs), so the
-//! dispatcher fans each ready wave out over the process worker pool
-//! (`util::threadpool`) instead of running one serial worker thread:
-//! concurrent tuning jobs are the training side's natural parallel axis,
-//! mirroring how the serving executor fans concurrent profile batches. A
-//! lone job still parallelizes *inside* its train steps (nested pool
-//! regions run serial, so a wave of W jobs uses the pool at the job level
-//! and each job's numerics stay deterministic).
+//! Unlike the original wave dispatcher (drain the channel, run the wave,
+//! repeat), scheduling here is **continuous**: a fixed set of worker
+//! threads pulls from one priority queue, so tuning runs side by side
+//! with serving and with the streaming ingest layer
+//! ([`ingest`](crate::coordinator::ingest)) that feeds it. Each running
+//! job still fans its train steps out over the process worker pool
+//! (`util::threadpool`; concurrent external `run` callers are safe, and
+//! nested regions stay serial so per-job numerics are deterministic).
 //!
-//! Finished masks land in the (sharded, lock-free-read) profile store,
-//! byte-level and ready to serve; in persistent mode each commit appends
-//! one ~100-byte record to the owning shard's log. Completion is signaled
-//! on a `Condvar`, so `wait_all` wakes the moment the last job finishes
-//! rather than sleep-polling.
+//! Dispatch policy (see [`SchedConfig`]):
+//!
+//! - **Aging priority.** A job's score is its queue age in ms; the
+//!   highest score runs next (FIFO on ties), so nothing waits forever.
+//! - **Cold-start boost.** A profile not yet in the store gets
+//!   `cold_boost_ms` of free age: onboarding preempts queued re-tunes,
+//!   but a re-tune that has aged past the boost outranks fresh
+//!   cold-starts — starvation is bounded by the boost, and the churn
+//!   harness asserts that bound end to end.
+//! - **Per-tenant in-flight cap.** With `tenant_inflight > 0`, a tenant
+//!   at its cap is skipped (its jobs keep aging) so one tenant cannot
+//!   occupy every worker.
+//! - **Transient retries.** A job failing with [`JobError::Transient`]
+//!   (environmental, e.g. store I/O) re-queues with jittered exponential
+//!   backoff up to `tune_retries` times, keeping its original age;
+//!   [`JobError::Permanent`] (bad config, missing artifact) and panics
+//!   fail immediately. Panics are contained per job — a panicking train
+//!   step turns into `Failed`, never a dead worker.
+//! - **Graceful drain.** `shutdown` (and `Drop`) stops intake, finishes
+//!   everything queued and running (including pending retries), then
+//!   joins the workers.
+//!
+//! Completion is signaled on a `Condvar`, so `wait_all` wakes the moment
+//! the last job turns terminal rather than sleep-polling.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::adapters::AdapterBank;
-use crate::config::TrainConfig;
+use crate::config::{SchedConfig, TrainConfig};
 use crate::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore};
+use crate::coordinator::telemetry::Telemetry;
 use crate::data::Dataset;
 use crate::info;
 use crate::runtime::Engine;
 use crate::train;
+use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum JobStatus {
@@ -46,21 +70,38 @@ impl JobStatus {
     }
 }
 
+/// Failure classification driving the retry policy.
+#[derive(Debug)]
+pub enum JobError {
+    /// Environmental (store I/O, resource pressure): retrying may succeed.
+    Transient(String),
+    /// Deterministic (bad config, missing artifact, train divergence
+    /// from malformed input): retrying would fail identically.
+    Permanent(String),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Transient(m) => write!(f, "transient: {m}"),
+            JobError::Permanent(m) => write!(f, "{m}"),
+        }
+    }
+}
+
 pub struct TrainJob {
     pub profile_id: u64,
+    /// Fairness/accounting tenant for the per-tenant in-flight cap.
+    /// Single-profile tenants just use the profile id.
+    pub tenant: u64,
     pub dataset: Dataset,
     pub cfg: TrainConfig,
     /// Store per-profile aux (false ⇒ rely on the store's shared aux).
     pub keep_aux: bool,
 }
 
-enum Msg {
-    Job(TrainJob),
-    Shutdown,
-}
-
-/// Status table + completion signal shared between the dispatcher, the
-/// pool tasks, and `wait_all` callers.
+/// Status table + completion signal shared between workers and
+/// `wait_all` callers.
 struct StatusBoard {
     statuses: Mutex<HashMap<u64, JobStatus>>,
     done_cv: Condvar,
@@ -76,55 +117,139 @@ impl StatusBoard {
     }
 }
 
-pub struct Scheduler {
-    tx: mpsc::Sender<Msg>,
+type Runner = dyn Fn(&TrainJob) -> std::result::Result<(f32, usize, f64), JobError> + Send + Sync;
+
+struct QueuedJob {
+    job: TrainJob,
+    /// Submission order, the FIFO tiebreak.
+    seq: u64,
+    /// First submission time — preserved across retries so a retried job
+    /// keeps its accumulated age.
+    enqueued: Instant,
+    /// Retry gate: not dispatchable before this instant.
+    not_before: Option<Instant>,
+    attempts: usize,
+    /// Profile absent from the store at submit: a cold-start onboarding.
+    cold: bool,
+}
+
+struct SchedState {
+    queue: Vec<QueuedJob>,
+    running: usize,
+    running_by_tenant: HashMap<u64, usize>,
+    draining: bool,
+    next_seq: u64,
+}
+
+struct Inner {
+    state: Mutex<SchedState>,
+    work_cv: Condvar,
+}
+
+struct WorkerCtx {
+    inner: Arc<Inner>,
     board: Arc<StatusBoard>,
-    handle: Option<JoinHandle<()>>,
+    cfg: SchedConfig,
+    telemetry: Option<Arc<Telemetry>>,
+    runner: Arc<Runner>,
+}
+
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    board: Arc<StatusBoard>,
+    store: Arc<ProfileStore>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl Scheduler {
+    /// Default-policy scheduler (worker count = pool parallelism, one
+    /// transient retry, no tenant cap, no telemetry).
     pub fn start(
         engine: Arc<Engine>,
         bank: Arc<AdapterBank>,
         store: Arc<ProfileStore>,
         plm_seed: u64,
     ) -> Scheduler {
-        let (tx, rx) = mpsc::channel::<Msg>();
+        Self::start_with(engine, bank, store, plm_seed, SchedConfig::default(), None)
+    }
+
+    pub fn start_with(
+        engine: Arc<Engine>,
+        bank: Arc<AdapterBank>,
+        store: Arc<ProfileStore>,
+        plm_seed: u64,
+        cfg: SchedConfig,
+        telemetry: Option<Arc<Telemetry>>,
+    ) -> Scheduler {
+        let st = store.clone();
+        let runner: Arc<Runner> =
+            Arc::new(move |job: &TrainJob| run_job_classified(&engine, &bank, &st, job, plm_seed));
+        Self::start_with_runner(store, cfg, telemetry, runner)
+    }
+
+    fn start_with_runner(
+        store: Arc<ProfileStore>,
+        cfg: SchedConfig,
+        telemetry: Option<Arc<Telemetry>>,
+        runner: Arc<Runner>,
+    ) -> Scheduler {
+        let workers = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            crate::util::threadpool::parallelism().max(1)
+        };
+        let inner = Arc::new(Inner {
+            state: Mutex::new(SchedState {
+                queue: Vec::new(),
+                running: 0,
+                running_by_tenant: HashMap::new(),
+                draining: false,
+                next_seq: 0,
+            }),
+            work_cv: Condvar::new(),
+        });
         let board = Arc::new(StatusBoard {
             statuses: Mutex::new(HashMap::new()),
             done_cv: Condvar::new(),
         });
-        let bd = board.clone();
-        let handle = std::thread::spawn(move || loop {
-            // block for the first job of a wave, then drain whatever else
-            // is already queued so independent jobs run concurrently
-            let first = match rx.recv() {
-                Ok(Msg::Job(job)) => job,
-                Ok(Msg::Shutdown) | Err(_) => return,
-            };
-            let mut wave = vec![first];
-            let mut shutdown = false;
-            while let Ok(msg) = rx.try_recv() {
-                match msg {
-                    Msg::Job(job) => wave.push(job),
-                    Msg::Shutdown => shutdown = true,
-                }
-            }
-            run_wave(&wave, &bd, |job| run_job(&engine, &bank, &store, job, plm_seed));
-            if shutdown {
-                return;
-            }
-        });
-        Scheduler { tx, board, handle: Some(handle) }
+        let handles = (0..workers)
+            .map(|i| {
+                let ctx = WorkerCtx {
+                    inner: inner.clone(),
+                    board: board.clone(),
+                    cfg: cfg.clone(),
+                    telemetry: telemetry.clone(),
+                    runner: runner.clone(),
+                };
+                std::thread::Builder::new()
+                    .name(format!("sched-worker-{i}"))
+                    .spawn(move || worker_loop(ctx, Rng::new(0x5ced).fold_in(i as u64)))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Scheduler { inner, board, store, handles }
     }
 
     pub fn submit(&self, job: TrainJob) -> Result<()> {
-        self.board
-            .statuses
-            .lock()
-            .unwrap()
-            .insert(job.profile_id, JobStatus::Queued);
-        self.tx.send(Msg::Job(job)).context("scheduler worker gone")
+        let cold = !self.store.contains(job.profile_id);
+        let mut st = self.inner.state.lock().unwrap();
+        if st.draining {
+            bail!("scheduler is draining; job for profile {} rejected", job.profile_id);
+        }
+        self.board.set(job.profile_id, JobStatus::Queued);
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.queue.push(QueuedJob {
+            job,
+            seq,
+            enqueued: Instant::now(),
+            not_before: None,
+            attempts: 0,
+            cold,
+        });
+        drop(st);
+        self.inner.work_cv.notify_one();
+        Ok(())
     }
 
     pub fn status(&self, profile_id: u64) -> Option<JobStatus> {
@@ -141,9 +266,16 @@ impl Scheduler {
         }
     }
 
+    /// Graceful drain: stop intake, finish everything queued and
+    /// running (including pending retries), join the workers.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
+        self.drain_and_join();
+    }
+
+    fn drain_and_join(&mut self) {
+        self.inner.state.lock().unwrap().draining = true;
+        self.inner.work_cv.notify_all();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -151,49 +283,145 @@ impl Scheduler {
 
 impl Drop for Scheduler {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.drain_and_join();
     }
 }
 
-/// Run one wave of jobs over the worker pool with **fault containment**:
-/// a job that returns `Err` records `Failed`, and a job that PANICS is
-/// caught here — its status also turns `Failed` (with the panic message)
-/// instead of the panic propagating into `threadpool::run`, which would
-/// re-panic in the dispatcher thread, kill the scheduler, and leave
-/// `wait_all` waiting forever on a status that never turns terminal.
-/// Every job in the wave reaches a terminal status, so the Condvar
-/// accounting stays correct no matter what the job body does.
-fn run_wave<F>(wave: &[TrainJob], board: &StatusBoard, runner: F)
-where
-    F: Fn(&TrainJob) -> Result<(f32, usize, f64)> + Sync,
-{
-    crate::util::threadpool::run(wave.len(), |i| {
-        let job = &wave[i];
-        let pid = job.profile_id;
-        board.set(pid, JobStatus::Running);
+/// Pick the dispatchable job with the highest priority score
+/// (`age_ms + cold_boost`), FIFO on ties. Jobs inside a retry-backoff
+/// window or belonging to a tenant at its in-flight cap are skipped —
+/// they keep aging. Returns `(queue index, preempted)` where `preempted`
+/// records that a cold-start overtook an older queued job.
+fn pick_job(st: &SchedState, cfg: &SchedConfig, now: Instant) -> Option<(usize, bool)> {
+    let mut best: Option<(usize, u64, u64)> = None;
+    let mut min_seq: Option<u64> = None;
+    for (i, q) in st.queue.iter().enumerate() {
+        if q.not_before.is_some_and(|t| now < t) {
+            continue;
+        }
+        if cfg.tenant_inflight > 0
+            && st.running_by_tenant.get(&q.job.tenant).copied().unwrap_or(0) >= cfg.tenant_inflight
+        {
+            continue;
+        }
+        let age_ms = now.duration_since(q.enqueued).as_millis() as u64;
+        let score = age_ms + if q.cold { cfg.cold_boost_ms } else { 0 };
+        min_seq = Some(min_seq.map_or(q.seq, |m| m.min(q.seq)));
+        let better = match best {
+            None => true,
+            Some((_, bs, bseq)) => score > bs || (score == bs && q.seq < bseq),
+        };
+        if better {
+            best = Some((i, score, q.seq));
+        }
+    }
+    best.map(|(i, _, seq)| (i, st.queue[i].cold && min_seq.is_some_and(|m| m < seq)))
+}
+
+/// Jittered exponential retry delay: doubled per attempt, uniform in
+/// [d/2, d], capped at 10 s.
+fn retry_backoff(base_ms: u64, attempt: usize, rng: &mut Rng) -> Duration {
+    let exp = base_ms.saturating_mul(1u64 << (attempt as u64).min(16)).min(10_000);
+    let half = (exp / 2).max(1);
+    Duration::from_millis(half + (rng.uniform() * half as f64) as u64)
+}
+
+fn worker_loop(ctx: WorkerCtx, mut rng: Rng) {
+    loop {
+        let mut st = ctx.inner.state.lock().unwrap();
+        let picked = loop {
+            let now = Instant::now();
+            if let Some((idx, preempted)) = pick_job(&st, &ctx.cfg, now) {
+                let qj = st.queue.swap_remove(idx);
+                st.running += 1;
+                *st.running_by_tenant.entry(qj.job.tenant).or_insert(0) += 1;
+                break Some((qj, preempted, now));
+            }
+            if st.draining && st.queue.is_empty() && st.running == 0 {
+                break None;
+            }
+            // Everything is either retry-gated or tenant-capped (or the
+            // queue is empty): sleep until the earliest retry gate opens
+            // or a submit/completion notifies.
+            let gate = st.queue.iter().filter_map(|q| q.not_before.filter(|t| *t > now)).min();
+            st = match gate {
+                Some(t) => {
+                    let dur = t.saturating_duration_since(now).max(Duration::from_millis(1));
+                    ctx.inner.work_cv.wait_timeout(st, dur).unwrap().0
+                }
+                None => ctx.inner.work_cv.wait(st).unwrap(),
+            };
+        };
+        drop(st);
+        let Some((qj, preempted, picked_at)) = picked else {
+            // Drain complete: wake sibling workers so they observe it too.
+            ctx.inner.work_cv.notify_all();
+            return;
+        };
+        let pid = qj.job.profile_id;
+        let tenant = qj.job.tenant;
+        if let Some(t) = &ctx.telemetry {
+            t.note_tenant_wait_ms(picked_at.duration_since(qj.enqueued).as_millis() as u64);
+            if preempted {
+                t.record_preemption();
+            }
+        }
+        ctx.board.set(pid, JobStatus::Running);
         // AssertUnwindSafe: on panic we only write a fresh Failed status;
         // no state the job half-mutated is read back.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(job)));
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (ctx.runner)(&qj.job)));
+        let mut requeue: Option<QueuedJob> = None;
         match outcome {
             Ok(Ok((final_loss, steps, wallclock_s))) => {
-                board.set(pid, JobStatus::Done { final_loss, steps, wallclock_s });
+                ctx.board.set(pid, JobStatus::Done { final_loss, steps, wallclock_s });
+            }
+            Ok(Err(JobError::Transient(msg))) if qj.attempts < ctx.cfg.tune_retries => {
+                if let Some(t) = &ctx.telemetry {
+                    t.record_tune_retry();
+                }
+                let delay = retry_backoff(ctx.cfg.retry_backoff_ms, qj.attempts, &mut rng);
+                crate::warn_log!(
+                    "scheduler",
+                    "profile {pid} tune failed transiently (attempt {}): {msg}; retrying in {}ms",
+                    qj.attempts + 1,
+                    delay.as_millis()
+                );
+                ctx.board.set(pid, JobStatus::Queued);
+                requeue = Some(QueuedJob {
+                    not_before: Some(Instant::now() + delay),
+                    attempts: qj.attempts + 1,
+                    ..qj
+                });
             }
             Ok(Err(e)) => {
-                board.set(pid, JobStatus::Failed(format!("{e:#}")));
+                ctx.board.set(pid, JobStatus::Failed(e.to_string()));
             }
             Err(payload) => {
                 let msg = panic_message(payload.as_ref());
                 crate::warn_log!("scheduler", "job for profile {pid} panicked: {msg}");
-                board.set(pid, JobStatus::Failed(format!("panicked: {msg}")));
+                ctx.board.set(pid, JobStatus::Failed(format!("panicked: {msg}")));
             }
         }
-    });
+        let mut st = ctx.inner.state.lock().unwrap();
+        st.running -= 1;
+        if let Some(c) = st.running_by_tenant.get_mut(&tenant) {
+            *c -= 1;
+            if *c == 0 {
+                st.running_by_tenant.remove(&tenant);
+            }
+        }
+        if let Some(rq) = requeue {
+            st.queue.push(rq);
+        }
+        drop(st);
+        // notify_all: a freed tenant slot or drain progress may unblock
+        // any number of waiting workers.
+        ctx.inner.work_cv.notify_all();
+    }
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -201,6 +429,51 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     } else {
         "non-string panic payload".to_string()
     }
+}
+
+/// Job execution with failure classification: train/extract errors are
+/// deterministic (`Permanent`), the store commit is environmental I/O
+/// (`Transient`).
+fn run_job_classified(
+    engine: &Engine,
+    bank: &AdapterBank,
+    store: &ProfileStore,
+    job: &TrainJob,
+    plm_seed: u64,
+) -> std::result::Result<(f32, usize, f64), JobError> {
+    let perm = |e: anyhow::Error| JobError::Permanent(format!("{e:#}"));
+    let mc = engine.manifest.config.clone();
+    let (trainer, outcome) =
+        train::train_profile(engine, &job.cfg, &job.dataset, Some(bank), plm_seed).map_err(perm)?;
+    let masks =
+        trainer.profile_masks(job.cfg.mode, mc.layers, job.cfg.n, job.cfg.k).map_err(perm)?;
+    let aux = if job.keep_aux {
+        let get = |k: &str| -> std::result::Result<Vec<f32>, JobError> {
+            Ok(trainer
+                .state
+                .get(k)
+                .map_err(|e| JobError::Permanent(format!("{e:#}")))?
+                .to_vec())
+        };
+        Some(Arc::new(AuxParams {
+            ln_scale: get("ln_scale")?,
+            ln_bias: get("ln_bias")?,
+            head_w: get("head_w")?,
+            head_b: get("head_b")?,
+        }))
+    } else {
+        None
+    };
+    store
+        .insert(job.profile_id, ProfileRecord { masks, aux })
+        .map_err(|e| JobError::Transient(format!("{e:#}")))?;
+    let final_loss = *outcome.losses.last().unwrap_or(&f32::NAN);
+    info!(
+        "scheduler",
+        "profile {} tuned: {} steps, final loss {:.4}, {:.1}s",
+        job.profile_id, outcome.steps, final_loss, outcome.wallclock_s
+    );
+    Ok((final_loss, outcome.steps, outcome.wallclock_s))
 }
 
 /// Synchronous job execution (also used directly by experiments).
@@ -211,38 +484,19 @@ pub fn run_job(
     job: &TrainJob,
     plm_seed: u64,
 ) -> Result<(f32, usize, f64)> {
-    let mc = engine.manifest.config.clone();
-    let (trainer, outcome) =
-        train::train_profile(engine, &job.cfg, &job.dataset, Some(bank), plm_seed)?;
-    let masks = trainer.profile_masks(job.cfg.mode, mc.layers, job.cfg.n, job.cfg.k)?;
-    let aux = if job.keep_aux {
-        Some(Arc::new(AuxParams {
-            ln_scale: trainer.state.get("ln_scale")?.to_vec(),
-            ln_bias: trainer.state.get("ln_bias")?.to_vec(),
-            head_w: trainer.state.get("head_w")?.to_vec(),
-            head_b: trainer.state.get("head_b")?.to_vec(),
-        }))
-    } else {
-        None
-    };
-    store.insert(job.profile_id, ProfileRecord { masks, aux })?;
-    let final_loss = *outcome.losses.last().unwrap_or(&f32::NAN);
-    info!(
-        "scheduler",
-        "profile {} tuned: {} steps, final loss {:.4}, {:.1}s",
-        job.profile_id, outcome.steps, final_loss, outcome.wallclock_s
-    );
-    Ok((final_loss, outcome.steps, outcome.wallclock_s))
+    run_job_classified(engine, bank, store, job, plm_seed).map_err(|e| anyhow!("{e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::{Dataset, MetricKind};
+    use crate::masks::{MaskLogits, ProfileMasks};
 
-    fn stub_job(pid: u64) -> TrainJob {
+    fn stub_job_tenant(pid: u64, tenant: u64) -> TrainJob {
         TrainJob {
             profile_id: pid,
+            tenant,
             dataset: Dataset {
                 name: "stub".to_string(),
                 train: Vec::new(),
@@ -255,56 +509,298 @@ mod tests {
         }
     }
 
-    fn board() -> Arc<StatusBoard> {
-        Arc::new(StatusBoard { statuses: Mutex::new(HashMap::new()), done_cv: Condvar::new() })
+    fn stub_job(pid: u64) -> TrainJob {
+        stub_job_tenant(pid, pid)
+    }
+
+    fn store() -> Arc<ProfileStore> {
+        Arc::new(ProfileStore::new(16))
+    }
+
+    fn sched<F>(
+        cfg: SchedConfig,
+        telemetry: Option<Arc<Telemetry>>,
+        st: Arc<ProfileStore>,
+        f: F,
+    ) -> Scheduler
+    where
+        F: Fn(&TrainJob) -> std::result::Result<(f32, usize, f64), JobError>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Scheduler::start_with_runner(st, cfg, telemetry, Arc::new(f))
+    }
+
+    fn empty_state() -> SchedState {
+        SchedState {
+            queue: Vec::new(),
+            running: 0,
+            running_by_tenant: HashMap::new(),
+            draining: false,
+            next_seq: 0,
+        }
+    }
+
+    fn qj(pid: u64, tenant: u64, seq: u64, enqueued: Instant, cold: bool) -> QueuedJob {
+        QueuedJob {
+            job: stub_job_tenant(pid, tenant),
+            seq,
+            enqueued,
+            not_before: None,
+            attempts: 0,
+            cold,
+        }
     }
 
     #[test]
-    fn run_wave_contains_panics_and_errors() {
-        // One panicking job and one Err job among healthy ones: every job
-        // still reaches a terminal status and the healthy ones complete.
-        let wave: Vec<TrainJob> = (0..4).map(stub_job).collect();
-        let bd = board();
-        for j in &wave {
-            bd.set(j.profile_id, JobStatus::Queued);
+    fn panics_and_errors_reach_terminal_status_without_wedging() {
+        // One panicking job and one permanently failing job among
+        // healthy ones: every job still reaches a terminal status and
+        // the healthy ones complete.
+        let s = sched(
+            SchedConfig { workers: 2, ..SchedConfig::default() },
+            None,
+            store(),
+            |job| match job.profile_id {
+                1 => panic!("deliberate test panic"),
+                2 => Err(JobError::Permanent("deliberate test error".into())),
+                _ => Ok((0.5, 3, 0.01)),
+            },
+        );
+        for pid in 0..4 {
+            s.submit(stub_job(pid)).unwrap();
         }
-        run_wave(&wave, &bd, |job| match job.profile_id {
-            1 => panic!("deliberate test panic"),
-            2 => anyhow::bail!("deliberate test error"),
-            _ => Ok((0.5, 3, 0.01)),
-        });
-        let st = bd.statuses.lock().unwrap();
-        assert!(st.values().all(JobStatus::is_terminal), "all terminal: {st:?}");
-        assert!(matches!(st[&0], JobStatus::Done { .. }));
-        assert!(matches!(st[&3], JobStatus::Done { .. }));
-        match &st[&1] {
-            JobStatus::Failed(msg) => assert!(msg.contains("deliberate test panic"), "{msg}"),
+        s.wait_all();
+        assert!(matches!(s.status(0), Some(JobStatus::Done { .. })));
+        assert!(matches!(s.status(3), Some(JobStatus::Done { .. })));
+        match s.status(1) {
+            Some(JobStatus::Failed(msg)) => {
+                assert!(msg.contains("deliberate test panic"), "{msg}")
+            }
             other => panic!("panicking job should be Failed, got {other:?}"),
         }
-        match &st[&2] {
-            JobStatus::Failed(msg) => assert!(msg.contains("deliberate test error"), "{msg}"),
+        match s.status(2) {
+            Some(JobStatus::Failed(msg)) => {
+                assert!(msg.contains("deliberate test error"), "{msg}")
+            }
             other => panic!("erroring job should be Failed, got {other:?}"),
         }
+        s.shutdown();
     }
 
     #[test]
-    fn run_wave_notifies_condvar_for_failed_jobs() {
-        // wait_all-style loop must wake even when the wave's LAST terminal
+    fn wait_all_wakes_on_terminal_failure() {
+        // wait_all's condvar loop must wake when the LAST terminal
         // transition is a failure.
-        let wave = vec![stub_job(9)];
-        let bd = board();
-        bd.set(9, JobStatus::Queued);
-        std::thread::scope(|scope| {
-            let bd2 = bd.clone();
-            let waiter = scope.spawn(move || {
-                let mut st = bd2.statuses.lock().unwrap();
-                while !st.values().all(JobStatus::is_terminal) {
-                    st = bd2.done_cv.wait(st).unwrap();
-                }
-            });
-            run_wave(&wave, &bd, |_| panic!("boom"));
-            waiter.join().unwrap();
+        let s = sched(
+            SchedConfig { workers: 1, ..SchedConfig::default() },
+            None,
+            store(),
+            |_| panic!("boom"),
+        );
+        s.submit(stub_job(9)).unwrap();
+        s.wait_all();
+        assert!(matches!(s.status(9), Some(JobStatus::Failed(_))));
+    }
+
+    #[test]
+    fn transient_jobs_retry_and_permanent_jobs_fail_fast() {
+        let cfg = SchedConfig {
+            workers: 1,
+            tune_retries: 1,
+            retry_backoff_ms: 5,
+            ..SchedConfig::default()
+        };
+        let tele = Arc::new(Telemetry::new());
+        let attempts: Arc<Mutex<HashMap<u64, usize>>> = Arc::new(Mutex::new(HashMap::new()));
+        let att = attempts.clone();
+        let s = sched(cfg, Some(tele.clone()), store(), move |job| {
+            let attempt = {
+                let mut a = att.lock().unwrap();
+                let n = a.entry(job.profile_id).or_insert(0);
+                *n += 1;
+                *n
+            };
+            match job.profile_id {
+                1 if attempt == 1 => Err(JobError::Transient("blip".into())),
+                1 => Ok((0.2, 2, 0.0)),
+                2 => Err(JobError::Permanent("bad config".into())),
+                _ => Err(JobError::Transient("always down".into())),
+            }
         });
-        assert!(matches!(bd.statuses.lock().unwrap()[&9], JobStatus::Failed(_)));
+        for pid in 1..=3 {
+            s.submit(stub_job(pid)).unwrap();
+        }
+        s.wait_all();
+        assert!(
+            matches!(s.status(1), Some(JobStatus::Done { .. })),
+            "transient failure must retry to success: {:?}",
+            s.status(1)
+        );
+        match s.status(2) {
+            Some(JobStatus::Failed(msg)) => assert!(msg.contains("bad config"), "{msg}"),
+            other => panic!("permanent failure must fail without retry, got {other:?}"),
+        }
+        match s.status(3) {
+            Some(JobStatus::Failed(msg)) => {
+                assert!(msg.contains("transient"), "exhausted retries keep the class: {msg}")
+            }
+            other => panic!("exhausted retries must end Failed, got {other:?}"),
+        }
+        let a = attempts.lock().unwrap();
+        assert_eq!(a[&1], 2, "one retry for the recovering job");
+        assert_eq!(a[&2], 1, "permanent errors are never retried");
+        assert_eq!(a[&3], 2, "tune_retries=1 caps at 2 attempts");
+        drop(a);
+        assert_eq!(tele.snapshot().tune_retries, 2);
+        s.shutdown();
+    }
+
+    #[test]
+    fn tenant_inflight_cap_bounds_concurrency() {
+        // 3 workers, cap 1: no tenant ever has two jobs running at once,
+        // no matter how the workers interleave.
+        let cfg =
+            SchedConfig { workers: 3, tenant_inflight: 1, ..SchedConfig::default() };
+        let running: Arc<Mutex<HashMap<u64, usize>>> = Arc::new(Mutex::new(HashMap::new()));
+        let peak = Arc::new(Mutex::new(0usize));
+        let (r2, p2) = (running.clone(), peak.clone());
+        let s = sched(cfg, None, store(), move |job| {
+            {
+                let mut r = r2.lock().unwrap();
+                let c = r.entry(job.tenant).or_insert(0);
+                *c += 1;
+                let mut p = p2.lock().unwrap();
+                *p = (*p).max(*c);
+            }
+            std::thread::sleep(Duration::from_millis(15));
+            *r2.lock().unwrap().get_mut(&job.tenant).unwrap() -= 1;
+            Ok((0.1, 1, 0.0))
+        });
+        for pid in 0..5 {
+            s.submit(stub_job_tenant(pid, 7)).unwrap();
+        }
+        for pid in 10..12 {
+            s.submit(stub_job_tenant(pid, 8)).unwrap();
+        }
+        s.wait_all();
+        assert_eq!(*peak.lock().unwrap(), 1, "tenant cap violated");
+        for pid in (0..5).chain(10..12) {
+            assert!(matches!(s.status(pid), Some(JobStatus::Done { .. })), "pid {pid}");
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn pick_balances_cold_boost_against_aging() {
+        let now = Instant::now();
+        let cfg = SchedConfig { cold_boost_ms: 1000, ..SchedConfig::default() };
+        let mut st = empty_state();
+        // warm re-tune queued 400ms ago vs a cold-start queued just now
+        st.queue.push(qj(1, 1, 0, now - Duration::from_millis(400), false));
+        st.queue.push(qj(2, 2, 1, now, true));
+        let (idx, preempted) = pick_job(&st, &cfg, now).unwrap();
+        assert_eq!(st.queue[idx].job.profile_id, 2, "cold boost outranks 400ms of age");
+        assert!(preempted, "the cold-start overtook an older queued job");
+        // the same warm job aged past the boost wins instead
+        st.queue[0].enqueued = now - Duration::from_millis(1500);
+        let (idx, preempted) = pick_job(&st, &cfg, now).unwrap();
+        assert_eq!(st.queue[idx].job.profile_id, 1, "aging eventually beats the boost");
+        assert!(!preempted);
+    }
+
+    #[test]
+    fn pick_skips_capped_tenants_and_gated_retries() {
+        let now = Instant::now();
+        let cfg = SchedConfig {
+            tenant_inflight: 1,
+            cold_boost_ms: 1000,
+            ..SchedConfig::default()
+        };
+        let mut st = empty_state();
+        st.queue.push(qj(1, 7, 0, now - Duration::from_millis(900), false));
+        st.queue.push(qj(2, 8, 1, now, false));
+        st.running_by_tenant.insert(7, 1);
+        st.running = 1;
+        let (idx, _) = pick_job(&st, &cfg, now).unwrap();
+        assert_eq!(st.queue[idx].job.profile_id, 2, "capped tenant is skipped despite age");
+        // gate the other job into a retry window too: nothing dispatchable
+        st.queue[1].not_before = Some(now + Duration::from_millis(50));
+        assert!(pick_job(&st, &cfg, now).is_none());
+        // cap released: the aged job dispatches
+        st.running_by_tenant.clear();
+        st.running = 0;
+        let (idx, _) = pick_job(&st, &cfg, now).unwrap();
+        assert_eq!(st.queue[idx].job.profile_id, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work() {
+        let s = sched(
+            SchedConfig { workers: 1, ..SchedConfig::default() },
+            None,
+            store(),
+            |_| {
+                std::thread::sleep(Duration::from_millis(5));
+                Ok((0.1, 1, 0.0))
+            },
+        );
+        for pid in 0..6 {
+            s.submit(stub_job(pid)).unwrap();
+        }
+        let board = s.board.clone();
+        s.shutdown();
+        let st = board.statuses.lock().unwrap();
+        assert_eq!(st.len(), 6);
+        assert!(
+            st.values().all(|x| matches!(x, JobStatus::Done { .. })),
+            "graceful drain finishes queued work: {st:?}"
+        );
+    }
+
+    #[test]
+    fn submit_after_drain_is_rejected() {
+        let s = sched(
+            SchedConfig { workers: 1, ..SchedConfig::default() },
+            None,
+            store(),
+            |_| Ok((0.1, 1, 0.0)),
+        );
+        s.inner.state.lock().unwrap().draining = true;
+        s.inner.work_cv.notify_all();
+        assert!(s.submit(stub_job(1)).is_err());
+        assert!(s.status(1).is_none(), "rejected job leaves no status entry");
+    }
+
+    #[test]
+    fn cold_start_flag_tracks_store_membership() {
+        let st = store();
+        let logits = MaskLogits {
+            layers: 1,
+            n: 8,
+            a: Rng::new(1).normal_vec(8, 1.0),
+            b: Rng::new(2).normal_vec(8, 1.0),
+        };
+        st.insert(5, ProfileRecord { masks: ProfileMasks::Hard(logits.binarize(2)), aux: None })
+            .unwrap();
+        let s = sched(
+            SchedConfig { workers: 1, ..SchedConfig::default() },
+            None,
+            st,
+            |_| {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok((0.1, 1, 0.0))
+            },
+        );
+        s.submit(stub_job(5)).unwrap(); // already stored: a re-tune
+        s.submit(stub_job(6)).unwrap(); // unseen: a cold-start
+        {
+            let state = s.inner.state.lock().unwrap();
+            for q in &state.queue {
+                assert_eq!(q.cold, q.job.profile_id == 6, "pid {}", q.job.profile_id);
+            }
+        }
+        s.wait_all();
     }
 }

@@ -71,6 +71,24 @@ pub struct Telemetry {
     /// Shard snapshots streamed to (leader) or installed by (follower) a
     /// catch-up peer that was behind the retained log tail.
     pub snapshot_catchups: AtomicU64,
+    // --- ingest / continuous-tuning counters ----------------------------
+    /// Ingest sources that stalled (no batch within the stall window) —
+    /// each stall is one strike toward quarantine.
+    pub sources_stalled: AtomicU64,
+    /// Pull retries issued after a strike's backoff window elapsed.
+    pub ingest_retries: AtomicU64,
+    /// Sources quarantined after exhausting their strike budget (monotone;
+    /// a reset does not decrement it).
+    pub sources_quarantined: AtomicU64,
+    /// Tune jobs re-queued after a transient failure (`--tune-retries`).
+    pub tune_retries: AtomicU64,
+    /// Dispatches where a cold-start job overtook an older queued re-tune
+    /// (the aging/priority fairness trade made visible).
+    pub preemptions: AtomicU64,
+    /// Gauge (running max): longest queue wait any tune job saw between
+    /// submit and dispatch, in ms — the starvation bound the continuous
+    /// scheduler must keep small.
+    pub max_tenant_wait_ms: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     profiles_per_batch: Mutex<Vec<f64>>,
@@ -100,6 +118,12 @@ pub struct Snapshot {
     pub rep_watermark_lag: u64,
     pub failover_reads: u64,
     pub snapshot_catchups: u64,
+    pub sources_stalled: u64,
+    pub ingest_retries: u64,
+    pub sources_quarantined: u64,
+    pub tune_retries: u64,
+    pub preemptions: u64,
+    pub max_tenant_wait_ms: u64,
     pub mean_batch: f64,
     /// Mean distinct profiles per mixed batch (0 when mixed mode is off).
     pub mean_profiles_per_batch: f64,
@@ -228,6 +252,35 @@ impl Telemetry {
         self.snapshot_catchups.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One ingest source stalled past its window (one quarantine strike).
+    pub fn record_source_stall(&self) {
+        self.sources_stalled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One post-backoff pull retry against a struck source.
+    pub fn record_ingest_retry(&self) {
+        self.ingest_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_source_quarantined(&self) {
+        self.sources_quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One tune job re-queued after a transient failure.
+    pub fn record_tune_retry(&self) {
+        self.tune_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One cold-start dispatch that overtook an older queued re-tune.
+    pub fn record_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Gauge (running max): a tune job waited `ms` from submit to dispatch.
+    pub fn note_tenant_wait_ms(&self, ms: u64) {
+        self.max_tenant_wait_ms.fetch_max(ms, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.latencies_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
@@ -255,6 +308,12 @@ impl Telemetry {
             rep_watermark_lag: self.rep_watermark_lag.load(Ordering::Relaxed),
             failover_reads: self.failover_reads.load(Ordering::Relaxed),
             snapshot_catchups: self.snapshot_catchups.load(Ordering::Relaxed),
+            sources_stalled: self.sources_stalled.load(Ordering::Relaxed),
+            ingest_retries: self.ingest_retries.load(Ordering::Relaxed),
+            sources_quarantined: self.sources_quarantined.load(Ordering::Relaxed),
+            tune_retries: self.tune_retries.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            max_tenant_wait_ms: self.max_tenant_wait_ms.load(Ordering::Relaxed),
             mean_batch: stats::mean(&sizes),
             mean_profiles_per_batch: stats::mean(&ppb),
             p50_latency_us: stats::quantile(&lat, 0.5),
@@ -343,6 +402,29 @@ mod tests {
         assert_eq!(s.conns_opened, 2);
         assert_eq!(s.conns_closed, 1);
         assert_eq!(s.frame_errors, 1);
+    }
+
+    #[test]
+    fn ingest_counters_round_trip() {
+        let t = Telemetry::new();
+        t.record_source_stall();
+        t.record_source_stall();
+        t.record_ingest_retry();
+        t.record_source_quarantined();
+        t.record_tune_retry();
+        t.record_tune_retry();
+        t.record_tune_retry();
+        t.record_preemption();
+        t.note_tenant_wait_ms(120);
+        t.note_tenant_wait_ms(800);
+        t.note_tenant_wait_ms(300); // running max: 800 sticks
+        let s = t.snapshot();
+        assert_eq!(s.sources_stalled, 2);
+        assert_eq!(s.ingest_retries, 1);
+        assert_eq!(s.sources_quarantined, 1);
+        assert_eq!(s.tune_retries, 3);
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.max_tenant_wait_ms, 800);
     }
 
     #[test]

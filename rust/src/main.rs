@@ -11,6 +11,10 @@
 //!   replicate          leader/follower fault harness: kill -9 the leader
 //!                      mid-tune, assert zero committed-profile loss and
 //!                      bounded failover time (--smoke for the CI gate)
+//!   churn              tune-while-serving chaos harness: serving load with
+//!                      continuous re-tunes, injected source stalls, a
+//!                      poison profile, and mid-run quarantine/recovery
+//!                      (--smoke for the CI gate)
 //!   bench              quick micro-bench suite (full suites: cargo bench)
 //!   info               show artifact/manifest inventory
 
@@ -57,6 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => serve(args),
         "loadgen" => loadgen_cmd(args),
         "replicate" => replicate_cmd(args),
+        "churn" => churn_cmd(args),
         "info" => show_info(args),
         "bench" => quick_bench(args),
         "" | "help" => {
@@ -108,6 +113,14 @@ COMMANDS
                     records to followers (leader role): --rep-tail 1024
                     --rep-heartbeat-ms 200 --rep-failover-ms 1500
                     --rep-epoch 1
+                    --ingest keeps re-tuning every profile from its batch
+                    stream while serving (continuous scheduler):
+                    --tune-workers 0 --tenant-inflight 0 --tune-retries 1
+                    --retry-backoff-ms 50 --cold-boost-ms 10000
+                    --ingest-queue 8 --ingest-quantum 2
+                    --ingest-min-batches 1 --ingest-stall-ms 500
+                    --ingest-backoff-ms 100 --ingest-backoff-cap-ms 2000
+                    --ingest-strikes 3 --ingest-tick-ms 5
   loadgen           drive a TCP server: --addr HOST:PORT --conns 4
                     --rate R (req/s; 0 = closed-loop capacity probe)
                     --secs 5 --profiles 64 --zipf 1.0 --deadline-ms 0
@@ -125,6 +138,16 @@ COMMANDS
                     (children: --role leader|follower, --rep-peer ADDR,
                     --replica-id N, --rep-meta PATH, --preseed N,
                     --tune-interval-ms N)
+  churn             tune-while-serving chaos harness: measures a no-tuning
+                    serving baseline, then repeats the same open-loop load
+                    while streaming re-tunes churn the store — with an
+                    injected source stall (quarantine + mid-run recovery),
+                    a poison profile, and a cold-start arrival. Gates:
+                    zero epoch-consistency violations, bounded tenant
+                    wait, quarantine recovery, p95 within --p95-slack-pct
+                    15 (+ --p95-floor-ms 5) of the same-run baseline.
+                    --smoke (CI-sized) --secs N --profiles N
+                    --max-wait-ms 4000 + the serve --ingest/--tune knobs
   info              artifact inventory from artifacts/manifest.json
   bench             quick micro-bench suite (full: cargo bench)
 
@@ -231,6 +254,7 @@ fn serve(args: &Args) -> Result<()> {
     for p in &corpus.profiles {
         scheduler.submit(TrainJob {
             profile_id: p.author_id as u64,
+            tenant: p.author_id as u64,
             dataset: xpeft::data::Dataset {
                 name: format!("author{}", p.author_id),
                 train: p.train.clone(),
@@ -257,6 +281,9 @@ fn serve(args: &Args) -> Result<()> {
         store.shard_count(),
         store.mean_profile_bytes()
     );
+    // the one-shot tuning wave is done; `--ingest` (below) starts its own
+    // continuous scheduler wired into the service telemetry instead
+    scheduler.shutdown();
 
     // 2a) --listen: expose the service over TCP behind admission control
     // instead of driving the built-in demo stream. --rep-listen makes this
@@ -265,9 +292,9 @@ fn serve(args: &Args) -> Result<()> {
     if args.get("listen").is_some() {
         let net_cfg = NetConfig::default().override_from_args(args)?;
         let svc = Arc::new(Service::start(
-            engine,
+            engine.clone(),
             store.clone(),
-            bank,
+            bank.clone(),
             serve_cfg,
             lamp::CATEGORIES,
             env.plm_seed,
@@ -278,13 +305,84 @@ fn serve(args: &Args) -> Result<()> {
                 let rep = rep_config(args)?;
                 let hub = RepHub::attach(&store, args.get_u64("rep-epoch", 1)?, rep.tail);
                 let srv =
-                    RepServer::start(store, hub, svc.telemetry_shared(), addr, rep)?;
+                    RepServer::start(store.clone(), hub, svc.telemetry_shared(), addr, rep)?;
                 println!("replication listener on {}", srv.local_addr());
                 Some(srv)
             }
             None => None,
         };
-        return serve_listen(svc, net_cfg, args);
+        // --ingest: keep every corpus profile re-tuning from its batch
+        // stream while the node serves (and, with --rep-listen, while
+        // followers apply the resulting churn live)
+        let ingest = if args.flag("ingest") {
+            use xpeft::config::{IngestConfig, SchedConfig};
+            use xpeft::coordinator::ingest::{
+                IngestCore, IngestPump, SourceMeta, SourceSpec, SyntheticSource,
+            };
+
+            let sched_cfg = SchedConfig::default().override_from_args(args)?;
+            let ingest_cfg = IngestConfig::default().override_from_args(args)?;
+            let sched = Arc::new(Scheduler::start_with(
+                engine,
+                bank,
+                store.clone(),
+                env.plm_seed,
+                sched_cfg,
+                Some(svc.telemetry_shared()),
+            ));
+            let mut core = IngestCore::new(ingest_cfg, Some(svc.telemetry_shared()), env.seed);
+            for p in &corpus.profiles {
+                let pid = p.author_id as u64;
+                core.add_source(SourceSpec {
+                    source: Box::new(SyntheticSource::new(
+                        pid,
+                        SourceMeta {
+                            name: format!("author{}", p.author_id),
+                            num_classes: lamp::CATEGORIES,
+                            metric: xpeft::data::MetricKind::Acc,
+                        },
+                        batch_stream(&p.train, 8),
+                        0,
+                    )),
+                    cfg: TrainConfig {
+                        mode: Mode::XpeftHard,
+                        n,
+                        steps,
+                        seed: env.seed + pid,
+                        ..Default::default()
+                    },
+                    keep_aux: true,
+                });
+            }
+            info!(
+                "serve",
+                "--ingest: continuous re-tuning of {} profiles behind the serving path",
+                corpus.profiles.len()
+            );
+            Some((IngestPump::start(core, Arc::clone(&sched)), sched))
+        } else {
+            None
+        };
+        let result = serve_listen(svc, net_cfg, args);
+        if let Some((pump, sched)) = ingest {
+            if let Some(core) = pump.stop() {
+                for r in core.reports() {
+                    info!(
+                        "serve",
+                        "ingest source {} (tenant {}): {} — strikes {}, {} tune jobs cut",
+                        r.profile_id,
+                        r.tenant,
+                        r.state,
+                        r.strikes,
+                        r.dispatched
+                    );
+                }
+            }
+            if let Ok(s) = Arc::try_unwrap(sched) {
+                s.shutdown();
+            }
+        }
+        return result;
     }
 
     // 2b) serve a request stream drawn from the corpus
@@ -649,6 +747,414 @@ fn print_overload_counters(snap: &xpeft::coordinator::Snapshot) {
     println!("  watermark lag      {}", snap.rep_watermark_lag);
     println!("  failover reads     {}", snap.failover_reads);
     println!("  snapshot catchups  {}", snap.snapshot_catchups);
+    println!("ingest/tuning telemetry:");
+    println!("  sources stalled    {}", snap.sources_stalled);
+    println!("  ingest retries     {}", snap.ingest_retries);
+    println!("  quarantined        {}", snap.sources_quarantined);
+    println!("  tune retries       {}", snap.tune_retries);
+    println!("  preemptions        {}", snap.preemptions);
+    println!("  max tenant wait    {} ms", snap.max_tenant_wait_ms);
+}
+
+/// Chunk a training split into poll-sized batches for a streaming source.
+fn batch_stream(examples: &[xpeft::data::Example], per: usize) -> Vec<Vec<xpeft::data::Example>> {
+    examples.chunks(per.max(1)).map(|c| c.to_vec()).collect()
+}
+
+/// Tune-while-serving chaos harness (`xpeft churn [--smoke]`).
+///
+/// Boots a loopback serving node, measures a no-tuning latency baseline,
+/// then repeats the exact same open-loop load while streaming re-tunes
+/// churn the store through the continuous scheduler — with an injected
+/// source stall (strike → backoff → quarantine, then a mid-run reset), a
+/// poison profile whose tune config is permanently broken, and a
+/// cold-start arrival. Both loadgen passes run at the same fixed rate
+/// (half the probed closed-loop capacity) so the p95 comparison is
+/// apples-to-apples within one run.
+///
+/// Gates (any failure exits non-zero):
+///   - every serving read that observed prepacked aggregates saw
+///     `agg.epoch == mask epoch` (no torn epoch under churn)
+///   - re-tunes actually committed, and the cold profile was admitted
+///   - the stalled source was quarantined, then re-tuned after reset
+///   - the poison profile ended `Failed` and never entered the store
+///   - no tenant's queue wait exceeded `--max-wait-ms`
+///   - serving p95 under churn ≤ baseline × (1 + `--p95-slack-pct`/100)
+///     + `--p95-floor-ms` (absolute floor so a tiny baseline doesn't turn
+///     scheduler jitter into a failure)
+fn churn_cmd(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::time::{Duration, Instant};
+    use xpeft::config::{IngestConfig, SchedConfig};
+    use xpeft::coordinator::ingest::{
+        IngestCore, IngestPump, ProfileSource, SourceMeta, SourcePoll, SourceSpec,
+        SyntheticSource,
+    };
+    use xpeft::coordinator::scheduler::JobStatus;
+    use xpeft::data::MetricKind;
+
+    let smoke = args.flag("smoke");
+    let secs = args.get_u64("secs", if smoke { 2 } else { 5 })?;
+    let profiles = args.get_u64("profiles", if smoke { 6 } else { 12 })?;
+    let tune_steps = args.get_usize("tune-steps", if smoke { 4 } else { 8 })?;
+    let slack_pct = args.get_f64("p95-slack-pct", 15.0)?;
+    let floor_ms = args.get_f64("p95-floor-ms", 5.0)?;
+    let wait_bound_ms = args.get_u64("max-wait-ms", 4_000)?;
+    let n = 100usize;
+
+    let cold_pid = profiles; // arrives mid-run; never preseeded
+    let stall_pid = profiles + 1; // healthy → stalled → quarantined → reset
+    let poison_pid = profiles + 2; // tune config permanently broken
+
+    // serving node: native engine over a store preseeded with the profiles
+    // the load generator reads (same deterministic recipe as the
+    // replication harness), loopback TCP front end
+    let store = Arc::new(ProfileStore::new(64));
+    let (engine, bank, svc) = native_stack(store.clone())?;
+    let mc = engine.manifest.config.clone();
+    for pid in 0..profiles {
+        store.insert(pid, replica_profile(mc.layers, pid))?;
+    }
+    let mut net_cfg = NetConfig::default().override_from_args(args)?;
+    if net_cfg.listen.is_empty() {
+        net_cfg.listen = "127.0.0.1:0".to_string();
+    }
+    let server = NetServer::start(Arc::clone(&svc), net_cfg)?;
+    let addr = server.local_addr().to_string();
+    info!("churn", "serving on {addr}: {profiles} preseeded profiles");
+
+    // probe closed-loop capacity, then pin both measured passes to half of
+    // it — identical offered schedules, only the churn differs
+    let mut cfg = loadgen_config(args, addr)?;
+    cfg.profiles = profiles;
+    cfg.text = REPL_TEXT.to_string();
+    cfg.churn_every = 0;
+    cfg.duration = Duration::from_secs(1);
+    cfg.rate = 0.0;
+    let probe = loadgen::run(&cfg)?;
+    if probe.ok == 0 {
+        bail!("churn: closed-loop probe produced no successful responses");
+    }
+    cfg.rate = (probe.goodput_per_s() * 0.5).max(50.0);
+    cfg.duration = Duration::from_secs(secs);
+    cfg.seed = cfg.seed.wrapping_add(1);
+    let baseline = loadgen::run(&cfg)?;
+    println!("baseline     {}", baseline.summary());
+    if baseline.ok == 0 {
+        bail!("churn: baseline pass produced no successful responses");
+    }
+
+    // continuous tuning behind the serving path: two workers so tuning
+    // cannot monopolize the pool, a per-tenant in-flight cap, and an
+    // aggressive-but-finite cold boost
+    let telemetry = svc.telemetry_shared();
+    let sched_cfg = SchedConfig {
+        workers: 2,
+        tenant_inflight: 1,
+        cold_boost_ms: 1_000,
+        ..SchedConfig::default()
+    }
+    .override_from_args(args)?;
+    let ingest_cfg = IngestConfig {
+        queue_cap: 4,
+        min_batches: 2,
+        stall_ms: 100,
+        backoff_ms: 50,
+        backoff_cap_ms: 400,
+        tick_ms: 2,
+        ..IngestConfig::default()
+    }
+    .override_from_args(args)?;
+    let sched = Arc::new(Scheduler::start_with(
+        engine,
+        bank,
+        store.clone(),
+        42,
+        sched_cfg,
+        Some(Arc::clone(&telemetry)),
+    ));
+
+    let corpus = lamp::generate((profiles + 3) as usize, mc.seq, mc.vocab, 42, 12, 80);
+    let meta = |pid: u64| SourceMeta {
+        name: format!("author{pid}"),
+        num_classes: lamp::CATEGORIES,
+        metric: MetricKind::Acc,
+    };
+    let tune_cfg = |pid: u64, n: usize| TrainConfig {
+        mode: Mode::XpeftHard,
+        n,
+        steps: tune_steps,
+        seed: 42 + pid,
+        ..TrainConfig::default()
+    };
+    let mut core = IngestCore::new(ingest_cfg, Some(Arc::clone(&telemetry)), 42);
+    for pid in 0..profiles {
+        core.add_source(SourceSpec {
+            source: Box::new(
+                SyntheticSource::new(
+                    pid,
+                    meta(pid),
+                    batch_stream(&corpus.profiles[pid as usize].train, 4),
+                    0,
+                )
+                .with_tenant(pid % 3),
+            ),
+            cfg: tune_cfg(pid, n),
+            keep_aux: true,
+        });
+    }
+    // cold-start arrival: one pass over its stream, then done
+    core.add_source(SourceSpec {
+        source: Box::new(SyntheticSource::new(
+            cold_pid,
+            meta(cold_pid),
+            batch_stream(&corpus.profiles[cold_pid as usize].train, 4),
+            1,
+        )),
+        cfg: tune_cfg(cold_pid, n),
+        keep_aux: true,
+    });
+    // stall-injected source: healthy until the fault thread flips the
+    // switch, then Pending until flipped back
+    struct SwitchSource {
+        inner: SyntheticSource,
+        healthy: Arc<AtomicBool>,
+    }
+    impl ProfileSource for SwitchSource {
+        fn profile_id(&self) -> u64 {
+            self.inner.profile_id()
+        }
+        fn tenant(&self) -> u64 {
+            self.inner.tenant()
+        }
+        fn meta(&self) -> SourceMeta {
+            self.inner.meta()
+        }
+        fn poll_batch(&mut self) -> Result<SourcePoll> {
+            if self.healthy.load(Ordering::Acquire) {
+                self.inner.poll_batch()
+            } else {
+                Ok(SourcePoll::Pending)
+            }
+        }
+    }
+    let healthy = Arc::new(AtomicBool::new(true));
+    core.add_source(SourceSpec {
+        source: Box::new(SwitchSource {
+            inner: SyntheticSource::new(
+                stall_pid,
+                meta(stall_pid),
+                batch_stream(&corpus.profiles[stall_pid as usize].train, 4),
+                0,
+            ),
+            healthy: Arc::clone(&healthy),
+        }),
+        cfg: tune_cfg(stall_pid, n),
+        keep_aux: true,
+    });
+    // poison profile: mask width that matches no adapter bank, so every
+    // cut job fails permanently (bounded to two stream passes)
+    core.add_source(SourceSpec {
+        source: Box::new(SyntheticSource::new(
+            poison_pid,
+            meta(poison_pid),
+            batch_stream(&corpus.profiles[poison_pid as usize].train, 4),
+            2,
+        )),
+        cfg: tune_cfg(poison_pid, 777),
+        keep_aux: true,
+    });
+
+    // epoch-consistency readers: hammer the serving read path the whole
+    // churn window and count any read whose prepacked aggregates were
+    // built at a different mask epoch than the one returned with them
+    let stop = Arc::new(AtomicBool::new(false));
+    let violations = Arc::new(AtomicU64::new(0));
+    let epoch_reads = Arc::new(AtomicU64::new(0));
+    let readers: Vec<_> = (0..2u64)
+        .map(|r| {
+            let store = store.clone();
+            let stop = Arc::clone(&stop);
+            let violations = Arc::clone(&violations);
+            let reads = Arc::clone(&epoch_reads);
+            std::thread::spawn(move || {
+                let mut i = r;
+                while !stop.load(Ordering::Acquire) {
+                    let pid = i % (profiles + 3);
+                    i += 1;
+                    if let Ok((_, _, epoch, agg)) = store.serving_state_with_agg(pid) {
+                        reads.fetch_add(1, Ordering::Relaxed);
+                        if let Some(a) = agg {
+                            if a.epoch != epoch {
+                                violations.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    if i % 64 == 0 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let epochs_before: u64 = (0..profiles).map(|p| store.mask_epoch(p).unwrap_or(0)).sum();
+    let t_churn = Instant::now();
+    let pump = Arc::new(IngestPump::start(core, Arc::clone(&sched)));
+
+    // fault timeline, concurrent with the churn loadgen pass: wait for the
+    // victim's first commit, stall it until quarantine, then heal + reset
+    let fault = {
+        let healthy = Arc::clone(&healthy);
+        let pump = Arc::clone(&pump);
+        let telemetry = Arc::clone(&telemetry);
+        let store = store.clone();
+        std::thread::spawn(move || -> Result<u64> {
+            let t0 = Instant::now();
+            while store.mask_epoch(stall_pid).is_err() {
+                if t0.elapsed() > Duration::from_secs(15) {
+                    bail!("stall-injected profile {stall_pid} never committed a first tune");
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let quarantined0 = telemetry.snapshot().sources_quarantined;
+            healthy.store(false, Ordering::Release);
+            let t1 = Instant::now();
+            while telemetry.snapshot().sources_quarantined <= quarantined0 {
+                if t1.elapsed() > Duration::from_secs(20) {
+                    bail!("stalled source was not quarantined within 20s");
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let epoch_at_reset = store.mask_epoch(stall_pid).unwrap_or(0);
+            healthy.store(true, Ordering::Release);
+            pump.request_reset();
+            Ok(epoch_at_reset)
+        })
+    };
+
+    let mut hot = cfg.clone();
+    hot.seed = cfg.seed.wrapping_add(1);
+    let churn = loadgen::run(&hot)?;
+    println!("under churn  {}", churn.summary());
+    let epoch_at_reset = match fault.join() {
+        Ok(r) => r?,
+        Err(_) => bail!("churn: fault-injection thread panicked"),
+    };
+
+    // quarantine recovery: the reset source must commit a fresh epoch
+    let t2 = Instant::now();
+    loop {
+        let e = store.mask_epoch(stall_pid).unwrap_or(0);
+        if e > epoch_at_reset {
+            break;
+        }
+        if t2.elapsed() > Duration::from_secs(15) {
+            bail!("churn: quarantined source did not re-tune after reset (epoch still {e})");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let t3 = Instant::now();
+    while !store.contains(cold_pid) {
+        if t3.elapsed() > Duration::from_secs(15) {
+            bail!("churn: cold-start profile {cold_pid} was never admitted");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // teardown tuning: stop the stream, drain the scheduler, read verdicts
+    let core = match Arc::try_unwrap(pump) {
+        Ok(p) => p.stop(),
+        Err(_) => None,
+    };
+    sched.wait_all();
+    let poison_status = sched.status(poison_pid);
+    let epochs_after: u64 = (0..profiles).map(|p| store.mask_epoch(p).unwrap_or(0)).sum();
+    let commits = epochs_after.saturating_sub(epochs_before);
+    let churn_wall = t_churn.elapsed().as_secs_f64();
+    if let Ok(s) = Arc::try_unwrap(sched) {
+        s.shutdown();
+    }
+    stop.store(true, Ordering::Release);
+    for h in readers {
+        let _ = h.join();
+    }
+    server.shutdown();
+    let snap = match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(s) => s.telemetry(),
+    };
+    print_overload_counters(&snap);
+    if let Some(core) = &core {
+        println!("ingest sources:");
+        for r in core.reports() {
+            println!(
+                "  profile {:>4} tenant {} — {:<11} strikes {} queued {} tune jobs {}",
+                r.profile_id, r.tenant, r.state, r.strikes, r.queued, r.dispatched
+            );
+        }
+    }
+
+    let viol = violations.load(Ordering::Acquire);
+    let reads = epoch_reads.load(Ordering::Acquire);
+    let tunes_per_hour = commits as f64 / churn_wall * 3600.0;
+    println!("\nchurn summary:");
+    println!("  epoch-consistency reads  {reads} ({viol} violations)");
+    println!("  re-tune commits          {commits} ({tunes_per_hour:.0} profiles/hour)");
+    println!(
+        "  max tenant wait          {} ms (bound {} ms)",
+        snap.max_tenant_wait_ms, wait_bound_ms
+    );
+    println!(
+        "  serving p95              {:.1} ms baseline → {:.1} ms under churn",
+        baseline.p95_us / 1e3,
+        churn.p95_us / 1e3
+    );
+
+    if reads == 0 {
+        bail!("churn: epoch-consistency readers never completed a read");
+    }
+    if viol > 0 {
+        bail!("churn: {viol} serving reads observed aggregates from a different mask epoch");
+    }
+    if churn.ok == 0 {
+        bail!("churn: no successful responses while tuning churned the store");
+    }
+    if commits == 0 {
+        bail!("churn: no re-tunes committed during the churn window");
+    }
+    if snap.sources_stalled == 0 || snap.sources_quarantined == 0 {
+        bail!(
+            "churn: fault injection never tripped (stalled {}, quarantined {})",
+            snap.sources_stalled,
+            snap.sources_quarantined
+        );
+    }
+    match poison_status {
+        Some(JobStatus::Failed(_)) => {}
+        other => bail!("churn: poison profile ended {other:?}, expected Failed"),
+    }
+    if store.contains(poison_pid) {
+        bail!("churn: poison profile must never commit to the store");
+    }
+    if snap.max_tenant_wait_ms > wait_bound_ms {
+        bail!(
+            "churn: a tenant's tune waited {} ms in queue (bound {} ms)",
+            snap.max_tenant_wait_ms,
+            wait_bound_ms
+        );
+    }
+    let p95_limit = baseline.p95_us * (1.0 + slack_pct / 100.0) + floor_ms * 1e3;
+    if churn.p95_us > p95_limit {
+        bail!(
+            "churn: serving p95 {:.0}µs under churn exceeds {:.0}µs (baseline {:.0}µs + {slack_pct}% + {floor_ms}ms floor)",
+            churn.p95_us,
+            p95_limit,
+            baseline.p95_us
+        );
+    }
+    println!("churn OK");
+    Ok(())
 }
 
 // ------------------------------------------------------------- replication
@@ -663,17 +1169,16 @@ fn rep_config(args: &Args) -> Result<xpeft::coordinator::replication::RepConfig>
 }
 
 /// Boot a self-hosted service over `store` with the native engine and
-/// deterministic shared state. Leader and follower both build this, so a
-/// failover read returns the same prediction the leader would have.
-fn native_service(
+/// deterministic shared state, handing back the engine/bank so a caller
+/// can also tune against the same deployment (the churn harness does).
+fn native_stack(
     store: Arc<ProfileStore>,
-) -> Result<(Arc<Service>, usize)> {
+) -> Result<(Arc<Engine>, Arc<AdapterBank>, Arc<Service>)> {
     use xpeft::coordinator::profile_store::AuxParams;
     use xpeft::util::rng::Rng;
 
     let engine = Arc::new(Engine::native());
     let mc = engine.manifest.config.clone();
-    let layers = mc.layers;
     let bank = Arc::new(AdapterBank::random(mc.layers, 100, mc.d, mc.bottleneck, 42));
     store.set_shared_aux(AuxParams {
         ln_scale: vec![1.0; mc.layers * mc.bottleneck],
@@ -682,13 +1187,23 @@ fn native_service(
         head_b: vec![0.0; mc.c_max],
     });
     let svc = Arc::new(Service::start(
-        engine,
+        engine.clone(),
         store,
-        bank,
+        bank.clone(),
         ServeConfig { max_batch: 16, batch_deadline_us: 300, mask_cache: 64, ..ServeConfig::default() },
         15,
         42,
     )?);
+    Ok((engine, bank, svc))
+}
+
+/// Boot a self-hosted service over `store`. Leader and follower both build
+/// this, so a failover read returns the same prediction the leader would.
+fn native_service(
+    store: Arc<ProfileStore>,
+) -> Result<(Arc<Service>, usize)> {
+    let (engine, _bank, svc) = native_stack(store)?;
+    let layers = engine.manifest.config.layers;
     Ok((svc, layers))
 }
 

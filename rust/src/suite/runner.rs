@@ -272,6 +272,7 @@ impl SuiteRunner {
                 let pid = Self::pid(t, j);
                 scheduler.submit(TrainJob {
                     profile_id: pid,
+                    tenant: (t + 1) as u64,
                     dataset: Dataset {
                         name: format!("{}/p{j}", task.name()),
                         train: task.train_batches(j),

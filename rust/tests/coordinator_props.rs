@@ -58,6 +58,7 @@ fn shared_aux(mc: &xpeft::config::ModelConfig) -> AuxParams {
 fn tiny_job(mc: &xpeft::config::ModelConfig, pid: u64) -> TrainJob {
     TrainJob {
         profile_id: pid,
+        tenant: pid,
         dataset: glue::build("sst2", mc.seq, mc.vocab, pid),
         cfg: TrainConfig {
             mode: Mode::XpeftHard,

@@ -19,7 +19,9 @@ use xpeft::coordinator::net::frame::{
     Decoder, Frame, FrameKind, RepHello, RepRecord, Status, WireRequest,
 };
 use xpeft::coordinator::net::NetServer;
-use xpeft::coordinator::profile_store::{AuxParams, ProfileRecord, ProfileStore, StoreConfig};
+use xpeft::coordinator::profile_store::{
+    AuxParams, ProfileAggregates, ProfileRecord, ProfileStore, StoreConfig,
+};
 use xpeft::coordinator::replication::{
     Follower, FollowerConfig, RepConfig, RepHub, RepServer, Router, RouterConfig,
 };
@@ -335,6 +337,100 @@ fn failover_reads_route_to_follower_when_leader_is_dead() {
     assert!(stats.failover_reads >= 1, "some profile homes on the dead node: {stats:?}");
     assert_eq!(rtel.snapshot().failover_reads, stats.failover_reads);
     fsrv.shutdown();
+}
+
+#[test]
+fn follower_never_serves_stale_epoch_aggregates_under_retune_churn() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let pid = 3u64;
+    let leader = store();
+    leader.insert(pid, profile(0)).unwrap();
+    let hub = RepHub::attach(&leader, 1, 64);
+    let ltel = Arc::new(Telemetry::new());
+    let srv =
+        RepServer::start(leader.clone(), hub, ltel, "127.0.0.1:0", rep_cfg(10_000)).unwrap();
+
+    let fstore = store();
+    // shared aux so the follower's serving read path works (replicated
+    // records carry masks only)
+    fstore.set_shared_aux(AuxParams {
+        ln_scale: vec![1.0; 16],
+        ln_bias: vec![0.0; 16],
+        head_w: vec![0.0; 64],
+        head_b: vec![0.0; 8],
+    });
+    let ftel = Arc::new(Telemetry::new());
+    let follower = Follower::start(
+        fstore.clone(),
+        ftel,
+        FollowerConfig {
+            peer: srv.local_addr().to_string(),
+            replica_id: 1,
+            meta_path: None,
+            rep: rep_cfg(10_000),
+        },
+    );
+    wait_for(30, "initial catch-up", || fstore.contains(pid));
+
+    // follower-side reader mirroring the serving loop: read, prepack an
+    // aggregate at the observed epoch, offer it to the cache — while
+    // re-tune records for the SAME profile keep applying underneath it.
+    // Any read that pairs aggregates with a different epoch is a stale
+    // serve and fails the test.
+    let bank = AdapterBank::random(4, 32, 8, 4, 7);
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let fstore = fstore.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let (w, _aux, epoch, agg) =
+                    fstore.serving_state_with_agg(pid).expect("replicated profile readable");
+                if let Some(a) = &agg {
+                    assert_eq!(a.epoch, epoch, "stale aggregate paired with epoch {epoch}");
+                }
+                if agg.is_none() {
+                    let fresh = Arc::new(ProfileAggregates::prepack(&w, &bank, epoch));
+                    fstore.agg_cache_put(pid, fresh);
+                }
+                reads += 1;
+                if reads % 32 == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            reads
+        })
+    };
+
+    // leader re-tunes the same profile repeatedly: every insert bumps the
+    // mask epoch and ships one record the follower applies live
+    const RETUNES: u64 = 40;
+    for r in 1..=RETUNES {
+        leader.insert(pid, profile(r)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    wait_for(30, "re-tune catch-up", || fstore.mask_epoch(pid).unwrap_or(0) == RETUNES);
+
+    stop.store(true, Ordering::Release);
+    let reads = reader.join().expect("reader observed a stale-epoch aggregate");
+    assert!(reads > 0, "reader never completed a read");
+    assert_eq!(
+        fstore.mask_epoch(pid).unwrap(),
+        leader.mask_epoch(pid).unwrap(),
+        "follower epoch diverged from leader after catch-up"
+    );
+    // after catch-up a fresh read must never resurface an older aggregate:
+    // applying each record eagerly dropped the cached entry, and the epoch
+    // filter guards the race window on top
+    let (_, _, epoch, agg) = fstore.serving_state_with_agg(pid).unwrap();
+    assert_eq!(epoch, RETUNES);
+    if let Some(a) = agg {
+        assert_eq!(a.epoch, RETUNES, "post-catch-up read returned a stale aggregate");
+    }
+    drop(follower);
+    drop(srv);
 }
 
 #[test]
